@@ -1,0 +1,230 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts executed from Rust.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts, with manifest.json):
+  lm_{mha,bda}_fwd_b{B}     tokens (B, L) i32 -> (logits (B, L, V),)
+  train_step_{mha,bda}      (*state, tokens (B, L+1) i32, lr_scale f32)
+                            -> (*state', loss)
+  kproj_{mha,bda}_l{L}      operator benches via PJRT
+  train_init                -> initial flattened state (constants)
+
+Run: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.bda_kproj import kproj_bda
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights must survive the text round-trip
+    # (the default elides literals > ~1K elements as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"path": os.path.basename(path), "bytes": len(text)}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_lm_artifacts(out_dir: str, manifest: dict, batches=(1, 8)) -> None:
+    cfg = M.SERVE
+    params = M.init_params(cfg, seed=1234)
+    bda_params = M.to_bda_params(params, cfg)
+
+    # Self-check before lowering: BDA must match MHA on a probe batch.
+    probe = jnp.asarray(
+        np.random.default_rng(7).integers(0, cfg.vocab_size, size=(2, 16)), jnp.int32
+    )
+    y_mha = M.forward(params, probe, cfg, attention="mha")
+    y_bda = M.forward(bda_params, probe, cfg, attention="bda")
+    rel = float(jnp.abs(y_bda - y_mha).max() / (jnp.abs(y_mha).max() + 1e-12))
+    assert rel < 5e-3, f"BDA/MHA mismatch at artifact build: rel={rel}"
+    manifest["lm_selfcheck_rel_err"] = rel
+
+    # A test vector for the Rust runtime integration test.
+    tv_tokens = np.asarray(probe)
+    tv_logits = np.asarray(y_mha)
+    manifest["lm_test_vector"] = {
+        "tokens": tv_tokens.tolist(),
+        # First 8 logits of position (0, 0) are enough for a numeric check.
+        "logits_b0_t0_head": tv_logits[0, 0, :8].tolist(),
+        "batch": 2,
+        "seq_len": 16,
+    }
+
+    lms = {}
+    for attn, p in (("mha", params), ("bda", bda_params)):
+        for b in batches:
+            name = f"lm_{attn}_fwd_b{b}"
+            fn = M.make_forward_fn(cfg, attn, p)
+            info = lower_and_write(
+                fn, (spec((b, cfg.max_seq_len), jnp.int32),),
+                os.path.join(out_dir, f"{name}.hlo.txt"),
+            )
+            info.update(batch=b, seq_len=cfg.max_seq_len, attention=attn)
+            lms[name] = info
+        # A probe-sized variant for the runtime test vector (b=2, L=16).
+        name = f"lm_{attn}_fwd_probe"
+        fn = M.make_forward_fn(cfg, attn, p)
+        info = lower_and_write(
+            fn, (spec((2, 16), jnp.int32),), os.path.join(out_dir, f"{name}.hlo.txt")
+        )
+        info.update(batch=2, seq_len=16, attention=attn)
+        lms[name] = info
+
+        # Incremental KV-cache decode step (B=1): the O(1)-per-token
+        # serving path. Rust threads the cache literals between calls.
+        name = f"lm_{attn}_step"
+        step_fn = M.make_decode_step_fn(cfg, attn, p)
+        cache_spec = spec((cfg.n_layers, cfg.max_seq_len, cfg.width))
+        info = lower_and_write(
+            step_fn,
+            (cache_spec, cache_spec, spec((), jnp.int32), spec((), jnp.int32)),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        info.update(
+            batch=1,
+            seq_len=cfg.max_seq_len,
+            attention=attn,
+            n_layers=cfg.n_layers,
+            width=cfg.n_heads * cfg.d_h,
+        )
+        lms[name] = info
+    manifest["lm"] = lms
+    manifest["lm_config"] = {
+        "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_h": cfg.d_h,
+        "d_ff": cfg.d_ff, "max_seq_len": cfg.max_seq_len,
+    }
+
+
+def build_train_artifacts(out_dir: str, manifest: dict, batch: int = 8) -> None:
+    cfg = M.TRAIN
+    params = M.init_params(cfg, seed=99)
+    bda_params = M.to_bda_params(params, cfg)
+
+    trains = {}
+    for attn, p in (("mha", params), ("bda", bda_params)):
+        opt = M.init_opt_state(p)
+        leaves, treedef = M.flatten_state(p, opt)
+        # *_ref: the differentiable pure-jnp attention (Pallas interpret
+        # kernels do not support reverse-mode AD; see model._block).
+        fn = M.make_train_step_fn(cfg, f"{attn}_ref", treedef)
+        arg_specs = [spec(x.shape, x.dtype) for x in leaves]
+        arg_specs.append(spec((batch, cfg.max_seq_len + 1), jnp.int32))
+        arg_specs.append(spec((), jnp.float32))
+        name = f"train_step_{attn}"
+        info = lower_and_write(fn, arg_specs, os.path.join(out_dir, f"{name}.hlo.txt"))
+        info.update(
+            batch=batch,
+            seq_len=cfg.max_seq_len,
+            attention=attn,
+            n_state=len(leaves),
+            state_shapes=[list(x.shape) for x in leaves],
+        )
+        trains[name] = info
+
+        # Initial state as an artifact: a constant-producing computation.
+        init_name = f"train_init_{attn}"
+        leaves_const = [jnp.asarray(x) for x in leaves]
+
+        def init_fn():
+            return tuple(leaves_const)
+
+        info2 = lower_and_write(init_fn, (), os.path.join(out_dir, f"{init_name}.hlo.txt"))
+        info2.update(n_state=len(leaves))
+        trains[init_name] = info2
+    manifest["train"] = trains
+    manifest["train_config"] = {
+        "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_h": cfg.d_h,
+        "d_ff": cfg.d_ff, "max_seq_len": cfg.max_seq_len, "batch": batch,
+        "noam_warmup": M.NOAM_WARMUP,
+    }
+
+
+def build_kproj_artifacts(out_dir: str, manifest: dict,
+                          seq_lens=(64, 256, 1024)) -> None:
+    """Operator artifacts at the DeepSeek-V3 shape, scaled heads for CPU."""
+    d, d_h, n_heads = 512, 128, 8  # paper shape d=512, d_h=128; n scaled
+    ops = {}
+    for l in seq_lens:
+        name = f"kproj_mha_l{l}"
+        fn = lambda x, w: (ref.kproj_mha_ref(x, w),)
+        info = lower_and_write(
+            fn, (spec((l, d)), spec((d, n_heads * d_h))),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        info.update(seq_len=l, d=d, d_h=d_h, n_heads=n_heads, kind="mha")
+        ops[name] = info
+
+        name = f"kproj_bda_l{l}"
+
+        def bda_fn(x, c):
+            return (kproj_bda(x, c, n_heads=n_heads, d_h=d_h, tag="first",
+                              tile_l=min(128, l)),)
+
+        info = lower_and_write(
+            bda_fn, (spec((l, d)), spec((d - d_h, n_heads * d_h))),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        info.update(seq_len=l, d=d, d_h=d_h, n_heads=n_heads, kind="bda")
+        ops[name] = info
+    manifest["kproj"] = ops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text", "xla_extension": "0.5.1"}
+    build_lm_artifacts(args.out_dir, manifest)
+    build_kproj_artifacts(args.out_dir, manifest)
+    if not args.skip_train:
+        build_train_artifacts(args.out_dir, manifest)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(
+        v.get("bytes", 0)
+        for section in manifest.values()
+        if isinstance(section, dict)
+        for v in section.values()
+        if isinstance(v, dict)
+    )
+    print(f"wrote manifest + artifacts ({total / 1e6:.1f} MB of HLO text) to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Basis Decomposition in numpy — the compile-path mirror of rust/src/bd.
+
+Implements Algorithms 3-5 of the paper for the AOT preparation pass: the
+rust coordinator can also prepare models natively, but the L2 JAX model is
+parameterized directly in BD form, so preparation happens here once at
+artifact-build time.
+
+Cross-checked against the Rust implementation by python/tests/test_bd.py
+(same formulas, same First/Last/Residual-min selection).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FIRST = "first"
+LAST = "last"
+
+
+@dataclasses.dataclass
+class ColBd:
+    """Column BD: W = B [I, C] (first) or W = B [C, I] (last)."""
+
+    tag: str
+    b: np.ndarray  # (m, r)
+    c: np.ndarray  # (r, n - r)
+    residual: float
+    residual_first: float
+    residual_last: float
+
+
+@dataclasses.dataclass
+class RowBd:
+    """Row BD: W = [I; C] B (first) or W = [C; I] B (last)."""
+
+    tag: str
+    b: np.ndarray  # (r, n)
+    c: np.ndarray  # (m - r, r)
+    residual: float
+    residual_first: float
+    residual_last: float
+
+
+def _solve_col(w: np.ndarray, lo: int, hi: int) -> tuple[np.ndarray, float]:
+    """Solve B C = W_rest for C with B = W[:, lo:hi] (normal equations)."""
+    b = w[:, lo:hi]
+    rest = np.concatenate([w[:, :lo], w[:, hi:]], axis=1)
+    btb = b.T @ b
+    btr = b.T @ rest
+    c = np.linalg.solve(btb, btr)
+    tag = FIRST if lo == 0 else LAST
+    recon = reconstruct_col(tag, b, c)
+    return c, float(np.linalg.norm(recon - w))
+
+
+def _solve_row(w: np.ndarray, lo: int, hi: int) -> tuple[np.ndarray, float]:
+    b = w[lo:hi, :]
+    rest = np.concatenate([w[:lo, :], w[hi:, :]], axis=0)
+    bbt = b @ b.T
+    rbt = rest @ b.T
+    c = np.linalg.solve(bbt.T, rbt.T).T
+    tag = FIRST if lo == 0 else LAST
+    recon = reconstruct_row(tag, b, c)
+    return c, float(np.linalg.norm(recon - w))
+
+
+def bd_col(w: np.ndarray, r: int, strategy: str = "residual-min") -> ColBd:
+    """Column-based BD of w at rank r (Algorithm 4, column variant)."""
+    m, n = w.shape
+    if r <= 0 or r >= n or r > m:
+        raise ValueError(f"rank {r} out of range for {m}x{n}")
+    c_f, res_f = _solve_col(w, 0, r)
+    if strategy == "first-r":
+        return ColBd(FIRST, w[:, :r].copy(), c_f, res_f, res_f, float("nan"))
+    c_l, res_l = _solve_col(w, n - r, n)
+    if res_f <= res_l:
+        return ColBd(FIRST, w[:, :r].copy(), c_f, res_f, res_f, res_l)
+    return ColBd(LAST, w[:, n - r:].copy(), c_l, res_l, res_f, res_l)
+
+
+def bd_row(w: np.ndarray, r: int, strategy: str = "residual-min") -> RowBd:
+    """Row-based BD of w at rank r (Algorithm 4)."""
+    m, n = w.shape
+    if r <= 0 or r >= m or r > n:
+        raise ValueError(f"rank {r} out of range for {m}x{n}")
+    c_f, res_f = _solve_row(w, 0, r)
+    if strategy == "first-r":
+        return RowBd(FIRST, w[:r, :].copy(), c_f, res_f, res_f, float("nan"))
+    c_l, res_l = _solve_row(w, m - r, m)
+    if res_f <= res_l:
+        return RowBd(FIRST, w[:r, :].copy(), c_f, res_f, res_f, res_l)
+    return RowBd(LAST, w[m - r:, :].copy(), c_l, res_l, res_f, res_l)
+
+
+def reconstruct_col(tag: str, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Algorithm 5, column variant."""
+    bc = b @ c
+    if tag == FIRST:
+        return np.concatenate([b, bc], axis=1)
+    return np.concatenate([bc, b], axis=1)
+
+
+def reconstruct_row(tag: str, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Algorithm 5 (row)."""
+    cb = c @ b
+    if tag == FIRST:
+        return np.concatenate([b, cb], axis=0)
+    return np.concatenate([cb, b], axis=0)
+
+
+@dataclasses.dataclass
+class BdaWeights:
+    """Algorithm 2 inputs, assembled per Eq. 12 / Eq. 14."""
+
+    tag_qk: str
+    tag_vo: str
+    b_qk: np.ndarray  # (d, n*d_h)
+    c_qk: np.ndarray  # (d-d_h, n*d_h)
+    c_vo: np.ndarray  # (d-d_h, n*d_h)
+    b_vo: np.ndarray  # (n*d_h, d)
+
+
+def prepare_bda(
+    wq: np.ndarray,
+    wk: np.ndarray,
+    wv: np.ndarray,
+    wo: np.ndarray,
+    n_heads: int,
+    strategy: str = "residual-min",
+) -> BdaWeights:
+    """BD Attention preparation (Algorithm 3), head-aligned.
+
+    wq/wk/wv: (d, n*d_h); wo: (n*d_h, d).
+    """
+    d, width = wq.shape
+    d_h = width // n_heads
+    assert d_h * n_heads == width
+    # Offline preparation runs in float64 (the paper's FP32/FP16 sweeps are
+    # simulated separately by quantizing the results; see test_bd.py).
+    out_dtype = wq.dtype
+    wq = wq.astype(np.float64)
+    wk = wk.astype(np.float64)
+    wv = wv.astype(np.float64)
+    wo = wo.astype(np.float64)
+
+    # QK: column BD of each head product; evaluate both candidates.
+    qk_first, qk_last = [], []
+    for i in range(n_heads):
+        wq_i = wq[:, i * d_h:(i + 1) * d_h]
+        wk_i = wk[:, i * d_h:(i + 1) * d_h]
+        w = wq_i @ wk_i.T  # (d, d), rank d_h
+        c_f, res_f = _solve_col(w, 0, d_h)
+        c_l, res_l = _solve_col(w, d - d_h, d)
+        qk_first.append((w[:, :d_h], c_f, res_f))
+        qk_last.append((w[:, d - d_h:], c_l, res_l))
+    if strategy == "first-r":
+        tag_qk = FIRST
+    else:
+        mean_f = float(np.mean([t[2] for t in qk_first]))
+        mean_l = float(np.mean([t[2] for t in qk_last]))
+        tag_qk = FIRST if mean_f <= mean_l else LAST
+    chosen = qk_first if tag_qk == FIRST else qk_last
+    b_qk = np.concatenate([t[0] for t in chosen], axis=1)
+    c_qk = np.concatenate([t[1].T for t in chosen], axis=1)
+
+    # VO: row BD of each head product.
+    vo_first, vo_last = [], []
+    for i in range(n_heads):
+        wv_i = wv[:, i * d_h:(i + 1) * d_h]
+        wo_i = wo[i * d_h:(i + 1) * d_h, :]
+        w = wv_i @ wo_i  # (d, d), rank d_h
+        c_f, res_f = _solve_row(w, 0, d_h)
+        c_l, res_l = _solve_row(w, d - d_h, d)
+        vo_first.append((w[:d_h, :], c_f, res_f))
+        vo_last.append((w[d - d_h:, :], c_l, res_l))
+    if strategy == "first-r":
+        tag_vo = FIRST
+    else:
+        mean_f = float(np.mean([t[2] for t in vo_first]))
+        mean_l = float(np.mean([t[2] for t in vo_last]))
+        tag_vo = FIRST if mean_f <= mean_l else LAST
+    chosen = vo_first if tag_vo == FIRST else vo_last
+    b_vo = np.concatenate([t[0] for t in chosen], axis=0)
+    c_vo = np.concatenate([t[1] for t in chosen], axis=1)
+
+    return BdaWeights(
+        tag_qk,
+        tag_vo,
+        b_qk.astype(out_dtype),
+        c_qk.astype(out_dtype),
+        c_vo.astype(out_dtype),
+        b_vo.astype(out_dtype),
+    )

@@ -1,0 +1,101 @@
+"""Fused BDA attention Pallas kernel (one head per grid cell).
+
+Computes, for head h of Algorithm 2:
+
+    Q'_h = X B_h
+    K'_h = X_basis + X_rest C^qk_h
+    V'_h = X_basis + X_rest C^vo_h
+    O_h  = softmax(Q'_h K'_h^T / sqrt(d_h)) V'_h
+
+entirely in VMEM - the K'/V' head tiles are never written to HBM (the
+paper's "future work: integrate with FlashAttention" direction, realized
+here as a single-kernel head block). The output projection (O B_vo) stays
+outside the kernel so XLA can fuse it with downstream ops.
+
+TPU notes: both matmuls and the attention score/value products target the
+MXU; softmax runs on the VPU. VMEM per cell at (L=256, d=512, d_h=128):
+X tile 512 KiB + factors 192 KiB + scores 256 KiB (fp32) - fits easily.
+interpret=True for CPU-PJRT execution (see bda_kproj.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bda_attn_kernel(x_ref, bq_ref, cqk_ref, cvo_ref, o_ref, *, d_h: int, causal: bool):
+    x = x_ref[...]  # (L, d)
+    l, d = x.shape
+    basis = x[:, :d_h]
+    rest = x[:, d_h:]
+    q = jnp.dot(x, bq_ref[...], preferred_element_type=jnp.float32)
+    k = basis + jnp.dot(rest, cqk_ref[...], preferred_element_type=jnp.float32)
+    v = basis + jnp.dot(rest, cvo_ref[...], preferred_element_type=jnp.float32)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(d_h)
+    )
+    if causal:
+        idx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+        jdx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+        scores = jnp.where(jdx <= idx, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "causal"))
+def bda_attention_heads(
+    x: jnp.ndarray,
+    b_qk: jnp.ndarray,
+    c_qk: jnp.ndarray,
+    c_vo: jnp.ndarray,
+    *,
+    n_heads: int,
+    d_h: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Per-head fused attention (first-tag): returns concatenated head
+    outputs (L, n*d_h); apply `@ b_vo` outside.
+    """
+    l, d = x.shape
+    width = n_heads * d_h
+    assert b_qk.shape == (d, width)
+    assert c_qk.shape == (d - d_h, width)
+    assert c_vo.shape == (d - d_h, width)
+
+    return pl.pallas_call(
+        functools.partial(_bda_attn_kernel, d_h=d_h, causal=causal),
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((l, d), lambda h: (0, 0)),
+            pl.BlockSpec((d, d_h), lambda h: (0, h)),
+            pl.BlockSpec((d - d_h, d_h), lambda h: (0, h)),
+            pl.BlockSpec((d - d_h, d_h), lambda h: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((l, d_h), lambda h: (0, h)),
+        out_shape=jax.ShapeDtypeStruct((l, width), x.dtype),
+        interpret=True,
+    )(x, b_qk, c_qk, c_vo)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "causal"))
+def bda_attention(
+    x: jnp.ndarray,
+    b_qk: jnp.ndarray,
+    c_qk: jnp.ndarray,
+    c_vo: jnp.ndarray,
+    b_vo: jnp.ndarray,
+    *,
+    n_heads: int,
+    d_h: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Full Algorithm 2 (first-tag): fused heads + output projection."""
+    heads = bda_attention_heads(
+        x, b_qk, c_qk, c_vo, n_heads=n_heads, d_h=d_h, causal=causal
+    )
+    return heads @ b_vo

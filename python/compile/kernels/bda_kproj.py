@@ -1,0 +1,116 @@
+"""Fused BDA k_proj Pallas kernel — the L1 hot-spot of the paper.
+
+The paper's Triton kernel fuses *slice + repeat + matmul + add* for
+Algorithm 2 line 2 on an A6000. Rethought for TPU (DESIGN.md
+SS Hardware-Adaptation):
+
+  * grid = (L/TL, n_heads): each cell produces one (TL, d_h) head tile.
+  * BlockSpec keeps the full X row-tile (TL, d) in VMEM; the shared basis
+    slice is read from it per head *in VMEM* - the repeat never
+    materializes in HBM (the Triton version achieved the same by indexing).
+  * The (d-d_h, d_h) coefficient tile streams per head and hits the MXU as
+    a single (TL x (d-d_h)) @ ((d-d_h) x d_h) matmul in f32 accumulation.
+  * Head-major inner grid order reuses the X tile across all n heads
+    (one HBM->VMEM load per L-tile instead of n).
+
+VMEM per cell: TL*d + (d-d_h)*d_h + TL*d_h floats. At the paper's
+DeepSeek-V3 shape (d=512, d_h=128) and TL=128: 64K + 48K + 16K f32
+= 512 KiB @ fp32 / 256 KiB @ bf16 - comfortably under the ~16 MiB VMEM
+budget, leaving room for double-buffering (see EXPERIMENTS.md SS Perf).
+
+interpret=True always: the CPU PJRT plugin cannot run Mosaic custom-calls;
+numerics are validated through this path and the kernel lowers into the
+same HLO as the surrounding jax model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kproj_kernel_first(x_ref, c_ref, o_ref, *, d_h: int):
+    """One (TL, d_h) output tile for one head; basis = first d_h columns."""
+    x = x_ref[...]          # (TL, d)  - resident in VMEM for all heads
+    basis = x[:, :d_h]      # shared slice, no HBM repeat
+    rest = x[:, d_h:]       # (TL, d - d_h)
+    c = c_ref[...]          # (d - d_h, d_h) this head's coefficients
+    o_ref[...] = basis + jnp.dot(rest, c, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _kproj_kernel_last(x_ref, c_ref, o_ref, *, d_h: int):
+    x = x_ref[...]
+    d = x.shape[-1]
+    basis = x[:, d - d_h:]
+    rest = x[:, : d - d_h]
+    c = c_ref[...]
+    o_ref[...] = basis + jnp.dot(rest, c, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "tag", "tile_l"))
+def kproj_bda(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    n_heads: int,
+    d_h: int,
+    tag: str = "first",
+    tile_l: int = 128,
+) -> jnp.ndarray:
+    """Fused BDA k-projection: K' = [X_basis]^{xn} + X_rest @ C.
+
+    x: (L, d); c: (d - d_h, n_heads * d_h) -> (L, n_heads * d_h).
+    """
+    l, d = x.shape
+    width = n_heads * d_h
+    assert c.shape == (d - d_h, width), c.shape
+    tl = min(tile_l, l)
+    # Pad L to a multiple of the tile (Pallas grids need exact tiling).
+    pad = (-l) % tl
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((l + pad) // tl, n_heads)
+
+    kernel = _kproj_kernel_first if tag == "first" else _kproj_kernel_last
+    out = pl.pallas_call(
+        functools.partial(kernel, d_h=d_h),
+        grid=grid,
+        in_specs=[
+            # X row-tile: revisited for every head (index_map ignores h).
+            pl.BlockSpec((tl, d), lambda i, h: (i, 0)),
+            # This head's coefficient tile.
+            pl.BlockSpec((d - d_h, d_h), lambda i, h: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((tl, d_h), lambda i, h: (i, h)),
+        out_shape=jax.ShapeDtypeStruct((l + pad, width), x.dtype),
+        interpret=True,
+    )(x, c)
+    return out[:l]
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "tag"))
+def kproj_bda_unfused(
+    x: jnp.ndarray, c: jnp.ndarray, *, n_heads: int, d_h: int, tag: str = "first"
+) -> jnp.ndarray:
+    """Ablation: materialized repeat + separate matmul + add (3 HBM passes)."""
+    from . import ref
+
+    return ref.kproj_bda_ref(x, c, n_heads, d_h, tag)
+
+
+def vmem_bytes(tile_l: int, d: int, d_h: int, itemsize: int = 4) -> int:
+    """VMEM footprint estimate per grid cell (for the SS Perf analysis)."""
+    return itemsize * (tile_l * d + (d - d_h) * d_h + tile_l * d_h)
+
+
+def mxu_utilization_estimate(d: int, d_h: int) -> float:
+    """Fraction of the cell's work that is MXU matmul (vs VPU add/copy).
+
+    matmul FLOPs: 2*TL*(d-d_h)*d_h; add: TL*d_h. Independent of TL.
+    """
+    matmul = 2 * (d - d_h) * d_h
+    add = d_h
+    return matmul / (matmul + add)

@@ -1,0 +1,76 @@
+"""Baseline MHA Pallas kernel (one head per grid cell) - Algorithm 1.
+
+Same kernel structure as bda_attention.py so operator comparisons isolate
+the K/V projection difference (the paper's controlled variable).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_attn_kernel(x_ref, wq_ref, wk_ref, wv_ref, o_ref, *, d_h: int, causal: bool):
+    x = x_ref[...]
+    l = x.shape[0]
+    q = jnp.dot(x, wq_ref[...], preferred_element_type=jnp.float32)
+    k = jnp.dot(x, wk_ref[...], preferred_element_type=jnp.float32)
+    v = jnp.dot(x, wv_ref[...], preferred_element_type=jnp.float32)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(d_h)
+    )
+    if causal:
+        idx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+        jdx = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+        scores = jnp.where(jdx <= idx, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "causal"))
+def mha_attention_heads(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    *,
+    n_heads: int,
+    d_h: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Per-head fused MHA: concatenated head outputs (L, n*d_h)."""
+    l, d = x.shape
+    width = n_heads * d_h
+    return pl.pallas_call(
+        functools.partial(_mha_attn_kernel, d_h=d_h, causal=causal),
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((l, d), lambda h: (0, 0)),
+            pl.BlockSpec((d, d_h), lambda h: (0, h)),
+            pl.BlockSpec((d, d_h), lambda h: (0, h)),
+            pl.BlockSpec((d, d_h), lambda h: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((l, d_h), lambda h: (0, h)),
+        out_shape=jax.ShapeDtypeStruct((l, width), x.dtype),
+        interpret=True,
+    )(x, wq, wk, wv)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "d_h", "causal"))
+def mha_attention(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    *,
+    n_heads: int,
+    d_h: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    heads = mha_attention_heads(x, wq, wk, wv, n_heads=n_heads, d_h=d_h, causal=causal)
+    return heads @ wo

@@ -1,0 +1,87 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float tolerance under pytest + hypothesis sweeps
+(python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kproj_mha_ref(x: jnp.ndarray, w_k: jnp.ndarray) -> jnp.ndarray:
+    """Baseline MHA k-projection: K = X W_k."""
+    return x @ w_k
+
+
+def kproj_bda_ref(
+    x: jnp.ndarray, c: jnp.ndarray, n_heads: int, d_h: int, tag: str = "first"
+) -> jnp.ndarray:
+    """BDA k-projection (Algorithm 2, line 2), unfused reference.
+
+    K' = [X_basis]^{xn} + X_rest @ C, with C: (d - d_h, n*d_h).
+    """
+    d = x.shape[-1]
+    if tag == "first":
+        basis = x[:, :d_h]
+        rest = x[:, d_h:]
+    else:
+        basis = x[:, d - d_h:]
+        rest = x[:, : d - d_h]
+    repeated = jnp.tile(basis, (1, n_heads))
+    return repeated + rest @ c
+
+
+def mha_attention_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    n_heads: int,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Algorithm 1 in plain jnp."""
+    l, d = x.shape
+    width = wq.shape[1]
+    d_h = width // n_heads
+    q = (x @ wq).reshape(l, n_heads, d_h)
+    k = (x @ wk).reshape(l, n_heads, d_h)
+    v = (x @ wv).reshape(l, n_heads, d_h)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(d_h))
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,khd->qhd", probs, v).reshape(l, width)
+    return out @ wo
+
+
+def bda_attention_ref(
+    x: jnp.ndarray,
+    b_qk: jnp.ndarray,
+    c_qk: jnp.ndarray,
+    c_vo: jnp.ndarray,
+    b_vo: jnp.ndarray,
+    n_heads: int,
+    tag_qk: str = "first",
+    tag_vo: str = "first",
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Algorithm 2 in plain jnp."""
+    l, d = x.shape
+    width = b_qk.shape[1]
+    d_h = width // n_heads
+    q = (x @ b_qk).reshape(l, n_heads, d_h)
+    k = kproj_bda_ref(x, c_qk, n_heads, d_h, tag_qk).reshape(l, n_heads, d_h)
+    v = kproj_bda_ref(x, c_vo, n_heads, d_h, tag_vo).reshape(l, n_heads, d_h)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(d_h))
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,khd->qhd", probs, v).reshape(l, width)
+    return out @ b_vo

@@ -1,0 +1,335 @@
+"""L2: the JAX transformer (MHA and BDA variants) + training step.
+
+Decoder-only LM matching the Rust reference architecture (RMSNorm pre-norm,
+SwiGLU FFN, sinusoidal embedding-level positions, tied LM head). Attention
+is computed by the L1 Pallas kernels so everything lowers into one HLO
+module; AOT artifacts are produced by aot.py and executed from Rust.
+
+The training step implements Adam + the Noam LR schedule (Appendix C) with
+an LR-scale input - the Table 2 sweep {0.5, 1, 2, 4} is driven from Rust
+without re-lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bd as bd_lib
+from .kernels import ref as _ref
+from .kernels.bda_attention import bda_attention
+from .kernels.mha_attention import mha_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 2
+    n_heads: int = 4
+    d_h: int = 64  # d_h/d = 25%, the paper's ratio
+    d_ff: int = 512
+    max_seq_len: int = 64
+
+    @property
+    def width(self) -> int:
+        return self.n_heads * self.d_h
+
+
+# Serving config used by the AOT artifacts (kept small: CPU PJRT).
+SERVE = Config()
+# Tiny config for fast tests.
+TINY = Config(vocab_size=64, d_model=32, n_layers=2, n_heads=2, d_h=8, d_ff=64,
+              max_seq_len=16)
+# Training config for the Table 2 analogue (translation-style LM).
+TRAIN = Config(vocab_size=256, d_model=128, n_layers=2, n_heads=4, d_h=32,
+               d_ff=256, max_seq_len=48)
+
+CONFIGS = {"serve": SERVE, "tiny": TINY, "train": TRAIN}
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict[str, Any]:
+    """Deterministic init; attention stored in MHA form."""
+    rng = np.random.default_rng(seed)
+    std = 0.02
+
+    def mat(*shape):
+        return jnp.asarray(rng.normal(size=shape) * std, jnp.float32)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "wq": mat(cfg.d_model, cfg.width),
+                "wk": mat(cfg.d_model, cfg.width),
+                "wv": mat(cfg.d_model, cfg.width),
+                "wo": mat(cfg.width, cfg.d_model),
+                "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+                "w_gate": mat(cfg.d_model, cfg.d_ff),
+                "w_up": mat(cfg.d_model, cfg.d_ff),
+                "w_down": mat(cfg.d_ff, cfg.d_model),
+            }
+        )
+    return {
+        "embed": mat(cfg.vocab_size, cfg.d_model),
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def to_bda_params(params: dict[str, Any], cfg: Config,
+                  strategy: str = "first-r") -> dict[str, Any]:
+    """Algorithm 3 over every layer: replace wq/wk/wv/wo with BD factors.
+
+    The AOT kernels implement the first-tag layout, so artifact models use
+    First-r alignment (always valid per Theorem 3.1; Residual-min is
+    exercised by the Rust library and python tests).
+    """
+    del strategy  # first-tag layout in the kernels
+    out = {"embed": params["embed"], "norm_f": params["norm_f"], "layers": []}
+    for layer in params["layers"]:
+        w = bd_lib.prepare_bda(
+            np.asarray(layer["wq"]), np.asarray(layer["wk"]),
+            np.asarray(layer["wv"]), np.asarray(layer["wo"]),
+            cfg.n_heads, "first-r",
+        )
+        new = dict(layer)
+        del new["wq"], new["wk"], new["wv"], new["wo"]
+        new.update(
+            b_qk=jnp.asarray(w.b_qk, jnp.float32),
+            c_qk=jnp.asarray(w.c_qk, jnp.float32),
+            c_vo=jnp.asarray(w.c_vo, jnp.float32),
+            b_vo=jnp.asarray(w.b_vo, jnp.float32),
+        )
+        out["layers"].append(new)
+    return out
+
+
+def _rmsnorm(x, gain, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _pos_encoding(cfg: Config, l: int) -> jnp.ndarray:
+    """Interleaved sinusoidal PE (matches the Rust model bit-for-bit in
+    structure: even dims sin, odd dims cos)."""
+    pos = np.arange(l)[:, None].astype(np.float64)
+    k = np.arange(cfg.d_model // 2)[None, :].astype(np.float64)
+    theta = pos / np.power(10000.0, 2.0 * k / cfg.d_model)
+    pe = np.zeros((l, cfg.d_model), np.float32)
+    pe[:, 0::2] = np.sin(theta)
+    pe[:, 1::2] = np.cos(theta)
+    return jnp.asarray(pe)
+
+
+def _block(layer: dict[str, Any], x: jnp.ndarray, cfg: Config, *,
+           attention: str, causal: bool) -> jnp.ndarray:
+    h = _rmsnorm(x, layer["norm1"])
+    if attention == "mha":
+        y = mha_attention(h, layer["wq"], layer["wk"], layer["wv"], layer["wo"],
+                          n_heads=cfg.n_heads, d_h=cfg.d_h, causal=causal)
+    elif attention == "bda":
+        y = bda_attention(h, layer["b_qk"], layer["c_qk"], layer["c_vo"],
+                          layer["b_vo"], n_heads=cfg.n_heads, d_h=cfg.d_h,
+                          causal=causal)
+    elif attention == "mha_ref":
+        # Differentiable pure-jnp path (Pallas interpret kernels do not
+        # support reverse-mode AD); used by train_step artifacts.
+        y = _ref.mha_attention_ref(h, layer["wq"], layer["wk"], layer["wv"],
+                                   layer["wo"], cfg.n_heads, causal=causal)
+    elif attention == "bda_ref":
+        y = _ref.bda_attention_ref(h, layer["b_qk"], layer["c_qk"],
+                                   layer["c_vo"], layer["b_vo"], cfg.n_heads,
+                                   causal=causal)
+    else:
+        raise ValueError(f"unknown attention {attention!r}")
+    x = x + y
+    h2 = _rmsnorm(x, layer["norm2"])
+    gated = jax.nn.silu(h2 @ layer["w_gate"]) * (h2 @ layer["w_up"])
+    return x + gated @ layer["w_down"]
+
+
+def forward(params: dict[str, Any], tokens: jnp.ndarray, cfg: Config, *,
+            attention: str = "mha") -> jnp.ndarray:
+    """Causal LM forward: tokens (B, L) int32 -> logits (B, L, V)."""
+    _, l = tokens.shape
+    x = params["embed"][tokens] + _pos_encoding(cfg, l)[None]
+
+    def run_one(xb):
+        h = xb
+        for layer in params["layers"]:
+            h = _block(layer, h, cfg, attention=attention, causal=True)
+        return h
+
+    x = jax.vmap(run_one)(x)
+    h = _rmsnorm(x, params["norm_f"])
+    return h @ params["embed"].T
+
+
+def loss_fn(params, tokens, cfg: Config, *, attention: str) -> jnp.ndarray:
+    """Next-token cross entropy; `tokens` (B, L+1)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg, attention=attention)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Training: Adam + Noam schedule (Appendix C), lowered as one step.
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.98, 1e-9
+NOAM_WARMUP = 400.0
+
+
+def noam_lr(step: jnp.ndarray, d_model: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Noam schedule: scale * d^-0.5 * min(step^-0.5, step * warmup^-1.5)."""
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    return scale * (d_model ** -0.5) * jnp.minimum(s ** -0.5, s * NOAM_WARMUP ** -1.5)
+
+
+def init_opt_state(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.float32),
+    }
+
+
+def train_step(params, opt, tokens, lr_scale, cfg: Config, *, attention: str):
+    """One Adam step; returns (params, opt, loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, tokens, cfg, attention=attention)
+    )(params)
+    step = opt["step"] + 1.0
+    lr = noam_lr(step, cfg.d_model, lr_scale)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    new_m, new_v, new_p = [], [], []
+    for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g):
+        m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+        mhat = m2 / (1 - ADAM_B1 ** step)
+        vhat = v2 / (1 - ADAM_B2 ** step)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    opt2 = {
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        "step": step,
+    }
+    return params2, opt2, loss
+
+
+# ---------------------------------------------------------------------------
+# Flattening helpers for the AOT boundary (Rust sees positional buffers).
+# ---------------------------------------------------------------------------
+
+def flatten_state(params, opt):
+    """Deterministic flatten of (params, opt) into (leaves, treedef)."""
+    return jax.tree_util.tree_flatten((params, opt))
+
+
+def make_train_step_fn(cfg: Config, attention: str, treedef):
+    """Positional-args train step for AOT lowering:
+    f(*state_leaves, tokens, lr_scale) -> (*new_state_leaves, loss).
+    """
+
+    def f(*args):
+        state_leaves = args[:-2]
+        tokens, lr_scale = args[-2], args[-1]
+        params, opt = jax.tree_util.tree_unflatten(treedef, list(state_leaves))
+        params2, opt2, loss = train_step(params, opt, tokens, lr_scale, cfg,
+                                         attention=attention)
+        new_leaves, _ = jax.tree_util.tree_flatten((params2, opt2))
+        return tuple(new_leaves) + (loss,)
+
+    return f
+
+
+def make_forward_fn(cfg: Config, attention: str, params):
+    """Closed-over-params forward for serving artifacts (weights become HLO
+    constants; the Rust side passes only tokens)."""
+
+    def f(tokens):
+        return (forward(params, tokens, cfg, attention=attention),)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode with KV cache (the O(1)-per-token serving path).
+# ---------------------------------------------------------------------------
+
+def _attend_cached(q, k_cache, v_cache, pos, d_h, n_heads):
+    """q: (width,); caches: (Lmax, width); attends over positions <= pos."""
+    lmax, width = k_cache.shape
+    qh = q.reshape(n_heads, d_h)
+    kh = k_cache.reshape(lmax, n_heads, d_h)
+    vh = v_cache.reshape(lmax, n_heads, d_h)
+    scores = jnp.einsum("hd,lhd->hl", qh, kh) / jnp.sqrt(jnp.float32(d_h))
+    t = jnp.arange(lmax)
+    scores = jnp.where(t[None, :] <= pos, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hl,lhd->hd", probs, vh)
+    return out.reshape(width)
+
+
+def decode_step(params, k_cache, v_cache, token, pos, cfg: Config, *,
+                attention: str):
+    """One-token decode (B=1).
+
+    k_cache/v_cache: (n_layers, Lmax, width) f32; token, pos: i32 scalars.
+    Returns (logits (V,), new_k_cache, new_v_cache). Attention over cached
+    positions <= pos; the new K/V rows are written at `pos`.
+    """
+    x = params["embed"][token] + _pos_encoding(cfg, cfg.max_seq_len)[pos]
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["norm1"])
+        if attention in ("mha", "mha_ref"):
+            q = h @ layer["wq"]
+            k_row = h @ layer["wk"]
+            v_row = h @ layer["wv"]
+            w_out = layer["wo"]
+        else:
+            d_h = cfg.d_h
+            basis = h[:d_h]
+            rest = h[d_h:]
+            q = h @ layer["b_qk"]
+            k_row = jnp.tile(basis, cfg.n_heads) + rest @ layer["c_qk"]
+            v_row = jnp.tile(basis, cfg.n_heads) + rest @ layer["c_vo"]
+            w_out = layer["b_vo"]
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k_row[None, :], (pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v_row[None, :], (pos, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        attn = _attend_cached(q, kc, vc, pos, cfg.d_h, cfg.n_heads)
+        x = x + attn @ w_out
+        h2 = _rmsnorm(x, layer["norm2"])
+        x = x + (jax.nn.silu(h2 @ layer["w_gate"]) * (h2 @ layer["w_up"])) @ layer["w_down"]
+    hf = _rmsnorm(x, params["norm_f"])
+    logits = hf @ params["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def make_decode_step_fn(cfg: Config, attention: str, params):
+    """Closed-over-params decode step for AOT serving artifacts."""
+
+    def f(k_cache, v_cache, token, pos):
+        logits, nk, nv = decode_step(params, k_cache, v_cache, token, pos,
+                                     cfg, attention=attention)
+        return (logits, nk, nv)
+
+    return f

@@ -1,0 +1,74 @@
+"""AOT artifact integrity: text format parses, weights survive, manifest is
+consistent. (Numeric execution from the artifacts is exercised by the Rust
+runtime integration tests.)"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def art(name):
+    return os.path.join(ART, name)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = art("manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_sections(manifest):
+    for key in ["lm", "kproj", "train", "lm_test_vector", "lm_config"]:
+        assert key in manifest, key
+
+
+def test_all_artifacts_exist_and_parse_header(manifest):
+    for section in ("lm", "kproj", "train"):
+        for name, info in manifest[section].items():
+            path = art(info["path"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), f"{name}: {head[:50]}"
+
+
+def test_no_elided_constants(manifest):
+    """The bug this guards: default HLO printing elides large literals,
+    silently shipping weightless models."""
+    for name, info in manifest["lm"].items():
+        with open(art(info["path"])) as f:
+            text = f.read()
+        assert "constant({...})" not in text, f"{name} has elided constants"
+
+
+def test_selfcheck_recorded_and_small(manifest):
+    assert manifest["lm_selfcheck_rel_err"] < 5e-3
+
+
+def test_bda_artifacts_smaller_than_mha(manifest):
+    """The 25% K/V weight reduction must show up in artifact size."""
+    for b in (1, 8):
+        mha = manifest["lm"][f"lm_mha_fwd_b{b}"]["bytes"]
+        bda = manifest["lm"][f"lm_bda_fwd_b{b}"]["bytes"]
+        assert bda < mha, (bda, mha)
+
+
+def test_test_vector_shape(manifest):
+    tv = manifest["lm_test_vector"]
+    assert len(tv["tokens"]) == tv["batch"]
+    assert len(tv["tokens"][0]) == tv["seq_len"]
+    assert len(tv["logits_b0_t0_head"]) == 8
+
+
+def test_train_state_shapes_consistent(manifest):
+    for attn in ("mha", "bda"):
+        info = manifest["train"][f"train_step_{attn}"]
+        assert info["n_state"] == len(info["state_shapes"])
+        init = manifest["train"][f"train_init_{attn}"]
+        assert init["n_state"] == info["n_state"]

@@ -1,0 +1,156 @@
+"""Tests for the numpy BD implementation (mirrors rust/src/bd)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bd
+
+
+def rank_r(m, n, r, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(m, r)) @ rng.normal(size=(r, n))
+
+
+class TestColBd:
+    def test_exact_on_rank_r(self):
+        w = rank_r(16, 24, 5, 1)
+        d = bd.bd_col(w, 5)
+        recon = bd.reconstruct_col(d.tag, d.b, d.c)
+        np.testing.assert_allclose(recon, w, atol=1e-8)
+        assert d.residual < 1e-8 * max(1.0, np.linalg.norm(w))
+
+    def test_first_strategy(self):
+        w = rank_r(10, 12, 3, 2)
+        d = bd.bd_col(w, 3, "first-r")
+        assert d.tag == bd.FIRST
+        assert np.isnan(d.residual_last)
+        np.testing.assert_allclose(bd.reconstruct_col(d.tag, d.b, d.c), w, atol=1e-8)
+
+    def test_shapes(self):
+        w = rank_r(8, 12, 3, 3)
+        d = bd.bd_col(w, 3)
+        assert d.b.shape == (8, 3)
+        assert d.c.shape == (3, 9)
+
+    def test_bad_rank(self):
+        w = rank_r(6, 6, 2, 4)
+        with pytest.raises(ValueError):
+            bd.bd_col(w, 6)
+        with pytest.raises(ValueError):
+            bd.bd_col(w, 0)
+
+    def test_residual_min_beats_first(self):
+        for seed in range(5):
+            w = rank_r(12, 12, 4, 100 + seed)
+            f = bd.bd_col(w, 4, "first-r")
+            m = bd.bd_col(w, 4)
+            assert m.residual <= f.residual + 1e-12
+
+
+class TestRowBd:
+    def test_exact_on_rank_r(self):
+        w = rank_r(24, 16, 5, 5)
+        d = bd.bd_row(w, 5)
+        recon = bd.reconstruct_row(d.tag, d.b, d.c)
+        np.testing.assert_allclose(recon, w, atol=1e-8)
+
+    def test_shapes(self):
+        w = rank_r(12, 8, 3, 6)
+        d = bd.bd_row(w, 3)
+        assert d.b.shape == (3, 8)
+        assert d.c.shape == (9, 3)
+
+    def test_reconstruct_layouts(self):
+        b = np.array([[1.0, 2.0]])
+        c = np.array([[3.0], [4.0]])
+        first = bd.reconstruct_row(bd.FIRST, b, c)
+        np.testing.assert_array_equal(first, [[1, 2], [3, 6], [4, 8]])
+        last = bd.reconstruct_row(bd.LAST, b, c)
+        np.testing.assert_array_equal(last, [[3, 6], [4, 8], [1, 2]])
+
+
+class TestPrepareBda:
+    def setup_method(self):
+        rng = np.random.default_rng(42)
+        self.d, self.n, self.dh = 32, 4, 8
+        w = self.n * self.dh
+        self.wq = rng.normal(size=(self.d, w)).astype(np.float32) * 0.05
+        self.wk = rng.normal(size=(self.d, w)).astype(np.float32) * 0.05
+        self.wv = rng.normal(size=(self.d, w)).astype(np.float32) * 0.05
+        self.wo = rng.normal(size=(w, self.d)).astype(np.float32) * 0.05
+
+    def test_shapes(self):
+        w = bd.prepare_bda(self.wq, self.wk, self.wv, self.wo, self.n)
+        assert w.b_qk.shape == (self.d, self.n * self.dh)
+        assert w.c_qk.shape == (self.d - self.dh, self.n * self.dh)
+        assert w.c_vo.shape == (self.d - self.dh, self.n * self.dh)
+        assert w.b_vo.shape == (self.n * self.dh, self.d)
+
+    def test_qk_inner_products_preserved(self):
+        """The paper's core invariant: Q'_i K'_i^T == Q_i K_i^T."""
+        w = bd.prepare_bda(self.wq, self.wk, self.wv, self.wo, self.n, "first-r")
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(10, self.d)).astype(np.float32)
+        q = x @ self.wq
+        k = x @ self.wk
+        qp = x @ w.b_qk
+        basis = x[:, : self.dh]
+        kp = np.tile(basis, (1, self.n)) + x[:, self.dh:] @ w.c_qk
+        for i in range(self.n):
+            sl = slice(i * self.dh, (i + 1) * self.dh)
+            s_ref = q[:, sl] @ k[:, sl].T
+            s_bd = qp[:, sl] @ kp[:, sl].T
+            np.testing.assert_allclose(s_bd, s_ref, atol=1e-4)
+
+    def test_vo_products_preserved(self):
+        w = bd.prepare_bda(self.wq, self.wk, self.wv, self.wo, self.n, "first-r")
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(10, self.d)).astype(np.float32)
+        for i in range(self.n):
+            sl = slice(i * self.dh, (i + 1) * self.dh)
+            ref = x @ (self.wv[:, sl] @ self.wo[sl, :])
+            basis = x[:, : self.dh]
+            vp_i = basis + x[:, self.dh:] @ w.c_vo[:, sl]
+            got = vp_i @ w.b_vo[sl, :]
+            np.testing.assert_allclose(got, ref, atol=1e-4)
+
+    def test_param_reduction(self):
+        w = bd.prepare_bda(self.wq, self.wk, self.wv, self.wo, self.n)
+        mha = self.wq.size + self.wk.size + self.wv.size + self.wo.size
+        bda = w.b_qk.size + w.c_qk.size + w.c_vo.size + w.b_vo.size
+        kv_saving = 2 * self.dh * self.n * self.dh
+        assert mha - bda == kv_saving
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(6, 24),
+    n=st.integers(6, 24),
+    seed=st.integers(0, 10_000),
+    data=st.data(),
+)
+def test_bd_roundtrip_property(m, n, seed, data):
+    """Property: BD reconstructs any rank-r product exactly (f64)."""
+    r = data.draw(st.integers(1, min(m, n) - 1))
+    w = rank_r(m, n, r, seed)
+    col = bd.bd_col(w, r)
+    np.testing.assert_allclose(bd.reconstruct_col(col.tag, col.b, col.c), w,
+                               atol=1e-6, rtol=1e-6)
+    row = bd.bd_row(w, r)
+    np.testing.assert_allclose(bd.reconstruct_row(row.tag, row.b, row.c), w,
+                               atol=1e-6, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_memory_formula_property(seed):
+    """BD params r(m+n-r) < low-rank r(m+n), always."""
+    rng = np.random.default_rng(seed)
+    m, n = int(rng.integers(4, 64)), int(rng.integers(4, 64))
+    r = int(rng.integers(1, min(m, n)))
+    w = rank_r(m, n, r, seed)
+    d = bd.bd_col(w, r) if r < n else bd.bd_row(w, r)
+    bd_params = d.b.size + d.c.size
+    assert bd_params == r * (m + n - r)
+    assert bd_params < r * (m + n)

@@ -1,0 +1,145 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of the fused Pallas kernels against the
+pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bd as bd_lib
+from compile.kernels import ref
+from compile.kernels.bda_attention import bda_attention, bda_attention_heads
+from compile.kernels.bda_kproj import (
+    kproj_bda,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+from compile.kernels.mha_attention import mha_attention
+
+
+def rnd(shape, seed, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+class TestKprojBda:
+    @pytest.mark.parametrize("tag", ["first", "last"])
+    @pytest.mark.parametrize("l", [1, 7, 64, 200])
+    def test_matches_ref(self, tag, l):
+        d, n, dh = 64, 4, 16
+        x = rnd((l, d), 1)
+        c = rnd((d - dh, n * dh), 2, 0.1)
+        got = kproj_bda(x, c, n_heads=n, d_h=dh, tag=tag, tile_l=32)
+        want = ref.kproj_bda_ref(x, c, n, dh, tag)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_deepseek_shape(self):
+        """The paper's operator shape (d=512, d_h=128), scaled heads."""
+        d, n, dh, l = 512, 4, 128, 96
+        x = rnd((l, d), 3)
+        c = rnd((d - dh, n * dh), 4, 0.05)
+        got = kproj_bda(x, c, n_heads=n, d_h=dh, tag="first", tile_l=48)
+        want = ref.kproj_bda_ref(x, c, n, dh, "first")
+        np.testing.assert_allclose(got, want, atol=1e-3)
+
+    def test_bf16(self):
+        d, n, dh = 32, 2, 8
+        x = rnd((16, d), 5, dtype=jnp.bfloat16)
+        c = rnd((d - dh, n * dh), 6, 0.1, dtype=jnp.bfloat16)
+        got = kproj_bda(x, c, n_heads=n, d_h=dh, tile_l=16)
+        want = ref.kproj_bda_ref(x, c, n, dh, "first")
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=0.1, rtol=0.1,
+        )
+        assert got.dtype == jnp.bfloat16
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        l=st.integers(1, 80),
+        n=st.integers(1, 6),
+        dh_pow=st.integers(2, 4),
+        d_mult=st.integers(2, 5),
+        tag=st.sampled_from(["first", "last"]),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_sweep(self, l, n, dh_pow, d_mult, tag, seed):
+        """Hypothesis: fused kernel == oracle across the shape space."""
+        dh = 2 ** dh_pow
+        d = dh * d_mult
+        x = rnd((l, d), seed)
+        c = rnd((d - dh, n * dh), seed + 1, 0.1)
+        got = kproj_bda(x, c, n_heads=n, d_h=dh, tag=tag, tile_l=32)
+        want = ref.kproj_bda_ref(x, c, n, dh, tag)
+        np.testing.assert_allclose(got, want, atol=1e-3)
+
+    def test_vmem_and_mxu_estimates(self):
+        # Perf-model sanity: paper shape fits VMEM with double buffering.
+        assert vmem_bytes(128, 512, 128) < 2 * 1024 * 1024
+        assert mxu_utilization_estimate(512, 128) > 0.99
+
+
+class TestAttentionKernels:
+    def test_mha_matches_ref(self):
+        d, n, dh, l = 32, 2, 8, 12
+        wq, wk, wv = (rnd((d, n * dh), i, 0.05) for i in range(3))
+        wo = rnd((n * dh, d), 3, 0.05)
+        x = rnd((l, d), 4)
+        for causal in (False, True):
+            got = mha_attention(x, wq, wk, wv, wo, n_heads=n, d_h=dh, causal=causal)
+            want = ref.mha_attention_ref(x, wq, wk, wv, wo, n, causal=causal)
+            np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_bda_matches_its_ref(self):
+        d, n, dh, l = 32, 2, 8, 10
+        b_qk = rnd((d, n * dh), 5, 0.05)
+        c_qk = rnd((d - dh, n * dh), 6, 0.05)
+        c_vo = rnd((d - dh, n * dh), 7, 0.05)
+        b_vo = rnd((n * dh, d), 8, 0.05)
+        x = rnd((l, d), 9)
+        got = bda_attention(x, b_qk, c_qk, c_vo, b_vo, n_heads=n, d_h=dh, causal=True)
+        want = ref.bda_attention_ref(x, b_qk, c_qk, c_vo, b_vo, n, causal=True)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_bda_equals_mha_after_preparation(self):
+        """End-to-end losslessness at kernel level (the paper's headline)."""
+        d, n, dh, l = 48, 3, 8, 14
+        wq, wk, wv = (rnd((d, n * dh), 10 + i, 0.05) for i in range(3))
+        wo = rnd((n * dh, d), 13, 0.05)
+        w = bd_lib.prepare_bda(
+            np.asarray(wq), np.asarray(wk), np.asarray(wv), np.asarray(wo),
+            n, "first-r",
+        )
+        x = rnd((l, d), 14)
+        y_mha = ref.mha_attention_ref(x, wq, wk, wv, wo, n, causal=True)
+        y_bda = bda_attention(
+            x,
+            jnp.asarray(w.b_qk, jnp.float32), jnp.asarray(w.c_qk, jnp.float32),
+            jnp.asarray(w.c_vo, jnp.float32), jnp.asarray(w.b_vo, jnp.float32),
+            n_heads=n, d_h=dh, causal=True,
+        )
+        rel = float(jnp.abs(y_bda - y_mha).max() / (jnp.abs(y_mha).max() + 1e-12))
+        assert rel < 1e-3, rel
+
+    def test_heads_layout(self):
+        d, n, dh, l = 32, 2, 8, 6
+        b_qk = rnd((d, n * dh), 20, 0.05)
+        c_qk = rnd((d - dh, n * dh), 21, 0.05)
+        c_vo = rnd((d - dh, n * dh), 22, 0.05)
+        x = rnd((l, d), 23)
+        heads = bda_attention_heads(x, b_qk, c_qk, c_vo, n_heads=n, d_h=dh)
+        assert heads.shape == (l, n * dh)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 500), l=st.integers(2, 24), causal=st.booleans())
+    def test_mha_property(self, seed, l, causal):
+        d, n, dh = 16, 2, 4
+        wq, wk, wv = (rnd((d, n * dh), seed + i, 0.1) for i in range(3))
+        wo = rnd((n * dh, d), seed + 3, 0.1)
+        x = rnd((l, d), seed + 4)
+        got = mha_attention(x, wq, wk, wv, wo, n_heads=n, d_h=dh, causal=causal)
+        want = ref.mha_attention_ref(x, wq, wk, wv, wo, n, causal=causal)
+        np.testing.assert_allclose(got, want, atol=1e-4)

@@ -1,0 +1,156 @@
+"""L2 model tests: shapes, BDA-vs-MHA exactness, training step dynamics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return M.init_params(M.TINY, seed=7)
+
+
+@pytest.fixture(scope="module")
+def tiny_bda(tiny_params):
+    return M.to_bda_params(tiny_params, M.TINY)
+
+
+def tokens(b, l, seed=0, vocab=M.TINY.vocab_size):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, vocab, size=(b, l)), jnp.int32)
+
+
+class TestForward:
+    def test_shapes(self, tiny_params):
+        t = tokens(2, 8)
+        logits = M.forward(tiny_params, t, M.TINY, attention="mha")
+        assert logits.shape == (2, 8, M.TINY.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_bda_matches_mha(self, tiny_params, tiny_bda):
+        t = tokens(2, 12, seed=1)
+        a = M.forward(tiny_params, t, M.TINY, attention="mha")
+        b = M.forward(tiny_bda, t, M.TINY, attention="bda")
+        rel = float(jnp.abs(a - b).max() / (jnp.abs(a).max() + 1e-12))
+        assert rel < 5e-3, rel
+
+    def test_ref_paths_match_kernel_paths(self, tiny_params, tiny_bda):
+        t = tokens(1, 8, seed=2)
+        a = M.forward(tiny_params, t, M.TINY, attention="mha")
+        a_ref = M.forward(tiny_params, t, M.TINY, attention="mha_ref")
+        np.testing.assert_allclose(a, a_ref, atol=1e-4)
+        b = M.forward(tiny_bda, t, M.TINY, attention="bda")
+        b_ref = M.forward(tiny_bda, t, M.TINY, attention="bda_ref")
+        np.testing.assert_allclose(b, b_ref, atol=1e-4)
+
+    def test_causality(self, tiny_params):
+        """Changing a later token must not affect earlier logits."""
+        t1 = tokens(1, 8, seed=3)
+        t2 = t1.at[0, 7].set((t1[0, 7] + 1) % M.TINY.vocab_size)
+        a = M.forward(tiny_params, t1, M.TINY, attention="mha")
+        b = M.forward(tiny_params, t2, M.TINY, attention="mha")
+        np.testing.assert_allclose(a[0, :7], b[0, :7], atol=1e-5)
+
+    def test_param_reduction(self, tiny_params, tiny_bda):
+        import jax
+
+        def count(p):
+            return sum(int(np.prod(x.shape)) for x in
+                       jax.tree_util.tree_leaves(p) if hasattr(x, "shape"))
+        assert count(tiny_bda) < count(tiny_params)
+
+
+class TestDecodeStep:
+    @pytest.mark.parametrize("attn", ["mha", "bda"])
+    def test_incremental_matches_full(self, tiny_params, tiny_bda, attn):
+        """KV-cached decode must reproduce the full causal forward."""
+        cfg = M.TINY
+        params = tiny_params if attn == "mha" else tiny_bda
+        toks = np.array([5, 9, 17, 3, 30, 12], np.int32)
+        full = M.forward(params, jnp.asarray(toks[None]), cfg, attention=attn)[0]
+        kc = jnp.zeros((cfg.n_layers, cfg.max_seq_len, cfg.width))
+        vc = jnp.zeros_like(kc)
+        outs = []
+        for pos, t in enumerate(toks):
+            logits, kc, vc = M.decode_step(
+                params, kc, vc, jnp.int32(t), jnp.int32(pos), cfg, attention=attn
+            )
+            outs.append(logits)
+        np.testing.assert_allclose(jnp.stack(outs), full, atol=1e-4)
+
+    def test_cache_only_updates_current_position(self, tiny_params):
+        cfg = M.TINY
+        kc = jnp.zeros((cfg.n_layers, cfg.max_seq_len, cfg.width))
+        vc = jnp.zeros_like(kc)
+        _, kc1, _ = M.decode_step(
+            tiny_params, kc, vc, jnp.int32(4), jnp.int32(0), cfg, attention="mha"
+        )
+        # Row 0 written, later rows untouched (still zero).
+        assert float(jnp.abs(kc1[:, 0, :]).max()) > 0
+        assert float(jnp.abs(kc1[:, 1:, :]).max()) == 0
+
+
+class TestTraining:
+    def test_loss_decreases(self, tiny_params):
+        cfg = M.TINY
+        opt = M.init_opt_state(tiny_params)
+        params = tiny_params
+        # A learnable pattern: repeated token sequences.
+        rng = np.random.default_rng(5)
+        losses = []
+        for i in range(30):
+            seq = rng.integers(0, 8, size=(4, 1))
+            batch = jnp.asarray(np.tile(seq, (1, cfg.max_seq_len + 1)), jnp.int32)
+            params, opt, loss = M.train_step(
+                params, opt, batch, jnp.float32(8.0), cfg, attention="mha_ref"
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+    def test_bda_trains_like_mha(self, tiny_params, tiny_bda):
+        """Table 2's claim: same hyperparameters, comparable dynamics."""
+        cfg = M.TINY
+        rng = np.random.default_rng(6)
+        batches = [
+            jnp.asarray(
+                np.tile(rng.integers(0, 8, size=(4, 1)), (1, cfg.max_seq_len + 1)),
+                jnp.int32,
+            )
+            for _ in range(20)
+        ]
+        lm, lb = [], []
+        p_m, o_m = tiny_params, M.init_opt_state(tiny_params)
+        p_b, o_b = tiny_bda, M.init_opt_state(tiny_bda)
+        for t in batches:
+            p_m, o_m, loss_m = M.train_step(p_m, o_m, t, jnp.float32(4.0), cfg,
+                                            attention="mha_ref")
+            p_b, o_b, loss_b = M.train_step(p_b, o_b, t, jnp.float32(4.0), cfg,
+                                            attention="bda_ref")
+            lm.append(float(loss_m))
+            lb.append(float(loss_b))
+        # Both should drop, and final losses should be within 25%.
+        assert lm[-1] < lm[0] and lb[-1] < lb[0]
+        assert abs(lm[-1] - lb[-1]) / lm[-1] < 0.25, (lm[-1], lb[-1])
+
+    def test_noam_schedule_shape(self):
+        lrs = [float(M.noam_lr(jnp.float32(s), 128, jnp.float32(1.0)))
+               for s in [1, 100, 400, 1000, 4000]]
+        # Rises during warmup, decays after.
+        assert lrs[0] < lrs[1] < lrs[2]
+        assert lrs[2] > lrs[4]
+
+    def test_train_step_fn_positional_roundtrip(self, tiny_params):
+        cfg = M.TINY
+        opt = M.init_opt_state(tiny_params)
+        leaves, treedef = M.flatten_state(tiny_params, opt)
+        fn = M.make_train_step_fn(cfg, "mha_ref", treedef)
+        batch = tokens(2, cfg.max_seq_len + 1, seed=8)
+        out = fn(*leaves, batch, jnp.float32(1.0))
+        assert len(out) == len(leaves) + 1
+        loss = out[-1]
+        assert loss.shape == ()
+        # Feeding outputs back as inputs works (the Rust loop contract).
+        out2 = fn(*out[:-1], batch, jnp.float32(1.0))
+        assert float(out2[-1]) <= float(loss) * 1.5

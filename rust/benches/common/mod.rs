@@ -1,0 +1,93 @@
+//! Shared bench driver for the k_proj operator tables (6, 7) and Fig. 2b.
+
+use bda::attention::kproj::{kproj_bda, kproj_mha, pifa_from_mha};
+use bda::attention::mha::MhaWeights;
+use bda::attention::AttnShape;
+use bda::bd::{Strategy, Tag};
+use bda::bench_support::{bench, BenchConfig, Table};
+use bda::tensor::{DType, Tensor};
+
+/// Sequence lengths of Tables 6/7 (full sweep) — trimmed on fast mode.
+pub fn seq_lens() -> Vec<usize> {
+    if std::env::var("BDA_BENCH_FAST").is_ok() {
+        vec![64, 256, 1024]
+    } else {
+        vec![64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384]
+    }
+}
+
+/// The operator shape. The paper uses n=128 heads (DeepSeek-V3); we default
+/// to 16 on this single-core CPU testbed and note the scaling in
+/// EXPERIMENTS.md (FLOP ratios are head-count-invariant).
+pub fn op_shape() -> AttnShape {
+    let n: usize = std::env::var("BDA_BENCH_HEADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    AttnShape::new(512, n, 128)
+}
+
+pub struct OpRow {
+    pub seq_len: usize,
+    pub mha_mtok: f64,
+    pub pifa_mtok: f64,
+    pub bda_mtok: f64,
+}
+
+impl OpRow {
+    pub fn speedup(&self) -> f64 {
+        self.bda_mtok / self.mha_mtok
+    }
+}
+
+/// Run the three k_proj implementations at one (L, dtype) point.
+/// Throughput unit: million tokens/s (a "token" = one sequence position),
+/// matching Tables 6–7.
+pub fn run_point(l: usize, dt: DType, cfg: BenchConfig, with_pifa: bool) -> OpRow {
+    let s = op_shape();
+    let x = Tensor::randn(&[l, s.d], 1.0, l as u64).cast(dt);
+    let w_k = Tensor::randn(&[s.d, s.proj_width()], 0.02, 7).cast(dt);
+
+    let mha = MhaWeights::random(s, 11);
+    let bda = bda::attention::bda::BdaWeights::prepare(&mha, Strategy::FirstR, DType::F32)
+        .expect("prep");
+    let c_qk = bda.c_qk.clone().cast(dt);
+
+    let m_mha = bench("mha", cfg, l as f64, || {
+        std::hint::black_box(kproj_mha(&x, &w_k));
+    });
+    let m_bda = bench("bda", cfg, l as f64, || {
+        std::hint::black_box(kproj_bda(&x, &c_qk, Tag::First, s));
+    });
+    let pifa_mtok = if with_pifa {
+        let pifa = pifa_from_mha(&mha);
+        let m_pifa = bench("pifa", cfg, l as f64, || {
+            std::hint::black_box(pifa.project(&x));
+        });
+        m_pifa.mops()
+    } else {
+        f64::NAN
+    };
+
+    OpRow { seq_len: l, mha_mtok: m_mha.mops(), pifa_mtok, bda_mtok: m_bda.mops() }
+}
+
+/// Render a Tables-6/7-shaped table.
+pub fn print_op_table(title: &str, rows: &[OpRow]) {
+    let mut t = Table::new(title, &["Seq. Len", "MHA", "PIFA-style (per-head QR)", "BDA", "Speedup"]);
+    for r in rows {
+        t.row(vec![
+            r.seq_len.to_string(),
+            format!("{:.3}", r.mha_mtok),
+            if r.pifa_mtok.is_nan() { "-".into() } else { format!("{:.3}", r.pifa_mtok) },
+            format!("{:.3}", r.bda_mtok),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t.print();
+    let avg: f64 = rows.iter().map(|r| r.speedup()).sum::<f64>() / rows.len() as f64;
+    println!(
+        "average speedup: {avg:.2}x | theoretical bound {:.2}x (paper avg: 1.32x fp16 / 1.34x bf16)",
+        bda::bd::cost::kproj_theoretical_speedup(512, 128)
+    );
+}

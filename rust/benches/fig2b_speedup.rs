@@ -1,0 +1,49 @@
+//! Fig. 2b: relative k_proj speedup (BDA/MHA) vs sequence length for FP16
+//! and BF16, against the 1.33x theoretical line. Prints the two series the
+//! figure plots.
+//!
+//! Run: cargo bench --bench fig2b_speedup
+
+mod common;
+
+use bda::bench_support::{BenchConfig, Table};
+use bda::tensor::DType;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let bound = bda::bd::cost::kproj_theoretical_speedup(512, 128);
+    println!("Fig. 2b — relative speedup series (theoretical bound {bound:.3}x)");
+
+    let lens = common::seq_lens();
+    let mut t = Table::new(
+        "Fig. 2b — k_proj relative speedup (BDA / MHA)",
+        &["Seq. Len", "FP16", "BF16", "bound"],
+    );
+    let mut sum16 = 0.0;
+    let mut sumbf = 0.0;
+    for &l in &lens {
+        // PIFA not needed for the figure (it plots MHA-relative speedup).
+        let r16 = common::run_point(l, DType::F16, cfg, false);
+        let rbf = common::run_point(l, DType::BF16, cfg, false);
+        println!(
+            "  L={:<6} fp16 {:.3}x | bf16 {:.3}x",
+            l,
+            r16.speedup(),
+            rbf.speedup()
+        );
+        sum16 += r16.speedup();
+        sumbf += rbf.speedup();
+        t.row(vec![
+            l.to_string(),
+            format!("{:.3}", r16.speedup()),
+            format!("{:.3}", rbf.speedup()),
+            format!("{bound:.3}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "series averages: fp16 {:.2}x, bf16 {:.2}x (paper: 1.32x / 1.34x, bound 1.33x)",
+        sum16 / lens.len() as f64,
+        sumbf / lens.len() as f64
+    );
+}

@@ -1,0 +1,40 @@
+//! Table 6: k_proj throughput (Mtok/s), FP16 — MHA vs PIFA-style vs BDA
+//! across sequence lengths, at the DeepSeek-V3 shape (d=512, d_h=128).
+//!
+//! Run: cargo bench --bench table6_kproj_fp16
+//! Env: BDA_BENCH_FAST=1 (short sweep), BDA_BENCH_HEADS=n (head count).
+
+mod common;
+
+use bda::bench_support::BenchConfig;
+use bda::tensor::DType;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let s = common::op_shape();
+    println!(
+        "Table 6 — FP16 k_proj throughput | shape d={} d_h={} n_heads={} (paper: n=128, A6000)",
+        s.d, s.d_h, s.n_heads
+    );
+    let rows: Vec<common::OpRow> = common::seq_lens()
+        .into_iter()
+        .map(|l| {
+            let r = common::run_point(l, DType::F16, cfg, true);
+            println!(
+                "  L={:<6} mha {:.3} | pifa {:.3} | bda {:.3} Mtok/s ({:.2}x)",
+                r.seq_len, r.mha_mtok, r.pifa_mtok, r.bda_mtok, r.speedup()
+            );
+            r
+        })
+        .collect();
+    common::print_op_table("Table 6 — Throughput (Mtok/s), FP16", &rows);
+
+    // Shape assertions the paper's table exhibits: BDA > MHA > PIFA.
+    let wins = rows.iter().filter(|r| r.bda_mtok > r.mha_mtok).count();
+    let pifa_slow = rows.iter().filter(|r| r.pifa_mtok < r.mha_mtok).count();
+    println!(
+        "BDA beats MHA on {wins}/{} lengths; PIFA slower than MHA on {pifa_slow}/{} lengths",
+        rows.len(),
+        rows.len()
+    );
+}

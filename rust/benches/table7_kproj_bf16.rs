@@ -1,0 +1,29 @@
+//! Table 7: k_proj throughput (Mtok/s), BF16 — same grid as Table 6.
+//!
+//! Run: cargo bench --bench table7_kproj_bf16
+
+mod common;
+
+use bda::bench_support::BenchConfig;
+use bda::tensor::DType;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let s = common::op_shape();
+    println!(
+        "Table 7 — BF16 k_proj throughput | shape d={} d_h={} n_heads={} (paper: n=128, A6000)",
+        s.d, s.d_h, s.n_heads
+    );
+    let rows: Vec<common::OpRow> = common::seq_lens()
+        .into_iter()
+        .map(|l| {
+            let r = common::run_point(l, DType::BF16, cfg, true);
+            println!(
+                "  L={:<6} mha {:.3} | pifa {:.3} | bda {:.3} Mtok/s ({:.2}x)",
+                r.seq_len, r.mha_mtok, r.pifa_mtok, r.bda_mtok, r.speedup()
+            );
+            r
+        })
+        .collect();
+    common::print_op_table("Table 7 — Throughput (Mtok/s), BF16", &rows);
+}

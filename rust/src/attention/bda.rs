@@ -1,0 +1,433 @@
+//! BD Attention — Algorithms 2 & 3 of the paper.
+//!
+//! Offline preparation (Alg. 3): per head, column-BD of `W_q^i (W_k^i)^T`
+//! and row-BD of `W_v^i W_o^i` at rank `d_h`, with all heads *aligned* to a
+//! shared first-r/last-r tag (chosen by mean residual) so inference can use
+//! one shared slice of X and coalesced GEMMs (Eq. 12 / Eq. 14).
+//!
+//! Inference (Alg. 2):
+//! ```text
+//! Q' = X B_qk
+//! K' = [X_basis]^{×n} + X_rest C_qk
+//! V' = [X_basis]^{×n} + X_rest C_vo
+//! O'_i = softmax(Q'_i K'_i^T / √d_h) V'_i ;  Y = [O'_1..O'_n] B_vo
+//! ```
+//! Outputs equal MHA's exactly (up to float rounding): every per-head
+//! QK inner product and every V·W_o product is preserved.
+
+use super::mha::{attention_core, MhaWeights};
+use super::{AttnShape, kproj};
+use crate::bd::{bd_col, bd_row, BdError, Strategy, Tag};
+use crate::tensor::matmul::matmul;
+use crate::tensor::{DType, Tensor};
+
+/// Per-projection residual statistics gathered during preparation
+/// (Table 4's MSE/NMSE and Algorithm 3's mean-residual tag selection).
+#[derive(Clone, Debug, Default)]
+pub struct PrepStats {
+    /// Per-head Frobenius residuals of the first-r candidate.
+    pub residual_first: Vec<f64>,
+    /// Per-head Frobenius residuals of the last-r candidate.
+    pub residual_last: Vec<f64>,
+    /// Per-head MSE of the selected candidate's reconstruction vs the
+    /// (quantized) head product.
+    pub mse: Vec<f64>,
+    /// Per-head NMSE of the selected candidate.
+    pub nmse: Vec<f64>,
+}
+
+impl PrepStats {
+    pub fn mean_mse(&self) -> f64 {
+        mean(&self.mse)
+    }
+    pub fn mean_nmse(&self) -> f64 {
+        mean(&self.nmse)
+    }
+    pub fn mean_residual_first(&self) -> f64 {
+        mean(&self.residual_first)
+    }
+    pub fn mean_residual_last(&self) -> f64 {
+        mean(&self.residual_last)
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// BDA weights for one attention block (Algorithm 2 inputs).
+#[derive(Clone, Debug)]
+pub struct BdaWeights {
+    pub shape: AttnShape,
+    /// Shared basis tag for all QK heads.
+    pub tag_qk: Tag,
+    /// Shared basis tag for all VO heads.
+    pub tag_vo: Tag,
+    /// d × n·d_h — per-head column bases `[B_qk^1 … B_qk^n]` (replaces W_q).
+    pub b_qk: Tensor,
+    /// (d−d_h) × n·d_h — `[C_qk^{1T} … C_qk^{nT}]` (replaces W_k).
+    pub c_qk: Tensor,
+    /// (d−d_h) × n·d_h — `[C_vo^1 … C_vo^n]` (replaces W_v).
+    pub c_vo: Tensor,
+    /// n·d_h × d — stacked row bases (replaces W_o).
+    pub b_vo: Tensor,
+    /// Residual stats from preparation.
+    pub qk_stats: PrepStats,
+    pub vo_stats: PrepStats,
+}
+
+/// Full BDA attention block.
+#[derive(Clone, Debug)]
+pub struct BdaAttention {
+    pub weights: BdaWeights,
+}
+
+impl BdaWeights {
+    /// Offline BDA preparation (Algorithm 3) from MHA weights.
+    ///
+    /// `dtype` simulates the precision the paper prepares in (Fig. 2a /
+    /// Tables 4–5 sweep FP32/FP16/BF16): weights and products are rounded
+    /// through it; the residual comparison and error stats are measured in
+    /// that precision. `strategy` picks First-r vs Residual-min.
+    pub fn prepare(mha: &MhaWeights, strategy: Strategy, dtype: DType) -> Result<BdaWeights, BdError> {
+        let s = mha.shape;
+        let (d, n, d_h) = (s.d, s.n_heads, s.d_h);
+        let _ = d;
+
+        // ---- QK: column-BD of each head product ---------------------------
+        let mut qk_first = Vec::with_capacity(n);
+        let mut qk_last = Vec::with_capacity(n);
+        let mut qk_stats = PrepStats::default();
+        let mut qk_products = Vec::with_capacity(n);
+        for i in 0..n {
+            let wq_i = quant(&mha.wq_head(i), dtype);
+            let wk_i = quant(&mha.wk_head(i), dtype);
+            let w = matmul_q(&wq_i, &wk_i.transpose(), dtype); // d×d, rank d_h
+            // Evaluate both candidates (always both: Alg. 3 compares means).
+            let first = bd_col_q(&w, d_h, Tag::First, dtype)?;
+            let last = bd_col_q(&w, d_h, Tag::Last, dtype)?;
+            qk_stats.residual_first.push(first.1);
+            qk_stats.residual_last.push(last.1);
+            qk_first.push(first);
+            qk_last.push(last);
+            qk_products.push(w);
+        }
+        let tag_qk = select_tag(strategy, &qk_stats);
+        let chosen_qk = if tag_qk == Tag::First { &qk_first } else { &qk_last };
+        for (i, (bc, _res)) in chosen_qk.iter().enumerate() {
+            let recon = crate::bd::reconstruct_col(tag_qk, &bc.0, &bc.1);
+            qk_stats.mse.push(recon.mse(&qk_products[i]));
+            qk_stats.nmse.push(crate::tensor::ops::nmse(&recon, &qk_products[i]));
+        }
+        // Assemble B_qk (d × n·d_h) and C_qk ((d−d_h) × n·d_h).
+        let b_parts: Vec<&Tensor> = chosen_qk.iter().map(|(bc, _)| &bc.0).collect();
+        let b_qk = Tensor::concat_cols(&b_parts);
+        // C^i is d_h×(d−d_h); stack transposes along columns.
+        let c_t: Vec<Tensor> = chosen_qk.iter().map(|(bc, _)| bc.1.transpose()).collect();
+        let c_refs: Vec<&Tensor> = c_t.iter().collect();
+        let c_qk = Tensor::concat_cols(&c_refs);
+
+        // ---- VO: row-BD of each head product -------------------------------
+        let mut vo_first = Vec::with_capacity(n);
+        let mut vo_last = Vec::with_capacity(n);
+        let mut vo_stats = PrepStats::default();
+        let mut vo_products = Vec::with_capacity(n);
+        for i in 0..n {
+            let wv_i = quant(&mha.wv_head(i), dtype);
+            let wo_i = quant(&mha.wo_head(i), dtype);
+            let w = matmul_q(&wv_i, &wo_i, dtype); // d×d, rank d_h
+            let first = bd_row_q(&w, d_h, Tag::First, dtype)?;
+            let last = bd_row_q(&w, d_h, Tag::Last, dtype)?;
+            vo_stats.residual_first.push(first.1);
+            vo_stats.residual_last.push(last.1);
+            vo_first.push(first);
+            vo_last.push(last);
+            vo_products.push(w);
+        }
+        let tag_vo = select_tag(strategy, &vo_stats);
+        let chosen_vo = if tag_vo == Tag::First { &vo_first } else { &vo_last };
+        for (i, (bc, _res)) in chosen_vo.iter().enumerate() {
+            let recon = crate::bd::reconstruct_row(tag_vo, &bc.0, &bc.1);
+            vo_stats.mse.push(recon.mse(&vo_products[i]));
+            vo_stats.nmse.push(crate::tensor::ops::nmse(&recon, &vo_products[i]));
+        }
+        // C_vo: (d−d_h) × n·d_h, col-stacked; B_vo: n·d_h × d, row-stacked.
+        let c_parts: Vec<&Tensor> = chosen_vo.iter().map(|(bc, _)| &bc.1).collect();
+        let c_vo = Tensor::concat_cols(&c_parts);
+        let b_parts: Vec<&Tensor> = chosen_vo.iter().map(|(bc, _)| &bc.0).collect();
+        let b_vo = Tensor::concat_rows(&b_parts);
+
+        Ok(BdaWeights {
+            shape: s,
+            tag_qk,
+            tag_vo,
+            b_qk,
+            c_qk,
+            c_vo,
+            b_vo,
+            qk_stats,
+            vo_stats,
+        })
+    }
+
+    /// Parameter count of the BDA block (vs MHA's `4·d·n·d_h`).
+    pub fn param_count(&self) -> usize {
+        self.b_qk.numel() + self.c_qk.numel() + self.c_vo.numel() + self.b_vo.numel()
+    }
+
+    /// The K'/V' projections — Lines 2–3 of Algorithm 2 (the fused operator
+    /// benchmarked in Fig. 2b / Tables 6–7).
+    pub fn project_kv(&self, x: &Tensor) -> (Tensor, Tensor) {
+        let k = kproj::kproj_bda(x, &self.c_qk, self.tag_qk, self.shape);
+        let v = kproj::kproj_bda(x, &self.c_vo, self.tag_vo, self.shape);
+        (k, v)
+    }
+}
+
+impl BdaAttention {
+    pub fn new(weights: BdaWeights) -> Self {
+        BdaAttention { weights }
+    }
+
+    /// Prepare from MHA weights (convenience).
+    pub fn from_mha(mha: &MhaWeights, strategy: Strategy, dtype: DType) -> Result<Self, BdError> {
+        Ok(Self::new(BdaWeights::prepare(mha, strategy, dtype)?))
+    }
+
+    /// BDA inference — Algorithm 2.
+    pub fn forward(&self, x: &Tensor, causal: bool) -> Tensor {
+        let w = &self.weights;
+        let s = w.shape;
+        assert_eq!(x.cols(), s.d);
+        let q = matmul(x, &w.b_qk);
+        let (k, v) = w.project_kv(x);
+        attention_core(&q, &k, &v, &w.b_vo, s, causal)
+    }
+}
+
+fn quant(t: &Tensor, dt: DType) -> Tensor {
+    crate::tensor::ops::quantized_copy(t, dt)
+}
+
+fn matmul_q(a: &Tensor, b: &Tensor, dt: DType) -> Tensor {
+    crate::tensor::matmul::matmul_dt(a, b, DType::F32).cast(dt)
+}
+
+/// Column-BD at a fixed tag, quantizing factors through `dtype`;
+/// returns ((B, C), residual-in-dtype).
+fn bd_col_q(
+    w: &Tensor,
+    r: usize,
+    tag: Tag,
+    dt: DType,
+) -> Result<((Tensor, Tensor), f64), BdError> {
+    let strategy = match tag {
+        Tag::First => Strategy::FirstR,
+        Tag::Last => Strategy::ResidualMin, // we will pick the Last candidate below
+    };
+    // Run full residual-min to get both; cheaper path: call decompose once
+    // per tag via slicing. Use the direct API:
+    let col = match tag {
+        Tag::First => bd_col(w, r, strategy)?,
+        Tag::Last => {
+            let both = bd_col(w, r, Strategy::ResidualMin)?;
+            if both.tag == Tag::Last {
+                both
+            } else {
+                // Force last: recompute on the reversed problem.
+                force_col_last(w, r)?
+            }
+        }
+    };
+    let b = quant(&col.b, dt);
+    let c = quant(&col.c, dt);
+    let recon = crate::bd::reconstruct_col(tag, &b, &c);
+    let residual = recon.sub(w).fro_norm();
+    Ok(((b, c), residual))
+}
+
+fn bd_row_q(
+    w: &Tensor,
+    r: usize,
+    tag: Tag,
+    dt: DType,
+) -> Result<((Tensor, Tensor), f64), BdError> {
+    let row = match tag {
+        Tag::First => bd_row(w, r, Strategy::FirstR)?,
+        Tag::Last => {
+            let both = bd_row(w, r, Strategy::ResidualMin)?;
+            if both.tag == Tag::Last {
+                both
+            } else {
+                force_row_last(w, r)?
+            }
+        }
+    };
+    let b = quant(&row.b, dt);
+    let c = quant(&row.c, dt);
+    let recon = crate::bd::reconstruct_row(tag, &b, &c);
+    let residual = recon.sub(w).fro_norm();
+    Ok(((b, c), residual))
+}
+
+/// Decompose with the last-r columns as basis (bypasses residual selection).
+fn force_col_last(w: &Tensor, r: usize) -> Result<crate::bd::ColBd, BdError> {
+    let n = w.cols();
+    let b = w.slice_cols(n - r, n);
+    let rest = w.slice_cols(0, n - r);
+    let b64 = crate::linalg::lu::MatF64::from_tensor(&b);
+    let rest64 = crate::linalg::lu::MatF64::from_tensor(&rest);
+    let btb = b64.transpose().matmul(&b64);
+    let btr = b64.transpose().matmul(&rest64);
+    let c = crate::linalg::lu::lu_solve_matrix_f64(&btb, &btr)?.to_tensor();
+    let recon = crate::bd::reconstruct_col(Tag::Last, &b, &c);
+    let residual = recon.sub(w).fro_norm();
+    Ok(crate::bd::ColBd {
+        tag: Tag::Last,
+        b,
+        c,
+        residual,
+        residual_first: f64::NAN,
+        residual_last: residual,
+    })
+}
+
+fn force_row_last(w: &Tensor, r: usize) -> Result<crate::bd::RowBd, BdError> {
+    let m = w.rows();
+    let b = w.slice_rows(m - r, m);
+    let rest = w.slice_rows(0, m - r);
+    let b64 = crate::linalg::lu::MatF64::from_tensor(&b);
+    let rest64 = crate::linalg::lu::MatF64::from_tensor(&rest);
+    let bbt = b64.matmul(&b64.transpose());
+    let rbt = rest64.matmul(&b64.transpose());
+    let c = crate::linalg::lu::solve_xa_b_f64(&bbt, &rbt)?.to_tensor();
+    let recon = crate::bd::reconstruct_row(Tag::Last, &b, &c);
+    let residual = recon.sub(w).fro_norm();
+    Ok(crate::bd::RowBd {
+        tag: Tag::Last,
+        b,
+        c,
+        residual,
+        residual_first: f64::NAN,
+        residual_last: residual,
+    })
+}
+
+/// Algorithm 3 line 4–5: pick the tag with the smaller *mean* residual.
+fn select_tag(strategy: Strategy, stats: &PrepStats) -> Tag {
+    match strategy {
+        Strategy::FirstR => Tag::First,
+        Strategy::ResidualMin => {
+            if stats.mean_residual_first() <= stats.mean_residual_last() {
+                Tag::First
+            } else {
+                Tag::Last
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mha::mha_forward;
+
+    fn setup(d: usize, n: usize, d_h: usize, seed: u64) -> (MhaWeights, Tensor) {
+        let s = AttnShape::new(d, n, d_h);
+        let w = MhaWeights::random(s, seed);
+        let x = Tensor::randn(&[6, d], 1.0, seed + 100);
+        (w, x)
+    }
+
+    #[test]
+    fn bda_matches_mha_fp32() {
+        let (w, x) = setup(32, 4, 8, 1);
+        let bda = BdaAttention::from_mha(&w, Strategy::ResidualMin, DType::F32).unwrap();
+        let y_mha = mha_forward(&w, &x, false);
+        let y_bda = bda.forward(&x, false);
+        let rel = y_bda.max_abs_diff(&y_mha) / y_mha.fro_norm().max(1e-9) as f32;
+        assert!(rel < 1e-3, "relative diff {rel}");
+    }
+
+    #[test]
+    fn bda_matches_mha_causal() {
+        let (w, x) = setup(24, 3, 8, 2);
+        let bda = BdaAttention::from_mha(&w, Strategy::ResidualMin, DType::F32).unwrap();
+        let y_mha = mha_forward(&w, &x, true);
+        let y_bda = bda.forward(&x, true);
+        assert!(y_bda.max_abs_diff(&y_mha) < 1e-4);
+    }
+
+    #[test]
+    fn qk_inner_products_preserved() {
+        // The paper's key invariant: Q'_i K'_i^T == Q_i K_i^T per head.
+        let (w, x) = setup(16, 2, 4, 3);
+        let bda = BdaAttention::from_mha(&w, Strategy::ResidualMin, DType::F32).unwrap();
+        let s = w.shape;
+        let q = matmul(&x, &w.wq);
+        let k = matmul(&x, &w.wk);
+        let qp = matmul(&x, &bda.weights.b_qk);
+        let kp = kproj::kproj_bda(&x, &bda.weights.c_qk, bda.weights.tag_qk, s);
+        for i in 0..s.n_heads {
+            let qi = q.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let ki = k.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let qpi = qp.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let kpi = kp.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let scores = matmul(&qi, &ki.transpose());
+            let scores_p = matmul(&qpi, &kpi.transpose());
+            assert!(
+                scores_p.max_abs_diff(&scores) < 1e-4,
+                "head {i} diff {}",
+                scores_p.max_abs_diff(&scores)
+            );
+        }
+    }
+
+    #[test]
+    fn param_reduction_matches_formula() {
+        // BDA replaces Wk (d×ndh) with C_qk ((d−dh)×ndh) and Wv likewise:
+        // total saving = 2·dh·ndh; ratio on K/V weights = dh/d = 25% here.
+        let (w, _) = setup(32, 4, 8, 4);
+        let bda = BdaWeights::prepare(&w, Strategy::ResidualMin, DType::F32).unwrap();
+        let expected = w.param_count() - 2 * 8 * 32 * 4 / 4; // 2·d_h·n·d_h… compute directly:
+        let _ = expected;
+        let mha_kv = 2 * 32 * (4 * 8); // Wk + Wv
+        let bda_kv = 2 * (32 - 8) * (4 * 8); // C_qk + C_vo
+        assert_eq!(bda.param_count(), w.param_count() - (mha_kv - bda_kv));
+        let reduction = 1.0 - bda_kv as f64 / mha_kv as f64;
+        assert!((reduction - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fp16_prep_small_error() {
+        let (w, x) = setup(32, 4, 8, 5);
+        let bda = BdaAttention::from_mha(&w, Strategy::ResidualMin, DType::F16).unwrap();
+        let y_mha = mha_forward(&w, &x, false);
+        let y_bda = bda.forward(&x, false);
+        let rel = (y_bda.max_abs_diff(&y_mha) as f64) / y_mha.fro_norm().max(1e-9);
+        // FP16 prep: small but nonzero error.
+        assert!(rel < 1e-1, "rel {rel}");
+        assert!(bda.weights.qk_stats.mean_nmse() > 0.0);
+    }
+
+    #[test]
+    fn residual_min_stats_complete() {
+        let (w, _) = setup(16, 2, 4, 6);
+        let bda = BdaWeights::prepare(&w, Strategy::ResidualMin, DType::F32).unwrap();
+        assert_eq!(bda.qk_stats.residual_first.len(), 2);
+        assert_eq!(bda.qk_stats.residual_last.len(), 2);
+        assert_eq!(bda.qk_stats.mse.len(), 2);
+        assert_eq!(bda.vo_stats.nmse.len(), 2);
+    }
+
+    #[test]
+    fn shapes_of_bda_weights() {
+        let (w, _) = setup(32, 4, 8, 7);
+        let bda = BdaWeights::prepare(&w, Strategy::FirstR, DType::F32).unwrap();
+        assert_eq!(bda.b_qk.shape, vec![32, 32]); // d × n·d_h
+        assert_eq!(bda.c_qk.shape, vec![24, 32]); // (d−d_h) × n·d_h
+        assert_eq!(bda.c_vo.shape, vec![24, 32]);
+        assert_eq!(bda.b_vo.shape, vec![32, 32]); // n·d_h × d
+        assert_eq!(bda.tag_qk, Tag::First);
+    }
+}

@@ -1,0 +1,177 @@
+//! Standard multi-head attention — Algorithm 1 of the paper. This is the
+//! exact-output reference that BDA must match bit-for-bit up to float
+//! reassociation.
+
+use super::{split_heads, AttnShape};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// MHA projection weights.
+#[derive(Clone, Debug)]
+pub struct MhaWeights {
+    pub shape: AttnShape,
+    /// d × n·d_h
+    pub wq: Tensor,
+    /// d × n·d_h
+    pub wk: Tensor,
+    /// d × n·d_h
+    pub wv: Tensor,
+    /// n·d_h × d
+    pub wo: Tensor,
+}
+
+impl MhaWeights {
+    /// Deterministic random init (std ≈ GPT-2 style 0.02·scale).
+    pub fn random(shape: AttnShape, seed: u64) -> MhaWeights {
+        let w = shape.proj_width();
+        let std = 0.02;
+        MhaWeights {
+            shape,
+            wq: Tensor::randn(&[shape.d, w], std, seed),
+            wk: Tensor::randn(&[shape.d, w], std, seed + 1),
+            wv: Tensor::randn(&[shape.d, w], std, seed + 2),
+            wo: Tensor::randn(&[w, shape.d], std, seed + 3),
+        }
+    }
+
+    /// Per-head vertical slice of W_q (d × d_h).
+    pub fn wq_head(&self, i: usize) -> Tensor {
+        self.wq.slice_cols(i * self.shape.d_h, (i + 1) * self.shape.d_h)
+    }
+
+    pub fn wk_head(&self, i: usize) -> Tensor {
+        self.wk.slice_cols(i * self.shape.d_h, (i + 1) * self.shape.d_h)
+    }
+
+    pub fn wv_head(&self, i: usize) -> Tensor {
+        self.wv.slice_cols(i * self.shape.d_h, (i + 1) * self.shape.d_h)
+    }
+
+    /// Per-head horizontal slice of W_o (d_h × d).
+    pub fn wo_head(&self, i: usize) -> Tensor {
+        self.wo.slice_rows(i * self.shape.d_h, (i + 1) * self.shape.d_h)
+    }
+
+    /// Total parameter count of the four projections.
+    pub fn param_count(&self) -> usize {
+        self.wq.numel() + self.wk.numel() + self.wv.numel() + self.wo.numel()
+    }
+}
+
+/// Full MHA forward (Algorithm 1). `causal` applies the decoder mask.
+pub fn mha_forward(w: &MhaWeights, x: &Tensor, causal: bool) -> Tensor {
+    let s = w.shape;
+    assert_eq!(x.cols(), s.d, "input dim mismatch");
+    let q = matmul(x, &w.wq);
+    let k = matmul(x, &w.wk);
+    let v = matmul(x, &w.wv);
+    attention_core(&q, &k, &v, &w.wo, s, causal)
+}
+
+/// Shared attention core: per-head softmax(Q_i K_i^T / √d_h) V_i, concat,
+/// output projection. Used by MHA, BDA, and PIFA paths so the only
+/// difference between them is how Q/K/V are produced — exactly the paper's
+/// framing (Algorithms 1 vs 2 differ only in K/V computation).
+pub fn attention_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    wo: &Tensor,
+    s: AttnShape,
+    causal: bool,
+) -> Tensor {
+    let scale = 1.0 / (s.d_h as f32).sqrt();
+    let qs = split_heads(q, s.n_heads);
+    let ks = split_heads(k, s.n_heads);
+    let vs = split_heads(v, s.n_heads);
+    let mut outs = Vec::with_capacity(s.n_heads);
+    for i in 0..s.n_heads {
+        let scores = matmul(&qs[i], &ks[i].transpose()).scale(scale);
+        let probs = if causal {
+            scores.softmax_rows_causal(0)
+        } else {
+            scores.softmax_rows()
+        };
+        outs.push(matmul(&probs, &vs[i]));
+    }
+    let refs: Vec<&Tensor> = outs.iter().collect();
+    let concat = Tensor::concat_cols(&refs);
+    matmul(&concat, wo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape() {
+        let s = AttnShape::new(32, 4, 8);
+        let w = MhaWeights::random(s, 1);
+        let x = Tensor::randn(&[5, 32], 1.0, 2);
+        let y = mha_forward(&w, &x, false);
+        assert_eq!(y.shape, vec![5, 32]);
+    }
+
+    #[test]
+    fn causal_prefix_property() {
+        // With a causal mask, output at position t depends only on x[..=t]:
+        // truncating the input must not change earlier outputs.
+        let s = AttnShape::new(16, 2, 8);
+        let w = MhaWeights::random(s, 3);
+        let x = Tensor::randn(&[6, 16], 1.0, 4);
+        let y_full = mha_forward(&w, &x, true);
+        let y_trunc = mha_forward(&w, &x.slice_rows(0, 4), true);
+        let y_full_head = y_full.slice_rows(0, 4);
+        assert!(y_full_head.max_abs_diff(&y_trunc) < 1e-5);
+    }
+
+    #[test]
+    fn noncausal_sees_future() {
+        let s = AttnShape::new(16, 2, 8);
+        let w = MhaWeights::random(s, 5);
+        let x = Tensor::randn(&[6, 16], 1.0, 6);
+        let y_full = mha_forward(&w, &x, false);
+        let y_trunc = mha_forward(&w, &x.slice_rows(0, 4), false);
+        let y_full_head = y_full.slice_rows(0, 4);
+        assert!(y_full_head.max_abs_diff(&y_trunc) > 1e-4);
+    }
+
+    #[test]
+    fn head_slices_partition_weights() {
+        let s = AttnShape::new(8, 2, 4);
+        let w = MhaWeights::random(s, 7);
+        let q0 = w.wq_head(0);
+        let q1 = w.wq_head(1);
+        assert_eq!(Tensor::concat_cols(&[&q0, &q1]), w.wq);
+        let o0 = w.wo_head(0);
+        let o1 = w.wo_head(1);
+        assert_eq!(Tensor::concat_rows(&[&o0, &o1]), w.wo);
+    }
+
+    #[test]
+    fn param_count() {
+        let s = AttnShape::new(8, 2, 4);
+        let w = MhaWeights::random(s, 8);
+        assert_eq!(w.param_count(), 3 * 8 * 8 + 8 * 8);
+    }
+
+    #[test]
+    fn equivalent_to_reformulated_sum() {
+        // Eq. 10: Y = sum_i softmax(X (Wq_i Wk_i^T) X^T / sqrt(dh)) X (Wv_i Wo_i)
+        let s = AttnShape::new(12, 3, 4);
+        let w = MhaWeights::random(s, 9);
+        let x = Tensor::randn(&[5, 12], 1.0, 10);
+        let y = mha_forward(&w, &x, false);
+
+        let scale = 1.0 / (s.d_h as f32).sqrt();
+        let mut y2 = Tensor::zeros(&[5, 12]);
+        for i in 0..s.n_heads {
+            let wqk = matmul(&w.wq_head(i), &w.wk_head(i).transpose());
+            let scores = matmul(&matmul(&x, &wqk), &x.transpose()).scale(scale);
+            let probs = scores.softmax_rows();
+            let wvo = matmul(&w.wv_head(i), &w.wo_head(i));
+            y2.add_assign(&matmul(&probs, &matmul(&x, &wvo)));
+        }
+        assert!(y.max_abs_diff(&y2) < 1e-4, "diff {}", y.max_abs_diff(&y2));
+    }
+}

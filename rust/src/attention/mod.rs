@@ -1,0 +1,85 @@
+//! Attention operators: the MHA reference (Alg. 1), BD Attention (Alg. 2),
+//! the PIFA-style per-head-pivot baseline, the structured-pruning baseline,
+//! standalone k/v projection operators (the Fig. 2b / Tables 6–7 bench
+//! targets), and decoupled RoPE (Appendix D).
+
+pub mod bda;
+pub mod kproj;
+pub mod mha;
+pub mod pifa;
+pub mod pruning;
+pub mod rope;
+
+pub use bda::{BdaAttention, BdaWeights};
+pub use mha::{mha_forward, MhaWeights};
+pub use pifa::PifaAttention;
+
+use crate::tensor::Tensor;
+
+/// Shape of one attention block: input dim `d`, `n_heads` heads of
+/// dimension `d_h` each. The paper's operator benches use the DeepSeek-V3
+/// KV configuration d=512, d_h=128, n=128 (compression ratio d_h/d = 25%).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub d: usize,
+    pub n_heads: usize,
+    pub d_h: usize,
+}
+
+impl AttnShape {
+    pub fn new(d: usize, n_heads: usize, d_h: usize) -> Self {
+        assert!(d_h < d, "BD requires d_h < d");
+        AttnShape { d, n_heads, d_h }
+    }
+
+    /// The DeepSeek-V3 KV shape used in Tables 6–7.
+    pub fn deepseek_v3() -> Self {
+        AttnShape::new(512, 128, 128)
+    }
+
+    /// Total projection width n·d_h.
+    pub fn proj_width(&self) -> usize {
+        self.n_heads * self.d_h
+    }
+
+    /// Compression ratio d_h/d (paper: 25%).
+    pub fn compression_ratio(&self) -> f64 {
+        self.d_h as f64 / self.d as f64
+    }
+}
+
+/// Split an L×(n·d_h) tensor into n per-head L×d_h views (copies).
+pub fn split_heads(x: &Tensor, n_heads: usize) -> Vec<Tensor> {
+    assert_eq!(x.ndim(), 2);
+    let total = x.cols();
+    assert_eq!(total % n_heads, 0);
+    let d_h = total / n_heads;
+    (0..n_heads).map(|i| x.slice_cols(i * d_h, (i + 1) * d_h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_invariants() {
+        let s = AttnShape::deepseek_v3();
+        assert_eq!(s.proj_width(), 128 * 128);
+        assert!((s.compression_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dh_must_be_less_than_d() {
+        AttnShape::new(128, 4, 128);
+    }
+
+    #[test]
+    fn split_heads_roundtrip() {
+        let x = Tensor::randn(&[3, 8], 1.0, 1);
+        let heads = split_heads(&x, 4);
+        assert_eq!(heads.len(), 4);
+        let refs: Vec<&Tensor> = heads.iter().collect();
+        assert_eq!(Tensor::concat_cols(&refs), x);
+    }
+}

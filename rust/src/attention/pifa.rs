@@ -1,0 +1,114 @@
+//! PIFA-style attention — the paper's §4.1 comparator.
+//!
+//! PIFA (Zhao et al., 2025) selects basis rows via QR with column pivoting,
+//! giving each head a *different, scattered* basis. Exactness is identical
+//! to BD (it is a BD with pivoted basis), but inference pays per-head
+//! gathers and slices of X — which is why Tables 6–7 show it slower than
+//! even baseline MHA. This module wires the pivoted k/v projections into a
+//! full attention block so end-to-end comparisons are possible.
+
+use super::kproj::{pifa_from_mha, PifaKproj};
+use super::mha::{attention_core, MhaWeights};
+use super::AttnShape;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// PIFA-style attention block: pivoted-basis K projection, with Q/V/O kept
+/// dense (the paper benches the k_proj operator; for the end-to-end block
+/// we pair the pivoted K with the matching pivoted Q so scores are exact).
+pub struct PifaAttention {
+    pub shape: AttnShape,
+    /// Per-head pivoted k-projection.
+    pub kproj: PifaKproj,
+    /// Q-side basis: per-head d × d_h (X B_i), from the same pivot set.
+    pub b_q: Tensor,
+    /// Dense V/O kept from the original model.
+    pub wv: Tensor,
+    pub wo: Tensor,
+}
+
+impl PifaAttention {
+    /// Build from MHA weights: per-head QR-pivot decomposition of the QK
+    /// product; V/O unchanged.
+    pub fn from_mha(mha: &MhaWeights) -> PifaAttention {
+        let s = mha.shape;
+        let kproj = pifa_from_mha(mha);
+        // Q-side: B_i = columns of W_i at the pivot indices (d × d_h each).
+        let mut parts = Vec::with_capacity(s.n_heads);
+        for i in 0..s.n_heads {
+            let w = matmul(&mha.wq_head(i), &mha.wk_head(i).transpose());
+            let bi = &kproj.basis_idx[i];
+            let mut b = Tensor::zeros(&[s.d, s.d_h]);
+            for r in 0..s.d {
+                for (j, &c) in bi.iter().enumerate() {
+                    *b.at_mut(r, j) = w.at(r, c);
+                }
+            }
+            parts.push(b);
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let b_q = Tensor::concat_cols(&refs);
+        PifaAttention { shape: s, kproj, b_q, wv: mha.wv.clone(), wo: mha.wo.clone() }
+    }
+
+    /// Forward pass: Q' = X B_q (pivoted), K' = pivoted projection,
+    /// V = X W_v, out = core(Q', K', V) W_o.
+    pub fn forward(&self, x: &Tensor, causal: bool) -> Tensor {
+        let q = matmul(x, &self.b_q);
+        let k = self.kproj.project(x);
+        let v = matmul(x, &self.wv);
+        attention_core(&q, &k, &v, &self.wo, self.shape, causal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mha::mha_forward;
+
+    #[test]
+    fn pifa_scores_match_mha() {
+        // PIFA is exact too: X B_i (pivoted-basis Q) times pivoted K'
+        // reproduces X W_i X^T, so the full forward matches MHA.
+        let s = AttnShape::new(24, 3, 8);
+        let mha = MhaWeights::random(s, 1);
+        let pifa = PifaAttention::from_mha(&mha);
+        let x = Tensor::randn(&[5, s.d], 1.0, 2);
+        let y_ref = mha_forward(&mha, &x, false);
+        let y = pifa.forward(&x, false);
+        let rel = (y.max_abs_diff(&y_ref) as f64) / y_ref.fro_norm().max(1e-9);
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn per_head_bases_differ() {
+        // The whole point of the comparison: pivot sets differ across heads
+        // (with prob. 1 on random weights), so no shared slice exists.
+        let s = AttnShape::new(32, 4, 8);
+        let mha = MhaWeights::random(s, 3);
+        let pifa = PifaAttention::from_mha(&mha);
+        let all_same = pifa
+            .kproj
+            .basis_idx
+            .windows(2)
+            .all(|w| w[0] == w[1]);
+        assert!(!all_same, "pivot bases should differ across heads");
+        // And they are generally non-contiguous.
+        let contiguous = |v: &Vec<usize>| v.windows(2).all(|w| w[1] == w[0] + 1);
+        assert!(
+            !pifa.kproj.basis_idx.iter().all(contiguous),
+            "pivot bases should be scattered"
+        );
+    }
+
+    #[test]
+    fn causal_forward_matches_mha() {
+        let s = AttnShape::new(16, 2, 4);
+        let mha = MhaWeights::random(s, 4);
+        let pifa = PifaAttention::from_mha(&mha);
+        let x = Tensor::randn(&[6, s.d], 1.0, 5);
+        let y_ref = mha_forward(&mha, &x, true);
+        let y = pifa.forward(&x, true);
+        assert!(y.max_abs_diff(&y_ref) < 1e-3);
+    }
+}

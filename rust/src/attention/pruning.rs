@@ -1,0 +1,173 @@
+//! Structured K/V-channel pruning baseline (the dashed line in Fig. 2a).
+//!
+//! Following the relative-importance scoring of Zhang et al. (2024) as the
+//! paper describes: each K/V channel's importance is estimated from weight
+//! magnitudes, summed, and the least important fraction is pruned — at the
+//! same compression ratio as BDA (d_h/d = 25% of K/V channels), but
+//! *lossy*, unlike BDA.
+
+use super::mha::{attention_core, MhaWeights};
+use super::AttnShape;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// MHA with a fraction of K/V channels structurally removed (per head, so
+/// head widths stay uniform).
+#[derive(Clone, Debug)]
+pub struct PrunedAttention {
+    pub shape: AttnShape,
+    /// Pruned per-head dim.
+    pub d_h_kept: usize,
+    /// d × n·d_h_kept
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    /// n·d_h_kept × d
+    pub wo: Tensor,
+    /// Kept channel indices per head (into the original d_h).
+    pub kept: Vec<Vec<usize>>,
+}
+
+/// Channel importance: relative magnitude score — |w| of the channel
+/// normalized by its row's total magnitude, summed over rows (a
+/// calibration-free variant of relative-importance pruning).
+fn channel_scores(w: &Tensor) -> Vec<f64> {
+    let (d, cols) = (w.rows(), w.cols());
+    let mut row_sums = vec![0.0f64; d];
+    for i in 0..d {
+        row_sums[i] = w.row(i).iter().map(|v| v.abs() as f64).sum::<f64>().max(1e-12);
+    }
+    let mut scores = vec![0.0f64; cols];
+    for i in 0..d {
+        for j in 0..cols {
+            scores[j] += (w.at(i, j).abs() as f64) / row_sums[i];
+        }
+    }
+    scores
+}
+
+impl PrunedAttention {
+    /// Prune `frac` of each head's K/V channels (e.g. 0.25 to match BDA's
+    /// compression). Q channels follow K (scores must stay aligned);
+    /// O rows follow V.
+    pub fn from_mha(mha: &MhaWeights, frac: f64) -> PrunedAttention {
+        let s = mha.shape;
+        let drop = ((s.d_h as f64) * frac).round() as usize;
+        let keep = s.d_h - drop;
+        assert!(keep >= 1);
+
+        // Importance per head from combined K and V magnitudes.
+        let k_scores = channel_scores(&mha.wk);
+        let v_scores = channel_scores(&mha.wv);
+        let mut kept_per_head = Vec::with_capacity(s.n_heads);
+        for h in 0..s.n_heads {
+            let base = h * s.d_h;
+            let mut idx: Vec<usize> = (0..s.d_h).collect();
+            idx.sort_by(|&a, &b| {
+                let sa = k_scores[base + a] + v_scores[base + a];
+                let sb = k_scores[base + b] + v_scores[base + b];
+                sb.partial_cmp(&sa).unwrap()
+            });
+            let mut kept: Vec<usize> = idx[..keep].to_vec();
+            kept.sort();
+            kept_per_head.push(kept);
+        }
+
+        // Build pruned weights.
+        let sel_cols = |w: &Tensor| -> Tensor {
+            let mut parts = Vec::new();
+            for h in 0..s.n_heads {
+                for &j in &kept_per_head[h] {
+                    parts.push(w.slice_cols(h * s.d_h + j, h * s.d_h + j + 1));
+                }
+            }
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            Tensor::concat_cols(&refs)
+        };
+        let sel_rows = |w: &Tensor| -> Tensor {
+            let mut parts = Vec::new();
+            for h in 0..s.n_heads {
+                for &j in &kept_per_head[h] {
+                    parts.push(w.slice_rows(h * s.d_h + j, h * s.d_h + j + 1));
+                }
+            }
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            Tensor::concat_rows(&refs)
+        };
+
+        PrunedAttention {
+            shape: s,
+            d_h_kept: keep,
+            wq: sel_cols(&mha.wq),
+            wk: sel_cols(&mha.wk),
+            wv: sel_cols(&mha.wv),
+            wo: sel_rows(&mha.wo),
+            kept: kept_per_head,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor, causal: bool) -> Tensor {
+        let s_pruned = AttnShape::new(self.shape.d, self.shape.n_heads, self.d_h_kept);
+        let q = matmul(x, &self.wq);
+        let k = matmul(x, &self.wk);
+        let v = matmul(x, &self.wv);
+        attention_core(&q, &k, &v, &self.wo, s_pruned, causal)
+    }
+
+    /// K/V parameter count after pruning.
+    pub fn kv_param_count(&self) -> usize {
+        self.wk.numel() + self.wv.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mha::mha_forward;
+
+    #[test]
+    fn prunes_exact_fraction() {
+        let s = AttnShape::new(32, 4, 8);
+        let mha = MhaWeights::random(s, 1);
+        let pruned = PrunedAttention::from_mha(&mha, 0.25);
+        assert_eq!(pruned.d_h_kept, 6);
+        let ratio = pruned.kv_param_count() as f64 / (mha.wk.numel() + mha.wv.numel()) as f64;
+        assert!((ratio - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pruned_output_is_lossy() {
+        // Unlike BDA, structured pruning changes outputs.
+        let s = AttnShape::new(32, 4, 8);
+        let mha = MhaWeights::random(s, 2);
+        let pruned = PrunedAttention::from_mha(&mha, 0.25);
+        let x = Tensor::randn(&[5, s.d], 1.0, 3);
+        let y_ref = mha_forward(&mha, &x, false);
+        let y = pruned.forward(&x, false);
+        assert_eq!(y.shape, y_ref.shape);
+        let rel = (y.max_abs_diff(&y_ref) as f64) / y_ref.fro_norm().max(1e-9);
+        assert!(rel > 1e-4, "pruning should be lossy, rel {rel}");
+    }
+
+    #[test]
+    fn keeps_high_importance_channels() {
+        let s = AttnShape::new(16, 2, 4);
+        let mut mha = MhaWeights::random(s, 4);
+        // Make channel 2 of head 0 hugely important in K and V.
+        for i in 0..s.d {
+            *mha.wk.at_mut(i, 2) = 5.0;
+            *mha.wv.at_mut(i, 2) = 5.0;
+        }
+        let pruned = PrunedAttention::from_mha(&mha, 0.25);
+        assert!(pruned.kept[0].contains(&2));
+    }
+
+    #[test]
+    fn forward_shape_preserved() {
+        let s = AttnShape::new(16, 2, 4);
+        let mha = MhaWeights::random(s, 5);
+        let pruned = PrunedAttention::from_mha(&mha, 0.25);
+        let x = Tensor::randn(&[7, s.d], 1.0, 6);
+        assert_eq!(pruned.forward(&x, true).shape, vec![7, s.d]);
+    }
+}

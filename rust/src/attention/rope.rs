@@ -1,0 +1,180 @@
+//! Rotary position embeddings and their interaction with BD (Appendix D).
+//!
+//! * Embedding-layer PE: orthogonal to BD (BD only touches projections).
+//! * Vanilla RoPE inside MHA: breaks BD's QK exactness
+//!   (`W_q R_{n−m} W_k^T ≠ B R_{n−m} [I, C]` in general).
+//! * Decoupled RoPE (DeepSeek): separate RoPE channels added to the score;
+//!   BD applies losslessly to the non-RoPE channels. This module implements
+//!   all three so the Appendix D claims are testable.
+
+use super::AttnShape;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// Apply vanilla RoPE to a per-head L×d_h tensor (pairs of channels rotated
+/// by position-dependent angles). `base` is the frequency base (10000).
+pub fn apply_rope(x: &Tensor, base: f32) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    let (l, d_h) = (x.rows(), x.cols());
+    assert!(d_h % 2 == 0, "RoPE needs even head dim");
+    let half = d_h / 2;
+    let mut out = x.clone();
+    for pos in 0..l {
+        for k in 0..half {
+            let theta = (pos as f32) * base.powf(-2.0 * (k as f32) / (d_h as f32));
+            let (sin, cos) = theta.sin_cos();
+            let a = x.at(pos, 2 * k);
+            let b = x.at(pos, 2 * k + 1);
+            *out.at_mut(pos, 2 * k) = a * cos - b * sin;
+            *out.at_mut(pos, 2 * k + 1) = a * sin + b * cos;
+        }
+    }
+    out
+}
+
+/// Decoupled-RoPE score contribution (DeepSeek style): a separate, small
+/// RoPE'd projection whose per-head scores are *added* to the non-RoPE
+/// (BD-compressed) scores.
+pub struct DecoupledRope {
+    pub shape: AttnShape,
+    /// RoPE channels per head.
+    pub d_r: usize,
+    /// d × n·d_r query-side RoPE projection.
+    pub w_qr: Tensor,
+    /// d × d_r shared key-side RoPE projection (MQA-style, as in DeepSeek).
+    pub w_kr: Tensor,
+    pub base: f32,
+}
+
+impl DecoupledRope {
+    pub fn random(shape: AttnShape, d_r: usize, seed: u64) -> DecoupledRope {
+        DecoupledRope {
+            shape,
+            d_r,
+            w_qr: Tensor::randn(&[shape.d, shape.n_heads * d_r], 0.02, seed),
+            w_kr: Tensor::randn(&[shape.d, d_r], 0.02, seed + 1),
+            base: 10000.0,
+        }
+    }
+
+    /// Per-head additive score matrices (L×L each) from the RoPE channels.
+    pub fn scores(&self, x: &Tensor) -> Vec<Tensor> {
+        let n = self.shape.n_heads;
+        let kr = apply_rope(&matmul(x, &self.w_kr), self.base); // L×d_r shared
+        (0..n)
+            .map(|i| {
+                let qr_i = matmul(x, &self.w_qr.slice_cols(i * self.d_r, (i + 1) * self.d_r));
+                let qr_i = apply_rope(&qr_i, self.base);
+                matmul(&qr_i, &kr.transpose())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mha::MhaWeights;
+    use crate::bd::{Strategy, Tag};
+    use crate::tensor::DType;
+
+    #[test]
+    fn rope_preserves_norms() {
+        let x = Tensor::randn(&[6, 8], 1.0, 1);
+        let r = apply_rope(&x, 10000.0);
+        for i in 0..6 {
+            let n0: f32 = x.row(i).iter().map(|v| v * v).sum();
+            let n1: f32 = r.row(i).iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let x = Tensor::randn(&[1, 8], 1.0, 2);
+        let r = apply_rope(&x, 10000.0);
+        assert!(r.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <RoPE_m(q), RoPE_n(k)> depends only on n−m: shifting both
+        // positions by the same offset preserves the inner product.
+        let d_h = 8;
+        let q = Tensor::randn(&[1, d_h], 1.0, 3);
+        let k = Tensor::randn(&[1, d_h], 1.0, 4);
+        // Build length-5 sequences where q sits at pos p and k at pos p+2.
+        let embed = |v: &Tensor, pos: usize, len: usize| {
+            let mut m = Tensor::zeros(&[len, d_h]);
+            for j in 0..d_h {
+                *m.at_mut(pos, j) = v.data[j];
+            }
+            apply_rope(&m, 10000.0)
+        };
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let q0 = embed(&q, 0, 5);
+        let k2 = embed(&k, 2, 5);
+        let q1 = embed(&q, 1, 5);
+        let k3 = embed(&k, 3, 5);
+        let d02 = dot(q0.row(0), k2.row(2));
+        let d13 = dot(q1.row(1), k3.row(3));
+        assert!((d02 - d13).abs() < 1e-4, "{d02} vs {d13}");
+    }
+
+    #[test]
+    fn vanilla_rope_breaks_bd_exactness() {
+        // Appendix D: rotating the *projected* q/k (vanilla RoPE) does not
+        // commute with BD's reparameterization of q/k.
+        let s = AttnShape::new(16, 1, 4);
+        let mha = MhaWeights::random(s, 5);
+        let bda =
+            crate::attention::bda::BdaWeights::prepare(&mha, Strategy::FirstR, DType::F32)
+                .unwrap();
+        let x = Tensor::randn(&[5, s.d], 1.0, 6);
+
+        // MHA scores with RoPE.
+        let q = apply_rope(&matmul(&x, &mha.wq), 10000.0);
+        let k = apply_rope(&matmul(&x, &mha.wk), 10000.0);
+        let scores_mha = matmul(&q, &k.transpose());
+
+        // BDA scores with RoPE applied to Q', K'.
+        let qp = apply_rope(&matmul(&x, &bda.b_qk), 10000.0);
+        let kp_raw =
+            crate::attention::kproj::kproj_bda(&x, &bda.c_qk, Tag::First, s);
+        let kp = apply_rope(&kp_raw, 10000.0);
+        let scores_bda = matmul(&qp, &kp.transpose());
+
+        let rel =
+            (scores_bda.max_abs_diff(&scores_mha) as f64) / scores_mha.fro_norm().max(1e-9);
+        assert!(rel > 1e-3, "vanilla RoPE should break exactness, rel {rel}");
+    }
+
+    #[test]
+    fn decoupled_rope_keeps_bd_exact() {
+        // Decoupled: BD channels carry no RoPE; RoPE channels are separate
+        // and identical in both variants -> total scores match exactly.
+        let s = AttnShape::new(16, 2, 4);
+        let mha = MhaWeights::random(s, 7);
+        let bda =
+            crate::attention::bda::BdaWeights::prepare(&mha, Strategy::ResidualMin, DType::F32)
+                .unwrap();
+        let rope = DecoupledRope::random(s, 4, 8);
+        let x = Tensor::randn(&[5, s.d], 1.0, 9);
+
+        let rope_scores = rope.scores(&x);
+
+        let q = matmul(&x, &mha.wq);
+        let k = matmul(&x, &mha.wk);
+        let qp = matmul(&x, &bda.b_qk);
+        let kp = crate::attention::kproj::kproj_bda(&x, &bda.c_qk, bda.tag_qk, s);
+        for i in 0..s.n_heads {
+            let sl = |t: &Tensor| t.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let total_mha = matmul(&sl(&q), &sl(&k).transpose()).add(&rope_scores[i]);
+            let total_bda = matmul(&sl(&qp), &sl(&kp).transpose()).add(&rope_scores[i]);
+            assert!(
+                total_bda.max_abs_diff(&total_mha) < 1e-3,
+                "head {i}: decoupled RoPE must preserve exactness"
+            );
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Parameter / FLOP cost model of BD vs. low-rank vs. dense (§3.1).
+//!
+//! These formulas back the paper's headline claims: 25% weight reduction
+//! and the 1.33× theoretical k_proj speedup at `d_h/d = 25%`.
+
+/// Costs of representing / applying an m×n rank-r matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BdCost {
+    pub m: usize,
+    pub n: usize,
+    pub r: usize,
+}
+
+impl BdCost {
+    pub fn new(m: usize, n: usize, r: usize) -> Self {
+        assert!(r <= m.min(n), "rank {r} exceeds min({m},{n})");
+        BdCost { m, n, r }
+    }
+
+    /// Dense parameter count `mn`.
+    pub fn dense_params(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Low-rank (U V^T) parameter count `r(m+n)`.
+    pub fn lowrank_params(&self) -> usize {
+        self.r * (self.m + self.n)
+    }
+
+    /// BD parameter count `r(m+n-r)` — strictly below both for r < min(m,n).
+    pub fn bd_params(&self) -> usize {
+        self.r * (self.m + self.n - self.r)
+    }
+
+    /// FLOPs to reconstruct W from low-rank factors: `2rmn`.
+    pub fn lowrank_recon_flops(&self) -> u64 {
+        2 * self.r as u64 * self.m as u64 * self.n as u64
+    }
+
+    /// FLOPs to reconstruct W from BD: `2r(m-r)n` (CB product only; basis
+    /// rows are copied).
+    pub fn bd_recon_flops(&self) -> u64 {
+        2 * self.r as u64 * (self.m - self.r) as u64 * self.n as u64
+    }
+
+    /// FLOPs to apply a length-L batch through the *low-rank* layer
+    /// `y = (xU)V^T`: `2Lr(m+n)` for x: L×m.
+    pub fn lowrank_apply_flops(&self, l: usize) -> u64 {
+        2 * l as u64 * self.r as u64 * (self.m + self.n) as u64
+    }
+
+    /// FLOPs to apply through the *BD* layer `h = xB; y = [h, hC]`:
+    /// `2Lr m + 2Lr(n-r) = 2Lr(m+n-r)`.
+    pub fn bd_apply_flops(&self, l: usize) -> u64 {
+        2 * l as u64 * self.r as u64 * (self.m + self.n - self.r) as u64
+    }
+
+    /// Parameter saving of BD vs low-rank: `r/(m+n)` of the low-rank size
+    /// (the paper's `d_h/d`-flavoured reduction for attention shapes).
+    pub fn saving_vs_lowrank(&self) -> f64 {
+        self.r as f64 / (self.m + self.n) as f64
+    }
+}
+
+/// The paper's k_proj-operator speedup bound for MHA vs BDA.
+///
+/// MHA computes `K = X W_k` (`X`: L×d, `W_k`: d×n·d_h): `2·L·d·n·d_h` FLOPs.
+/// BDA computes `K' = [X_{:,1:d_h}]^{×n} + X_{:,d_h:} C_qk`
+/// (`C_qk`: (d−d_h)×n·d_h): `2·L·(d−d_h)·n·d_h` (+ L·n·d_h adds, dropped by
+/// the paper as the repeat-add is fused/bandwidth-level).
+/// Ratio = d/(d−d_h) = 1/(1−d_h/d); at d_h/d = 25% → 4/3 ≈ 1.33×.
+pub fn kproj_theoretical_speedup(d: usize, d_h: usize) -> f64 {
+    assert!(d_h < d);
+    d as f64 / (d - d_h) as f64
+}
+
+/// Weight reduction of BDA's K (or V) projection replacement: the d×(n·d_h)
+/// `W_k` becomes the (d−d_h)×(n·d_h) `C_qk` → saving d_h/d (25% at 128/512).
+pub fn kv_weight_reduction(d: usize, d_h: usize) -> f64 {
+    d_h as f64 / d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bd_strictly_smaller() {
+        for (m, n, r) in [(512, 128, 64), (100, 100, 99), (64, 512, 32)] {
+            let c = BdCost::new(m, n, r);
+            assert!(c.bd_params() < c.lowrank_params());
+            assert!(c.bd_params() < c.dense_params());
+            assert!(c.bd_recon_flops() < c.lowrank_recon_flops());
+            assert!(c.bd_apply_flops(16) < c.lowrank_apply_flops(16));
+        }
+    }
+
+    #[test]
+    fn lowrank_only_compact_below_threshold() {
+        // r < mn/(m+n) is the paper's threshold for low-rank beating dense.
+        let c = BdCost::new(100, 100, 51); // threshold is 50
+        assert!(c.lowrank_params() > c.dense_params());
+        assert!(c.bd_params() < c.dense_params()); // BD still wins
+    }
+
+    #[test]
+    fn deepseek_numbers() {
+        // d=512, d_h=128 -> 1.33x speedup, 25% weight cut (paper §4.1).
+        let s = kproj_theoretical_speedup(512, 128);
+        assert!((s - 4.0 / 3.0).abs() < 1e-12);
+        assert!((kv_weight_reduction(512, 128) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn formulas_match_paper_text() {
+        let c = BdCost::new(7, 5, 3);
+        assert_eq!(c.bd_params(), 3 * (7 + 5 - 3));
+        assert_eq!(c.lowrank_params(), 3 * (7 + 5));
+        assert_eq!(c.bd_recon_flops(), 2 * 3 * (7 - 3) * 5);
+        assert_eq!(c.lowrank_recon_flops(), 2 * 3 * 7 * 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_bound_enforced() {
+        BdCost::new(4, 5, 5);
+    }
+}

@@ -1,0 +1,136 @@
+//! BD layer for low-rank linear layers (§3.3, Eq. 5).
+//!
+//! A low-rank layer `y = (xU)V^T` (U: d_in×r, V: d_out×r) is replaced by
+//! `h = xB; y = [h, hC]` (column BD, First) — fewer params
+//! (`r(d_in+d_out−r)` vs `r(d_in+d_out)`) and fewer FLOPs, with exactly the
+//! same outputs. This is the plug-in step applied on top of low-rank-pruned
+//! models in Table 3.
+
+use super::{bd_col, BdCost, BdError, Strategy, Tag};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// A linear layer in BD form.
+#[derive(Clone, Debug)]
+pub struct BdLinear {
+    pub tag: Tag,
+    /// d_in × r — the basis columns of W = U V^T.
+    pub b: Tensor,
+    /// r × (d_out − r) — coefficients.
+    pub c: Tensor,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub r: usize,
+    /// Decomposition residual (‖W − recon‖_F).
+    pub residual: f64,
+}
+
+impl BdLinear {
+    /// Build from low-rank factors U (d_in×r), V (d_out×r):
+    /// decomposes W = U V^T with column BD.
+    pub fn from_lowrank(u: &Tensor, v: &Tensor, strategy: Strategy) -> Result<BdLinear, BdError> {
+        assert_eq!(u.ndim(), 2);
+        assert_eq!(v.ndim(), 2);
+        assert_eq!(u.cols(), v.cols(), "rank mismatch between U and V");
+        let (d_in, r) = (u.rows(), u.cols());
+        let d_out = v.rows();
+        let w = matmul(u, &v.transpose());
+        let col = bd_col(&w, r, strategy)?;
+        Ok(BdLinear {
+            tag: col.tag,
+            b: col.b,
+            c: col.c,
+            d_in,
+            d_out,
+            r,
+            residual: col.residual,
+        })
+    }
+
+    /// Forward pass `y = x W` computed in BD form (Eq. 5):
+    /// `h = x B; y = [h, hC]` (First) or `y = [hC, h]` (Last).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.d_in);
+        let h = matmul(x, &self.b);
+        let hc = matmul(&h, &self.c);
+        match self.tag {
+            Tag::First => Tensor::concat_cols(&[&h, &hc]),
+            Tag::Last => Tensor::concat_cols(&[&hc, &h]),
+        }
+    }
+
+    /// Reference forward through the reconstructed dense W (for tests).
+    pub fn forward_dense_ref(&self, x: &Tensor) -> Tensor {
+        let w = super::reconstruct_col(self.tag, &self.b, &self.c);
+        matmul(x, &w)
+    }
+
+    pub fn cost(&self) -> BdCost {
+        BdCost::new(self.d_in, self.d_out, self.r)
+    }
+
+    /// Parameters actually stored by this layer.
+    pub fn param_count(&self) -> usize {
+        self.b.numel() + self.c.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_lowrank_forward_exactly() {
+        let (d_in, d_out, r) = (24, 16, 5);
+        let u = Tensor::randn(&[d_in, r], 0.2, 1);
+        let v = Tensor::randn(&[d_out, r], 0.2, 2);
+        let layer = BdLinear::from_lowrank(&u, &v, Strategy::ResidualMin).unwrap();
+        let x = Tensor::randn(&[7, d_in], 1.0, 3);
+        // Reference: y = (xU)V^T
+        let y_ref = matmul(&matmul(&x, &u), &v.transpose());
+        let y_bd = layer.forward(&x);
+        assert!(
+            y_bd.max_abs_diff(&y_ref) < 1e-3,
+            "diff {}",
+            y_bd.max_abs_diff(&y_ref)
+        );
+    }
+
+    #[test]
+    fn bd_forward_matches_dense_reconstruction() {
+        let u = Tensor::randn(&[10, 3], 0.5, 4);
+        let v = Tensor::randn(&[8, 3], 0.5, 5);
+        let layer = BdLinear::from_lowrank(&u, &v, Strategy::FirstR).unwrap();
+        let x = Tensor::randn(&[4, 10], 1.0, 6);
+        let a = layer.forward(&x);
+        let b = layer.forward_dense_ref(&x);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let (d_in, d_out, r) = (32, 20, 6);
+        let u = Tensor::randn(&[d_in, r], 0.3, 7);
+        let v = Tensor::randn(&[d_out, r], 0.3, 8);
+        let layer = BdLinear::from_lowrank(&u, &v, Strategy::ResidualMin).unwrap();
+        assert_eq!(layer.param_count(), r * (d_in + d_out - r));
+        assert_eq!(layer.param_count(), layer.cost().bd_params());
+        assert!(layer.param_count() < r * (d_in + d_out));
+    }
+
+    #[test]
+    fn last_tag_output_order() {
+        // Force Last by making the first-r columns tiny (ill-conditioned).
+        let mut u = Tensor::randn(&[12, 2], 1.0, 9);
+        let v = Tensor::randn(&[10, 2], 1.0, 10);
+        // Shrink contributions so that first columns of W are nearly
+        // parallel -> larger residual for First in f32.
+        for i in 0..12 {
+            *u.at_mut(i, 1) *= 1e-3;
+        }
+        let layer = BdLinear::from_lowrank(&u, &v, Strategy::ResidualMin).unwrap();
+        let x = Tensor::randn(&[3, 12], 1.0, 11);
+        let y_ref = matmul(&matmul(&x, &u), &v.transpose());
+        assert!(layer.forward(&x).max_abs_diff(&y_ref) < 1e-3);
+    }
+}

@@ -1,0 +1,61 @@
+//! Basis Decomposition (BD) — the paper's core contribution (§3.1–3.3).
+//!
+//! Given a low-rank product `W = U V^T` (rank r), BD re-expresses `W`
+//! around `r` *contiguous* rows or columns of `W` itself:
+//!
+//! ```text
+//! (1) row & first:    W = [I; C] B          B = first r rows
+//! (2) row & last:     W = [C; I] B          B = last  r rows
+//! (3) column & first: W = B [I, C]          B = first r cols
+//! (4) column & last:  W = B [C, I]          B = last  r cols
+//! ```
+//!
+//! Memory: `r(m+n-r)` vs. low-rank's `r(m+n)` vs. dense `mn`.
+//! Reconstruction FLOPs: `2r(m-r)n` vs. low-rank's `2rmn`.
+//! Contiguity of the basis is what makes the identity hardware-friendly
+//! (coalesced loads; no per-head gather — unlike PIFA's pivoted basis).
+
+pub mod cost;
+pub mod decompose;
+pub mod linear;
+pub mod reconstruct;
+
+pub use cost::BdCost;
+pub use decompose::{bd_col, bd_row, BdError, ColBd, RowBd};
+pub use linear::BdLinear;
+pub use reconstruct::{reconstruct_col, reconstruct_row};
+
+/// Which contiguous block of rows/columns forms the basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tag {
+    First,
+    Last,
+}
+
+impl Tag {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tag::First => "first",
+            Tag::Last => "last",
+        }
+    }
+}
+
+/// Basis-selection strategy (Fig. 2a / Tables 4–5 compare these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Always take the first-r rows/columns.
+    FirstR,
+    /// Take whichever of first-r / last-r has the smaller reconstruction
+    /// residual (the paper's default).
+    ResidualMin,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::FirstR => "First-r",
+            Strategy::ResidualMin => "Residual-min",
+        }
+    }
+}

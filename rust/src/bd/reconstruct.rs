@@ -1,0 +1,82 @@
+//! BD reconstruction — Algorithm 5 (row) and its column analogue: the four
+//! identities of Eq. 2.
+
+use super::Tag;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// Row reconstruction: `W = [B; CB]` (First) or `W = [CB; B]` (Last).
+/// B: r×n, C: (m−r)×r → W: m×n.
+pub fn reconstruct_row(tag: Tag, b: &Tensor, c: &Tensor) -> Tensor {
+    assert_eq!(b.ndim(), 2);
+    assert_eq!(c.ndim(), 2);
+    assert_eq!(c.cols(), b.rows(), "C cols must equal basis rank");
+    let cb = matmul(c, b);
+    match tag {
+        Tag::First => Tensor::concat_rows(&[b, &cb]),
+        Tag::Last => Tensor::concat_rows(&[&cb, b]),
+    }
+}
+
+/// Column reconstruction: `W = [B, BC]` (First) or `W = [BC, B]` (Last).
+/// B: m×r, C: r×(n−r) → W: m×n.
+pub fn reconstruct_col(tag: Tag, b: &Tensor, c: &Tensor) -> Tensor {
+    assert_eq!(b.ndim(), 2);
+    assert_eq!(c.ndim(), 2);
+    assert_eq!(b.cols(), c.rows(), "C rows must equal basis rank");
+    let bc = matmul(b, c);
+    match tag {
+        Tag::First => Tensor::concat_cols(&[b, &bc]),
+        Tag::Last => Tensor::concat_cols(&[&bc, b]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_first_layout() {
+        // B = [[1,2]], C = [[3],[4]] -> W = [[1,2],[3,6],[4,8]]
+        let b = Tensor::from_vec(vec![1.0, 2.0], &[1, 2]);
+        let c = Tensor::from_vec(vec![3.0, 4.0], &[2, 1]);
+        let w = reconstruct_row(Tag::First, &b, &c);
+        assert_eq!(w.shape, vec![3, 2]);
+        assert_eq!(w.data, vec![1.0, 2.0, 3.0, 6.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn row_last_layout() {
+        let b = Tensor::from_vec(vec![1.0, 2.0], &[1, 2]);
+        let c = Tensor::from_vec(vec![3.0], &[1, 1]);
+        let w = reconstruct_row(Tag::Last, &b, &c);
+        assert_eq!(w.data, vec![3.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn col_first_layout() {
+        // B = [[1],[2]], C = [[5, 6]] -> W = [[1,5,6],[2,10,12]]
+        let b = Tensor::from_vec(vec![1.0, 2.0], &[2, 1]);
+        let c = Tensor::from_vec(vec![5.0, 6.0], &[1, 2]);
+        let w = reconstruct_col(Tag::First, &b, &c);
+        assert_eq!(w.shape, vec![2, 3]);
+        assert_eq!(w.data, vec![1.0, 5.0, 6.0, 2.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn col_last_layout() {
+        let b = Tensor::from_vec(vec![1.0, 2.0], &[2, 1]);
+        let c = Tensor::from_vec(vec![5.0], &[1, 1]);
+        let w = reconstruct_col(Tag::Last, &b, &c);
+        assert_eq!(w.data, vec![5.0, 1.0, 10.0, 2.0]);
+    }
+
+    #[test]
+    fn identity_coefficients() {
+        // C rows that are unit vectors reproduce basis rows.
+        let b = Tensor::from_vec(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
+        let c = Tensor::from_vec(vec![1.0, 0.0], &[1, 2]);
+        let w = reconstruct_row(Tag::First, &b, &c);
+        assert_eq!(w.row(2), w.row(0));
+    }
+}

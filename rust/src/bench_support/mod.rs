@@ -1,0 +1,187 @@
+//! Benchmark harness (no criterion in the offline crate set): warmup,
+//! timed iterations with a minimum measurement window, robust statistics,
+//! and the table printer that regenerates the paper's rows.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Minimum total measurement time (seconds).
+    pub min_time: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 2, min_iters: 5, min_time: 0.5, max_iters: 200 }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI-style smoke runs (BDA_BENCH_FAST=1).
+    pub fn from_env() -> BenchConfig {
+        if std::env::var("BDA_BENCH_FAST").is_ok() {
+            BenchConfig { warmup_iters: 1, min_iters: 2, min_time: 0.05, max_iters: 10 }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    /// Work units per iteration (e.g. tokens) for throughput reporting.
+    pub work_per_iter: f64,
+}
+
+impl Measurement {
+    /// Median throughput in work units per second.
+    pub fn throughput(&self) -> f64 {
+        self.work_per_iter / self.summary.median
+    }
+
+    /// Throughput in millions of units per second (the paper's Mtok/s).
+    pub fn mops(&self) -> f64 {
+        self.throughput() / 1e6
+    }
+}
+
+/// Run a benchmark: calls `f()` repeatedly and times each call.
+pub fn bench(name: &str, config: BenchConfig, work_per_iter: f64, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..config.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+        let enough_iters = samples.len() >= config.min_iters;
+        let enough_time = total.elapsed_secs() >= config.min_time;
+        if (enough_iters && enough_time) || samples.len() >= config.max_iters {
+            break;
+        }
+    }
+    Measurement { name: name.to_string(), summary: Summary::from(&samples), work_per_iter }
+}
+
+/// Markdown-ish table printer matching the paper's layout.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&format!(
+            "|{}|\n",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float to 2 decimal places (table cells).
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format scientific (Table 4 cells).
+pub fn sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig { warmup_iters: 1, min_iters: 3, min_time: 0.0, max_iters: 5 };
+        let m = bench("spin", cfg, 100.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.summary.median > 0.0);
+        assert!(m.throughput() > 0.0);
+        assert!(m.summary.n >= 3);
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let cfg = BenchConfig { warmup_iters: 0, min_iters: 1, min_time: 100.0, max_iters: 4 };
+        let m = bench("fast", cfg, 1.0, || {});
+        assert_eq!(m.summary.n, 4);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Seq. Len", "MHA", "BDA", "Speedup"]);
+        t.row(vec!["64".into(), "1.79".into(), "2.16".into(), "1.21x".into()]);
+        t.row(vec!["65536".into(), "5.41".into(), "7.06".into(), "1.30x".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("| Seq. Len |"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(f2(1.234), "1.23");
+        assert!(sci(3.19e-12).contains("e-12"));
+    }
+}

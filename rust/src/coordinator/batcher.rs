@@ -1,0 +1,135 @@
+//! Dynamic batcher: greedily forms batches up to `max_batch`, waiting at
+//! most `max_wait` for stragglers once the first request arrives — the
+//! standard latency/throughput knob of serving systems.
+
+use super::queue::RequestQueue;
+use super::request::Request;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+pub struct Batcher {
+    pub config: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        assert!(config.max_batch > 0);
+        Batcher { config }
+    }
+
+    /// Pull the next batch from the queue. Blocks up to `idle_timeout` for
+    /// the first request; once one arrives, tops up for at most
+    /// `config.max_wait`. Returns an empty vec on idle timeout (caller
+    /// decides whether to spin again or shut down).
+    pub fn next_batch(&self, queue: &RequestQueue, idle_timeout: Duration) -> Vec<Request> {
+        let Some(first) = queue.pop_timeout(idle_timeout) else {
+            return Vec::new();
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.config.max_wait;
+        while batch.len() < self.config.max_batch {
+            // Fast path: drain what's already there.
+            let room = self.config.max_batch - batch.len();
+            let mut got = queue.drain_up_to(room);
+            if !got.is_empty() {
+                batch.append(&mut got);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            if let Some(r) = queue.pop_timeout(deadline - now) {
+                batch.push(r);
+            } else {
+                break;
+            }
+        }
+        batch
+    }
+
+    /// Pick the smallest artifact batch size that fits `n` requests from a
+    /// sorted list of available sizes (PJRT artifacts are fixed-shape; the
+    /// batch is padded up to the chosen size).
+    pub fn pick_bucket(available: &[usize], n: usize) -> Option<usize> {
+        available.iter().copied().find(|&b| b >= n).or(available.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1], 4)
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let q = RequestQueue::new(32);
+        for i in 0..10 {
+            q.push(req(i));
+        }
+        let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let batch = b.next_batch(&q, Duration::from_millis(10));
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn returns_partial_after_wait() {
+        let q = RequestQueue::new(32);
+        q.push(req(0));
+        q.push(req(1));
+        let b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q, Duration::from_millis(10));
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn empty_on_idle_timeout() {
+        let q = RequestQueue::new(4);
+        let b = Batcher::new(BatcherConfig::default());
+        let batch = b.next_batch(&q, Duration::from_millis(5));
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn straggler_joins_within_wait() {
+        let q = Arc::new(RequestQueue::new(8));
+        q.push(req(0));
+        let q2 = q.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(req(1));
+        });
+        let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(100) });
+        let batch = b.next_batch(&q, Duration::from_millis(50));
+        assert_eq!(batch.len(), 2, "straggler should join the batch");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(Batcher::pick_bucket(&[1, 8], 1), Some(1));
+        assert_eq!(Batcher::pick_bucket(&[1, 8], 2), Some(8));
+        assert_eq!(Batcher::pick_bucket(&[1, 8], 8), Some(8));
+        // Oversized n falls back to the largest bucket (caller splits).
+        assert_eq!(Batcher::pick_bucket(&[1, 8], 9), Some(8));
+        assert_eq!(Batcher::pick_bucket(&[], 1), None);
+    }
+}

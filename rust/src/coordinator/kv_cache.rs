@@ -1,0 +1,272 @@
+//! Block-based KV-cache manager (paged-attention-style bookkeeping).
+//!
+//! Sequences lease fixed-size blocks of KV slots; blocks are ref-counted so
+//! shared prefixes can be forked cheaply. BDA preserves every query–key
+//! inner product (§3.4), so this manager is attention-variant-agnostic:
+//! the same cache logic serves MHA and BDA backends — the paper's
+//! "compatible with KV-cache compression" claim at the systems level.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Total number of blocks in the pool.
+    pub num_blocks: usize,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { block_size: 16, num_blocks: 1024 }
+    }
+}
+
+pub type SeqId = u64;
+pub type BlockId = usize;
+
+/// Block pool + per-sequence block tables.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    pub config: KvCacheConfig,
+    free: Vec<BlockId>,
+    ref_counts: Vec<u32>,
+    tables: HashMap<SeqId, SeqTable>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct SeqTable {
+    blocks: Vec<BlockId>,
+    len_tokens: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of KV blocks (need {need}, free {free})")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(SeqId),
+    #[error("sequence {0} already registered")]
+    DuplicateSeq(SeqId),
+}
+
+impl BlockAllocator {
+    pub fn new(config: KvCacheConfig) -> BlockAllocator {
+        BlockAllocator {
+            free: (0..config.num_blocks).rev().collect(),
+            ref_counts: vec![0; config.num_blocks],
+            tables: HashMap::new(),
+            config,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.config.num_blocks - self.free.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.config.block_size)
+    }
+
+    /// Register a sequence and allocate blocks for its prompt.
+    pub fn register(&mut self, seq: SeqId, prompt_tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::DuplicateSeq(seq));
+        }
+        let need = self.blocks_for(prompt_tokens.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let mut table = SeqTable { blocks: Vec::with_capacity(need), len_tokens: prompt_tokens };
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.ref_counts[b], 0);
+            self.ref_counts[b] = 1;
+            table.blocks.push(b);
+        }
+        self.tables.insert(seq, table);
+        Ok(())
+    }
+
+    /// Extend a sequence by one token, allocating a block on boundary.
+    pub fn append_token(&mut self, seq: SeqId) -> Result<(), KvError> {
+        let table = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let new_len = table.len_tokens + 1;
+        let need = new_len.div_ceil(self.config.block_size);
+        if need > table.blocks.len() {
+            let Some(b) = self.free.pop() else {
+                return Err(KvError::OutOfBlocks { need: 1, free: 0 });
+            };
+            debug_assert_eq!(self.ref_counts[b], 0);
+            self.ref_counts[b] = 1;
+            table.blocks.push(b);
+        }
+        table.len_tokens = new_len;
+        Ok(())
+    }
+
+    /// Fork `child` from `parent`, sharing all current blocks (copy-on-
+    /// write bookkeeping; actual COW copy is the backend's job when it
+    /// writes into a shared tail block).
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), KvError> {
+        if self.tables.contains_key(&child) {
+            return Err(KvError::DuplicateSeq(child));
+        }
+        let ptable = self.tables.get(&parent).ok_or(KvError::UnknownSeq(parent))?.clone();
+        for &b in &ptable.blocks {
+            self.ref_counts[b] += 1;
+        }
+        self.tables.insert(child, ptable);
+        Ok(())
+    }
+
+    /// Release a sequence; blocks return to the pool when refs hit zero.
+    pub fn release(&mut self, seq: SeqId) -> Result<(), KvError> {
+        let table = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        for b in table.blocks {
+            debug_assert!(self.ref_counts[b] > 0);
+            self.ref_counts[b] -= 1;
+            if self.ref_counts[b] == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|t| t.len_tokens)
+    }
+
+    pub fn seq_blocks(&self, seq: SeqId) -> Option<&[BlockId]> {
+        self.tables.get(&seq).map(|t| t.blocks.as_slice())
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Can a prompt of this many tokens be admitted right now?
+    pub fn can_admit(&self, prompt_tokens: usize) -> bool {
+        self.blocks_for(prompt_tokens.max(1)) <= self.free.len()
+    }
+
+    /// Invariant check (used by property tests): every block is either
+    /// free with ref 0, or referenced by exactly `ref` tables.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut refs = vec![0u32; self.config.num_blocks];
+        for t in self.tables.values() {
+            for &b in &t.blocks {
+                refs[b] += 1;
+            }
+        }
+        for b in 0..self.config.num_blocks {
+            if refs[b] != self.ref_counts[b] {
+                return Err(format!("block {b}: counted {} != stored {}", refs[b], self.ref_counts[b]));
+            }
+        }
+        let free_set: std::collections::HashSet<_> = self.free.iter().collect();
+        if free_set.len() != self.free.len() {
+            return Err("duplicate blocks in free list".into());
+        }
+        for &b in &self.free {
+            if self.ref_counts[b] != 0 {
+                return Err(format!("free block {b} has refs"));
+            }
+        }
+        if self.free.len() + refs.iter().filter(|&&r| r > 0).count() != self.config.num_blocks {
+            return Err("block leak: free + referenced != total".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(blocks: usize) -> BlockAllocator {
+        BlockAllocator::new(KvCacheConfig { block_size: 4, num_blocks: blocks })
+    }
+
+    #[test]
+    fn register_allocates_ceil_blocks() {
+        let mut a = alloc(16);
+        a.register(1, 9).unwrap(); // ceil(9/4) = 3
+        assert_eq!(a.used_blocks(), 3);
+        assert_eq!(a.seq_len(1), Some(9));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_on_boundary() {
+        let mut a = alloc(16);
+        a.register(1, 4).unwrap(); // exactly 1 block
+        assert_eq!(a.used_blocks(), 1);
+        a.append_token(1).unwrap(); // 5 tokens -> 2 blocks
+        assert_eq!(a.used_blocks(), 2);
+        for _ in 0..3 {
+            a.append_token(1).unwrap(); // up to 8 -> still 2 blocks
+        }
+        assert_eq!(a.used_blocks(), 2);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut a = alloc(8);
+        a.register(1, 10).unwrap();
+        a.register(2, 10).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+        a.release(1).unwrap();
+        assert_eq!(a.free_blocks(), 5);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_blocks_rejected_cleanly() {
+        let mut a = alloc(2);
+        a.register(1, 8).unwrap();
+        let err = a.register(2, 4).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        // Failed registration must not leak state.
+        assert_eq!(a.active_seqs(), 1);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_blocks() {
+        let mut a = alloc(8);
+        a.register(1, 8).unwrap();
+        let used = a.used_blocks();
+        a.fork(1, 2).unwrap();
+        assert_eq!(a.used_blocks(), used, "fork allocates nothing");
+        // Release parent: blocks stay (child holds refs).
+        a.release(1).unwrap();
+        assert_eq!(a.used_blocks(), used);
+        a.release(2).unwrap();
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_errors() {
+        let mut a = alloc(8);
+        a.register(1, 4).unwrap();
+        assert_eq!(a.register(1, 4).unwrap_err(), KvError::DuplicateSeq(1));
+        assert_eq!(a.release(9).unwrap_err(), KvError::UnknownSeq(9));
+        assert_eq!(a.append_token(9).unwrap_err(), KvError::UnknownSeq(9));
+    }
+
+    #[test]
+    fn admission_check() {
+        let mut a = alloc(3);
+        assert!(a.can_admit(12));
+        a.register(1, 8).unwrap();
+        assert!(a.can_admit(4));
+        assert!(!a.can_admit(8));
+    }
+}

@@ -1,0 +1,193 @@
+//! Serving metrics: request counters, token throughput, latency/TTFT
+//! histograms. Shared across coordinator threads behind a mutex (update
+//! rates are per-request, not per-token-hot-loop).
+
+use crate::util::stats::Histogram;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    start: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    requests_admitted: u64,
+    requests_completed: u64,
+    requests_rejected: u64,
+    tokens_in: u64,
+    tokens_out: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    latency: Histogram,
+    ttft: Histogram,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub elapsed: f64,
+    pub requests_admitted: u64,
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub tokens_in: u64,
+    pub tokens_out: u64,
+    pub tokens_per_sec: f64,
+    pub mean_batch_size: f64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_mean: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests_admitted: 0,
+                requests_completed: 0,
+                requests_rejected: 0,
+                tokens_in: 0,
+                tokens_out: 0,
+                batches: 0,
+                batch_size_sum: 0,
+                latency: Histogram::latency(),
+                ttft: Histogram::latency(),
+            }),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn admitted(&self, prompt_tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_admitted += 1;
+        g.tokens_in += prompt_tokens as u64;
+    }
+
+    pub fn rejected(&self) {
+        self.inner.lock().unwrap().requests_rejected += 1;
+    }
+
+    pub fn batch_formed(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_size_sum += size as u64;
+    }
+
+    pub fn tokens_generated(&self, n: usize) {
+        self.inner.lock().unwrap().tokens_out += n as u64;
+    }
+
+    pub fn completed(&self, latency: f64, ttft: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_completed += 1;
+        g.latency.record(latency);
+        g.ttft.record(ttft);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = self.start.elapsed().as_secs_f64();
+        Snapshot {
+            elapsed,
+            requests_admitted: g.requests_admitted,
+            requests_completed: g.requests_completed,
+            requests_rejected: g.requests_rejected,
+            tokens_in: g.tokens_in,
+            tokens_out: g.tokens_out,
+            tokens_per_sec: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
+            mean_batch_size: if g.batches > 0 {
+                g.batch_size_sum as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            latency_p50: g.latency.quantile(0.5),
+            latency_p95: g.latency.quantile(0.95),
+            latency_mean: g.latency.mean(),
+            ttft_p50: g.ttft.quantile(0.5),
+            ttft_p95: g.ttft.quantile(0.95),
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
+             ({:.1} tok/s) | batch avg {:.2} | latency p50 {:.1}ms p95 {:.1}ms | \
+             ttft p50 {:.1}ms p95 {:.1}ms",
+            self.requests_admitted,
+            self.requests_completed,
+            self.requests_rejected,
+            self.tokens_in,
+            self.tokens_out,
+            self.tokens_per_sec,
+            self.mean_batch_size,
+            self.latency_p50 * 1e3,
+            self.latency_p95 * 1e3,
+            self.ttft_p50 * 1e3,
+            self.ttft_p95 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.admitted(10);
+        m.admitted(5);
+        m.rejected();
+        m.batch_formed(2);
+        m.tokens_generated(7);
+        m.completed(0.1, 0.02);
+        let s = m.snapshot();
+        assert_eq!(s.requests_admitted, 2);
+        assert_eq!(s.requests_rejected, 1);
+        assert_eq!(s.requests_completed, 1);
+        assert_eq!(s.tokens_in, 15);
+        assert_eq!(s.tokens_out, 7);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert!(s.latency_p50 > 0.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Metrics::new();
+        m.admitted(1);
+        let r = m.snapshot().report();
+        assert!(r.contains("admitted"));
+        assert!(r.contains("tok/s"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        m.admitted(1);
+                        m.tokens_generated(1);
+                    }
+                });
+            }
+        });
+        let snap = m.snapshot();
+        assert_eq!(snap.requests_admitted, 400);
+        assert_eq!(snap.tokens_out, 400);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 serving coordinator — the system the paper's inference speedups plug
+//! into (vLLM-router-shaped): bounded admission queue → dynamic batcher →
+//! continuous-batching scheduler over a model backend (PJRT artifact or
+//! native Rust transformer) with a block-based KV-cache manager and
+//! latency/throughput metrics. Python is never on this path.
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use kv_cache::{BlockAllocator, KvCacheConfig};
+pub use metrics::Metrics;
+pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
+pub use queue::RequestQueue;
+pub use request::{Request, RequestId, Response};
+pub use scheduler::{Backend, NativeBackend, Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig};

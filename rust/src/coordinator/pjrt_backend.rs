@@ -1,0 +1,188 @@
+//! PJRT-artifact serving backend: drives the AOT-compiled JAX/Pallas model
+//! (fixed-shape `lm_*_fwd_b1` artifacts) behind the [`Backend`] trait.
+//!
+//! Decoding is full-sequence recompute (the artifact has no KV-cache
+//! inputs); causality makes right-padding harmless, so one fixed (1, L)
+//! executable serves any prompt ≤ L. The native backend covers the
+//! incremental KV-decode path; this one proves the Python-free AOT serving
+//! path end to end.
+
+use super::kv_cache::SeqId;
+use super::scheduler::Backend;
+use crate::runtime::{lit_i32, Executable, Runtime};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub struct PjrtBackend {
+    exe: Arc<Executable>,
+    vocab: usize,
+    max_seq: usize,
+    seqs: HashMap<SeqId, Vec<u32>>,
+}
+
+impl PjrtBackend {
+    /// Open `artifacts/` and load the b=1 forward executable for an
+    /// attention variant ("mha" | "bda").
+    pub fn open(dir: impl AsRef<std::path::Path>, attention: &str) -> Result<PjrtBackend> {
+        let mut rt = Runtime::open(dir)?;
+        let lm = rt
+            .manifest
+            .lm_config
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing lm_config"))?;
+        let exe = rt.load(&format!("lm_{attention}_fwd_b1"))?;
+        Ok(PjrtBackend {
+            exe,
+            vocab: lm.vocab_size,
+            max_seq: lm.max_seq_len,
+            seqs: HashMap::new(),
+        })
+    }
+
+    fn logits_last(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        assert!(!tokens.is_empty() && tokens.len() <= self.max_seq);
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(self.max_seq, 0);
+        let lit = lit_i32(&padded, &[1, self.max_seq as i64])?;
+        let out = self.exe.run(std::slice::from_ref(&lit))?;
+        let logits: Vec<f32> = out[0].to_vec()?;
+        let pos = tokens.len() - 1;
+        Ok(logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+    fn max_seq_len(&self) -> usize {
+        self.max_seq
+    }
+    fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+        self.seqs.insert(seq, prompt.to_vec());
+        self.logits_last(prompt)
+    }
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(seqs.len());
+        for &(id, tok) in seqs {
+            let tokens = self
+                .seqs
+                .get_mut(&id)
+                .ok_or_else(|| anyhow::anyhow!("decode: unknown seq {id}"))?;
+            tokens.push(tok);
+            let t = tokens.clone();
+            out.push(self.logits_last(&t)?);
+        }
+        Ok(out)
+    }
+    fn release(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental backend over the KV-cached `lm_*_step` artifact.
+// ---------------------------------------------------------------------------
+
+/// Per-sequence PJRT state: KV-cache literals threaded between step calls.
+struct SeqState {
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    pos: usize,
+}
+
+/// Incremental PJRT serving backend: O(1) work per decoded token.
+///
+/// Drives the `lm_{attn}_step` artifact (B=1):
+/// `(k_cache, v_cache, token, pos) -> (logits, k_cache', v_cache')`.
+/// The cache literals live on the PJRT side of the boundary and are
+/// threaded between calls — the whole decode loop is Python-free AND
+/// recompute-free (unlike [`PjrtBackend`]'s full-sequence path; the serve
+/// example measures the difference).
+pub struct PjrtIncrementalBackend {
+    exe: Arc<Executable>,
+    vocab: usize,
+    max_seq: usize,
+    n_layers: usize,
+    width: usize,
+    seqs: HashMap<SeqId, SeqState>,
+}
+
+impl PjrtIncrementalBackend {
+    pub fn open(dir: impl AsRef<std::path::Path>, attention: &str) -> Result<PjrtIncrementalBackend> {
+        let mut rt = Runtime::open(dir)?;
+        let lm = rt
+            .manifest
+            .lm_config
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing lm_config"))?;
+        let exe = rt.load(&format!("lm_{attention}_step"))?;
+        Ok(PjrtIncrementalBackend {
+            exe,
+            vocab: lm.vocab_size,
+            max_seq: lm.max_seq_len,
+            n_layers: lm.n_layers,
+            width: lm.n_heads * lm.d_h,
+            seqs: HashMap::new(),
+        })
+    }
+
+    fn empty_cache(&self) -> Result<xla::Literal> {
+        let n = self.n_layers * self.max_seq * self.width;
+        crate::runtime::lit_f32(
+            &vec![0.0; n],
+            &[self.n_layers as i64, self.max_seq as i64, self.width as i64],
+        )
+    }
+
+    /// Advance one token for one sequence; returns last-position logits.
+    fn step(&mut self, seq: SeqId, token: u32) -> Result<Vec<f32>> {
+        let state = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("step: unknown seq {seq}"))?;
+        if state.pos >= self.max_seq {
+            anyhow::bail!("sequence {seq} exceeds max_seq_len {}", self.max_seq);
+        }
+        let tok_lit = xla::Literal::scalar(token as i32);
+        let pos_lit = xla::Literal::scalar(state.pos as i32);
+        // Move the caches out (threaded through the call).
+        let k = std::mem::replace(&mut state.k_cache, xla::Literal::scalar(0i32));
+        let v = std::mem::replace(&mut state.v_cache, xla::Literal::scalar(0i32));
+        let mut out = self.exe.run(&[k, v, tok_lit, pos_lit])?;
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let logits: Vec<f32> = out.pop().unwrap().to_vec()?;
+        let state = self.seqs.get_mut(&seq).unwrap();
+        state.k_cache = k_new;
+        state.v_cache = v_new;
+        state.pos += 1;
+        Ok(logits)
+    }
+}
+
+impl Backend for PjrtIncrementalBackend {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+    fn max_seq_len(&self) -> usize {
+        self.max_seq
+    }
+    fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+        let state =
+            SeqState { k_cache: self.empty_cache()?, v_cache: self.empty_cache()?, pos: 0 };
+        self.seqs.insert(seq, state);
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(seq, t)?;
+        }
+        Ok(logits)
+    }
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        seqs.iter().map(|&(id, tok)| self.step(id, tok)).collect()
+    }
+    fn release(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq);
+    }
+}

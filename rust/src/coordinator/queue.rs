@@ -1,0 +1,192 @@
+//! Bounded admission queue with backpressure (Mutex + Condvar; no tokio in
+//! the offline crate set).
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// FIFO queue with a capacity bound. `push` blocks when full (backpressure
+/// to the client); `pop` blocks until an item or close.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        assert!(capacity > 0);
+        RequestQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push. Returns false if the queue is closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(req);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking push. Err(req) when full or closed.
+    pub fn try_push(&self, req: Request) -> Result<(), Request> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(req);
+        }
+        g.items.push_back(req);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout. None on timeout or when closed & empty.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let (g2, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return g.items.pop_front().inspect(|_| {
+                    self.not_full.notify_one();
+                });
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking.
+    pub fn drain_up_to(&self, max: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.items.len().min(max);
+        let out: Vec<Request> = g.items.drain(..n).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pushes fail, pops drain the remainder then None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1], 4)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap().id, i);
+        }
+        assert!(q.pop_timeout(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = RequestQueue::new(2);
+        assert!(q.try_push(req(0)).is_ok());
+        assert!(q.try_push(req(1)).is_ok());
+        assert!(q.try_push(req(2)).is_err());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = RequestQueue::new(4);
+        q.push(req(0));
+        q.close();
+        assert!(!q.push(req(1)));
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)).unwrap().id, 0);
+        assert!(q.pop_timeout(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn drain_up_to_respects_max() {
+        let q = RequestQueue::new(8);
+        for i in 0..6 {
+            q.push(req(i));
+        }
+        let batch = q.drain_up_to(4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_pop() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.push(req(0));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(req(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)).unwrap().id, 0);
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)).unwrap().id, 1);
+    }
+
+    #[test]
+    fn cross_thread_producer_consumer() {
+        let q = Arc::new(RequestQueue::new(4));
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                qp.push(req(i));
+            }
+            qp.close();
+        });
+        let mut seen = Vec::new();
+        while let Some(r) = q.pop_timeout(Duration::from_millis(200)) {
+            seen.push(r.id);
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,61 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// An inference request: a prompt and a generation budget.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Greedy if None; otherwise softmax temperature sampling with this
+    /// temperature and the request id as seed.
+    pub temperature: Option<f32>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, temperature: None, arrival: Instant::now() }
+    }
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Seconds from arrival to first generated token.
+    pub ttft: f64,
+    /// Seconds from arrival to completion.
+    pub latency: f64,
+    pub prompt_len: usize,
+}
+
+impl Response {
+    pub fn tokens_generated(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_fields() {
+        let r = Request::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt.len(), 3);
+        assert_eq!(r.max_new_tokens, 16);
+        assert!(r.temperature.is_none());
+    }
+
+    #[test]
+    fn response_count() {
+        let resp = Response { id: 1, tokens: vec![5, 6], ttft: 0.1, latency: 0.2, prompt_len: 3 };
+        assert_eq!(resp.tokens_generated(), 2);
+    }
+}

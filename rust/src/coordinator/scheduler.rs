@@ -1,0 +1,482 @@
+//! Continuous-batching scheduler: admits requests (prefill), interleaves
+//! batched decode steps across active sequences, samples, and completes.
+//!
+//! The backend abstraction separates coordination from compute so the same
+//! scheduler serves: the native Rust transformer (incremental KV decode),
+//! the PJRT artifact backend (AOT-compiled JAX model), and a mock backend
+//! for deterministic tests.
+
+use super::kv_cache::{BlockAllocator, KvCacheConfig, SeqId};
+use super::request::{Request, Response};
+use crate::model::transformer::{KvCache, Transformer};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Model compute interface used by the scheduler.
+///
+/// Not `Send` by itself (the PJRT wrapper types are thread-pinned); the
+/// threaded [`super::server::Server`] adds a `Send` bound, while the
+/// synchronous `replay_trace` path works with any backend.
+pub trait Backend {
+    fn vocab_size(&self) -> usize;
+    fn max_seq_len(&self) -> usize;
+    /// Start a sequence (prefill); returns logits for the last prompt
+    /// position.
+    fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>>;
+    /// One decode step for a batch of sequences, feeding each its last
+    /// token; returns per-sequence logits.
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>>;
+    /// Drop per-sequence state.
+    fn release(&mut self, seq: SeqId);
+}
+
+/// Backend over the pure-Rust transformer with per-sequence KV caches.
+pub struct NativeBackend {
+    pub model: Transformer,
+    caches: HashMap<SeqId, KvCache>,
+}
+
+impl NativeBackend {
+    pub fn new(model: Transformer) -> NativeBackend {
+        NativeBackend { model, caches: HashMap::new() }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn vocab_size(&self) -> usize {
+        self.model.config.vocab_size
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.model.config.max_seq_len
+    }
+
+    fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+        let mut cache = KvCache::new(self.model.config.n_layers);
+        let logits = self.model.prefill(&mut cache, prompt);
+        self.caches.insert(seq, cache);
+        Ok(logits.data)
+    }
+
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        // Per-sequence incremental decode (each has its own cache).
+        let mut out = Vec::with_capacity(seqs.len());
+        for &(id, tok) in seqs {
+            let cache = self
+                .caches
+                .get_mut(&id)
+                .ok_or_else(|| anyhow::anyhow!("decode: unknown seq {id}"))?;
+            let logits = self.model.decode_step(cache, tok);
+            out.push(logits.data);
+        }
+        Ok(out)
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        self.caches.remove(&seq);
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded per iteration.
+    pub max_active: usize,
+    /// Optional stop token.
+    pub eos_token: Option<u32>,
+    pub kv: KvCacheConfig,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_active: 16, eos_token: None, kv: KvCacheConfig::default() }
+    }
+}
+
+struct ActiveSeq {
+    req: Request,
+    generated: Vec<u32>,
+    first_token_at: Option<Instant>,
+    last_token: u32,
+}
+
+/// The continuous-batching engine.
+pub struct Scheduler<B: Backend> {
+    pub backend: B,
+    pub config: SchedulerConfig,
+    pub kv: BlockAllocator,
+    active: Vec<ActiveSeq>,
+    next_seq: SeqId,
+    seq_of_req: HashMap<u64, SeqId>,
+}
+
+impl<B: Backend> Scheduler<B> {
+    pub fn new(backend: B, config: SchedulerConfig) -> Scheduler<B> {
+        Scheduler {
+            backend,
+            kv: BlockAllocator::new(config.kv),
+            config,
+            active: Vec::new(),
+            next_seq: 1,
+            seq_of_req: HashMap::new(),
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn has_capacity_for(&self, req: &Request) -> bool {
+        self.active.len() < self.config.max_active && self.kv.can_admit(req.prompt.len())
+    }
+
+    /// Admit a request: KV registration + prefill + first sampled token.
+    /// On failure the request is returned for re-queueing.
+    pub fn admit(&mut self, req: Request) -> std::result::Result<(), Request> {
+        if !self.has_capacity_for(&req) {
+            return Err(req);
+        }
+        let seq = self.next_seq;
+        if self.kv.register(seq, req.prompt.len()).is_err() {
+            return Err(req);
+        }
+        let logits = match self.backend.prefill(seq, &req.prompt) {
+            Ok(l) => l,
+            Err(_) => {
+                let _ = self.kv.release(seq);
+                return Err(req);
+            }
+        };
+        self.next_seq += 1;
+        let first = sample(&logits, &req);
+        self.seq_of_req.insert(req.id, seq);
+        let mut seq_state = ActiveSeq {
+            last_token: first,
+            generated: vec![first],
+            first_token_at: Some(Instant::now()),
+            req,
+        };
+        // A request asking for 0 tokens completes immediately on next step;
+        // normalize to at least the first token.
+        if seq_state.req.max_new_tokens == 0 {
+            seq_state.generated.clear();
+        }
+        self.active.push(seq_state);
+        Ok(())
+    }
+
+    /// One decode iteration over all active sequences. Returns completed
+    /// responses.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        if self.active.is_empty() {
+            return Ok(done);
+        }
+        // Finish check before decoding (covers max_new_tokens == 0/1).
+        self.complete_finished(&mut done);
+        if self.active.is_empty() {
+            return Ok(done);
+        }
+
+        let batch: Vec<(SeqId, u32)> = self
+            .active
+            .iter()
+            .map(|a| (self.seq_of_req[&a.req.id], a.last_token))
+            .collect();
+        let logits = self.backend.decode(&batch)?;
+        for (a, l) in self.active.iter_mut().zip(logits.iter()) {
+            let seq = self.seq_of_req[&a.req.id];
+            let tok = sample(l, &a.req);
+            a.generated.push(tok);
+            a.last_token = tok;
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            let _ = self.kv.append_token(seq);
+        }
+        self.complete_finished(&mut done);
+        Ok(done)
+    }
+
+    fn complete_finished(&mut self, done: &mut Vec<Response>) {
+        let eos = self.config.eos_token;
+        let max_total = self.backend.max_seq_len();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            let hit_eos = eos.map(|e| a.generated.last() == Some(&e)).unwrap_or(false);
+            let full = a.req.prompt.len() + a.generated.len() >= max_total;
+            if a.generated.len() >= a.req.max_new_tokens || hit_eos || full {
+                let a = self.active.remove(i);
+                let seq = self.seq_of_req.remove(&a.req.id).unwrap();
+                let _ = self.kv.release(seq);
+                self.backend.release(seq);
+                let now = Instant::now();
+                done.push(Response {
+                    id: a.req.id,
+                    prompt_len: a.req.prompt.len(),
+                    ttft: a
+                        .first_token_at
+                        .map(|t| (t - a.req.arrival).as_secs_f64())
+                        .unwrap_or(0.0),
+                    latency: (now - a.req.arrival).as_secs_f64(),
+                    tokens: a.generated,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drain: run steps until every active sequence completes.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.active.is_empty() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Sampling: greedy argmax, or temperature sampling seeded by request id
+/// (deterministic per request).
+fn sample(logits: &[f32], req: &Request) -> u32 {
+    match req.temperature {
+        None => argmax(logits),
+        Some(t) if t <= 0.0 => argmax(logits),
+        Some(t) => {
+            let mut rng = Rng::new(req.id ^ 0x5bd1e995);
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (((l - max) / t) as f64).exp()).collect();
+            let total: f64 = exps.iter().sum();
+            let mut u = rng.next_f64() * total;
+            for (i, e) in exps.iter().enumerate() {
+                u -= e;
+                if u <= 0.0 {
+                    return i as u32;
+                }
+            }
+            (logits.len() - 1) as u32
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Deterministic mock backend — used by unit/property/integration tests
+/// and the batcher ablation bench (kept out of cfg(test) so external test
+/// targets and benches can use it).
+pub mod test_support {
+    use super::*;
+
+    /// Deterministic mock: logits put all mass on (seq_id + step) % vocab.
+    pub struct MockBackend {
+        pub vocab: usize,
+        pub max_seq: usize,
+        pub steps: HashMap<SeqId, u32>,
+        pub released: Vec<SeqId>,
+        pub fail_prefill: bool,
+    }
+
+    impl MockBackend {
+        pub fn new(vocab: usize, max_seq: usize) -> MockBackend {
+            MockBackend {
+                vocab,
+                max_seq,
+                steps: HashMap::new(),
+                released: Vec::new(),
+                fail_prefill: false,
+            }
+        }
+
+        fn logits_for(&self, seq: SeqId, step: u32) -> Vec<f32> {
+            let mut l = vec![0.0; self.vocab];
+            l[((seq as u32 + step) % self.vocab as u32) as usize] = 10.0;
+            l
+        }
+    }
+
+    impl Backend for MockBackend {
+        fn vocab_size(&self) -> usize {
+            self.vocab
+        }
+        fn max_seq_len(&self) -> usize {
+            self.max_seq
+        }
+        fn prefill(&mut self, seq: SeqId, _prompt: &[u32]) -> Result<Vec<f32>> {
+            if self.fail_prefill {
+                anyhow::bail!("mock prefill failure");
+            }
+            self.steps.insert(seq, 0);
+            Ok(self.logits_for(seq, 0))
+        }
+        fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+            seqs.iter()
+                .map(|&(id, _)| {
+                    let s = self.steps.get_mut(&id).expect("unknown seq");
+                    *s += 1;
+                    let step = *s;
+                    Ok(self.logits_for(id, step))
+                })
+                .collect()
+        }
+        fn release(&mut self, seq: SeqId) {
+            self.released.push(seq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::MockBackend;
+    use super::*;
+
+    fn sched(max_active: usize) -> Scheduler<MockBackend> {
+        Scheduler::new(
+            MockBackend::new(16, 64),
+            SchedulerConfig {
+                max_active,
+                eos_token: None,
+                kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+            },
+        )
+    }
+
+    #[test]
+    fn generates_exact_token_count() {
+        let mut s = sched(8);
+        s.admit(Request::new(1, vec![1, 2, 3], 5)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 5);
+        assert!(done[0].ttft <= done[0].latency);
+    }
+
+    #[test]
+    fn deterministic_mock_tokens() {
+        let mut s = sched(8);
+        s.admit(Request::new(1, vec![0], 3)).unwrap();
+        let done = s.drain().unwrap();
+        // seq id 1: tokens (1+0)%16, (1+1)%16, (1+2)%16
+        assert_eq!(done[0].tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn interleaves_multiple_requests() {
+        let mut s = sched(8);
+        s.admit(Request::new(1, vec![1], 2)).unwrap();
+        s.admit(Request::new(2, vec![1, 2], 4)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done.len(), 2);
+        let by_id: HashMap<u64, &Response> = done.iter().map(|r| (r.id, r)).collect();
+        assert_eq!(by_id[&1].tokens.len(), 2);
+        assert_eq!(by_id[&2].tokens.len(), 4);
+    }
+
+    #[test]
+    fn respects_max_active() {
+        let mut s = sched(1);
+        s.admit(Request::new(1, vec![1], 2)).unwrap();
+        let rejected = s.admit(Request::new(2, vec![1], 2));
+        assert!(rejected.is_err());
+        s.drain().unwrap();
+        assert!(s.admit(rejected.unwrap_err()).is_ok());
+    }
+
+    #[test]
+    fn kv_blocks_freed_on_completion() {
+        let mut s = sched(8);
+        let free0 = s.kv.free_blocks();
+        s.admit(Request::new(1, vec![1, 2, 3, 4, 5], 6)).unwrap();
+        assert!(s.kv.free_blocks() < free0);
+        s.drain().unwrap();
+        assert_eq!(s.kv.free_blocks(), free0);
+        s.kv.check_invariants().unwrap();
+        assert_eq!(s.backend.released, vec![1]);
+    }
+
+    #[test]
+    fn eos_stops_generation() {
+        let mut s = Scheduler::new(
+            MockBackend::new(16, 64),
+            SchedulerConfig {
+                max_active: 4,
+                eos_token: Some(3), // seq 1 emits 1, 2, 3 -> stops at 3
+                kv: KvCacheConfig::default(),
+            },
+        );
+        s.admit(Request::new(1, vec![0], 10)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done[0].tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn max_seq_len_bounds_generation() {
+        let mut s = Scheduler::new(
+            MockBackend::new(16, 8), // tiny context
+            SchedulerConfig::default(),
+        );
+        s.admit(Request::new(1, vec![1, 2, 3, 4], 100)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done[0].tokens.len() + 4, 8);
+    }
+
+    #[test]
+    fn failed_prefill_requeues() {
+        let mut s = sched(4);
+        s.backend.fail_prefill = true;
+        let r = s.admit(Request::new(1, vec![1], 2));
+        assert!(r.is_err());
+        s.kv.check_invariants().unwrap();
+        assert_eq!(s.kv.used_blocks(), 0, "failed admit must not leak blocks");
+    }
+
+    #[test]
+    fn temperature_sampling_deterministic_per_request() {
+        let logits = vec![0.0, 1.0, 2.0, 3.0];
+        let mut r1 = Request::new(42, vec![1], 4);
+        r1.temperature = Some(1.0);
+        let a = super::sample(&logits, &r1);
+        let b = super::sample(&logits, &r1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn native_backend_serves_real_model() {
+        use crate::model::{ModelConfig, Transformer};
+        let model = Transformer::new_mha(ModelConfig::tiny(), 11);
+        let mut s = Scheduler::new(NativeBackend::new(model), SchedulerConfig::default());
+        s.admit(Request::new(1, vec![5, 6, 7], 4)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done[0].tokens.len(), 4);
+        assert!(done[0].tokens.iter().all(|&t| t < 256));
+    }
+
+    #[test]
+    fn native_mha_and_bda_generate_identical_tokens() {
+        // The serving-level losslessness check: greedy decodes agree.
+        use crate::bd::Strategy;
+        use crate::model::{ModelConfig, Transformer};
+        use crate::tensor::DType;
+        let mha = Transformer::new_mha(ModelConfig::tiny(), 13);
+        let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).unwrap();
+        let mut s1 = Scheduler::new(NativeBackend::new(mha), SchedulerConfig::default());
+        let mut s2 = Scheduler::new(NativeBackend::new(bda), SchedulerConfig::default());
+        s1.admit(Request::new(1, vec![9, 4, 17], 8)).unwrap();
+        s2.admit(Request::new(1, vec![9, 4, 17], 8)).unwrap();
+        let t1 = s1.drain().unwrap().remove(0).tokens;
+        let t2 = s2.drain().unwrap().remove(0).tokens;
+        assert_eq!(t1, t2, "BDA must reproduce MHA's greedy decode exactly");
+    }
+}

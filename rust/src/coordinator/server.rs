@@ -1,0 +1,240 @@
+//! Server: wires queue → batcher → scheduler on a dedicated engine thread
+//! (the PJRT client and model state live on that thread; clients talk over
+//! channels). Also provides a synchronous trace-replay mode used by the
+//! benchmarks and examples.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use super::request::{Request, Response};
+use super::scheduler::{Backend, Scheduler, SchedulerConfig};
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub scheduler: SchedulerConfig,
+}
+
+/// A running server instance.
+pub struct Server {
+    pub queue: Arc<RequestQueue>,
+    pub metrics: Arc<Metrics>,
+    responses: Receiver<Response>,
+    engine: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start the engine thread over a backend.
+    pub fn start<B: Backend + Send + 'static>(backend: B, config: ServerConfig) -> Server {
+        let queue = Arc::new(RequestQueue::new(256));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx): (Sender<Response>, Receiver<Response>) = channel();
+        let q = queue.clone();
+        let m = metrics.clone();
+        let engine = std::thread::spawn(move || -> Result<()> {
+            let mut sched = Scheduler::new(backend, config.scheduler);
+            let batcher = Batcher::new(config.batcher);
+            loop {
+                // Admit a batch (don't block long if sequences are active).
+                let idle = if sched.active_count() > 0 {
+                    Duration::from_micros(100)
+                } else if q.is_closed() && q.is_empty() {
+                    break;
+                } else {
+                    Duration::from_millis(10)
+                };
+                let batch = batcher.next_batch(&q, idle);
+                if !batch.is_empty() {
+                    m.batch_formed(batch.len());
+                }
+                for req in batch {
+                    m.admitted(req.prompt.len());
+                    let mut pending = Some(req);
+                    // Retry admission as capacity frees up.
+                    while let Some(r) = pending.take() {
+                        match sched.admit(r) {
+                            Ok(()) => {}
+                            Err(r) => {
+                                if sched.active_count() == 0 {
+                                    // Can't ever admit: drop with rejection.
+                                    m.rejected();
+                                    break;
+                                }
+                                // Free capacity by stepping, then retry.
+                                for resp in sched.step()? {
+                                    m.tokens_generated(resp.tokens.len());
+                                    m.completed(resp.latency, resp.ttft);
+                                    let _ = tx.send(resp);
+                                }
+                                pending = Some(r);
+                            }
+                        }
+                    }
+                }
+                // Decode progress.
+                for resp in sched.step()? {
+                    m.tokens_generated(resp.tokens.len());
+                    m.completed(resp.latency, resp.ttft);
+                    let _ = tx.send(resp);
+                }
+            }
+            // Drain remaining work after close.
+            for resp in sched.drain()? {
+                m.tokens_generated(resp.tokens.len());
+                m.completed(resp.latency, resp.ttft);
+                let _ = tx.send(resp);
+            }
+            Ok(())
+        });
+        Server { queue, metrics, responses: rx, engine: Some(engine) }
+    }
+
+    /// Submit a request (blocking on backpressure). False if shut down.
+    pub fn submit(&self, req: Request) -> bool {
+        self.queue.push(req)
+    }
+
+    /// Receive the next completed response.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.responses.recv_timeout(timeout).ok()
+    }
+
+    /// Close the queue and join the engine, returning remaining responses.
+    pub fn shutdown(mut self) -> Result<Vec<Response>> {
+        self.queue.close();
+        let mut rest = Vec::new();
+        if let Some(h) = self.engine.take() {
+            // Collect everything the engine flushes while finishing.
+            loop {
+                match self.responses.recv_timeout(Duration::from_millis(200)) {
+                    Ok(r) => rest.push(r),
+                    Err(_) => {
+                        if h.is_finished() {
+                            while let Ok(r) = self.responses.try_recv() {
+                                rest.push(r);
+                            }
+                            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(rest)
+    }
+}
+
+/// Synchronous trace replay (no threads): submit requests at their offsets,
+/// step the scheduler, and collect all responses. Used by benches/examples
+/// where deterministic timing matters.
+pub fn replay_trace<B: Backend>(
+    backend: B,
+    config: ServerConfig,
+    trace: Vec<Request>,
+) -> Result<(Vec<Response>, Arc<Metrics>)> {
+    let metrics = Arc::new(Metrics::new());
+    let mut sched = Scheduler::new(backend, config.scheduler);
+    let mut out = Vec::new();
+    let mut pending: std::collections::VecDeque<Request> = trace.into();
+    while !pending.is_empty() || sched.active_count() > 0 {
+        // Admit as many as capacity allows.
+        while let Some(req) = pending.pop_front() {
+            metrics.admitted(req.prompt.len());
+            match sched.admit(req) {
+                Ok(()) => {
+                    if sched.active_count() >= config.batcher.max_batch {
+                        break;
+                    }
+                }
+                Err(req) => {
+                    pending.push_front(req);
+                    break;
+                }
+            }
+        }
+        for resp in sched.step()? {
+            metrics.tokens_generated(resp.tokens.len());
+            metrics.completed(resp.latency, resp.ttft);
+            out.push(resp);
+        }
+    }
+    Ok((out, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::KvCacheConfig;
+    use crate::coordinator::scheduler::test_support::MockBackend;
+
+    fn config() -> ServerConfig {
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            scheduler: SchedulerConfig {
+                max_active: 8,
+                eos_token: None,
+                kv: KvCacheConfig { block_size: 4, num_blocks: 128 },
+            },
+        }
+    }
+
+    #[test]
+    fn threaded_server_completes_all() {
+        let server = Server::start(MockBackend::new(16, 64), config());
+        for i in 0..20 {
+            assert!(server.submit(Request::new(i, vec![1, 2], 3)));
+        }
+        let responses = {
+            let mut got = Vec::new();
+            while got.len() < 20 {
+                match server.recv_timeout(Duration::from_secs(5)) {
+                    Some(r) => got.push(r),
+                    None => break,
+                }
+            }
+            got
+        };
+        assert_eq!(responses.len(), 20);
+        assert!(responses.iter().all(|r| r.tokens.len() == 3));
+        let rest = server.shutdown().unwrap();
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn shutdown_flushes_in_flight() {
+        let server = Server::start(MockBackend::new(16, 64), config());
+        for i in 0..5 {
+            server.submit(Request::new(i, vec![1], 4));
+        }
+        let rest = server.shutdown().unwrap();
+        // All 5 must come out somewhere (drained on shutdown).
+        assert_eq!(rest.len(), 5);
+    }
+
+    #[test]
+    fn replay_trace_deterministic() {
+        let trace: Vec<Request> = (0..10).map(|i| Request::new(i, vec![1, 2, 3], 4)).collect();
+        let (r1, m1) = replay_trace(MockBackend::new(16, 64), config(), trace.clone()).unwrap();
+        let (r2, _) = replay_trace(MockBackend::new(16, 64), config(), trace).unwrap();
+        assert_eq!(r1.len(), 10);
+        let t1: Vec<_> = r1.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let t2: Vec<_> = r2.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(t1, t2);
+        assert_eq!(m1.snapshot().requests_admitted, 10);
+        assert_eq!(m1.snapshot().tokens_out, 40);
+    }
+
+    #[test]
+    fn metrics_track_throughput() {
+        let trace: Vec<Request> = (0..4).map(|i| Request::new(i, vec![1], 8)).collect();
+        let (_, m) = replay_trace(MockBackend::new(16, 64), config(), trace).unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.tokens_out, 32);
+        assert!(s.tokens_per_sec > 0.0);
+        assert_eq!(s.requests_completed, 4);
+    }
+}

@@ -1,0 +1,126 @@
+//! Corpus BLEU (up to 4-grams, with brevity penalty) — Table 2's metric.
+
+use std::collections::HashMap;
+
+/// Corpus-level BLEU-4 with brevity penalty, on token id sequences.
+/// Uses standard "add-epsilon-free" corpus counting (sums of clipped
+/// matches over sums of candidate n-grams), with smoothing +1 on orders
+/// with zero matches (NIST-style floor for short corpora).
+pub fn bleu(candidates: &[Vec<u32>], references: &[Vec<u32>]) -> f64 {
+    assert_eq!(candidates.len(), references.len());
+    if candidates.is_empty() {
+        return 0.0;
+    }
+    let max_n = 4;
+    let mut match_counts = vec![0u64; max_n];
+    let mut total_counts = vec![0u64; max_n];
+    let mut cand_len = 0u64;
+    let mut ref_len = 0u64;
+
+    for (c, r) in candidates.iter().zip(references.iter()) {
+        cand_len += c.len() as u64;
+        ref_len += r.len() as u64;
+        for n in 1..=max_n {
+            if c.len() < n {
+                continue;
+            }
+            let mut ref_ngrams: HashMap<&[u32], u64> = HashMap::new();
+            if r.len() >= n {
+                for w in r.windows(n) {
+                    *ref_ngrams.entry(w).or_insert(0) += 1;
+                }
+            }
+            let mut cand_ngrams: HashMap<&[u32], u64> = HashMap::new();
+            for w in c.windows(n) {
+                *cand_ngrams.entry(w).or_insert(0) += 1;
+            }
+            for (gram, &count) in &cand_ngrams {
+                total_counts[n - 1] += count;
+                let clip = ref_ngrams.get(gram).copied().unwrap_or(0);
+                match_counts[n - 1] += count.min(clip);
+            }
+        }
+    }
+
+    // No unigram overlap at all: BLEU is 0 (smoothing only applies to
+    // higher orders of otherwise-overlapping corpora).
+    if match_counts[0] == 0 {
+        return 0.0;
+    }
+
+    // Geometric mean of modified precisions (smoothed).
+    let mut log_p_sum = 0.0f64;
+    for n in 0..max_n {
+        let (m, t) = (match_counts[n], total_counts[n]);
+        let p = if t == 0 {
+            return 0.0; // candidate too short for n-grams at all
+        } else if m == 0 {
+            1.0 / (2.0 * t as f64) // smoothing for zero matches
+        } else {
+            m as f64 / t as f64
+        };
+        log_p_sum += p.ln();
+    }
+    let geo = (log_p_sum / max_n as f64).exp();
+
+    // Brevity penalty.
+    let bp = if cand_len >= ref_len {
+        1.0
+    } else if cand_len == 0 {
+        0.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5], vec![9, 8, 7, 6, 5]];
+        let b = bleu(&refs, &refs);
+        assert!((b - 100.0).abs() < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn disjoint_is_near_zero() {
+        let cand = vec![vec![1, 2, 3, 4, 5]];
+        let refs = vec![vec![10, 11, 12, 13, 14]];
+        assert!(bleu(&cand, &refs) < 1.0);
+    }
+
+    #[test]
+    fn partial_overlap_between() {
+        let cand = vec![vec![1, 2, 3, 99, 98]];
+        let refs = vec![vec![1, 2, 3, 4, 5]];
+        let b = bleu(&cand, &refs);
+        assert!(b > 1.0 && b < 90.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        // Identical prefix but shorter candidate must score lower than a
+        // full-length identical candidate.
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let full = bleu(&refs, &refs);
+        let short = bleu(&[vec![1, 2, 3, 4, 5]], &refs);
+        assert!(short < full);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        // Same unigrams, scrambled order -> lower BLEU (n>1 precisions drop).
+        let refs = vec![vec![1, 2, 3, 4, 5, 6]];
+        let scrambled = bleu(&[vec![6, 4, 2, 5, 3, 1]], &refs);
+        let correct = bleu(&refs, &refs);
+        assert!(scrambled < correct * 0.7);
+    }
+
+    #[test]
+    fn empty_corpus() {
+        assert_eq!(bleu(&[], &[]), 0.0);
+    }
+}

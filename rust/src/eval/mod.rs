@@ -1,0 +1,16 @@
+//! Evaluation substrates: synthetic corpora, tokenization, perplexity,
+//! BLEU + beam search, and serving workload traces — everything the
+//! paper's evaluation section needs that we cannot download (WikiText2,
+//! IWSLT'14) is replaced by deterministic synthetic equivalents
+//! (substitution table in DESIGN.md §2).
+
+pub mod beam;
+pub mod bleu;
+pub mod corpus;
+pub mod ppl;
+pub mod tokenizer;
+pub mod trace;
+
+pub use bleu::bleu;
+pub use corpus::{Corpus, TranslationPair};
+pub use ppl::perplexity;

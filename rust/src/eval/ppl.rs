@@ -1,0 +1,82 @@
+//! Perplexity evaluation (Fig. 2a / Tables 3 & 5).
+
+use crate::model::Transformer;
+
+/// Token-level perplexity of a model over a token stream, evaluated in
+/// non-overlapping windows of `seq_len`. Returns exp(mean NLL).
+pub fn perplexity(model: &Transformer, tokens: &[u32], seq_len: usize) -> f64 {
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    let window = seq_len.min(model.config.max_seq_len);
+    for chunk in tokens.chunks(window) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let logits = model.forward_full(chunk);
+        let v = model.config.vocab_size;
+        // NLL of token[t+1] under logits at position t.
+        for t in 0..chunk.len() - 1 {
+            let row = &logits.data[t * v..(t + 1) * v];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logsum: f64 =
+                row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() + max as f64;
+            let target = chunk[t + 1] as usize % v;
+            total_nll += logsum - row[target] as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        return f64::NAN;
+    }
+    (total_nll / count as f64).exp()
+}
+
+/// Relative PPL increase in percent: 100·(ppl_new − ppl_base)/ppl_base
+/// (the quantity Fig. 2a / Table 5 report).
+pub fn ppl_increase_percent(base: f64, new: f64) -> f64 {
+    100.0 * (new - base) / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::corpus::Corpus;
+    use crate::model::{ModelConfig, Transformer};
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // An untrained model on random-ish text has PPL near vocab size
+        // (uniform predictions).
+        let m = Transformer::new_mha(ModelConfig::tiny(), 3);
+        let c = Corpus::tiny_wiki(256, 600, 4);
+        let ppl = perplexity(&m, &c.tokens, 32);
+        assert!(ppl.is_finite());
+        assert!(ppl > 64.0 && ppl < 1024.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn bda_ppl_matches_mha_exactly_fp32() {
+        // The Fig. 2a headline at tiny scale: FP32 BDA PPL ≈ MHA PPL.
+        use crate::bd::Strategy;
+        use crate::tensor::DType;
+        let m = Transformer::new_mha(ModelConfig::tiny(), 5);
+        let bda = m.to_bda(Strategy::ResidualMin, DType::F32).unwrap();
+        let c = Corpus::tiny_wiki(256, 400, 6);
+        let p0 = perplexity(&m, &c.tokens, 32);
+        let p1 = perplexity(&bda, &c.tokens, 32);
+        let inc = ppl_increase_percent(p0, p1).abs();
+        assert!(inc < 0.1, "ppl increase {inc}%");
+    }
+
+    #[test]
+    fn increase_percent_formula() {
+        assert!((ppl_increase_percent(10.0, 10.1) - 1.0).abs() < 1e-9);
+        assert!(ppl_increase_percent(10.0, 10.0) == 0.0);
+    }
+
+    #[test]
+    fn short_stream_nan() {
+        let m = Transformer::new_mha(ModelConfig::tiny(), 7);
+        assert!(perplexity(&m, &[1], 32).is_nan());
+    }
+}

@@ -1,0 +1,134 @@
+//! Word-level tokenizer with frequency-capped vocabulary.
+//!
+//! Completes the evaluation substrate: real text corpora (when available)
+//! can be tokenized to the id streams the PPL/BLEU machinery consumes.
+//! Deterministic: ties in frequency break lexicographically.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const EOS: u32 = 3;
+const SPECIALS: usize = 4;
+
+/// Word-level vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from text: lowercased whitespace/punctuation-split words,
+    /// most frequent first, capped at `max_vocab` (including 4 specials).
+    pub fn fit(text: &str, max_vocab: usize) -> Tokenizer {
+        assert!(max_vocab > SPECIALS);
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        for word in split_words(text) {
+            *counts.entry(word).or_insert(0) += 1;
+        }
+        let mut words: Vec<(String, u64)> = counts.into_iter().collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        words.truncate(max_vocab - SPECIALS);
+
+        let mut id_to_word: Vec<String> =
+            ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+        id_to_word.extend(words.into_iter().map(|(w, _)| w));
+        let word_to_id =
+            id_to_word.iter().enumerate().map(|(i, w)| (w.clone(), i as u32)).collect();
+        Tokenizer { word_to_id, id_to_word }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    /// Encode text (unknown words → UNK).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        split_words(text)
+            .map(|w| self.word_to_id.get(&w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    /// Encode wrapped in BOS/EOS.
+    pub fn encode_sentence(&self, text: &str) -> Vec<u32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out.push(EOS);
+        out
+    }
+
+    /// Decode ids back to a space-joined string (specials skipped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&id| id as usize >= SPECIALS)
+            .map(|&id| {
+                self.id_to_word.get(id as usize).map(|s| s.as_str()).unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+fn split_words(text: &str) -> impl Iterator<Item = String> + '_ {
+    text.split(|c: char| !c.is_alphanumeric())
+        .filter(|w| !w.is_empty())
+        .map(|w| w.to_lowercase())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "The cat sat on the mat. The cat, the CAT!";
+
+    #[test]
+    fn frequency_order() {
+        let t = Tokenizer::fit(SAMPLE, 100);
+        // "the"/"cat" are most frequent -> lowest non-special ids.
+        let the = t.encode("the")[0];
+        let cat = t.encode("cat")[0];
+        let mat = t.encode("mat")[0];
+        assert!(the < mat && cat < mat);
+        assert_eq!(t.encode("THE")[0], the, "case-insensitive");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::fit(SAMPLE, 100);
+        assert_eq!(t.encode("zebra"), vec![UNK]);
+    }
+
+    #[test]
+    fn vocab_cap_respected() {
+        let t = Tokenizer::fit(SAMPLE, 6); // 4 specials + 2 words
+        assert_eq!(t.vocab_size(), 6);
+        // Less-frequent words fall to UNK.
+        assert_eq!(t.encode("mat"), vec![UNK]);
+        assert_ne!(t.encode("the"), vec![UNK]);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = Tokenizer::fit(SAMPLE, 100);
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn sentence_wrapping() {
+        let t = Tokenizer::fit(SAMPLE, 100);
+        let ids = t.encode_sentence("the cat");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(t.decode(&ids), "the cat");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Tokenizer::fit(SAMPLE, 50);
+        let b = Tokenizer::fit(SAMPLE, 50);
+        assert_eq!(a.encode("the cat sat on the mat"), b.encode("the cat sat on the mat"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Serving workload traces: Poisson arrivals with Zipf-ish prompt lengths,
+//! used by the serving example and ablation benches.
+
+use crate::coordinator::request::Request;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Trace generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub vocab_size: usize,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub min_new: usize,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 64,
+            vocab_size: 512,
+            min_prompt: 4,
+            max_prompt: 24,
+            min_new: 4,
+            max_new: 16,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate a deterministic request trace (arrival = now; the replay
+/// driver controls pacing).
+pub fn generate(config: TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(config.seed);
+    let now = Instant::now();
+    (0..config.n_requests)
+        .map(|i| {
+            let plen = rng.range(config.min_prompt, config.max_prompt);
+            let prompt: Vec<u32> =
+                (0..plen).map(|_| rng.below(config.vocab_size as u64) as u32).collect();
+            let new = rng.range(config.min_new, config.max_new);
+            Request {
+                id: i as u64,
+                prompt,
+                max_new_tokens: new,
+                temperature: None,
+                arrival: now,
+            }
+        })
+        .collect()
+}
+
+/// Exponential inter-arrival gaps for an open-loop replay at `rate` req/s.
+pub fn poisson_gaps(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| -(1.0 - rng.next_f64()).ln() / rate).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(TraceConfig::default());
+        let b = generate(TraceConfig::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let c = TraceConfig { min_prompt: 3, max_prompt: 5, min_new: 2, max_new: 4, ..Default::default() };
+        for r in generate(c) {
+            assert!((3..=5).contains(&r.prompt.len()));
+            assert!((2..=4).contains(&r.max_new_tokens));
+            assert!(r.prompt.iter().all(|&t| t < c.vocab_size as u32));
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_mean() {
+        let gaps = poisson_gaps(10_000, 100.0, 3);
+        let mean: f64 = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 0.01).abs() < 0.001, "mean {mean}");
+        assert!(gaps.iter().all(|&g| g >= 0.0));
+    }
+}

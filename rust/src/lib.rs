@@ -1,0 +1,29 @@
+//! # BD Attention (BDA)
+//!
+//! Production-oriented reproduction of *Accelerating Attention with Basis
+//! Decomposition* (Jialin Zhao, 2025): a lossless algorithmic reformulation
+//! of multi-head attention built as a three-layer Rust + JAX + Pallas stack.
+//!
+//! - **L3 (this crate):** serving coordinator (router, dynamic batcher,
+//!   KV-cache, scheduler), the BD math library, pure-Rust attention
+//!   operators (MHA / BDA / PIFA-style), model definitions, and evaluation
+//!   harnesses for every table and figure in the paper.
+//! - **L2/L1 (`python/compile/`):** JAX transformer + Pallas kernels,
+//!   AOT-lowered once to `artifacts/*.hlo.txt` and executed from Rust via
+//!   PJRT ([`runtime`]). Python is never on the request path.
+//!
+//! Entry points: [`bd`] for the decomposition, [`attention`] for the
+//! operators, [`prepare`] for Algorithm 3 model conversion, [`coordinator`]
+//! for serving.
+
+pub mod bd;
+pub mod model;
+pub mod prepare;
+pub mod attention;
+pub mod coordinator;
+pub mod bench_support;
+pub mod eval;
+pub mod runtime;
+pub mod linalg;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,352 @@
+//! LU factorization with partial pivoting and the linear solves used by
+//! BD decomposition (Algorithm 4's `linsolve`).
+
+use crate::tensor::Tensor;
+
+/// LU factorization of a square matrix with partial (row) pivoting.
+/// `lu` packs L (unit lower, below diagonal) and U (upper incl. diagonal);
+/// `perm[i]` is the source row of pivoted row i.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    pub lu: Tensor,
+    pub perm: Vec<usize>,
+    pub n: usize,
+    /// Smallest |pivot| encountered — conditioning signal.
+    pub min_pivot: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("singular matrix (pivot {pivot:e} at step {step})")]
+    Singular { step: usize, pivot: f64 },
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+/// Factor a square matrix. Fails only on an exactly-zero pivot; near-zero
+/// pivots are reported via `min_pivot` (Theorem 3.1 says exact singularity
+/// has probability 0 for noised weights).
+pub fn lu_factor(a: &Tensor) -> Result<Lu, LinalgError> {
+    if a.ndim() != 2 || a.shape[0] != a.shape[1] {
+        return Err(LinalgError::Shape(format!("lu_factor needs square, got {:?}", a.shape)));
+    }
+    let n = a.shape[0];
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut min_pivot = f64::INFINITY;
+
+    for k in 0..n {
+        // Partial pivot: max |value| in column k at/below row k.
+        let mut p = k;
+        let mut best = lu.at(k, k).abs();
+        for i in (k + 1)..n {
+            let v = lu.at(i, k).abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == 0.0 {
+            return Err(LinalgError::Singular { step: k, pivot: 0.0 });
+        }
+        min_pivot = min_pivot.min(best as f64);
+        if p != k {
+            for j in 0..n {
+                let tmp = lu.at(k, j);
+                *lu.at_mut(k, j) = lu.at(p, j);
+                *lu.at_mut(p, j) = tmp;
+            }
+            perm.swap(k, p);
+        }
+        let pivot = lu.at(k, k);
+        for i in (k + 1)..n {
+            let factor = lu.at(i, k) / pivot;
+            *lu.at_mut(i, k) = factor;
+            if factor != 0.0 {
+                for j in (k + 1)..n {
+                    let v = lu.at(k, j);
+                    *lu.at_mut(i, j) -= factor * v;
+                }
+            }
+        }
+    }
+    Ok(Lu { lu, perm, n, min_pivot })
+}
+
+impl Lu {
+    /// Solve `A x = b` for a single RHS vector.
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // Apply permutation, forward-substitute L, back-substitute U.
+        let mut y: Vec<f32> = (0..n).map(|i| b[self.perm[i]]).collect();
+        for i in 1..n {
+            let mut acc = y[i];
+            for j in 0..i {
+                acc -= self.lu.at(i, j) * y[j];
+            }
+            y[i] = acc;
+        }
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in (i + 1)..n {
+                acc -= self.lu.at(i, j) * y[j];
+            }
+            y[i] = acc / self.lu.at(i, i);
+        }
+        y
+    }
+}
+
+/// Solve `A X = B` column-by-column (A: n×n, B: n×m) → X: n×m.
+pub fn lu_solve_matrix(a: &Tensor, b: &Tensor) -> Result<Tensor, LinalgError> {
+    let lu = lu_factor(a)?;
+    let n = lu.n;
+    if b.shape[0] != n {
+        return Err(LinalgError::Shape(format!("B rows {} != {}", b.shape[0], n)));
+    }
+    let m = b.shape[1];
+    let mut x = Tensor::zeros(&[n, m]);
+    let mut col = vec![0.0f32; n];
+    for j in 0..m {
+        for i in 0..n {
+            col[i] = b.at(i, j);
+        }
+        let sol = lu.solve_vec(&col);
+        for i in 0..n {
+            *x.at_mut(i, j) = sol[i];
+        }
+    }
+    Ok(x)
+}
+
+/// Solve `X A = B` for X (A: n×n, B: m×n) → X: m×n.
+///
+/// This is the BD coefficient solve: rows of B expressed in the basis A.
+/// Equivalent to solving `A^T X^T = B^T`.
+pub fn solve_xa_b(a: &Tensor, b: &Tensor) -> Result<Tensor, LinalgError> {
+    let at = a.transpose();
+    let bt = b.transpose();
+    Ok(lu_solve_matrix(&at, &bt)?.transpose())
+}
+
+// ---- f64 path (offline BD preparation solves in double precision) ----------
+
+/// Row-major f64 matrix view used by the offline solves.
+pub struct MatF64 {
+    pub data: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatF64 {
+    pub fn from_tensor(t: &Tensor) -> MatF64 {
+        assert_eq!(t.ndim(), 2);
+        MatF64 {
+            data: t.data.iter().map(|&x| x as f64).collect(),
+            rows: t.shape[0],
+            cols: t.shape[1],
+        }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(
+            self.data.iter().map(|&x| x as f32).collect(),
+            &[self.rows, self.cols],
+        )
+    }
+
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// self @ other.
+    pub fn matmul(&self, other: &MatF64) -> MatF64 {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = MatF64 { data: vec![0.0; m * n], rows: m, cols: n };
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.at(i, p);
+                if a != 0.0 {
+                    for j in 0..n {
+                        out.data[i * n + j] += a * other.at(p, j);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> MatF64 {
+        let mut out = MatF64 { data: vec![0.0; self.data.len()], rows: self.cols, cols: self.rows };
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.at(i, j));
+            }
+        }
+        out
+    }
+}
+
+/// Solve `A X = B` in f64 (A: n×n, B: n×m) with partial pivoting.
+pub fn lu_solve_matrix_f64(a: &MatF64, b: &MatF64) -> Result<MatF64, LinalgError> {
+    let n = a.rows;
+    if a.rows != a.cols {
+        return Err(LinalgError::Shape(format!("square needed, got {}x{}", a.rows, a.cols)));
+    }
+    if b.rows != n {
+        return Err(LinalgError::Shape(format!("B rows {} != {}", b.rows, n)));
+    }
+    let m = b.cols;
+    let mut lu = a.data.clone();
+    let mut x = b.data.clone();
+    for k in 0..n {
+        // Pivot
+        let mut p = k;
+        let mut best = lu[k * n + k].abs();
+        for i in (k + 1)..n {
+            let v = lu[i * n + k].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == 0.0 {
+            return Err(LinalgError::Singular { step: k, pivot: 0.0 });
+        }
+        if p != k {
+            for j in 0..n {
+                lu.swap(k * n + j, p * n + j);
+            }
+            for j in 0..m {
+                x.swap(k * m + j, p * m + j);
+            }
+        }
+        let pivot = lu[k * n + k];
+        for i in (k + 1)..n {
+            let f = lu[i * n + k] / pivot;
+            if f != 0.0 {
+                lu[i * n + k] = f;
+                for j in (k + 1)..n {
+                    lu[i * n + j] -= f * lu[k * n + j];
+                }
+                for j in 0..m {
+                    x[i * m + j] -= f * x[k * m + j];
+                }
+            } else {
+                lu[i * n + k] = 0.0;
+            }
+        }
+    }
+    // Back substitution.
+    for k in (0..n).rev() {
+        let pivot = lu[k * n + k];
+        for j in 0..m {
+            let mut acc = x[k * m + j];
+            for i in (k + 1)..n {
+                acc -= lu[k * n + i] * x[i * m + j];
+            }
+            x[k * m + j] = acc / pivot;
+        }
+    }
+    Ok(MatF64 { data: x, rows: n, cols: m })
+}
+
+/// Solve `X A = B` in f64 (A: n×n, B: m×n) → X: m×n.
+pub fn solve_xa_b_f64(a: &MatF64, b: &MatF64) -> Result<MatF64, LinalgError> {
+    let at = a.transpose();
+    let bt = b.transpose();
+    Ok(lu_solve_matrix_f64(&at, &bt)?.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul;
+
+    #[test]
+    fn f64_solve_matches_known() {
+        let a = Tensor::randn(&[10, 10], 1.0, 41);
+        let x_true = Tensor::randn(&[10, 4], 1.0, 42);
+        let b = matmul(&a, &x_true);
+        let x = lu_solve_matrix_f64(&MatF64::from_tensor(&a), &MatF64::from_tensor(&b))
+            .unwrap()
+            .to_tensor();
+        assert!(x.max_abs_diff(&x_true) < 1e-4);
+    }
+
+    #[test]
+    fn f64_xa_b() {
+        let a = Tensor::randn(&[6, 6], 1.0, 43);
+        let x_true = Tensor::randn(&[3, 6], 1.0, 44);
+        let b = matmul(&x_true, &a);
+        let x = solve_xa_b_f64(&MatF64::from_tensor(&a), &MatF64::from_tensor(&b))
+            .unwrap()
+            .to_tensor();
+        assert!(x.max_abs_diff(&x_true) < 1e-4);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = Tensor::eye(4);
+        let b = Tensor::randn(&[4, 3], 1.0, 1);
+        let x = lu_solve_matrix(&a, &b).unwrap();
+        assert!(x.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn solve_random_full_rank() {
+        let a = Tensor::randn(&[8, 8], 1.0, 2);
+        let x_true = Tensor::randn(&[8, 5], 1.0, 3);
+        let b = matmul(&a, &x_true);
+        let x = lu_solve_matrix(&a, &b).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-3, "diff {}", x.max_abs_diff(&x_true));
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = Tensor::from_vec(vec![0.0, 1.0, 1.0, 0.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![2.0, 3.0], &[2, 1]);
+        let x = lu_solve_matrix(&a, &b).unwrap();
+        // x = [3, 2]
+        assert!((x.data[0] - 3.0).abs() < 1e-6);
+        assert!((x.data[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 2.0, 4.0], &[2, 2]);
+        assert!(lu_factor(&a).is_err());
+    }
+
+    #[test]
+    fn xa_b_solve() {
+        // X A = B with known X.
+        let a = Tensor::randn(&[6, 6], 1.0, 4);
+        let x_true = Tensor::randn(&[3, 6], 1.0, 5);
+        let b = matmul(&x_true, &a);
+        let x = solve_xa_b(&a, &b).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-3);
+    }
+
+    #[test]
+    fn min_pivot_reported() {
+        let a = Tensor::randn(&[5, 5], 1.0, 6);
+        let lu = lu_factor(&a).unwrap();
+        assert!(lu.min_pivot > 0.0 && lu.min_pivot.is_finite());
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a = Tensor::zeros(&[3, 4]);
+        assert!(lu_factor(&a).is_err());
+    }
+}

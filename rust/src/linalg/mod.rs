@@ -1,0 +1,11 @@
+//! Dense linear algebra substrate: LU solve (the BD coefficient solve),
+//! QR with column pivoting (the PIFA-style baseline), and one-sided Jacobi
+//! SVD (low-rank pruning for Table 3).
+
+pub mod lu;
+pub mod qr;
+pub mod svd;
+
+pub use lu::{lu_factor, lu_solve_matrix, solve_xa_b, Lu};
+pub use qr::qr_column_pivoting;
+pub use svd::{svd, truncated_svd, Svd};

@@ -1,0 +1,173 @@
+//! Householder QR with column pivoting (Businger & Golub 1971).
+//!
+//! This powers the *PIFA-style attention* baseline (§4.1 of the paper):
+//! PIFA selects basis rows via QR with column pivoting, which yields a
+//! *different, non-contiguous* pivot set per head — the source of its
+//! scattered memory traffic that BDA's contiguous first/last-r basis avoids.
+
+use crate::tensor::Tensor;
+
+/// Result of QR with column pivoting on A (m×n): the pivot order and the
+/// R factor. `pivots[j]` is the original column index chosen at step j,
+/// ordered by decreasing residual column norm.
+#[derive(Clone, Debug)]
+pub struct PivotedQr {
+    /// Column pivot order (length n).
+    pub pivots: Vec<usize>,
+    /// R factor (min(m,n) × n), in pivoted column order.
+    pub r: Tensor,
+    /// Diagonal magnitudes of R — numerical-rank signal.
+    pub r_diag: Vec<f64>,
+}
+
+/// QR with column pivoting via Householder reflections. Returns pivots in
+/// selection order. O(mn·min(m,n)).
+pub fn qr_column_pivoting(a: &Tensor) -> PivotedQr {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let steps = m.min(n);
+    let mut work = a.clone(); // gets overwritten with R above the diagonal
+    let mut pivots: Vec<usize> = (0..n).collect();
+
+    // Running squared column norms (updated, recomputed on cancellation).
+    let mut norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| (work.at(i, j) as f64).powi(2)).sum())
+        .collect();
+    let mut r_diag = Vec::with_capacity(steps);
+
+    for k in 0..steps {
+        // Pivot: column with max residual norm among k..n.
+        let (pj, _) = norms[k..]
+            .iter()
+            .enumerate()
+            .fold((0usize, -1.0f64), |(bj, bv), (j, &v)| if v > bv { (j, v) } else { (bj, bv) });
+        let pj = pj + k;
+        if pj != k {
+            for i in 0..m {
+                let tmp = work.at(i, k);
+                *work.at_mut(i, k) = work.at(i, pj);
+                *work.at_mut(i, pj) = tmp;
+            }
+            norms.swap(k, pj);
+            pivots.swap(k, pj);
+        }
+
+        // Householder vector for column k, rows k..m.
+        let alpha: f64 = (k..m).map(|i| (work.at(i, k) as f64).powi(2)).sum::<f64>().sqrt();
+        r_diag.push(alpha);
+        if alpha == 0.0 {
+            continue; // exactly rank-deficient here; remaining cols are 0 too
+        }
+        let x0 = work.at(k, k) as f64;
+        let sign = if x0 >= 0.0 { 1.0 } else { -1.0 };
+        let mut v: Vec<f64> = (k..m).map(|i| work.at(i, k) as f64).collect();
+        v[0] += sign * alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v v^T / (v^T v) to columns k..n.
+            for j in k..n {
+                let dot: f64 =
+                    (k..m).map(|i| v[i - k] * work.at(i, j) as f64).sum::<f64>();
+                let scale = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    *work.at_mut(i, j) -= (scale * v[i - k]) as f32;
+                }
+            }
+        }
+        // R(k,k) = -sign*alpha by construction; force exact value.
+        *work.at_mut(k, k) = (-sign * alpha) as f32;
+
+        // Downdate column norms, with recompute on heavy cancellation.
+        for j in (k + 1)..n {
+            let rkj = work.at(k, j) as f64;
+            let updated = norms[j] - rkj * rkj;
+            norms[j] = if updated < 1e-10 * norms[j].max(1e-300) || updated < 0.0 {
+                ((k + 1)..m).map(|i| (work.at(i, j) as f64).powi(2)).sum()
+            } else {
+                updated
+            };
+        }
+    }
+
+    // Extract R (upper trapezoid of work).
+    let mut r = Tensor::zeros(&[steps, n]);
+    for i in 0..steps {
+        for j in i..n {
+            *r.at_mut(i, j) = work.at(i, j);
+        }
+    }
+    PivotedQr { pivots, r, r_diag }
+}
+
+/// The first `r` pivot indices — PIFA's basis-row selection when applied to
+/// W^T (rows of W = columns of W^T).
+pub fn pivot_rows(a_t: &Tensor, r: usize) -> Vec<usize> {
+    let qr = qr_column_pivoting(a_t);
+    qr.pivots[..r.min(qr.pivots.len())].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul;
+
+    #[test]
+    fn pivots_are_permutation() {
+        let a = Tensor::randn(&[6, 8], 1.0, 1);
+        let qr = qr_column_pivoting(&a);
+        let mut p = qr.pivots.clone();
+        p.sort();
+        assert_eq!(p, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn r_diag_nonincreasing_for_random() {
+        let a = Tensor::randn(&[10, 10], 1.0, 2);
+        let qr = qr_column_pivoting(&a);
+        for w in qr.r_diag.windows(2) {
+            // Column-pivoted QR guarantees non-increasing |R_kk| (within fp slack).
+            assert!(w[1] <= w[0] * 1.0 + 1e-6, "{:?}", qr.r_diag);
+        }
+    }
+
+    #[test]
+    fn detects_numerical_rank() {
+        // Build a rank-3 10x10 matrix.
+        let u = Tensor::randn(&[10, 3], 1.0, 3);
+        let v = Tensor::randn(&[3, 10], 1.0, 4);
+        let a = matmul(&u, &v);
+        let qr = qr_column_pivoting(&a);
+        assert!(qr.r_diag[2] > 1e-3);
+        assert!(qr.r_diag[3] < 1e-3 * qr.r_diag[0], "{:?}", qr.r_diag);
+    }
+
+    #[test]
+    fn first_pivot_is_largest_column() {
+        let mut a = Tensor::randn(&[5, 5], 0.1, 5);
+        // Make column 3 dominant.
+        for i in 0..5 {
+            *a.at_mut(i, 3) = 10.0 + i as f32;
+        }
+        let qr = qr_column_pivoting(&a);
+        assert_eq!(qr.pivots[0], 3);
+    }
+
+    #[test]
+    fn pivot_rows_selects_r() {
+        let a = Tensor::randn(&[6, 4], 1.0, 6);
+        let rows = pivot_rows(&a.transpose(), 3);
+        assert_eq!(rows.len(), 3);
+        let mut sorted = rows.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3);
+        assert!(sorted.iter().all(|&r| r < 6));
+    }
+
+    #[test]
+    fn zero_matrix_is_rank_zero() {
+        let a = Tensor::zeros(&[4, 4]);
+        let qr = qr_column_pivoting(&a);
+        assert!(qr.r_diag.iter().all(|&d| d == 0.0));
+    }
+}

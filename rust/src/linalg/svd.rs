@@ -1,0 +1,212 @@
+//! One-sided Jacobi SVD.
+//!
+//! Used by `model::lowrank` to build the low-rank-pruned baselines of
+//! Table 3 (and the structured-pruning reference of Fig. 2a uses singular
+//! values for sanity checks). One-sided Jacobi is simple, accurate, and
+//! fast enough for the projection-sized matrices we factor offline.
+
+use crate::tensor::Tensor;
+
+/// Thin SVD: A (m×n, m ≥ n after internal transpose handling) = U Σ V^T,
+/// with U m×n, Σ length n (descending), V n×n.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+/// Compute the thin SVD of a 2-D tensor via one-sided Jacobi rotations.
+pub fn svd(a: &Tensor) -> Svd {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    if m < n {
+        // SVD(A^T) = V Σ U^T
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+
+    // Work on columns of G = A (m×n); one-sided Jacobi orthogonalizes G's
+    // columns: G -> U Σ, accumulating rotations into V.
+    let mut g: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let col = |g: &Vec<f64>, j: usize, i: usize| g[i * n + j];
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let gp = col(&g, p, i);
+                    let gq = col(&g, q, i);
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let gp = g[i * n + p];
+                    let gq = g[i * n + q];
+                    g[i * n + p] = c * gp - s * gq;
+                    g[i * n + q] = s * gp + c * gq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of G; U = G normalized.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma = vec![0.0f64; n];
+    for j in 0..n {
+        sigma[j] = (0..m).map(|i| g[i * n + j] * g[i * n + j]).sum::<f64>().sqrt();
+    }
+    order.sort_by(|&a, &b| sigma[b].partial_cmp(&sigma[a]).unwrap());
+
+    let mut u = Tensor::zeros(&[m, n]);
+    let mut vt = Tensor::zeros(&[n, n]);
+    let mut s = vec![0.0f32; n];
+    for (jj, &j) in order.iter().enumerate() {
+        s[jj] = sigma[j] as f32;
+        let inv = if sigma[j] > 0.0 { 1.0 / sigma[j] } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, jj) = (g[i * n + j] * inv) as f32;
+        }
+        for i in 0..n {
+            *vt.at_mut(i, jj) = v[i * n + j] as f32;
+        }
+    }
+    Svd { u, s, v: vt }
+}
+
+/// Rank-r truncation: returns (U_r Σ_r, V_r) so that A ≈ (UΣ) V^T — the
+/// low-rank factors a pruning method would store.
+pub fn truncated_svd(a: &Tensor, r: usize) -> (Tensor, Tensor) {
+    let d = svd(a);
+    let n = d.s.len();
+    let r = r.min(n);
+    let m = d.u.shape[0];
+    let mut us = Tensor::zeros(&[m, r]);
+    for i in 0..m {
+        for j in 0..r {
+            *us.at_mut(i, j) = d.u.at(i, j) * d.s[j];
+        }
+    }
+    let nv = d.v.shape[0];
+    let mut vr = Tensor::zeros(&[nv, r]);
+    for i in 0..nv {
+        for j in 0..r {
+            *vr.at_mut(i, j) = d.v.at(i, j);
+        }
+    }
+    (us, vr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul;
+
+    fn reconstruct(d: &Svd) -> Tensor {
+        let (m, n) = (d.u.shape[0], d.s.len());
+        let mut us = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                *us.at_mut(i, j) = d.u.at(i, j) * d.s[j];
+            }
+        }
+        matmul(&us, &d.v.transpose())
+    }
+
+    #[test]
+    fn reconstructs_random() {
+        let a = Tensor::randn(&[8, 5], 1.0, 1);
+        let d = svd(&a);
+        let r = reconstruct(&d);
+        assert!(r.max_abs_diff(&a) < 1e-4, "diff {}", r.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn wide_matrix() {
+        let a = Tensor::randn(&[4, 9], 1.0, 2);
+        let d = svd(&a);
+        let r = reconstruct(&d);
+        assert!(r.max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let a = Tensor::randn(&[10, 6], 1.0, 3);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let a = Tensor::randn(&[7, 4], 1.0, 4);
+        let d = svd(&a);
+        let utu = matmul(&d.u.transpose(), &d.u);
+        let vtv = matmul(&d.v.transpose(), &d.v);
+        assert!(utu.max_abs_diff(&Tensor::eye(4)) < 1e-4);
+        assert!(vtv.max_abs_diff(&Tensor::eye(4)) < 1e-4);
+    }
+
+    #[test]
+    fn rank_deficient_exact() {
+        let u = Tensor::randn(&[8, 2], 1.0, 5);
+        let vt = Tensor::randn(&[2, 6], 1.0, 6);
+        let a = matmul(&u, &vt);
+        let d = svd(&a);
+        assert!(d.s[1] > 1e-3);
+        assert!(d.s[2] < 1e-4 * d.s[0]);
+    }
+
+    #[test]
+    fn truncated_is_best_rank_r() {
+        // Truncating a rank-2 matrix at r=2 is exact.
+        let u = Tensor::randn(&[6, 2], 1.0, 7);
+        let vt = Tensor::randn(&[2, 5], 1.0, 8);
+        let a = matmul(&u, &vt);
+        let (us, v) = truncated_svd(&a, 2);
+        let r = matmul(&us, &v.transpose());
+        assert!(r.max_abs_diff(&a) < 1e-4);
+        assert_eq!(us.shape, vec![6, 2]);
+        assert_eq!(v.shape, vec![5, 2]);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Tensor::from_vec(vec![3.0, 0.0, 0.0, 2.0], &[2, 2]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+    }
+}

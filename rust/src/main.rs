@@ -1,0 +1,327 @@
+//! `bda` — CLI for the BD Attention reproduction.
+//!
+//! Subcommands:
+//!   info                          cost model + environment summary
+//!   prepare    [--model M]        Algorithm 3 over a model, report stats
+//!   exactness  [--model M]        BDA vs MHA output diff across dtypes
+//!   serve      [--attention A]    run the serving coordinator on a trace
+//!   eval-ppl   [--model M]        Fig. 2a-style PPL table (fp32/16/bf16)
+//!   recon      [--model M]        Table 4-style reconstruction errors
+//!   train      [--steps N]        drive the AOT train_step from Rust
+//!   runtime-check                 execute artifacts & verify test vector
+
+use bda::attention::AttnShape;
+use bda::bd::{cost, Strategy};
+use bda::coordinator::{self, NativeBackend, ServerConfig};
+use bda::eval::{perplexity, trace};
+use bda::model::{ModelConfig, Transformer};
+use bda::prepare::prepare_model;
+use bda::tensor::DType;
+use bda::util::cli::Args;
+use bda::util::timer::Timer;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let code = match cmd {
+        "info" => cmd_info(&args),
+        "prepare" => cmd_prepare(&args),
+        "exactness" => cmd_exactness(&args),
+        "serve" => cmd_serve(&args),
+        "eval-ppl" => cmd_eval_ppl(&args),
+        "recon" => cmd_recon(&args),
+        "train" => cmd_train(&args),
+        "runtime-check" => cmd_runtime_check(&args),
+        other => {
+            eprintln!("unknown command: {other}");
+            eprintln!("commands: info prepare exactness serve eval-ppl recon train runtime-check");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn model_from_args(args: &Args) -> Transformer {
+    let name = args.get_or("model", "tiny");
+    let config = ModelConfig::preset(name).unwrap_or_else(|| {
+        eprintln!("unknown model preset {name}, using tiny");
+        ModelConfig::tiny()
+    });
+    Transformer::new_mha(config, args.get_u64("seed", 42))
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    let s = AttnShape::deepseek_v3();
+    println!("BD Attention (BDA) — reproduction of Zhao (2025)");
+    println!("DeepSeek-V3 KV operator shape: d={} d_h={} n_heads={}", s.d, s.d_h, s.n_heads);
+    println!(
+        "  theoretical k_proj speedup: {:.3}x (paper: 1.33x)",
+        cost::kproj_theoretical_speedup(s.d, s.d_h)
+    );
+    println!(
+        "  K/V weight reduction:       {:.1}% (paper: 25%)",
+        100.0 * cost::kv_weight_reduction(s.d, s.d_h)
+    );
+    let c = cost::BdCost::new(512, 512, 128);
+    println!(
+        "  512x512 rank-128 product: dense={} lowrank={} bd={} params",
+        c.dense_params(),
+        c.lowrank_params(),
+        c.bd_params()
+    );
+    println!("threads: {}", bda::util::threadpool::num_threads());
+    for preset in ["tiny", "deepseek-lite-sim", "llama-sim", "llama-sim-l"] {
+        let m = ModelConfig::preset(preset).unwrap();
+        println!("model {preset}: {} params", m.param_count());
+    }
+    0
+}
+
+fn cmd_prepare(args: &Args) -> i32 {
+    let model = model_from_args(args);
+    let strategy = if args.get_or("strategy", "residual-min") == "first-r" {
+        Strategy::FirstR
+    } else {
+        Strategy::ResidualMin
+    };
+    let dtype = DType::parse(args.get_or("dtype", "fp32")).unwrap_or(DType::F32);
+    println!(
+        "preparing {} ({} params) as BDA [{} / {}]...",
+        model.config.name,
+        model.param_count(),
+        strategy.name(),
+        dtype
+    );
+    match prepare_model(&model, strategy, dtype) {
+        Ok(rep) => {
+            println!("preparation time: {:.3}s", rep.seconds);
+            println!("QK: mse={:.3e} nmse={:.3e}", rep.qk_mse(), rep.qk_nmse());
+            println!("VO: mse={:.3e} nmse={:.3e}", rep.vo_mse(), rep.vo_nmse());
+            println!(
+                "params: {} -> {} ({:.1}% smaller)",
+                model.param_count(),
+                rep.model.param_count(),
+                100.0 * (1.0 - rep.model.param_count() as f64 / model.param_count() as f64)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("preparation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_exactness(args: &Args) -> i32 {
+    let model = model_from_args(args);
+    let tokens: Vec<u32> =
+        (0..32).map(|i| (i * 37 + 11) % model.config.vocab_size as u32).collect();
+    let base = model.forward_full(&tokens);
+    println!("BDA vs MHA logits diff on {} ({} tokens):", model.config.name, tokens.len());
+    for dt in [DType::F32, DType::F16, DType::BF16] {
+        for strat in [Strategy::FirstR, Strategy::ResidualMin] {
+            let bda = model.to_bda(strat, dt).unwrap();
+            let out = bda.forward_full(&tokens);
+            let rel = (out.max_abs_diff(&base) as f64) / base.fro_norm().max(1e-12);
+            println!("  {:>5} {:>13}: rel max diff {rel:.3e}", dt.name(), strat.name());
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let model = model_from_args(args);
+    let attention = args.get_or("attention", "bda");
+    let model = if attention == "bda" {
+        model.to_bda(Strategy::ResidualMin, DType::F32).expect("prepare")
+    } else {
+        model
+    };
+    let n = args.get_usize("requests", 32);
+    let cfg = ServerConfig::default();
+    let t = trace::generate(trace::TraceConfig {
+        n_requests: n,
+        vocab_size: model.config.vocab_size,
+        ..Default::default()
+    });
+    println!("serving {n} requests on {} [{attention}]...", model.config.name);
+    let timer = Timer::start();
+    let (responses, metrics) =
+        coordinator::server::replay_trace(NativeBackend::new(model), cfg, t).expect("serve");
+    let secs = timer.elapsed_secs();
+    println!("{}", metrics.snapshot().report());
+    println!("wall: {secs:.2}s, completed {}", responses.len());
+    0
+}
+
+fn cmd_eval_ppl(args: &Args) -> i32 {
+    let model = model_from_args(args);
+    let corpus = bda::eval::corpus::Corpus::tiny_wiki(
+        model.config.vocab_size,
+        args.get_usize("tokens", 2048),
+        7,
+    );
+    let seq = model.config.max_seq_len.min(128);
+    let base = perplexity(&model, &corpus.tokens, seq);
+    println!("{}: base PPL {base:.4}", model.config.name);
+    let mut table = bda::bench_support::Table::new(
+        "Fig 2a / Table 5 — PPL increase after BDA replacement",
+        &["dtype", "strategy", "PPL", "increase %"],
+    );
+    for dt in [DType::F32, DType::F16, DType::BF16] {
+        for strat in [Strategy::FirstR, Strategy::ResidualMin] {
+            let bda = model.to_bda(strat, dt).unwrap();
+            let p = perplexity(&bda, &corpus.tokens, seq);
+            table.row(vec![
+                dt.name().into(),
+                strat.name().into(),
+                format!("{p:.4}"),
+                format!("{:.4}%", bda::eval::ppl::ppl_increase_percent(base, p)),
+            ]);
+        }
+    }
+    table.print();
+    0
+}
+
+fn cmd_recon(args: &Args) -> i32 {
+    let model = model_from_args(args);
+    let mut table = bda::bench_support::Table::new(
+        "Table 4 — BD reconstruction errors",
+        &["projection", "metric", "strategy", "fp32", "fp16", "bf16"],
+    );
+    let mut cells: std::collections::BTreeMap<(String, String, String), String> =
+        Default::default();
+    for dt in [DType::F32, DType::F16, DType::BF16] {
+        for strat in [Strategy::FirstR, Strategy::ResidualMin] {
+            let rep = prepare_model(&model, strat, dt).unwrap();
+            for (proj, mse, nmse) in
+                [("QK", rep.qk_mse(), rep.qk_nmse()), ("VO", rep.vo_mse(), rep.vo_nmse())]
+            {
+                cells.insert(
+                    (proj.into(), "MSE".into(), format!("{}{}", strat.name(), dt.name())),
+                    format!("{mse:.2e}"),
+                );
+                cells.insert(
+                    (proj.into(), "NMSE".into(), format!("{}{}", strat.name(), dt.name())),
+                    format!("{nmse:.2e}"),
+                );
+            }
+        }
+    }
+    for proj in ["QK", "VO"] {
+        for metric in ["MSE", "NMSE"] {
+            for strat in ["First-r", "Residual-min"] {
+                let cell = |dt: &str| {
+                    cells
+                        .get(&(proj.into(), metric.into(), format!("{strat}{dt}")))
+                        .cloned()
+                        .unwrap_or_default()
+                };
+                table.row(vec![
+                    proj.into(),
+                    metric.into(),
+                    strat.into(),
+                    cell("fp32"),
+                    cell("fp16"),
+                    cell("bf16"),
+                ]);
+            }
+        }
+    }
+    table.print();
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let steps = args.get_usize("steps", 20);
+    let attention = args.get_or("attention", "mha").to_string();
+    let lr_scale = args.get_f64("lr-scale", 1.0) as f32;
+    match run_train(&attention, steps, lr_scale, args.get_or("artifacts", "artifacts")) {
+        Ok(losses) => {
+            println!(
+                "train[{attention}] first loss {:.4}, last loss {:.4}",
+                losses.first().unwrap_or(&f32::NAN),
+                losses.last().unwrap_or(&f32::NAN)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+/// Drive the AOT train_step artifact for a few steps on synthetic data.
+fn run_train(attention: &str, steps: usize, lr_scale: f32, dir: &str) -> anyhow::Result<Vec<f32>> {
+    use bda::runtime::{lit_i32, lit_scalar_f32, literal_scalar_f32, Runtime};
+    let mut rt = Runtime::open(dir)?;
+    let init = rt.load(&format!("train_init_{attention}"))?;
+    let step = rt.load(&format!("train_step_{attention}"))?;
+    let tc = rt.manifest.train_config.clone().expect("train config");
+    let mut state = init.run(&[])?;
+    let pairs = bda::eval::corpus::translation_pairs(256, tc.vocab_size, 6, 16, 5);
+    let mut losses = Vec::new();
+    for i in 0..steps {
+        let mut tokens: Vec<i32> = Vec::with_capacity(tc.batch * (tc.max_seq_len + 1));
+        for b in 0..tc.batch {
+            let p = &pairs[(i * tc.batch + b) % pairs.len()];
+            tokens.extend(p.pack(tc.max_seq_len + 1).iter().map(|&t| t as i32));
+        }
+        let mut inputs: Vec<xla::Literal> = state;
+        inputs.push(lit_i32(&tokens, &[tc.batch as i64, (tc.max_seq_len + 1) as i64])?);
+        inputs.push(lit_scalar_f32(lr_scale));
+        let mut out = step.run(&inputs)?;
+        let loss = literal_scalar_f32(&out.pop().unwrap())?;
+        losses.push(loss);
+        state = out;
+        if i % 5 == 0 {
+            println!("  step {i}: loss {loss:.4}");
+        }
+    }
+    Ok(losses)
+}
+
+fn cmd_runtime_check(args: &Args) -> i32 {
+    use bda::runtime::{lit_i32, Runtime};
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut rt = match Runtime::open(dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("open runtime: {e}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let tv = rt.manifest.test_vector.clone().expect("test vector");
+    let tokens: Vec<i32> = tv.tokens.iter().flatten().copied().collect();
+    let lit = lit_i32(&tokens, &[tv.batch as i64, tv.seq_len as i64]).unwrap();
+    for name in ["lm_mha_fwd_probe", "lm_bda_fwd_probe"] {
+        let t = Timer::start();
+        let exe = match rt.load(name) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("load {name}: {e}");
+                return 1;
+            }
+        };
+        let compile_s = t.elapsed_secs();
+        let out = exe.run(std::slice::from_ref(&lit)).expect("run");
+        let logits: Vec<f32> = out[0].to_vec().expect("logits");
+        let head = &logits[..8];
+        let max_diff: f32 = head
+            .iter()
+            .zip(tv.logits_head.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        println!("{name}: compile {compile_s:.2}s, head diff {max_diff:.3e}");
+        let tolerance = if name.contains("bda") { 2e-2 } else { 1e-4 };
+        if !(max_diff < tolerance) {
+            eprintln!("  MISMATCH vs test vector (tolerance {tolerance})");
+            return 1;
+        }
+    }
+    println!("runtime check OK");
+    0
+}

@@ -1,0 +1,179 @@
+//! Linear-layer representations: dense, low-rank (SVD-pruned, Zhao et al.
+//! 2025 style), and BD form — the three columns of Table 3.
+
+use crate::bd::{BdLinear, Strategy};
+use crate::linalg::svd::truncated_svd;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+
+/// A linear layer `y = x W` in one of three storage forms.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    /// Dense d_in × d_out weight.
+    Dense(Tensor),
+    /// Low-rank factors: U d_in×r, V d_out×r; y = (xU)V^T.
+    LowRank { u: Tensor, v: Tensor },
+    /// BD form (from low-rank): y = [h, hC] with h = xB.
+    Bd(BdLinear),
+}
+
+impl Linear {
+    pub fn dense(w: Tensor) -> Linear {
+        assert_eq!(w.ndim(), 2);
+        Linear::Dense(w)
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            Linear::Dense(w) => matmul(x, w),
+            Linear::LowRank { u, v } => matmul(&matmul(x, u), &v.transpose()),
+            Linear::Bd(l) => l.forward(x),
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.rows(),
+            Linear::LowRank { u, .. } => u.rows(),
+            Linear::Bd(l) => l.d_in,
+        }
+    }
+
+    pub fn d_out(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.cols(),
+            Linear::LowRank { v, .. } => v.rows(),
+            Linear::Bd(l) => l.d_out,
+        }
+    }
+
+    /// Stored parameter count.
+    pub fn param_count(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.numel(),
+            Linear::LowRank { u, v } => u.numel() + v.numel(),
+            Linear::Bd(l) => l.param_count(),
+        }
+    }
+
+    /// FLOPs for a batch of L rows.
+    pub fn flops(&self, l: usize) -> u64 {
+        let (m, n) = (self.d_in() as u64, self.d_out() as u64);
+        match self {
+            Linear::Dense(_) => 2 * l as u64 * m * n,
+            Linear::LowRank { u, .. } => {
+                let r = u.cols() as u64;
+                2 * l as u64 * r * (m + n)
+            }
+            Linear::Bd(bd) => {
+                let r = bd.r as u64;
+                2 * l as u64 * r * (m + n - r)
+            }
+        }
+    }
+
+    /// Prune to low-rank at `density` (fraction of dense parameter count):
+    /// rank r = density·mn/(m+n), the Zhao et al. (2025) setting of Table 3.
+    pub fn to_lowrank(&self, density: f64) -> Linear {
+        let w = self.to_dense();
+        let (m, n) = (w.rows(), w.cols());
+        let r = ((density * (m * n) as f64) / (m + n) as f64).round().max(1.0) as usize;
+        let r = r.min(m.min(n) - 1).max(1);
+        let (us, v) = truncated_svd(&w, r);
+        Linear::LowRank { u: us, v }
+    }
+
+    /// Transform a low-rank layer to BD form (the Table 3 "BD (from
+    /// low-rank)" column). No-op params change for Dense (panics — callers
+    /// must prune first, matching the paper's pipeline).
+    pub fn to_bd(&self, strategy: Strategy) -> Linear {
+        match self {
+            Linear::LowRank { u, v } => {
+                Linear::Bd(BdLinear::from_lowrank(u, v, strategy).expect("bd from lowrank"))
+            }
+            _ => panic!("to_bd requires a low-rank layer (paper pipeline: prune, then BD)"),
+        }
+    }
+
+    /// Materialize the dense weight (for tests / conversions).
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            Linear::Dense(w) => w.clone(),
+            Linear::LowRank { u, v } => matmul(u, &v.transpose()),
+            Linear::Bd(l) => crate::bd::reconstruct_col(l.tag, &l.b, &l.c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_to_lowrank_to_bd_pipeline() {
+        let w = Tensor::randn(&[48, 32], 0.2, 1);
+        let dense = Linear::dense(w);
+        let lr = dense.to_lowrank(0.8);
+        let bd = lr.to_bd(Strategy::ResidualMin);
+        // BD matches its low-rank source exactly.
+        let x = Tensor::randn(&[5, 48], 1.0, 2);
+        let y_lr = lr.forward(&x);
+        let y_bd = bd.forward(&x);
+        assert!(y_bd.max_abs_diff(&y_lr) < 1e-3, "diff {}", y_bd.max_abs_diff(&y_lr));
+        // And params strictly decrease along the pipeline.
+        assert!(lr.param_count() < dense.param_count());
+        assert!(bd.param_count() < lr.param_count());
+    }
+
+    #[test]
+    fn density_controls_params() {
+        let w = Tensor::randn(&[64, 64], 0.2, 3);
+        let dense = Linear::dense(w);
+        let lr80 = dense.to_lowrank(0.8);
+        let lr50 = dense.to_lowrank(0.5);
+        let ratio80 = lr80.param_count() as f64 / dense.param_count() as f64;
+        let ratio50 = lr50.param_count() as f64 / dense.param_count() as f64;
+        assert!((ratio80 - 0.8).abs() < 0.05, "{ratio80}");
+        assert!((ratio50 - 0.5).abs() < 0.05, "{ratio50}");
+    }
+
+    #[test]
+    fn flops_ordering() {
+        let w = Tensor::randn(&[64, 64], 0.2, 4);
+        let dense = Linear::dense(w);
+        let lr = dense.to_lowrank(0.8);
+        let bd = lr.to_bd(Strategy::FirstR);
+        assert!(lr.flops(16) < dense.flops(16));
+        assert!(bd.flops(16) < lr.flops(16));
+    }
+
+    #[test]
+    fn lowrank_is_best_approximation_sanity() {
+        // On an exactly low-rank matrix, pruning at its rank is lossless.
+        let u = Tensor::randn(&[32, 6], 0.3, 5);
+        let v = Tensor::randn(&[24, 6], 0.3, 6);
+        let w = matmul(&u, &v.transpose());
+        let dense = Linear::dense(w.clone());
+        // density for rank 6: 6*(32+24)/(32*24) = 0.4375
+        let lr = dense.to_lowrank(0.4375);
+        let x = Tensor::randn(&[4, 32], 1.0, 7);
+        assert!(lr.forward(&x).max_abs_diff(&dense.forward(&x)) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bd_from_dense_panics() {
+        let dense = Linear::dense(Tensor::randn(&[8, 8], 1.0, 8));
+        let _ = dense.to_bd(Strategy::FirstR);
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let w = Tensor::randn(&[20, 16], 0.3, 9);
+        let dense = Linear::dense(w.clone());
+        let lr = dense.to_lowrank(0.9);
+        let bd = lr.to_bd(Strategy::ResidualMin);
+        // bd.to_dense() must equal lr.to_dense() (BD is lossless on it).
+        assert!(bd.to_dense().max_abs_diff(&lr.to_dense()) < 1e-3);
+    }
+}

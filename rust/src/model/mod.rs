@@ -1,0 +1,11 @@
+//! Model definitions: configs, weights, a pure-Rust decoder-only
+//! transformer (the CPU reference used for PPL evaluation and the Table 3
+//! model-level benches), and low-rank pruning.
+
+pub mod config;
+pub mod lowrank;
+pub mod transformer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use transformer::{Transformer, AttentionImpl};

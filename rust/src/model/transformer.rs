@@ -1,0 +1,510 @@
+//! Pure-Rust decoder-only transformer.
+//!
+//! This is the L3 CPU reference model used for: Fig. 2a / Table 5 PPL
+//! evaluation (MHA vs BDA, per dtype/strategy), the Table 3 dense /
+//! low-rank / BD model-level benches (throughput with and without KV
+//! cache, memory, PPL), and cross-validation against the AOT-compiled JAX
+//! model. Positional information enters at the embedding layer (GPT-style
+//! sinusoidal), which keeps BD fully lossless (Appendix D).
+
+use crate::attention::bda::BdaWeights;
+use crate::attention::mha::MhaWeights;
+use crate::attention::pruning::PrunedAttention;
+use crate::attention::AttnShape;
+use crate::bd::{BdError, Strategy};
+use crate::model::config::ModelConfig;
+use crate::model::lowrank::Linear;
+use crate::tensor::matmul::matmul;
+use crate::tensor::{DType, Tensor};
+
+/// Attention implementation used by a block — the experimental axis of the
+/// paper's evaluation.
+#[derive(Clone, Debug)]
+pub enum AttentionImpl {
+    /// Algorithm 1 (dense MHA).
+    Mha(MhaWeights),
+    /// Algorithm 2 (BD Attention).
+    Bda(BdaWeights),
+    /// Per-projection `Linear` layers (dense / low-rank / BD-from-low-rank:
+    /// the §3.3 path used in Table 3).
+    Projected { q: Linear, k: Linear, v: Linear, o: Linear, shape: AttnShape },
+    /// Structured K/V channel pruning baseline (Fig. 2a dashed line).
+    Pruned(PrunedAttention),
+}
+
+impl AttentionImpl {
+    /// Effective per-head width of K/V (differs for Pruned).
+    pub fn effective_shape(&self) -> AttnShape {
+        match self {
+            AttentionImpl::Mha(w) => w.shape,
+            AttentionImpl::Bda(w) => w.shape,
+            AttentionImpl::Projected { shape, .. } => *shape,
+            AttentionImpl::Pruned(p) => AttnShape::new(p.shape.d, p.shape.n_heads, p.d_h_kept),
+        }
+    }
+
+    /// Q/K/V projections for a whole sequence.
+    pub fn project_qkv(&self, x: &Tensor) -> (Tensor, Tensor, Tensor) {
+        match self {
+            AttentionImpl::Mha(w) => {
+                (matmul(x, &w.wq), matmul(x, &w.wk), matmul(x, &w.wv))
+            }
+            AttentionImpl::Bda(w) => {
+                let q = matmul(x, &w.b_qk);
+                let (k, v) = w.project_kv(x);
+                (q, k, v)
+            }
+            AttentionImpl::Projected { q, k, v, .. } => {
+                (q.forward(x), k.forward(x), v.forward(x))
+            }
+            AttentionImpl::Pruned(p) => {
+                (matmul(x, &p.wq), matmul(x, &p.wk), matmul(x, &p.wv))
+            }
+        }
+    }
+
+    /// Output projection of concatenated head outputs.
+    pub fn output(&self, concat: &Tensor) -> Tensor {
+        match self {
+            AttentionImpl::Mha(w) => matmul(concat, &w.wo),
+            AttentionImpl::Bda(w) => matmul(concat, &w.b_vo),
+            AttentionImpl::Projected { o, .. } => o.forward(concat),
+            AttentionImpl::Pruned(p) => matmul(concat, &p.wo),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            AttentionImpl::Mha(w) => w.param_count(),
+            AttentionImpl::Bda(w) => w.param_count(),
+            AttentionImpl::Projected { q, k, v, o, .. } => {
+                q.param_count() + k.param_count() + v.param_count() + o.param_count()
+            }
+            AttentionImpl::Pruned(p) => {
+                p.wq.numel() + p.wk.numel() + p.wv.numel() + p.wo.numel()
+            }
+        }
+    }
+}
+
+/// One transformer block: pre-norm attention + pre-norm SwiGLU FFN.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub attn: AttentionImpl,
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+    pub w_gate: Linear,
+    pub w_up: Linear,
+    pub w_down: Linear,
+}
+
+impl Block {
+    fn forward(&self, x: &Tensor, causal: bool) -> Tensor {
+        let s = self.attn.effective_shape();
+        let h = x.rmsnorm(&self.norm1, 1e-5);
+        let (q, k, v) = self.attn.project_qkv(&h);
+        let attn_out = attend(&q, &k, &v, s, causal);
+        let y = self.attn.output(&attn_out);
+        let x1 = x.add(&y);
+
+        let h2 = x1.rmsnorm(&self.norm2, 1e-5);
+        let gated = self.w_gate.forward(&h2).silu().mul_elem(&self.w_up.forward(&h2));
+        let ffn = self.w_down.forward(&gated);
+        x1.add(&ffn)
+    }
+
+    fn param_count(&self) -> usize {
+        self.attn.param_count()
+            + self.norm1.len()
+            + self.norm2.len()
+            + self.w_gate.param_count()
+            + self.w_up.param_count()
+            + self.w_down.param_count()
+    }
+}
+
+/// Per-head attention with causal mask over a full sequence.
+fn attend(q: &Tensor, k: &Tensor, v: &Tensor, s: AttnShape, causal: bool) -> Tensor {
+    let scale = 1.0 / (s.d_h as f32).sqrt();
+    let mut outs = Vec::with_capacity(s.n_heads);
+    for i in 0..s.n_heads {
+        let qi = q.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+        let ki = k.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+        let vi = v.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+        let scores = matmul(&qi, &ki.transpose()).scale(scale);
+        let probs = if causal { scores.softmax_rows_causal(0) } else { scores.softmax_rows() };
+        outs.push(matmul(&probs, &vi));
+    }
+    let refs: Vec<&Tensor> = outs.iter().collect();
+    Tensor::concat_cols(&refs)
+}
+
+/// Per-layer KV cache for incremental decoding.
+#[derive(Clone, Debug, Default)]
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    pub width: usize,
+}
+
+/// Whole-model decode cache.
+#[derive(Clone, Debug, Default)]
+pub struct KvCache {
+    pub layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize) -> KvCache {
+        KvCache { layers: vec![LayerKv::default(); n_layers] }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.layers.first().map(|l| l.len).unwrap_or(0)
+    }
+
+    /// Bytes held by the cache at a logical dtype.
+    pub fn bytes(&self, dtype: DType) -> usize {
+        self.layers.iter().map(|l| (l.k.len() + l.v.len()) * dtype.size_bytes()).sum()
+    }
+}
+
+/// Decoder-only transformer with tied embeddings.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub config: ModelConfig,
+    /// vocab × d embedding (tied with the LM head).
+    pub embed: Tensor,
+    pub blocks: Vec<Block>,
+    pub norm_f: Vec<f32>,
+    /// Logical dtype for memory accounting (weights are carried in f32).
+    pub dtype: DType,
+}
+
+impl Transformer {
+    /// Build a dense-MHA model with deterministic init.
+    pub fn new_mha(config: ModelConfig, seed: u64) -> Transformer {
+        let d = config.d_model;
+        let shape = config.attn_shape();
+        let blocks = (0..config.n_layers)
+            .map(|l| {
+                let s = seed + 1000 * (l as u64 + 1);
+                Block {
+                    attn: AttentionImpl::Mha(MhaWeights::random(shape, s)),
+                    norm1: vec![1.0; d],
+                    norm2: vec![1.0; d],
+                    w_gate: Linear::dense(Tensor::randn(&[d, config.d_ff], 0.02, s + 10)),
+                    w_up: Linear::dense(Tensor::randn(&[d, config.d_ff], 0.02, s + 11)),
+                    w_down: Linear::dense(Tensor::randn(&[config.d_ff, d], 0.02, s + 12)),
+                }
+            })
+            .collect();
+        Transformer {
+            embed: Tensor::randn(&[config.vocab_size, d], 0.02, seed),
+            blocks,
+            norm_f: vec![1.0; d],
+            config,
+            dtype: DType::F32,
+        }
+    }
+
+    /// Replace every MHA block with BDA (Algorithm 3 over the whole model).
+    /// Returns per-layer stats via the weights. Fails if any basis is
+    /// exactly singular (probability 0 per Theorem 3.1).
+    pub fn to_bda(&self, strategy: Strategy, dtype: DType) -> Result<Transformer, BdError> {
+        let mut out = self.clone();
+        for b in out.blocks.iter_mut() {
+            if let AttentionImpl::Mha(w) = &b.attn {
+                b.attn = AttentionImpl::Bda(BdaWeights::prepare(w, strategy, dtype)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Convert all linear layers (attention projections + FFN) to low-rank
+    /// at the given density — the Table 3 "Low rank 80%" model.
+    pub fn to_lowrank(&self, density: f64) -> Transformer {
+        let mut out = self.clone();
+        for b in out.blocks.iter_mut() {
+            // Attention becomes per-projection low-rank.
+            if let AttentionImpl::Mha(w) = &b.attn {
+                b.attn = AttentionImpl::Projected {
+                    q: Linear::dense(w.wq.clone()).to_lowrank(density),
+                    k: Linear::dense(w.wk.clone()).to_lowrank(density),
+                    v: Linear::dense(w.wv.clone()).to_lowrank(density),
+                    o: Linear::dense(w.wo.clone()).to_lowrank(density),
+                    shape: w.shape,
+                };
+            }
+            b.w_gate = b.w_gate.to_lowrank(density);
+            b.w_up = b.w_up.to_lowrank(density);
+            b.w_down = b.w_down.to_lowrank(density);
+        }
+        out
+    }
+
+    /// Transform a low-rank model's layers to BD form — the Table 3
+    /// "BD (from low-rank)" model. Lossless w.r.t. the low-rank model.
+    pub fn to_bd_from_lowrank(&self, strategy: Strategy) -> Transformer {
+        let mut out = self.clone();
+        for b in out.blocks.iter_mut() {
+            if let AttentionImpl::Projected { q, k, v, o, shape } = &b.attn {
+                b.attn = AttentionImpl::Projected {
+                    q: q.to_bd(strategy),
+                    k: k.to_bd(strategy),
+                    v: v.to_bd(strategy),
+                    o: o.to_bd(strategy),
+                    shape: *shape,
+                };
+            }
+            b.w_gate = b.w_gate.to_bd(strategy);
+            b.w_up = b.w_up.to_bd(strategy);
+            b.w_down = b.w_down.to_bd(strategy);
+        }
+        out
+    }
+
+    /// Structured K/V pruning baseline at `frac` (Fig. 2a dashed line).
+    pub fn to_pruned(&self, frac: f64) -> Transformer {
+        let mut out = self.clone();
+        for b in out.blocks.iter_mut() {
+            if let AttentionImpl::Mha(w) = &b.attn {
+                b.attn = AttentionImpl::Pruned(PrunedAttention::from_mha(w, frac));
+            }
+        }
+        out
+    }
+
+    /// Sinusoidal positional encoding row (GPT-style, embedding-level).
+    fn pos_row(&self, pos: usize, out: &mut [f32]) {
+        let d = self.config.d_model;
+        for k in 0..d / 2 {
+            let theta = pos as f32 / 10000f32.powf(2.0 * k as f32 / d as f32);
+            out[2 * k] += theta.sin();
+            out[2 * k + 1] += theta.cos();
+        }
+    }
+
+    /// Token embedding + positional encoding for positions
+    /// [pos0, pos0+len).
+    fn embed_tokens(&self, tokens: &[u32], pos0: usize) -> Tensor {
+        let d = self.config.d_model;
+        let mut x = Tensor::zeros(&[tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize % self.config.vocab_size;
+            x.row_mut(i).copy_from_slice(self.embed.row(t));
+            let row = x.row_mut(i);
+            self.pos_row(pos0 + i, row);
+        }
+        x
+    }
+
+    /// Full-sequence causal forward: logits (L × vocab).
+    pub fn forward_full(&self, tokens: &[u32]) -> Tensor {
+        let mut x = self.embed_tokens(tokens, 0);
+        for b in &self.blocks {
+            x = b.forward(&x, true);
+        }
+        let h = x.rmsnorm(&self.norm_f, 1e-5);
+        matmul(&h, &self.embed.transpose())
+    }
+
+    /// Prefill the KV cache with a prompt and return logits for the last
+    /// position (1 × vocab).
+    pub fn prefill(&self, cache: &mut KvCache, tokens: &[u32]) -> Tensor {
+        assert_eq!(cache.layers.len(), self.blocks.len());
+        let mut x = self.embed_tokens(tokens, cache.seq_len());
+        for (li, b) in self.blocks.iter().enumerate() {
+            let s = b.attn.effective_shape();
+            let h = x.rmsnorm(&b.norm1, 1e-5);
+            let (q, k, v) = b.attn.project_qkv(&h);
+            let layer = &mut cache.layers[li];
+            layer.width = s.proj_width();
+            let prior = layer.len;
+            layer.k.extend_from_slice(&k.data);
+            layer.v.extend_from_slice(&v.data);
+            layer.len += tokens.len();
+            let attn_out = attend_cached(&q, layer, s, prior);
+            let y = b.attn.output(&attn_out);
+            let x1 = x.add(&y);
+            let h2 = x1.rmsnorm(&b.norm2, 1e-5);
+            let gated = b.w_gate.forward(&h2).silu().mul_elem(&b.w_up.forward(&h2));
+            x = x1.add(&b.w_down.forward(&gated));
+        }
+        let h = x.slice_rows(x.rows() - 1, x.rows()).rmsnorm(&self.norm_f, 1e-5);
+        matmul(&h, &self.embed.transpose())
+    }
+
+    /// Decode one token with the cache; returns logits (1 × vocab).
+    pub fn decode_step(&self, cache: &mut KvCache, token: u32) -> Tensor {
+        self.prefill(cache, &[token])
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.embed.numel()
+            + self.norm_f.len()
+            + self.blocks.iter().map(|b| b.param_count()).sum::<usize>()
+    }
+
+    /// Logical weight memory at the model's dtype (Table 3 "Memory").
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * self.dtype.size_bytes()
+    }
+}
+
+/// Attention over cached K/V for `q` rows at positions
+/// [prior, prior + q.rows()).
+fn attend_cached(q: &Tensor, layer: &LayerKv, s: AttnShape, prior: usize) -> Tensor {
+    let l_q = q.rows();
+    let l_kv = layer.len;
+    let width = s.proj_width();
+    let scale = 1.0 / (s.d_h as f32).sqrt();
+    let mut out = Tensor::zeros(&[l_q, width]);
+    for h in 0..s.n_heads {
+        let off = h * s.d_h;
+        for i in 0..l_q {
+            let visible = (prior + i + 1).min(l_kv);
+            // scores over visible cache rows
+            let mut scores = vec![0.0f32; visible];
+            let qrow = &q.data[i * width + off..i * width + off + s.d_h];
+            for t in 0..visible {
+                let krow = &layer.k[t * width + off..t * width + off + s.d_h];
+                scores[t] = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in scores.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            let orow = &mut out.data[i * width + off..i * width + off + s.d_h];
+            for t in 0..visible {
+                let w = scores[t] * inv;
+                let vrow = &layer.v[t * width + off..t * width + off + s.d_h];
+                for (o, vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Transformer {
+        Transformer::new_mha(ModelConfig::tiny(), 42)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny();
+        let logits = m.forward_full(&[1, 2, 3, 4]);
+        assert_eq!(logits.shape, vec![4, m.config.vocab_size]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bda_model_matches_mha_model() {
+        // The headline claim at model level: identical logits (fp32 prep).
+        let m = tiny();
+        let bda = m.to_bda(Strategy::ResidualMin, DType::F32).unwrap();
+        let toks = [5u32, 9, 17, 3, 250, 8];
+        let a = m.forward_full(&toks);
+        let b = bda.forward_full(&toks);
+        let rel = (b.max_abs_diff(&a) as f64) / a.fro_norm().max(1e-9);
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn bda_reduces_params() {
+        let m = tiny();
+        let bda = m.to_bda(Strategy::FirstR, DType::F32).unwrap();
+        assert!(bda.param_count() < m.param_count());
+        // Reduction equals 2·(d_h/d) of the K+V projections.
+        let s = m.config.attn_shape();
+        let per_layer_saving = 2 * s.d_h * s.proj_width();
+        assert_eq!(m.param_count() - bda.param_count(), m.config.n_layers * per_layer_saving);
+    }
+
+    #[test]
+    fn lowrank_then_bd_preserves_lowrank_outputs() {
+        let m = tiny();
+        let lr = m.to_lowrank(0.8);
+        let bd = lr.to_bd_from_lowrank(Strategy::ResidualMin);
+        let toks = [1u32, 2, 3, 4, 5];
+        let a = lr.forward_full(&toks);
+        let b = bd.forward_full(&toks);
+        let rel = (b.max_abs_diff(&a) as f64) / a.fro_norm().max(1e-9);
+        assert!(rel < 1e-3, "rel {rel}");
+        assert!(bd.param_count() < lr.param_count());
+        assert!(lr.param_count() < m.param_count());
+    }
+
+    #[test]
+    fn lowrank_is_lossy_vs_dense() {
+        let m = tiny();
+        let lr = m.to_lowrank(0.8);
+        let toks = [1u32, 2, 3, 4];
+        let a = m.forward_full(&toks);
+        let b = lr.forward_full(&toks);
+        assert!(b.max_abs_diff(&a) > 1e-5);
+    }
+
+    #[test]
+    fn pruned_model_runs_and_shrinks() {
+        let m = tiny();
+        let p = m.to_pruned(0.25);
+        assert!(p.param_count() < m.param_count());
+        let logits = p.forward_full(&[1, 2, 3]);
+        assert_eq!(logits.shape, vec![3, m.config.vocab_size]);
+    }
+
+    #[test]
+    fn cached_decode_matches_full_forward() {
+        let m = tiny();
+        let toks = [7u32, 23, 5, 91, 14];
+        let full = m.forward_full(&toks);
+        // Prefill 3, decode 2 — the last-row logits must match.
+        let mut cache = KvCache::new(m.config.n_layers);
+        let _ = m.prefill(&mut cache, &toks[..3]);
+        let _ = m.decode_step(&mut cache, toks[3]);
+        let logits = m.decode_step(&mut cache, toks[4]);
+        let expect = full.slice_rows(4, 5);
+        assert!(
+            logits.max_abs_diff(&expect) < 1e-3,
+            "diff {}",
+            logits.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn bda_cached_decode_matches_mha() {
+        let m = tiny();
+        let bda = m.to_bda(Strategy::ResidualMin, DType::F32).unwrap();
+        let toks = [3u32, 200, 41, 7];
+        let mut c1 = KvCache::new(m.config.n_layers);
+        let mut c2 = KvCache::new(m.config.n_layers);
+        let _ = m.prefill(&mut c1, &toks[..3]);
+        let _ = bda.prefill(&mut c2, &toks[..3]);
+        let a = m.decode_step(&mut c1, toks[3]);
+        let b = bda.decode_step(&mut c2, toks[3]);
+        let rel = (b.max_abs_diff(&a) as f64) / a.fro_norm().max(1e-9);
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn cache_grows() {
+        let m = tiny();
+        let mut cache = KvCache::new(m.config.n_layers);
+        assert_eq!(cache.seq_len(), 0);
+        let _ = m.prefill(&mut cache, &[1, 2, 3]);
+        assert_eq!(cache.seq_len(), 3);
+        let _ = m.decode_step(&mut cache, 4);
+        assert_eq!(cache.seq_len(), 4);
+        assert!(cache.bytes(DType::F16) > 0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Binary weight serialization for the pure-Rust transformer.
+//!
+//! Format: magic + JSON header (config + tensor index) + raw little-endian
+//! f32 payloads. Lets prepared (BDA/low-rank/BD) models be deployed
+//! without re-running preparation — the "4s offline prep, then ship"
+//! workflow of the paper.
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"BDAW0001";
+
+/// A named collection of tensors + the model config (enough to rebuild the
+/// dense-MHA transformer; converted forms are re-derived deterministically
+/// from strategy + dtype, which is cheap).
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut index = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            index.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("shape", Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)))),
+                ("offset", Json::num(offset as f64)),
+            ]));
+            offset += t.numel() * 4;
+        }
+        let header = Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("tensors", Json::Arr(index)),
+        ])
+        .to_string();
+
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in &self.tensors {
+            // Little-endian f32 payload.
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {}", path.display());
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let config = ModelConfig::from_json(&header.get("config"))
+            .ok_or_else(|| anyhow!("bad config in header"))?;
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+
+        let mut tensors = Vec::new();
+        for entry in header.get("tensors").as_arr().unwrap_or(&[]) {
+            let name = entry.get("name").as_str().unwrap_or_default().to_string();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
+            let offset = entry.get("offset").as_usize().unwrap_or(0);
+            let numel: usize = shape.iter().product();
+            let end = offset + numel * 4;
+            if end > rest.len() {
+                bail!("tensor {name} out of bounds ({end} > {})", rest.len());
+            }
+            let data: Vec<f32> = rest[offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push((name, Tensor::from_vec(data, &shape)));
+        }
+        Ok(Checkpoint { config, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+/// Export a dense-MHA transformer's weights.
+pub fn export_mha(model: &crate::model::Transformer) -> Result<Checkpoint> {
+    let mut tensors = vec![("embed".to_string(), model.embed.clone())];
+    for (i, b) in model.blocks.iter().enumerate() {
+        let crate::model::AttentionImpl::Mha(w) = &b.attn else {
+            bail!("export_mha requires a dense-MHA model (block {i} is converted)");
+        };
+        tensors.push((format!("blocks.{i}.wq"), w.wq.clone()));
+        tensors.push((format!("blocks.{i}.wk"), w.wk.clone()));
+        tensors.push((format!("blocks.{i}.wv"), w.wv.clone()));
+        tensors.push((format!("blocks.{i}.wo"), w.wo.clone()));
+        for (name, lin) in
+            [("w_gate", &b.w_gate), ("w_up", &b.w_up), ("w_down", &b.w_down)]
+        {
+            tensors.push((format!("blocks.{i}.{name}"), lin.to_dense()));
+        }
+        tensors.push((format!("blocks.{i}.norm1"), Tensor::from_vec(b.norm1.clone(), &[b.norm1.len()])));
+        tensors.push((format!("blocks.{i}.norm2"), Tensor::from_vec(b.norm2.clone(), &[b.norm2.len()])));
+    }
+    tensors.push(("norm_f".to_string(), Tensor::from_vec(model.norm_f.clone(), &[model.norm_f.len()])));
+    Ok(Checkpoint { config: model.config.clone(), tensors })
+}
+
+/// Rebuild a dense-MHA transformer from a checkpoint.
+pub fn import_mha(ckpt: &Checkpoint) -> Result<crate::model::Transformer> {
+    use crate::attention::mha::MhaWeights;
+    use crate::model::lowrank::Linear;
+    use crate::model::transformer::Block;
+    let config = ckpt.config.clone();
+    let shape = config.attn_shape();
+    let need = |name: &str| -> Result<Tensor> {
+        ckpt.get(name).cloned().ok_or_else(|| anyhow!("missing tensor {name}"))
+    };
+    let mut blocks = Vec::with_capacity(config.n_layers);
+    for i in 0..config.n_layers {
+        blocks.push(Block {
+            attn: crate::model::AttentionImpl::Mha(MhaWeights {
+                shape,
+                wq: need(&format!("blocks.{i}.wq"))?,
+                wk: need(&format!("blocks.{i}.wk"))?,
+                wv: need(&format!("blocks.{i}.wv"))?,
+                wo: need(&format!("blocks.{i}.wo"))?,
+            }),
+            norm1: need(&format!("blocks.{i}.norm1"))?.data,
+            norm2: need(&format!("blocks.{i}.norm2"))?.data,
+            w_gate: Linear::dense(need(&format!("blocks.{i}.w_gate"))?),
+            w_up: Linear::dense(need(&format!("blocks.{i}.w_up"))?),
+            w_down: Linear::dense(need(&format!("blocks.{i}.w_down"))?),
+        });
+    }
+    Ok(crate::model::Transformer {
+        embed: need("embed")?,
+        norm_f: need("norm_f")?.data,
+        blocks,
+        config,
+        dtype: crate::tensor::DType::F32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Transformer;
+
+    #[test]
+    fn roundtrip_preserves_logits() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 8);
+        let ckpt = export_mha(&model).unwrap();
+        let dir = std::env::temp_dir().join("bda_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bdaw");
+        ckpt.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        let model2 = import_mha(&loaded).unwrap();
+        let toks = [1u32, 5, 9, 42];
+        let a = model.forward_full(&toks);
+        let b = model2.forward_full(&toks);
+        assert_eq!(a, b, "checkpoint round-trip must be bit-exact");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("bda_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bdaw");
+        std::fs::write(&path, b"NOTMAGIC rest").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_converted_model_fails_cleanly() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 9);
+        let bda = model.to_bda(crate::bd::Strategy::FirstR, crate::tensor::DType::F32).unwrap();
+        assert!(export_mha(&bda).is_err());
+    }
+
+    #[test]
+    fn get_by_name() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 10);
+        let ckpt = export_mha(&model).unwrap();
+        assert!(ckpt.get("embed").is_some());
+        assert!(ckpt.get("blocks.0.wq").is_some());
+        assert!(ckpt.get("nope").is_none());
+    }
+}

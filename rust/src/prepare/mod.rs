@@ -1,0 +1,111 @@
+//! Model-level BDA preparation — Algorithm 3 applied across all layers,
+//! with the timing and residual statistics the paper reports ("4s offline
+//! preparation", Table 4 errors, Table 5 preparation time).
+
+use crate::attention::bda::PrepStats;
+use crate::bd::Strategy;
+use crate::model::Transformer;
+use crate::tensor::DType;
+use crate::util::timer::Timer;
+
+/// Outcome of preparing a whole model.
+pub struct PrepReport {
+    pub model: Transformer,
+    /// Wallclock seconds for the whole preparation (Table 5 row).
+    pub seconds: f64,
+    /// Per-layer QK stats.
+    pub qk: Vec<PrepStats>,
+    /// Per-layer VO stats.
+    pub vo: Vec<PrepStats>,
+    pub strategy: Strategy,
+    pub dtype: DType,
+}
+
+impl PrepReport {
+    fn agg(stats: &[PrepStats], f: impl Fn(&PrepStats) -> f64) -> f64 {
+        if stats.is_empty() {
+            return 0.0;
+        }
+        stats.iter().map(f).sum::<f64>() / stats.len() as f64
+    }
+
+    /// Mean MSE across layers/heads (Table 4 "QK MSE" cell).
+    pub fn qk_mse(&self) -> f64 {
+        Self::agg(&self.qk, |s| s.mean_mse())
+    }
+    pub fn qk_nmse(&self) -> f64 {
+        Self::agg(&self.qk, |s| s.mean_nmse())
+    }
+    pub fn vo_mse(&self) -> f64 {
+        Self::agg(&self.vo, |s| s.mean_mse())
+    }
+    pub fn vo_nmse(&self) -> f64 {
+        Self::agg(&self.vo, |s| s.mean_nmse())
+    }
+}
+
+/// Prepare a dense-MHA model as BDA, collecting stats + timing.
+pub fn prepare_model(
+    model: &Transformer,
+    strategy: Strategy,
+    dtype: DType,
+) -> Result<PrepReport, crate::bd::BdError> {
+    let t = Timer::start();
+    let converted = model.to_bda(strategy, dtype)?;
+    let seconds = t.elapsed_secs();
+    let mut qk = Vec::new();
+    let mut vo = Vec::new();
+    for b in &converted.blocks {
+        if let crate::model::AttentionImpl::Bda(w) = &b.attn {
+            qk.push(w.qk_stats.clone());
+            vo.push(w.vo_stats.clone());
+        }
+    }
+    Ok(PrepReport { model: converted, seconds, qk, vo, strategy, dtype })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn prepare_reports_stats_and_time() {
+        let m = Transformer::new_mha(ModelConfig::tiny(), 1);
+        let rep = prepare_model(&m, Strategy::ResidualMin, DType::F32).unwrap();
+        assert_eq!(rep.qk.len(), m.config.n_layers);
+        assert_eq!(rep.vo.len(), m.config.n_layers);
+        assert!(rep.seconds > 0.0);
+        // FP32 errors are tiny (Table 4: ~1e-12 MSE scale).
+        assert!(rep.qk_mse() < 1e-8, "qk mse {}", rep.qk_mse());
+        assert!(rep.vo_mse() < 1e-8);
+    }
+
+    #[test]
+    fn fp16_errors_larger_than_fp32() {
+        let m = Transformer::new_mha(ModelConfig::tiny(), 2);
+        let r32 = prepare_model(&m, Strategy::ResidualMin, DType::F32).unwrap();
+        let r16 = prepare_model(&m, Strategy::ResidualMin, DType::F16).unwrap();
+        assert!(r16.qk_nmse() > r32.qk_nmse());
+        assert!(r16.vo_nmse() > r32.vo_nmse());
+    }
+
+    #[test]
+    fn residual_min_not_worse_than_first() {
+        let m = Transformer::new_mha(ModelConfig::tiny(), 3);
+        for dt in [DType::F32, DType::F16, DType::BF16] {
+            let rf = prepare_model(&m, Strategy::FirstR, dt).unwrap();
+            let rm = prepare_model(&m, Strategy::ResidualMin, dt).unwrap();
+            // Mean selected residual of Residual-min <= First-r's (Alg. 3
+            // compares means, so this holds per layer in expectation; we
+            // assert the aggregate).
+            let f: f64 = rf.qk.iter().map(|s| s.mean_residual_first()).sum();
+            let m_sel: f64 = rm
+                .qk
+                .iter()
+                .map(|s| s.mean_residual_first().min(s.mean_residual_last()))
+                .sum();
+            assert!(m_sel <= f + 1e-12, "{dt}: {m_sel} vs {f}");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Metadata of one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: String,
+    pub bytes: usize,
+    pub batch: Option<usize>,
+    pub seq_len: Option<usize>,
+    pub attention: Option<String>,
+    pub n_state: Option<usize>,
+    pub state_shapes: Vec<Vec<usize>>,
+}
+
+/// Test vector embedded at artifact-build time (cross-layer numeric check).
+#[derive(Clone, Debug)]
+pub struct TestVector {
+    pub tokens: Vec<Vec<i32>>,
+    pub logits_head: Vec<f32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+    pub test_vector: Option<TestVector>,
+    pub lm_config: Option<LmConfig>,
+    pub train_config: Option<TrainConfig>,
+    pub selfcheck_rel_err: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LmConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_h: usize,
+    pub max_seq_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    pub batch: usize,
+}
+
+fn parse_artifact(name: &str, j: &Json) -> ArtifactInfo {
+    ArtifactInfo {
+        name: name.to_string(),
+        path: j.get("path").as_str().unwrap_or_default().to_string(),
+        bytes: j.get("bytes").as_usize().unwrap_or(0),
+        batch: j.get("batch").as_usize(),
+        seq_len: j.get("seq_len").as_usize(),
+        attention: j.get("attention").as_str().map(|s| s.to_string()),
+        n_state: j.get("n_state").as_usize(),
+        state_shapes: j
+            .get("state_shapes")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default(),
+    }
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut artifacts = Vec::new();
+        for section in ["lm", "kproj", "train"] {
+            if let Some(obj) = j.get(section).as_obj() {
+                for (name, info) in obj {
+                    artifacts.push(parse_artifact(name, info));
+                }
+            }
+        }
+        let test_vector = j.get("lm_test_vector").as_obj().map(|_| {
+            let tv = j.get("lm_test_vector");
+            TestVector {
+                tokens: tv
+                    .get("tokens")
+                    .as_arr()
+                    .map(|rows| {
+                        rows.iter()
+                            .map(|r| {
+                                r.as_arr()
+                                    .map(|xs| {
+                                        xs.iter()
+                                            .filter_map(|x| x.as_f64())
+                                            .map(|x| x as i32)
+                                            .collect()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                logits_head: tv
+                    .get("logits_b0_t0_head")
+                    .as_arr()
+                    .map(|xs| xs.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                    .unwrap_or_default(),
+                batch: tv.get("batch").as_usize().unwrap_or(0),
+                seq_len: tv.get("seq_len").as_usize().unwrap_or(0),
+            }
+        });
+        let lm_config = j.get("lm_config").as_obj().map(|_| {
+            let c = j.get("lm_config");
+            LmConfig {
+                vocab_size: c.get("vocab_size").as_usize().unwrap_or(0),
+                d_model: c.get("d_model").as_usize().unwrap_or(0),
+                n_layers: c.get("n_layers").as_usize().unwrap_or(0),
+                n_heads: c.get("n_heads").as_usize().unwrap_or(0),
+                d_h: c.get("d_h").as_usize().unwrap_or(0),
+                max_seq_len: c.get("max_seq_len").as_usize().unwrap_or(0),
+            }
+        });
+        let train_config = j.get("train_config").as_obj().map(|_| {
+            let c = j.get("train_config");
+            TrainConfig {
+                vocab_size: c.get("vocab_size").as_usize().unwrap_or(0),
+                max_seq_len: c.get("max_seq_len").as_usize().unwrap_or(0),
+                batch: c.get("batch").as_usize().unwrap_or(0),
+            }
+        });
+        Ok(Manifest {
+            artifacts,
+            test_vector,
+            lm_config,
+            train_config,
+            selfcheck_rel_err: j.get("lm_selfcheck_rel_err").as_f64().unwrap_or(f64::NAN),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn path_of(&self, name: &str) -> Option<&str> {
+        self.get(name).map(|a| a.path.as_str())
+    }
+
+    /// Names of lm forward artifacts for an attention variant, sorted by
+    /// batch size (the batcher picks the smallest fitting one).
+    pub fn lm_variants(&self, attention: &str) -> Vec<&ArtifactInfo> {
+        let mut v: Vec<&ArtifactInfo> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.name.starts_with("lm_")
+                    && a.name.contains("_fwd_b")
+                    && a.attention.as_deref() == Some(attention)
+            })
+            .collect();
+        v.sort_by_key(|a| a.batch.unwrap_or(0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "lm_selfcheck_rel_err": 1e-5,
+      "lm": {
+        "lm_mha_fwd_b1": {"path": "lm_mha_fwd_b1.hlo.txt", "bytes": 10,
+                          "batch": 1, "seq_len": 64, "attention": "mha"},
+        "lm_mha_fwd_b8": {"path": "lm_mha_fwd_b8.hlo.txt", "bytes": 10,
+                          "batch": 8, "seq_len": 64, "attention": "mha"}
+      },
+      "kproj": {
+        "kproj_mha_l64": {"path": "kproj_mha_l64.hlo.txt", "bytes": 5,
+                          "seq_len": 64}
+      },
+      "train": {
+        "train_step_mha": {"path": "t.hlo.txt", "bytes": 2, "n_state": 2,
+                           "state_shapes": [[4, 4], [4]]}
+      },
+      "lm_test_vector": {"tokens": [[1, 2]], "logits_b0_t0_head": [0.5, -1.0],
+                         "batch": 1, "seq_len": 2},
+      "lm_config": {"vocab_size": 512, "d_model": 256, "n_layers": 2,
+                    "n_heads": 4, "d_h": 64, "max_seq_len": 64}
+    }"#;
+
+    #[test]
+    fn parses_sections() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.path_of("kproj_mha_l64"), Some("kproj_mha_l64.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn lm_variants_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.lm_variants("mha");
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].batch, Some(1));
+        assert_eq!(v[1].batch, Some(8));
+        assert!(m.lm_variants("bda").is_empty());
+    }
+
+    #[test]
+    fn test_vector_parsed() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tv = m.test_vector.unwrap();
+        assert_eq!(tv.tokens, vec![vec![1, 2]]);
+        assert_eq!(tv.logits_head, vec![0.5, -1.0]);
+    }
+
+    #[test]
+    fn train_state_shapes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let t = m.get("train_step_mha").unwrap();
+        assert_eq!(t.n_state, Some(2));
+        assert_eq!(t.state_shapes, vec![vec![4, 4], vec![4]]);
+    }
+
+    #[test]
+    fn config_parsed() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.lm_config.unwrap();
+        assert_eq!(c.vocab_size, 512);
+        assert_eq!(c.d_h, 64);
+        assert!((m.selfcheck_rel_err - 1e-5).abs() < 1e-12);
+    }
+}

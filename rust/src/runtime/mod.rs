@@ -1,0 +1,156 @@
+//! PJRT runtime — loads and executes the AOT artifacts built by
+//! `python/compile/aot.py` (HLO text; Python is never on this path).
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once and cached;
+//! the coordinator owns a `Runtime` on a dedicated executor thread.
+
+pub mod artifact;
+
+pub use artifact::Manifest;
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; flattens the tuple output into a
+    /// vector of literals (artifacts are lowered with return_tuple=True).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e:?}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT runtime: client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let rel = self
+            .manifest
+            .path_of(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .to_string();
+        let path = self.dir.join(rel);
+        let exe = self.compile_file(&path).with_context(|| format!("loading {name}"))?;
+        let handle = std::sync::Arc::new(Executable { name: name.to_string(), exe });
+        self.cache.insert(name.to_string(), handle.clone());
+        Ok(handle)
+    }
+
+    /// Compile an HLO text file directly (tests / ad-hoc tools).
+    pub fn load_path(&self, path: &Path) -> Result<Executable> {
+        let exe = self.compile_file(path)?;
+        Ok(Executable { name: path.display().to_string(), exe })
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+}
+
+// ---- literal <-> tensor conversions ----------------------------------------
+
+/// i32 literal of the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// f32 literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// f32 scalar literal (rank 0).
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Tensor -> f32 literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit_f32(&t.data, &dims)
+}
+
+/// f32 literal -> Tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec()?;
+    Ok(Tensor::from_vec(data, &dims))
+}
+
+/// Scalar f32 from a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/
+    // integration_runtime.rs; conversion helpers are testable standalone.
+    use super::*;
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let lit = lit_i32(&[1, 2, 3, 4], &[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = lit_scalar_f32(2.5);
+        assert_eq!(literal_scalar_f32(&lit).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,266 @@
+//! Logical dtypes with bit-exact rounding simulation.
+//!
+//! All Rust-side compute is carried in `f32`; `F16`/`BF16` are *logical*
+//! dtypes realized by round-tripping values through the 16-bit format after
+//! each op that the paper's kernels would perform in 16-bit. This reproduces
+//! the paper's FP16/BF16 numerics (Tables 4–7) without a `half` dependency.
+
+/// Logical element type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+}
+
+impl DType {
+    /// Bytes per element in the *stored* format the paper benchmarks
+    /// (used for memory-footprint accounting, not for our f32 carrier).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+
+    /// Round an f32 value through this dtype's representation.
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            DType::F32 => x,
+            DType::F16 => f16_to_f32(f32_to_f16(x)),
+            DType::BF16 => bf16_to_f32(f32_to_bf16(x)),
+        }
+    }
+
+    /// Quantize a whole slice in place.
+    pub fn quantize_slice(self, xs: &mut [f32]) {
+        if self == DType::F32 {
+            return;
+        }
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x);
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "fp32",
+            DType::F16 => "fp16",
+            DType::BF16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "float32" => Some(DType::F32),
+            "fp16" | "f16" | "float16" => Some(DType::F16),
+            "bf16" | "bfloat16" => Some(DType::BF16),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---- IEEE 754 binary16 -----------------------------------------------------
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even, with proper
+/// subnormal/overflow/NaN handling.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        // Overflow -> inf
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal range. 10-bit mantissa, round to nearest even on bit 13.
+        let m = mant >> 13;
+        let rest = mant & 0x1FFF;
+        let mut h = sign | (((e + 15) as u16) << 10) | m as u16;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent — correct behaviour
+        }
+        return h;
+    }
+    if e >= -24 {
+        // Subnormal half
+        let shift = (-14 - e) as u32; // 1..=10
+        let full = 0x0080_0000 | mant; // implicit leading 1
+        let m = full >> (13 + shift);
+        let rest = full & ((1u32 << (13 + shift)) - 1);
+        let half_ulp = 1u32 << (12 + shift);
+        let mut h = sign | m as u16;
+        if rest > half_ulp || (rest == half_ulp && (m & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    // Underflow to signed zero
+    sign
+}
+
+/// IEEE binary16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---- bfloat16 ---------------------------------------------------------------
+
+/// f32 -> bfloat16 bits, round-to-nearest-even.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    let round_bit = 0x0000_8000u32;
+    let lower = bits & 0xFFFF;
+    let mut upper = (bits >> 16) as u16;
+    if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+        upper = upper.wrapping_add(1);
+    }
+    upper
+}
+
+/// bfloat16 bits -> f32.
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        // Values exactly representable in binary16 survive the round trip.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1.5] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 -> ties to even (1.0).
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(x)), 1.0);
+        // Slightly above the midpoint rounds up.
+        let y = 1.0 + 2f32.powi(-11) + 2f32.powi(-16);
+        assert_eq!(f16_to_f32(f32_to_f16(y)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        assert!(f16_to_f32(f32_to_f16(-1e6)).is_infinite());
+        assert_eq!(f16_to_f32(f32_to_f16(65519.0)), 65504.0); // below the midpoint -> max finite
+        assert!(f16_to_f32(f32_to_f16(65520.0)).is_infinite()); // at midpoint -> ties up
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let min_sub = 2f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(min_sub)), min_sub);
+        assert_eq!(f16_to_f32(f32_to_f16(min_sub * 0.4)), 0.0);
+        let min_norm = 2f32.powi(-14);
+        assert_eq!(f16_to_f32(f32_to_f16(min_norm)), min_norm);
+    }
+
+    #[test]
+    fn f16_nan_preserved() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact() {
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 3.0e38, 1.0e-38] {
+            let rt = bf16_to_f32(f32_to_bf16(v));
+            let rel = if v == 0.0 { (rt - v).abs() } else { ((rt - v) / v).abs() };
+            assert!(rel <= 1.0 / 128.0, "{v} -> {rt}");
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0)), 1.0);
+    }
+
+    #[test]
+    fn bf16_round_nearest_even() {
+        // 1 + 2^-8 is halfway between 1.0 and 1+2^-7 -> ties to even = 1.0.
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0);
+        let y = 1.0 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(bf16_to_f32(f32_to_bf16(y)), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_precision_coarser_than_f16_near_one() {
+        let x = 1.0 + 2f32.powi(-9);
+        let e_bf = (bf16_to_f32(f32_to_bf16(x)) - x).abs();
+        let e_f16 = (f16_to_f32(f32_to_f16(x)) - x).abs();
+        assert!(e_bf > e_f16);
+    }
+
+    #[test]
+    fn quantize_slice_f32_noop() {
+        let mut xs = [1.1f32, 2.2, 3.3];
+        let orig = xs;
+        DType::F32.quantize_slice(&mut xs);
+        assert_eq!(xs, orig);
+    }
+
+    #[test]
+    fn dtype_parse_and_name() {
+        assert_eq!(DType::parse("FP16"), Some(DType::F16));
+        assert_eq!(DType::parse("bfloat16"), Some(DType::BF16));
+        assert_eq!(DType::parse("f32"), Some(DType::F32));
+        assert_eq!(DType::parse("int8"), None);
+        assert_eq!(DType::BF16.name(), "bf16");
+    }
+
+    #[test]
+    fn exhaustive_f16_bits_roundtrip() {
+        // Every finite f16 bit pattern must round-trip bits->f32->bits.
+        for bits in 0u16..=0xFFFF {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan: representation not unique
+            }
+            let f = f16_to_f32(bits);
+            assert_eq!(f32_to_f16(f), bits, "bits {bits:#06x} -> {f}");
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Blocked, multithreaded matrix multiplication — the L3 hot path.
+//!
+//! The Fig. 2b / Tables 6–7 operator benchmarks bottom out here, so this is
+//! written for throughput: row-panel parallelism across the thread pool, a
+//! k-blocked micro-kernel over contiguous rows of B (unit-stride loads for
+//! both operands), and f32 accumulation. Logical f16/bf16 matmuls quantize
+//! the *output* through the dtype (inputs are assumed already quantized),
+//! matching a 16-bit-storage / 32-bit-accumulate GPU tensor-core pipeline.
+
+use super::{DType, Tensor};
+use crate::util::threadpool::parallel_chunks;
+
+/// Tuning knobs for the blocked kernel. Values chosen by the perf pass
+/// (EXPERIMENTS.md §Perf) on this CPU.
+const KC: usize = 256; // k-dimension block
+const MR: usize = 4; // row micro-tile
+
+/// `C = A @ B` for 2-D tensors. Accumulates in f32, quantizes the result
+/// through `out_dtype`.
+pub fn matmul_dt(a: &Tensor, b: &Tensor, out_dtype: DType) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul: A must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul: B must be 2-D");
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (kb, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb, "matmul inner dim mismatch: {k} vs {kb}");
+
+    let mut out = Tensor::zeros(&[m, n]);
+    out.dtype = out_dtype;
+    matmul_into(&a.data, &b.data, &mut out.data, m, k, n);
+    out_dtype.quantize_slice(&mut out.data);
+    out
+}
+
+/// `C = A @ B` in the dtype of `a`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_dt(a, b, a.dtype)
+}
+
+/// Raw blocked GEMM on slices: `c[m×n] = a[m×k] @ b[k×n]` (c pre-zeroed).
+/// Parallel over row panels.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+
+    // Choose a row-panel size that gives each worker a few panels.
+    let threads = crate::util::threadpool::num_threads();
+    let panel = (m.div_ceil(threads * 4)).clamp(MR, 64.max(MR));
+
+    // SAFETY of the parallel write: panels are disjoint row ranges of C.
+    let c_addr = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, panel, |lo, hi| {
+        let c_panel =
+            unsafe { std::slice::from_raw_parts_mut(c_addr.get().add(lo * n), (hi - lo) * n) };
+        gemm_panel(&a[lo * k..hi * k], b, c_panel, hi - lo, k, n, k);
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    // Accessor keeps the closure capturing the whole (Sync) struct rather
+    // than the raw-pointer field (edition-2021 disjoint capture).
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Single-threaded panel GEMM: k-blocked, MR-row micro-tiles, B rows
+/// traversed contiguously (i-k-j order) so the inner loop is a saxpy over
+/// unit-stride slices — autovectorizes well. Public so the fused attention
+/// operators (kproj) reuse the same micro-kernel as plain matmul —
+/// otherwise operator comparisons measure GEMM quality, not algorithm
+/// (EXPERIMENTS.md §Perf, iteration 1).
+pub fn gemm_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_panel(a, b, c, m, k, n, k)
+}
+
+/// Strided-A GEMM accumulate: row i of A starts at `a[i*lda]`, uses columns
+/// `[0, k)`. Lets fused operators run directly on a column-slice of X
+/// without packing a contiguous copy (perf iteration 2: the pack cost an
+/// extra read+write of X_rest per call, which dominated beyond LLC sizes).
+pub fn gemm_serial_strided(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(lda >= k);
+    gemm_panel(a, b, c, m, k, n, lda)
+}
+
+fn gemm_panel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+) {
+    for kc0 in (0..k).step_by(KC) {
+        let kc1 = (kc0 + KC).min(k);
+        let mut i = 0;
+        while i + MR <= m {
+            gemm_micro::<MR>(a, b, c, i, kc0, kc1, lda, n);
+            i += MR;
+        }
+        while i < m {
+            gemm_micro::<1>(a, b, c, i, kc0, kc1, lda, n);
+            i += 1;
+        }
+    }
+}
+
+/// Micro-kernel: R rows of A against the k-block, updating R rows of C.
+/// `k` here is the A row stride (lda).
+#[inline]
+fn gemm_micro<const R: usize>(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i: usize,
+    kc0: usize,
+    kc1: usize,
+    k: usize,
+    n: usize,
+) {
+    for p in kc0..kc1 {
+        let brow = &b[p * n..p * n + n];
+        // Load the R A-scalars once per k-step.
+        let mut ar = [0.0f32; R];
+        for r in 0..R {
+            ar[r] = a[(i + r) * k + p];
+        }
+        for r in 0..R {
+            let crow = &mut c[(i + r) * n..(i + r) * n + n];
+            let av = ar[r];
+            if av != 0.0 {
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Naive reference matmul (for tests).
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    assert_eq!(k, b.shape[0]);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            for j in 0..n {
+                out.data[i * n + j] += av * b.data[p * n + j];
+            }
+        }
+    }
+    out
+}
+
+/// FLOPs of an m×k @ k×n multiply (2mkn, the paper's convention).
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * m as u64 * k as u64 * n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_naive_small() {
+        let a = Tensor::randn(&[7, 5], 1.0, 1);
+        let b = Tensor::randn(&[5, 9], 1.0, 2);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(fast.max_abs_diff(&slow) < 1e-4);
+    }
+
+    #[test]
+    fn matches_naive_blocked_sizes() {
+        // Exercise k-blocking (k > KC) and row tail (m % MR != 0).
+        let a = Tensor::randn(&[13, 300], 0.5, 3);
+        let b = Tensor::randn(&[300, 17], 0.5, 4);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(fast.max_abs_diff(&slow) < 1e-3);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let a = Tensor::randn(&[6, 6], 1.0, 5);
+        let i = Tensor::eye(6);
+        assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn shapes() {
+        let a = Tensor::zeros(&[3, 4]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert_eq!(matmul(&a, &b).shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inner_dim_mismatch_panics() {
+        let _ = matmul(&Tensor::zeros(&[2, 3]), &Tensor::zeros(&[4, 2]));
+    }
+
+    #[test]
+    fn f16_output_quantized() {
+        let a = Tensor::from_vec(vec![1.0, 2f32.powi(-12)], &[1, 2]).cast(DType::F16);
+        let b = Tensor::from_vec(vec![1.0, 1.0], &[2, 1]).cast(DType::F16);
+        let c = matmul(&a, &b);
+        // 1 + 2^-12 rounds to 1.0 in f16
+        assert_eq!(c.data[0], 1.0);
+        assert_eq!(c.dtype, DType::F16);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        // Large enough to span several panels.
+        let a = Tensor::randn(&[200, 64], 0.3, 6);
+        let b = Tensor::randn(&[64, 96], 0.3, 7);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(fast.max_abs_diff(&slow) < 1e-3);
+    }
+
+    #[test]
+    fn gemm_flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48);
+    }
+}

@@ -1,0 +1,179 @@
+//! Dense row-major tensors with f32 carrier storage and logical dtypes.
+//!
+//! This is the L3 compute substrate: the pure-Rust reference path for
+//! MHA/BDA/PIFA operators, the model forward used for PPL evaluation, and
+//! the bench targets of Tables 6–7 / Fig. 2b all run on these tensors.
+
+pub mod dtype;
+pub mod matmul;
+pub mod ops;
+
+pub use dtype::DType;
+
+/// A dense row-major tensor of up to 4 dims. Values are carried in `f32`;
+/// `dtype` records the logical precision (see [`dtype`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Tensor {
+    // ---- constructors ------------------------------------------------------
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    /// Gaussian init N(0, std^2), deterministic for a given seed.
+    pub fn randn(shape: &[usize], std: f32, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.fill_gaussian(&mut t.data, std);
+        t
+    }
+
+    /// Identity matrix (2-D).
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    // ---- shape bookkeeping --------------------------------------------------
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    /// Logical memory footprint in bytes at the stated dtype
+    /// (what the paper's Table 3 "Memory (GB)" counts).
+    pub fn logical_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.numel(), shape.iter().product::<usize>(), "reshape numel mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Set logical dtype and quantize the carrier values through it.
+    pub fn cast(mut self, dtype: DType) -> Tensor {
+        dtype.quantize_slice(&mut self.data);
+        self.dtype = dtype;
+        self
+    }
+
+    /// Re-quantize in place through the current logical dtype (models a
+    /// 16-bit store after a higher-precision accumulate).
+    pub fn requantize(&mut self) {
+        self.dtype.quantize_slice(&mut self.data);
+    }
+
+    // ---- element access (2-D convenience) ------------------------------------
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.numel(), 6);
+        assert_eq!(z.shape, vec![2, 3]);
+        let f = Tensor::filled(&[4], 2.5);
+        assert!(f.data.iter().all(|&x| x == 2.5));
+        let e = Tensor::eye(3);
+        assert_eq!(e.at(0, 0), 1.0);
+        assert_eq!(e.at(0, 1), 0.0);
+        assert_eq!(e.at(2, 2), 1.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[8, 8], 0.02, 7);
+        let b = Tensor::randn(&[8, 8], 0.02, 7);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[8, 8], 0.02, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).reshape(&[4]);
+        assert_eq!(t.shape, vec![4]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_numel_panics() {
+        let _ = Tensor::zeros(&[2, 2]).reshape(&[5]);
+    }
+
+    #[test]
+    fn cast_quantizes() {
+        let t = Tensor::from_vec(vec![1.0 + 2f32.powi(-12)], &[1]).cast(DType::F16);
+        assert_eq!(t.data[0], 1.0); // rounded through binary16
+        assert_eq!(t.dtype, DType::F16);
+        assert_eq!(t.logical_bytes(), 2);
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.at(1, 2), 6.0);
+    }
+}

@@ -1,0 +1,384 @@
+//! Elementwise/structural tensor operations used by the attention operators
+//! and the pure-Rust transformer.
+
+use super::{DType, Tensor};
+
+impl Tensor {
+    /// Elementwise addition. Shapes must match.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "sub shape mismatch");
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        out.dtype = self.dtype;
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Column slice `self[:, lo..hi]` of a 2-D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert!(lo <= hi && hi <= self.shape[1], "slice_cols out of range");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[r, w]);
+        out.dtype = self.dtype;
+        for i in 0..r {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[i * c + lo..i * c + hi]);
+        }
+        out
+    }
+
+    /// Row slice `self[lo..hi, :]` of a 2-D tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert!(lo <= hi && hi <= self.shape[0], "slice_rows out of range");
+        let c = self.shape[1];
+        let mut out = Tensor::zeros(&[hi - lo, c]);
+        out.dtype = self.dtype;
+        out.data.copy_from_slice(&self.data[lo * c..hi * c]);
+        out
+    }
+
+    /// Horizontal concat of 2-D tensors (same row count).
+    pub fn concat_cols(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let r = parts[0].shape[0];
+        let total: usize = parts.iter().map(|p| {
+            assert_eq!(p.ndim(), 2);
+            assert_eq!(p.shape[0], r, "concat_cols row mismatch");
+            p.shape[1]
+        }).sum();
+        let mut out = Tensor::zeros(&[r, total]);
+        out.dtype = parts[0].dtype;
+        for i in 0..r {
+            let mut off = 0;
+            for p in parts {
+                let c = p.shape[1];
+                out.data[i * total + off..i * total + off + c]
+                    .copy_from_slice(&p.data[i * c..(i + 1) * c]);
+                off += c;
+            }
+        }
+        out
+    }
+
+    /// Vertical concat of 2-D tensors (same column count).
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let c = parts[0].shape[1];
+        let total: usize = parts.iter().map(|p| {
+            assert_eq!(p.ndim(), 2);
+            assert_eq!(p.shape[1], c, "concat_rows col mismatch");
+            p.shape[0]
+        }).sum();
+        let mut out = Tensor::zeros(&[total, c]);
+        out.dtype = parts[0].dtype;
+        let mut off = 0;
+        for p in parts {
+            out.data[off..off + p.data.len()].copy_from_slice(&p.data);
+            off += p.data.len();
+        }
+        out
+    }
+
+    /// Repeat a 2-D tensor `n` times along the second dimension:
+    /// `[X]^{×n}` in the paper's notation (Eq. 12).
+    pub fn repeat_cols(&self, n: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[r, c * n]);
+        out.dtype = self.dtype;
+        for i in 0..r {
+            let src = &self.data[i * c..(i + 1) * c];
+            for k in 0..n {
+                out.data[i * c * n + k * c..i * c * n + (k + 1) * c].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax of a 2-D tensor (numerically stable).
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = self.clone();
+        for i in 0..r {
+            let row = &mut out.data[i * c..(i + 1) * c];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax with a causal mask: entry (i, j) is masked (-inf)
+    /// when j > i + offset. Used by the decoder attention.
+    pub fn softmax_rows_causal(&self, offset: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = self.clone();
+        for i in 0..r {
+            let row = &mut out.data[i * c..(i + 1) * c];
+            let visible = (i + offset + 1).min(c);
+            let max = row[..visible].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row[..visible].iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row[..visible].iter_mut() {
+                *v *= inv;
+            }
+            for v in row[visible..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        out
+    }
+
+    /// RMSNorm over the last dim with learned gain.
+    pub fn rmsnorm(&self, gain: &[f32], eps: f32) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert_eq!(gain.len(), c);
+        let mut out = self.clone();
+        for i in 0..r {
+            let row = &mut out.data[i * c..(i + 1) * c];
+            let ms = row.iter().map(|x| x * x).sum::<f32>() / c as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            for (v, g) in row.iter_mut().zip(gain.iter()) {
+                *v = *v * inv * g;
+            }
+        }
+        out
+    }
+
+    /// SiLU activation x * sigmoid(x), elementwise.
+    pub fn silu(&self) -> Tensor {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v = *v / (1.0 + (-*v).exp());
+        }
+        out
+    }
+
+    /// Elementwise product.
+    pub fn mul_elem(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a *= b;
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared difference vs another tensor (f64 accumulate).
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.numel() as f64;
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    /// Max absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// NMSE = MSE(a,b) / mean(b^2) — the normalized error of Table 4.
+pub fn nmse(approx: &Tensor, exact: &Tensor) -> f64 {
+    let mse = approx.mse(exact);
+    let denom = exact.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+        / exact.numel() as f64;
+    if denom == 0.0 { 0.0 } else { mse / denom }
+}
+
+/// Quantize a tensor's values through a dtype without changing the tag
+/// (simulates a 16-bit intermediate store).
+pub fn quantized_copy(t: &Tensor, dt: DType) -> Tensor {
+    let mut out = t.clone();
+    dt.quantize_slice(&mut out.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(data: Vec<f32>, r: usize, c: usize) -> Tensor {
+        Tensor::from_vec(data, &[r, c])
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = t2(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = t2(vec![4.0, 3.0, 2.0, 1.0], 2, 2);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(a.sub(&b).data, vec![-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.scale(2.0).data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let a = t2(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let at = a.transpose();
+        assert_eq!(at.shape, vec![3, 2]);
+        assert_eq!(at.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(at.transpose(), a);
+    }
+
+    #[test]
+    fn slicing() {
+        let a = t2((1..=12).map(|x| x as f32).collect(), 3, 4);
+        let c = a.slice_cols(1, 3);
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.data, vec![2.0, 3.0, 6.0, 7.0, 10.0, 11.0]);
+        let r = a.slice_rows(1, 2);
+        assert_eq!(r.data, vec![5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn concat_inverse_of_slice() {
+        let a = t2((1..=12).map(|x| x as f32).collect(), 3, 4);
+        let left = a.slice_cols(0, 2);
+        let right = a.slice_cols(2, 4);
+        assert_eq!(Tensor::concat_cols(&[&left, &right]), a);
+        let top = a.slice_rows(0, 1);
+        let bot = a.slice_rows(1, 3);
+        assert_eq!(Tensor::concat_rows(&[&top, &bot]), a);
+    }
+
+    #[test]
+    fn repeat_cols_matches_paper_notation() {
+        let x = t2(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let r = x.repeat_cols(3);
+        assert_eq!(r.shape, vec![2, 6]);
+        assert_eq!(r.row(0), &[1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let a = t2(vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 2, 3);
+        let s = a.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // Monotone: larger logit -> larger prob
+        assert!(s.at(0, 2) > s.at(0, 1));
+    }
+
+    #[test]
+    fn softmax_stable_large_values() {
+        let a = t2(vec![1000.0, 1001.0], 1, 2);
+        let s = a.softmax_rows();
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert!((s.data.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causal_softmax_masks_future() {
+        let a = t2(vec![1.0; 9], 3, 3);
+        let s = a.softmax_rows_causal(0);
+        assert_eq!(s.at(0, 1), 0.0);
+        assert_eq!(s.at(0, 2), 0.0);
+        assert_eq!(s.at(1, 2), 0.0);
+        assert!((s.at(0, 0) - 1.0).abs() < 1e-6);
+        assert!((s.at(1, 0) - 0.5).abs() < 1e-6);
+        // offset shifts visibility (decode position)
+        let s2 = a.softmax_rows_causal(2);
+        assert!(s2.at(0, 2) > 0.0);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let a = t2(vec![3.0, 4.0], 1, 2);
+        let n = a.rmsnorm(&[1.0, 1.0], 0.0);
+        let ms: f32 = n.data.iter().map(|x| x * x).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nmse_zero_for_identical() {
+        let a = Tensor::randn(&[4, 4], 1.0, 3);
+        assert_eq!(nmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn silu_values() {
+        let a = t2(vec![0.0, 10.0], 1, 2);
+        let s = a.silu();
+        assert!((s.data[0] - 0.0).abs() < 1e-6);
+        assert!((s.data[1] - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let a = t2(vec![3.0, 4.0], 1, 2);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,41 @@
+//! Shared utilities: RNG, statistics, timing, JSON, CLI parsing, thread pool.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure (no serde/clap/criterion/rayon), so these substrates are built
+//! in-repo and unit-tested like everything else.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+/// Resident set size of the current process, in bytes (Linux).
+///
+/// Used by the Table 3 memory measurements. Returns 0 if `/proc` is
+/// unavailable.
+pub fn rss_bytes() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0;
+    };
+    let mut it = s.split_whitespace();
+    let _size = it.next();
+    let resident: u64 = it.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+    resident * page_size()
+}
+
+fn page_size() -> u64 {
+    // Linux default; avoids a libc dependency. Correct on this image.
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_nonzero_on_linux() {
+        assert!(rss_bytes() > 0);
+    }
+}

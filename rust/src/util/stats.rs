@@ -1,0 +1,198 @@
+//! Summary statistics for benchmark measurements.
+
+/// Summary of a sample of measurements (e.g. per-iteration wallclock).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    /// Median absolute deviation (scaled by 1.4826 for normal consistency).
+    pub mad: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary from raw samples. Panics on an empty slice.
+    pub fn from(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::from on empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile_sorted(&sorted, 50.0);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0) * 1.4826;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+            mad,
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice. `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Online histogram with fixed log-spaced buckets, for latency metrics.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds (seconds), log-spaced.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    /// Buckets from `lo` to `hi` seconds, `n` log-spaced bounds.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let bounds: Vec<f64> = (0..n).map(|i| lo * ratio.powi(i as i32)).collect();
+        let len = bounds.len();
+        Histogram { bounds, counts: vec![0; len + 1], total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    /// Default latency histogram: 10µs .. 100s.
+    pub fn latency() -> Self {
+        Self::new(1e-5, 100.0, 64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Approximate quantile from bucket bounds. `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds.len(), other.bounds.len());
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::from(&[2.5]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let clean = Summary::from(&[1.0, 1.1, 0.9, 1.05, 0.95]);
+        let dirty = Summary::from(&[1.0, 1.1, 0.9, 1.05, 100.0]);
+        // MAD barely moves; std explodes.
+        assert!(dirty.mad < clean.mad * 3.0 + 0.5);
+        assert!(dirty.std > clean.std * 10.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::latency();
+        let mut x = 1e-4;
+        for _ in 0..1000 {
+            h.record(x);
+            x *= 1.005;
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(h.total, 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(0.001);
+        b.record(0.010);
+        a.merge(&b);
+        assert_eq!(a.total, 2);
+        assert!(a.max >= 0.010);
+    }
+
+    #[test]
+    fn histogram_mean() {
+        let mut h = Histogram::latency();
+        h.record(1.0);
+        h.record(3.0);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,104 @@
+//! A small scoped thread pool for data-parallel loops.
+//!
+//! Used by the blocked matmul and batch execution paths (no rayon in the
+//! offline crate set). Work is expressed as "run `f(chunk_index)` for
+//! indices 0..n" with the closure shared across a fixed set of workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads to use for data-parallel loops.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("BDA_NUM_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+            .max(1)
+    })
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices across up to
+/// `num_threads()` scoped workers via an atomic counter (work stealing by
+/// chunk). `f` must be `Sync`; per-index work should be coarse enough to
+/// amortize the atomic fetch.
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Run `f(chunk_start, chunk_end)` over contiguous chunks of `0..n`,
+/// one chunk per worker invocation; `chunk` is the chunk size.
+pub fn parallel_chunks(n: usize, chunk: usize, f: impl Fn(usize, usize) + Sync) {
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    parallel_for(n_chunks, |ci| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(n);
+        f(lo, hi);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_range() {
+        let total = AtomicU64::new(0);
+        parallel_chunks(103, 10, |lo, hi| {
+            assert!(hi <= 103 && lo < hi);
+            total.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 103);
+    }
+
+    #[test]
+    fn zero_work_ok() {
+        parallel_for(0, |_| panic!("should not run"));
+        parallel_chunks(0, 8, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn single_item() {
+        let total = AtomicU64::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1);
+    }
+}

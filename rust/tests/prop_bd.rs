@@ -1,0 +1,149 @@
+//! Property tests for the BD core (mini-framework over seeds; the offline
+//! crate set has no proptest — see DESIGN.md §2).
+
+use bda::bd::{bd_col, bd_row, reconstruct_col, reconstruct_row, BdCost, Strategy};
+use bda::tensor::matmul::matmul;
+use bda::tensor::Tensor;
+use bda::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+fn rank_r(m: usize, n: usize, r: usize, seed: u64) -> Tensor {
+    let u = Tensor::randn(&[m, r], 1.0, seed);
+    let vt = Tensor::randn(&[r, n], 1.0, seed.wrapping_add(7919));
+    matmul(&u, &vt)
+}
+
+/// For every random (m, n, r): BD reconstructs the rank-r product to float
+/// tolerance, for both axes and both strategies.
+#[test]
+fn prop_bd_roundtrip_exact() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 31 + 1);
+        let m = rng.range(4, 24);
+        let n = rng.range(4, 24);
+        let r = rng.range(1, m.min(n) - 1);
+        let w = rank_r(m, n, r, case);
+        let tol = (1e-2 * w.fro_norm()).max(1e-3);
+
+        for strategy in [Strategy::FirstR, Strategy::ResidualMin] {
+            let col = bd_col(&w, r, strategy)
+                .unwrap_or_else(|e| panic!("case {case} ({m}x{n} r{r}) col: {e}"));
+            let rc = reconstruct_col(col.tag, &col.b, &col.c);
+            assert!(
+                rc.sub(&w).fro_norm() < tol,
+                "case {case}: col residual {} tol {tol}",
+                rc.sub(&w).fro_norm()
+            );
+            let row = bd_row(&w, r, strategy)
+                .unwrap_or_else(|e| panic!("case {case} ({m}x{n} r{r}) row: {e}"));
+            let rr = reconstruct_row(row.tag, &row.b, &row.c);
+            assert!(rr.sub(&w).fro_norm() < tol, "case {case}: row residual");
+        }
+    }
+}
+
+/// Residual-min never selects a worse candidate than First-r.
+#[test]
+fn prop_residual_min_dominates() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 97 + 3);
+        let m = rng.range(5, 20);
+        let n = rng.range(5, 20);
+        let r = rng.range(1, m.min(n) - 1);
+        let w = rank_r(m, n, r, case + 5000);
+        let f = bd_row(&w, r, Strategy::FirstR).unwrap();
+        let mres = bd_row(&w, r, Strategy::ResidualMin).unwrap();
+        assert!(
+            mres.residual <= f.residual + 1e-9,
+            "case {case}: {} > {}",
+            mres.residual,
+            f.residual
+        );
+    }
+}
+
+/// Cost-model invariants hold on every shape: bd < lowrank < dense params
+/// (given r below the low-rank break-even), and bd apply-FLOPs < lowrank's.
+#[test]
+fn prop_cost_model_orderings() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 13 + 7);
+        let m = rng.range(2, 256);
+        let n = rng.range(2, 256);
+        let r = rng.range(1, m.min(n) - 1).max(1);
+        let c = BdCost::new(m, n, r);
+        assert!(c.bd_params() < c.lowrank_params(), "case {case}");
+        assert!(c.bd_params() < c.dense_params(), "case {case}");
+        assert!(c.bd_recon_flops() <= c.lowrank_recon_flops(), "case {case}");
+        assert!(c.bd_apply_flops(17) < c.lowrank_apply_flops(17), "case {case}");
+    }
+}
+
+/// Inner-product preservation: for random MHA weights of random shapes,
+/// Q'K'^T == QK^T per head after preparation (the §3.4 invariant).
+#[test]
+fn prop_qk_inner_products_preserved() {
+    use bda::attention::mha::MhaWeights;
+    use bda::attention::{kproj, AttnShape};
+    use bda::tensor::DType;
+    for case in 0..20 {
+        let mut rng = Rng::new(case * 211 + 17);
+        let d_h = [4usize, 8, 16][rng.range(0, 2)];
+        let mult = rng.range(2, 4);
+        let n_heads = rng.range(1, 4);
+        let s = AttnShape::new(d_h * mult, n_heads, d_h);
+        let w = MhaWeights::random(s, case + 100);
+        let bda =
+            bda::attention::bda::BdaWeights::prepare(&w, Strategy::ResidualMin, DType::F32)
+                .unwrap();
+        let l = rng.range(2, 12);
+        let x = Tensor::randn(&[l, s.d], 1.0, case + 200);
+        let q = matmul(&x, &w.wq);
+        let k = matmul(&x, &w.wk);
+        let qp = matmul(&x, &bda.b_qk);
+        let kp = kproj::kproj_bda(&x, &bda.c_qk, bda.tag_qk, s);
+        for i in 0..s.n_heads {
+            let sl = |t: &Tensor| t.slice_cols(i * s.d_h, (i + 1) * s.d_h);
+            let sc = matmul(&sl(&q), &sl(&k).transpose());
+            let sp = matmul(&sl(&qp), &sl(&kp).transpose());
+            let rel = (sp.max_abs_diff(&sc) as f64) / sc.fro_norm().max(1e-9);
+            assert!(rel < 1e-3, "case {case} head {i}: rel {rel}");
+        }
+    }
+}
+
+/// BD memory formula r(m+n-r) equals actual stored elements.
+#[test]
+fn prop_memory_formula_matches_storage() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 389 + 23);
+        let m = rng.range(4, 32);
+        let n = rng.range(4, 32);
+        let r = rng.range(1, m.min(n) - 1);
+        let w = rank_r(m, n, r, case + 9000);
+        let col = bd_col(&w, r, Strategy::FirstR).unwrap();
+        assert_eq!(col.b.numel() + col.c.numel(), r * (m + n - r), "case {case}");
+        let row = bd_row(&w, r, Strategy::FirstR).unwrap();
+        assert_eq!(row.b.numel() + row.c.numel(), r * (m + n - r), "case {case}");
+    }
+}
+
+/// Quantized preparation error ordering: fp32 ≤ fp16 ≤ bf16 (NMSE),
+/// matching Table 4's columns, across random models.
+#[test]
+fn prop_dtype_error_ordering() {
+    use bda::model::{ModelConfig, Transformer};
+    use bda::prepare::prepare_model;
+    use bda::tensor::DType;
+    for case in 0..6 {
+        let mut cfg = ModelConfig::tiny();
+        cfg.n_layers = 1;
+        let m = Transformer::new_mha(cfg, case * 7 + 2);
+        let e32 = prepare_model(&m, Strategy::ResidualMin, DType::F32).unwrap().qk_nmse();
+        let e16 = prepare_model(&m, Strategy::ResidualMin, DType::F16).unwrap().qk_nmse();
+        let ebf = prepare_model(&m, Strategy::ResidualMin, DType::BF16).unwrap().qk_nmse();
+        assert!(e32 < e16, "case {case}: fp32 {e32} !< fp16 {e16}");
+        assert!(e16 < ebf, "case {case}: fp16 {e16} !< bf16 {ebf}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Property tests over coordinator invariants: no request lost or
+//! duplicated, KV blocks never leak, batch bounds respected.
+
+use bda::coordinator::kv_cache::{BlockAllocator, KvCacheConfig};
+use bda::coordinator::{
+    Batcher, BatcherConfig, Request, RequestQueue, Scheduler, SchedulerConfig,
+};
+use bda::util::rng::Rng;
+use std::time::Duration;
+
+/// Random scheduler workloads: every admitted request completes exactly
+/// once with exactly `max_new_tokens` tokens; KV pool returns to initial
+/// state; allocator invariants hold throughout.
+#[test]
+fn prop_scheduler_conservation() {
+    for case in 0..30u64 {
+        let mut rng = Rng::new(case * 61 + 5);
+        let mut sched = make_sched(rng.range(1, 8), rng.range(8, 64));
+        let free0 = sched.kv.free_blocks();
+        let n_req = rng.range(1, 24);
+        let mut expected: Vec<(u64, usize)> = Vec::new();
+        let mut pending: Vec<Request> = (0..n_req as u64)
+            .map(|i| {
+                let plen = rng.range(1, 12);
+                let new = rng.range(1, 10);
+                expected.push((i, new));
+                Request::new(i, (0..plen).map(|j| j as u32).collect(), new)
+            })
+            .collect();
+        pending.reverse();
+
+        let mut done = Vec::new();
+        let mut stall = 0;
+        while done.len() < n_req {
+            // Try to admit.
+            if let Some(req) = pending.pop() {
+                if let Err(r) = sched.admit(req) {
+                    pending.push(r);
+                }
+            }
+            let completed = sched.step().expect("step");
+            if completed.is_empty() && pending.is_empty() && sched.active_count() == 0 {
+                stall += 1;
+                assert!(stall < 100, "case {case}: deadlock with {} done", done.len());
+            }
+            done.extend(completed);
+            sched.kv.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+        // Conservation: exactly once each, correct token counts.
+        let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n_req, "case {case}: duplicate or lost responses");
+        for r in &done {
+            let want = expected.iter().find(|(id, _)| *id == r.id).unwrap().1;
+            assert_eq!(r.tokens.len(), want.max(1).min(64), "case {case} req {}", r.id);
+        }
+        assert_eq!(sched.kv.free_blocks(), free0, "case {case}: leaked blocks");
+    }
+}
+
+fn make_sched(
+    max_active: usize,
+    num_blocks: usize,
+) -> Scheduler<bda::coordinator::scheduler::test_support::MockBackend> {
+    Scheduler::new(
+        bda::coordinator::scheduler::test_support::MockBackend::new(16, 128),
+        SchedulerConfig {
+            max_active,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks },
+        },
+    )
+}
+
+/// Allocator fuzz: random register/append/fork/release sequences keep all
+/// invariants; operations on unknown ids fail cleanly without corruption.
+#[test]
+fn prop_allocator_fuzz() {
+    for case in 0..40u64 {
+        let mut rng = Rng::new(case * 127 + 11);
+        let mut alloc = BlockAllocator::new(KvCacheConfig {
+            block_size: rng.range(1, 8),
+            num_blocks: rng.range(4, 64),
+        });
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _op in 0..200 {
+            match rng.below(10) {
+                0..=3 => {
+                    let id = next_id;
+                    next_id += 1;
+                    if alloc.register(id, rng.range(1, 24)).is_ok() {
+                        live.push(id);
+                    }
+                }
+                4..=6 => {
+                    if !live.is_empty() {
+                        let id = live[rng.range(0, live.len() - 1)];
+                        let _ = alloc.append_token(id);
+                    }
+                }
+                7 => {
+                    if !live.is_empty() {
+                        let parent = live[rng.range(0, live.len() - 1)];
+                        let child = next_id;
+                        next_id += 1;
+                        if alloc.fork(parent, child).is_ok() {
+                            live.push(child);
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = rng.range(0, live.len() - 1);
+                        let id = live.swap_remove(idx);
+                        alloc.release(id).unwrap();
+                    }
+                }
+            }
+            alloc.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+        // Release everything: pool must be full again.
+        for id in live {
+            alloc.release(id).unwrap();
+        }
+        assert_eq!(alloc.free_blocks(), alloc.config.num_blocks, "case {case}");
+    }
+}
+
+/// Batcher: never exceeds max_batch, never loses or reorders requests.
+#[test]
+fn prop_batcher_bounds_and_order() {
+    for case in 0..20u64 {
+        let mut rng = Rng::new(case * 53 + 29);
+        let max_batch = rng.range(1, 9);
+        let q = RequestQueue::new(128);
+        let n = rng.range(1, 64);
+        for i in 0..n as u64 {
+            q.push(Request::new(i, vec![1], 1));
+        }
+        let b = Batcher::new(BatcherConfig { max_batch, max_wait: Duration::from_millis(0) });
+        let mut seen = Vec::new();
+        loop {
+            let batch = b.next_batch(&q, Duration::from_millis(1));
+            if batch.is_empty() {
+                break;
+            }
+            assert!(batch.len() <= max_batch, "case {case}");
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "case {case}: order/loss");
+    }
+}
