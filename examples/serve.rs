@@ -1,15 +1,14 @@
-//! End-to-end serving driver (the mandated e2e validation): loads the
-//! AOT-compiled model artifacts, spins the full coordinator (queue →
-//! dynamic batcher → continuous-batching scheduler → PJRT execute), replays
-//! a synthetic request trace against BOTH the MHA and BDA artifacts, and
-//! reports latency/throughput. Also runs the native-backend path for the
-//! incremental KV-cache decode comparison.
+//! End-to-end serving driver (the mandated e2e validation): spins the full
+//! coordinator (queue → dynamic batcher → continuous-batching scheduler)
+//! over the **paged batched decode engine** and the per-sequence native
+//! backend, replays a synthetic trace against BOTH the MHA and BDA models,
+//! and reports latency/throughput plus decode-batch occupancy. With the
+//! `pjrt` feature, also drives the AOT-compiled JAX+Pallas artifacts
+//! through PJRT (full-sequence and incremental-step executables).
 //!
 //! Run: cargo run --release --example serve [-- --requests 24]
 
-use bda::coordinator::{
-    server, NativeBackend, PjrtBackend, PjrtIncrementalBackend, Request, ServerConfig,
-};
+use bda::coordinator::{server, NativeBackend, PagedNativeBackend, Request, ServerConfig};
 use bda::eval::trace;
 use bda::model::{ModelConfig, Transformer};
 use bda::util::cli::Args;
@@ -28,17 +27,15 @@ fn make_trace(n: usize, vocab: usize, seed: u64) -> Vec<Request> {
     })
 }
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
-    let n = args.get_usize("requests", 12);
-    let cfg = ServerConfig::default();
+#[cfg(feature = "pjrt")]
+fn pjrt_sections(n: usize, cfg: ServerConfig) -> Result<()> {
+    use bda::coordinator::{Backend as _, PjrtBackend, PjrtIncrementalBackend};
 
     println!("=== PJRT artifact serving (AOT JAX+Pallas model, Rust coordinator) ===");
     let mut decodes: HashMap<&str, Vec<Vec<u32>>> = HashMap::new();
     for attention in ["mha", "bda"] {
         match PjrtBackend::open("artifacts", attention) {
             Ok(backend) => {
-                use bda::coordinator::Backend as _;
                 let t = make_trace(n, backend.vocab_size(), 7);
                 let timer = std::time::Instant::now();
                 let (mut responses, metrics) = server::replay_trace(backend, cfg, t)?;
@@ -68,7 +65,6 @@ fn main() -> Result<()> {
     for attention in ["mha", "bda"] {
         match PjrtIncrementalBackend::open("artifacts", attention) {
             Ok(backend) => {
-                use bda::coordinator::Backend as _;
                 let t = make_trace(n, backend.vocab_size(), 7);
                 let timer = std::time::Instant::now();
                 let (responses, metrics) = server::replay_trace(backend, cfg, t)?;
@@ -84,23 +80,67 @@ fn main() -> Result<()> {
             Err(e) => println!("[{attention} step] skipped: {e}"),
         }
     }
+    println!();
+    Ok(())
+}
 
-    println!("\n=== Native backend serving (incremental KV decode) ===");
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_sections(_n: usize, _cfg: ServerConfig) -> Result<()> {
+    println!("=== PJRT artifact serving: skipped (built without the `pjrt` feature) ===\n");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 12);
+    let cfg = ServerConfig::default();
+
+    pjrt_sections(n, cfg)?;
+
+    println!("=== Native serving: paged batched engine vs per-sequence decode ===");
+    let mut generations: HashMap<String, Vec<(u64, Vec<u32>)>> = HashMap::new();
     for (label, bda_mode) in [("mha", false), ("bda", true)] {
-        let model = Transformer::new_mha(ModelConfig::tiny(), 42);
+        let base = Transformer::new_mha(ModelConfig::tiny(), 42);
         let model = if bda_mode {
-            model.to_bda(bda::bd::Strategy::ResidualMin, bda::tensor::DType::F32).unwrap()
+            base.to_bda(bda::bd::Strategy::ResidualMin, bda::tensor::DType::F32).unwrap()
         } else {
-            model
+            base
         };
-        let t = make_trace(n * 2, model.config.vocab_size, 9);
-        let timer = std::time::Instant::now();
-        let (responses, metrics) = server::replay_trace(NativeBackend::new(model), cfg, t)?;
-        let wall = timer.elapsed().as_secs_f64();
+        for engine_label in ["paged", "per-seq"] {
+            let t = make_trace(n * 2, model.config.vocab_size, 9);
+            let timer = std::time::Instant::now();
+            let (mut responses, metrics) = if engine_label == "paged" {
+                let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+                server::replay_trace(backend, cfg, t)?
+            } else {
+                server::replay_trace(NativeBackend::new(model.clone()), cfg, t)?
+            };
+            let wall = timer.elapsed().as_secs_f64();
+            let snap = metrics.snapshot();
+            println!("[{label} / {engine_label}] {} requests in {wall:.2}s", responses.len());
+            println!(
+                "[{label} / {engine_label}] {} | decode occupancy {:.0}%, {:.2} tok/step",
+                snap.report(),
+                snap.decode_occupancy * 100.0,
+                snap.tokens_per_step,
+            );
+            responses.sort_by_key(|r| r.id);
+            generations.insert(
+                format!("{label}/{engine_label}"),
+                responses.into_iter().map(|r| (r.id, r.tokens)).collect(),
+            );
+        }
+        let paged = &generations[&format!("{label}/paged")];
+        let perseq = &generations[&format!("{label}/per-seq")];
         println!(
-            "[native {label}] {} requests in {wall:.2}s | {}",
-            responses.len(),
-            metrics.snapshot().report()
+            "[{label}] paged and per-seq generations identical: {}",
+            if paged == perseq { "YES (bit-exact)" } else { "NO — investigate!" }
+        );
+    }
+    if let (Some(a), Some(b)) = (generations.get("mha/paged"), generations.get("bda/paged")) {
+        println!(
+            "MHA and BDA paged-engine generations identical: {}",
+            if a == b { "YES (lossless)" } else { "NO — investigate!" }
         );
     }
     Ok(())

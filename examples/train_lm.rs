@@ -9,6 +9,8 @@
 //!
 //! Run: cargo run --release --example train_lm [-- --steps 60 --scales 1,4]
 
+#[cfg(feature = "pjrt")]
+mod pjrt_driver {
 use bda::bench_support::Table;
 use bda::eval::bleu;
 use bda::eval::corpus::{translation_pairs, TranslationPair};
@@ -56,7 +58,7 @@ fn quality_proxy(outcome: &TrainOutcome) -> f64 {
     100.0 * (-(outcome.final_loss as f64) / 2.0).exp()
 }
 
-fn main() -> Result<()> {
+pub fn run() -> Result<()> {
     let args = Args::from_env();
     let steps = args.get_usize("steps", 40);
     let scales: Vec<f32> = args
@@ -99,4 +101,18 @@ fn main() -> Result<()> {
          hyperparameters across all LR scales (no retuning)."
     );
     Ok(())
+}
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_driver::run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "train_lm drives the AOT train_step artifacts through PJRT; \
+         rebuild with --features pjrt (and the local `xla` path dependency)."
+    );
 }

@@ -1,11 +1,13 @@
 //! Attention operators: the MHA reference (Alg. 1), BD Attention (Alg. 2),
 //! the PIFA-style per-head-pivot baseline, the structured-pruning baseline,
 //! standalone k/v projection operators (the Fig. 2b / Tables 6–7 bench
-//! targets), and decoupled RoPE (Appendix D).
+//! targets), batched paged attention (the serving engine's decode
+//! operator), and decoupled RoPE (Appendix D).
 
 pub mod bda;
 pub mod kproj;
 pub mod mha;
+pub mod paged;
 pub mod pifa;
 pub mod pruning;
 pub mod rope;

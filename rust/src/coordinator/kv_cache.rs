@@ -40,6 +40,19 @@ struct SeqTable {
     len_tokens: usize,
 }
 
+/// Where an appended token's K/V entry must be written (see
+/// [`BlockAllocator::append_token_cow`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AppendSlot {
+    /// Block leased to (or already owned by) the sequence for this token.
+    pub block: BlockId,
+    /// Row within the block (`position % block_size`).
+    pub slot: usize,
+    /// When copy-on-write triggered: the shared block whose contents must
+    /// be copied into `block` before writing the new row.
+    pub copied_from: Option<BlockId>,
+}
+
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum KvError {
     #[error("out of KV blocks (need {need}, free {free})")]
@@ -93,20 +106,54 @@ impl BlockAllocator {
     }
 
     /// Extend a sequence by one token, allocating a block on boundary.
+    /// Copy-on-write-safe (see [`BlockAllocator::append_token_cow`]); use
+    /// the `_cow` variant when the caller owns real K/V storage and needs
+    /// the write position.
     pub fn append_token(&mut self, seq: SeqId) -> Result<(), KvError> {
+        self.append_token_cow(seq).map(|_| ())
+    }
+
+    /// Extend a sequence by one token and return where its K/V entry must
+    /// be written. Three cases:
+    ///
+    /// * the token lands in a fresh block (boundary): allocate one;
+    /// * it lands in a block this sequence owns exclusively: write in place;
+    /// * it lands in a block shared with a fork ancestor/sibling
+    ///   (`ref_count > 1`): copy-on-write — lease a private replacement
+    ///   block and report `copied_from` so the storage owner can copy the
+    ///   block's K/V data before writing. Writing into a shared block
+    ///   would corrupt every other sequence referencing it.
+    pub fn append_token_cow(&mut self, seq: SeqId) -> Result<AppendSlot, KvError> {
         let table = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        let new_len = table.len_tokens + 1;
-        let need = new_len.div_ceil(self.config.block_size);
-        if need > table.blocks.len() {
+        let pos = table.len_tokens;
+        let idx = pos / self.config.block_size;
+        let slot = pos % self.config.block_size;
+        if idx == table.blocks.len() {
+            // Boundary: the token opens a fresh, private block.
             let Some(b) = self.free.pop() else {
                 return Err(KvError::OutOfBlocks { need: 1, free: 0 });
             };
             debug_assert_eq!(self.ref_counts[b], 0);
             self.ref_counts[b] = 1;
             table.blocks.push(b);
+            table.len_tokens = pos + 1;
+            return Ok(AppendSlot { block: b, slot, copied_from: None });
         }
-        table.len_tokens = new_len;
-        Ok(())
+        let b = table.blocks[idx];
+        if self.ref_counts[b] > 1 {
+            // Shared tail block: copy-on-write.
+            let Some(nb) = self.free.pop() else {
+                return Err(KvError::OutOfBlocks { need: 1, free: 0 });
+            };
+            debug_assert_eq!(self.ref_counts[nb], 0);
+            self.ref_counts[b] -= 1;
+            self.ref_counts[nb] = 1;
+            table.blocks[idx] = nb;
+            table.len_tokens = pos + 1;
+            return Ok(AppendSlot { block: nb, slot, copied_from: Some(b) });
+        }
+        table.len_tokens = pos + 1;
+        Ok(AppendSlot { block: b, slot, copied_from: None })
     }
 
     /// Fork `child` from `parent`, sharing all current blocks (copy-on-
@@ -250,6 +297,63 @@ mod tests {
         a.release(2).unwrap();
         assert_eq!(a.used_blocks(), 0);
         a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_append_on_shared_tail_block() {
+        let mut a = alloc(8);
+        a.register(1, 5).unwrap(); // blocks [b0, b1]; b1 holds 1 of 4 slots
+        a.fork(1, 2).unwrap();
+        let parent_blocks = a.seq_blocks(1).unwrap().to_vec();
+
+        // Child appends into the shared tail block -> copy-on-write.
+        let s = a.append_token_cow(2).unwrap();
+        assert_eq!(s.slot, 1);
+        assert_eq!(s.copied_from, Some(parent_blocks[1]));
+        assert_ne!(s.block, parent_blocks[1], "COW must lease a private block");
+        assert_eq!(a.seq_blocks(1).unwrap(), &parent_blocks[..], "parent table untouched");
+        assert_eq!(a.seq_blocks(2).unwrap()[1], s.block);
+        a.check_invariants().unwrap();
+
+        // Parent now owns b1 exclusively again: its append writes in place.
+        let p = a.append_token_cow(1).unwrap();
+        assert_eq!(p.copied_from, None);
+        assert_eq!(p.block, parent_blocks[1]);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_forked_child_keeps_parent_blocks() {
+        // Regression (fork + release accounting): freeing a forked child —
+        // including its private COW blocks — must not free blocks still
+        // referenced by the parent.
+        let mut a = alloc(8);
+        a.register(1, 6).unwrap(); // 2 blocks
+        a.fork(1, 2).unwrap();
+        a.append_token_cow(2).unwrap(); // COW: child now holds 1 shared + 1 private
+        assert_eq!(a.used_blocks(), 3);
+        a.release(2).unwrap();
+        assert_eq!(a.used_blocks(), 2, "parent's blocks must survive child release");
+        // Parent is fully usable afterwards.
+        for _ in 0..4 {
+            a.append_token(1).unwrap();
+        }
+        a.check_invariants().unwrap();
+        a.release(1).unwrap();
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_append_reports_out_of_blocks() {
+        let mut a = alloc(2);
+        a.register(1, 5).unwrap(); // uses both blocks
+        a.fork(1, 2).unwrap();
+        let err = a.append_token_cow(2).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        // Failure must not corrupt state.
+        a.check_invariants().unwrap();
+        assert_eq!(a.seq_len(2), Some(5));
     }
 
     #[test]

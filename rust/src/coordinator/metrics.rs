@@ -21,6 +21,9 @@ struct Inner {
     tokens_out: u64,
     batches: u64,
     batch_size_sum: u64,
+    decode_steps: u64,
+    decode_tokens: u64,
+    occupancy_sum: f64,
     latency: Histogram,
     ttft: Histogram,
 }
@@ -36,6 +39,12 @@ pub struct Snapshot {
     pub tokens_out: u64,
     pub tokens_per_sec: f64,
     pub mean_batch_size: f64,
+    /// Number of batched decode iterations the engine ran.
+    pub decode_steps: u64,
+    /// Mean sequences decoded per iteration (tokens produced per step).
+    pub tokens_per_step: f64,
+    /// Mean decode-batch occupancy: batch size / configured max_active.
+    pub decode_occupancy: f64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_mean: f64,
@@ -60,6 +69,9 @@ impl Metrics {
                 tokens_out: 0,
                 batches: 0,
                 batch_size_sum: 0,
+                decode_steps: 0,
+                decode_tokens: 0,
+                occupancy_sum: 0.0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
             }),
@@ -81,6 +93,17 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batch_size_sum += size as u64;
+    }
+
+    /// One batched decode iteration: `batch` sequences stepped together
+    /// out of `capacity` (= scheduler `max_active`) decode slots.
+    pub fn decode_step(&self, batch: usize, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_steps += 1;
+        g.decode_tokens += batch as u64;
+        if capacity > 0 {
+            g.occupancy_sum += batch as f64 / capacity as f64;
+        }
     }
 
     pub fn tokens_generated(&self, n: usize) {
@@ -110,6 +133,17 @@ impl Metrics {
             } else {
                 0.0
             },
+            decode_steps: g.decode_steps,
+            tokens_per_step: if g.decode_steps > 0 {
+                g.decode_tokens as f64 / g.decode_steps as f64
+            } else {
+                0.0
+            },
+            decode_occupancy: if g.decode_steps > 0 {
+                g.occupancy_sum / g.decode_steps as f64
+            } else {
+                0.0
+            },
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
             latency_mean: g.latency.mean(),
@@ -123,7 +157,8 @@ impl Snapshot {
     pub fn report(&self) -> String {
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
-             ({:.1} tok/s) | batch avg {:.2} | latency p50 {:.1}ms p95 {:.1}ms | \
+             ({:.1} tok/s) | batch avg {:.2} | decode: {} steps, {:.2} tok/step, \
+             {:.0}% occupancy | latency p50 {:.1}ms p95 {:.1}ms | \
              ttft p50 {:.1}ms p95 {:.1}ms",
             self.requests_admitted,
             self.requests_completed,
@@ -132,6 +167,9 @@ impl Snapshot {
             self.tokens_out,
             self.tokens_per_sec,
             self.mean_batch_size,
+            self.decode_steps,
+            self.tokens_per_step,
+            self.decode_occupancy * 100.0,
             self.latency_p50 * 1e3,
             self.latency_p95 * 1e3,
             self.ttft_p50 * 1e3,
@@ -161,6 +199,18 @@ mod tests {
         assert_eq!(s.tokens_out, 7);
         assert_eq!(s.mean_batch_size, 2.0);
         assert!(s.latency_p50 > 0.0);
+    }
+
+    #[test]
+    fn decode_step_counters() {
+        let m = Metrics::new();
+        m.decode_step(4, 8);
+        m.decode_step(8, 8);
+        let s = m.snapshot();
+        assert_eq!(s.decode_steps, 2);
+        assert_eq!(s.tokens_per_step, 6.0);
+        assert!((s.decode_occupancy - 0.75).abs() < 1e-12);
+        assert!(s.report().contains("tok/step"));
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! L3 serving coordinator — the system the paper's inference speedups plug
 //! into (vLLM-router-shaped): bounded admission queue → dynamic batcher →
-//! continuous-batching scheduler over a model backend (PJRT artifact or
-//! native Rust transformer) with a block-based KV-cache manager and
-//! latency/throughput metrics. Python is never on this path.
+//! continuous-batching scheduler over a model backend (the paged batched
+//! decode engine by default, the per-sequence native transformer, or the
+//! PJRT artifact backend behind the `pjrt` feature) with a block-based
+//! KV-cache manager and latency/throughput metrics. Python is never on
+//! this path.
 
 pub mod batcher;
 pub mod kv_cache;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_backend;
 pub mod queue;
 pub mod request;
@@ -16,8 +19,13 @@ pub mod server;
 pub use batcher::{Batcher, BatcherConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use metrics::Metrics;
+#[cfg(feature = "pjrt")]
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
 pub use queue::RequestQueue;
 pub use request::{Request, RequestId, Response};
 pub use scheduler::{Backend, NativeBackend, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig};
+
+// The paged batched decode engine is the default native serving backend;
+// re-exported here so serving code imports one module.
+pub use crate::engine::PagedNativeBackend;

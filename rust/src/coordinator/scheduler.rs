@@ -7,11 +7,13 @@
 //! for deterministic tests.
 
 use super::kv_cache::{BlockAllocator, KvCacheConfig, SeqId};
+use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::model::transformer::{KvCache, Transformer};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Model compute interface used by the scheduler.
@@ -109,6 +111,7 @@ pub struct Scheduler<B: Backend> {
     active: Vec<ActiveSeq>,
     next_seq: SeqId,
     seq_of_req: HashMap<u64, SeqId>,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl<B: Backend> Scheduler<B> {
@@ -120,7 +123,14 @@ impl<B: Backend> Scheduler<B> {
             active: Vec::new(),
             next_seq: 1,
             seq_of_req: HashMap::new(),
+            metrics: None,
         }
+    }
+
+    /// Attach a metrics sink; each decode iteration then emits its batch
+    /// size and occupancy (tokens-per-step / decode-batch counters).
+    pub fn set_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
     }
 
     pub fn active_count(&self) -> usize {
@@ -184,6 +194,9 @@ impl<B: Backend> Scheduler<B> {
             .iter()
             .map(|a| (self.seq_of_req[&a.req.id], a.last_token))
             .collect();
+        if let Some(m) = &self.metrics {
+            m.decode_step(batch.len(), self.config.max_active);
+        }
         let logits = self.backend.decode(&batch)?;
         for (a, l) in self.active.iter_mut().zip(logits.iter()) {
             let seq = self.seq_of_req[&a.req.id];

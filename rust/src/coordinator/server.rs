@@ -37,6 +37,7 @@ impl Server {
         let m = metrics.clone();
         let engine = std::thread::spawn(move || -> Result<()> {
             let mut sched = Scheduler::new(backend, config.scheduler);
+            sched.set_metrics(m.clone());
             let batcher = Batcher::new(config.batcher);
             loop {
                 // Admit a batch (don't block long if sequences are active).
@@ -138,6 +139,7 @@ pub fn replay_trace<B: Backend>(
 ) -> Result<(Vec<Response>, Arc<Metrics>)> {
     let metrics = Arc::new(Metrics::new());
     let mut sched = Scheduler::new(backend, config.scheduler);
+    sched.set_metrics(metrics.clone());
     let mut out = Vec::new();
     let mut pending: std::collections::VecDeque<Request> = trace.into();
     while !pending.is_empty() || sched.active_count() > 0 {

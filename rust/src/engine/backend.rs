@@ -1,0 +1,348 @@
+//! `PagedNativeBackend` — the paged batched decode engine.
+//!
+//! Drop-in [`Backend`] for the continuous-batching scheduler that replaces
+//! [`crate::coordinator::NativeBackend`]'s one-sequence-at-a-time decode
+//! (private contiguous `KvCache` per sequence) with:
+//!
+//! * a single [`PagedKvPool`] holding every sequence's K/V in shared
+//!   block-granular storage, leased through the ref-counted
+//!   [`BlockAllocator`];
+//! * **one batched decode step** for the whole active set: one embedding
+//!   gather, per layer one batched RMSNorm + one batched Q/K/V projection
+//!   GEMM + one batched paged-attention call + one batched output/FFN
+//!   pass, and a single logits GEMM against a cached transposed embedding
+//!   — B rows through every weight matrix instead of B separate passes;
+//! * ref-counted prefix sharing: [`PagedNativeBackend::fork`] duplicates
+//!   block *tables* only, so forked sequences dedup K/V memory, with
+//!   copy-on-write the first time a fork writes into a shared tail block.
+//!
+//! Every row-level operation (embedding, RMSNorm, GEMM row, attention
+//! accumulation order, FFN, logits) is arithmetically identical to the
+//! per-sequence path, so batched paged decode returns *bit-identical*
+//! logits to `Transformer::decode_step` for MHA and BDA alike — the
+//! paper's losslessness claim carried through the serving engine (see
+//! `tests/prop_coordinator.rs`).
+
+use crate::attention::paged::{paged_attention_decode, PagedSeq};
+use crate::coordinator::kv_cache::{BlockAllocator, KvCacheConfig, KvError, SeqId};
+use crate::coordinator::scheduler::Backend;
+use crate::model::transformer::{KvCache, Transformer};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+
+/// Paged batched serving backend over the native Rust transformer.
+pub struct PagedNativeBackend {
+    pub model: Transformer,
+    /// Block bookkeeping: tables, ref counts, copy-on-write decisions.
+    pub alloc: BlockAllocator,
+    /// Block storage: the K/V rows the tables point at.
+    pool: super::paged_kv::PagedKvPool,
+    /// Cached `embed.transpose()` for the tied LM head (the per-sequence
+    /// path re-transposes it every decode step).
+    embed_t: Tensor,
+}
+
+impl PagedNativeBackend {
+    pub fn new(model: Transformer, kv: KvCacheConfig) -> PagedNativeBackend {
+        let widths: Vec<usize> =
+            model.blocks.iter().map(|b| b.attn.effective_shape().proj_width()).collect();
+        let embed_t = model.embed.transpose();
+        PagedNativeBackend {
+            alloc: BlockAllocator::new(kv),
+            pool: super::paged_kv::PagedKvPool::new(kv, &widths),
+            embed_t,
+            model,
+        }
+    }
+
+    /// Pool sized by the default [`KvCacheConfig`].
+    pub fn with_default_pool(model: Transformer) -> PagedNativeBackend {
+        PagedNativeBackend::new(model, KvCacheConfig::default())
+    }
+
+    /// Fork `child` from `parent`: shares every current block (table copy +
+    /// ref-count bump), so the fork costs zero K/V memory until the child
+    /// diverges — at which point copy-on-write gives it a private tail
+    /// block. The K/V dedup counterpart of the allocator-level `fork`.
+    ///
+    /// Note: when this backend is driven by a
+    /// [`crate::coordinator::Scheduler`], the scheduler keeps its own
+    /// admission-side [`BlockAllocator`] that knows nothing about forks
+    /// made here — fork through the scheduler's allocator as well, or use
+    /// this API only when driving the engine directly (see ROADMAP
+    /// "scheduler preemption / capacity unification").
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), KvError> {
+        self.alloc.fork(parent, child)
+    }
+
+    /// Total pool capacity in bytes at the model's logical dtype.
+    pub fn kv_pool_bytes(&self) -> usize {
+        self.pool.bytes(self.model.dtype)
+    }
+
+    /// Blocks currently leased (dedup makes this less than the sum of
+    /// per-sequence lengths when forks share prefixes).
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    /// Scatter a contiguous per-layer K/V cache (as produced by
+    /// `Transformer::prefill`) into this sequence's leased blocks.
+    fn scatter_prefill(&mut self, seq: SeqId, cache: &KvCache) -> Result<()> {
+        let bs = self.alloc.config.block_size;
+        let blocks = self
+            .alloc
+            .seq_blocks(seq)
+            .ok_or_else(|| anyhow!("scatter: unknown seq {seq}"))?
+            .to_vec();
+        for (li, layer) in cache.layers.iter().enumerate() {
+            let width = layer.width;
+            debug_assert_eq!(width, self.pool.width(li));
+            for t in 0..layer.len {
+                self.pool.write_row(
+                    li,
+                    blocks[t / bs],
+                    t % bs,
+                    &layer.k[t * width..(t + 1) * width],
+                    &layer.v[t * width..(t + 1) * width],
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for PagedNativeBackend {
+    fn vocab_size(&self) -> usize {
+        self.model.config.vocab_size
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.model.config.max_seq_len
+    }
+
+    fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("prefill: empty prompt for seq {seq}");
+        }
+        self.alloc
+            .register(seq, prompt.len())
+            .map_err(|e| anyhow!("prefill seq {seq}: {e}"))?;
+        // Prompt processing reuses the reference prefill (identical logits
+        // by construction); the engine's batching win is the decode loop,
+        // where steps outnumber prefills max_new_tokens to one.
+        let mut cache = KvCache::new(self.model.config.n_layers);
+        let logits = self.model.prefill(&mut cache, prompt);
+        self.scatter_prefill(seq, &cache)?;
+        Ok(logits.data)
+    }
+
+    /// The batched decode step: all sequences advance one token in one
+    /// pass over the model.
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = seqs.len();
+        let d = self.model.config.d_model;
+
+        // Lease a write slot per sequence (copy-on-write against forks),
+        // then embed each last token at its own position.
+        let mut x = Tensor::zeros(&[b, d]);
+        let mut slots = Vec::with_capacity(b);
+        let mut lens = Vec::with_capacity(b);
+        for (i, &(id, tok)) in seqs.iter().enumerate() {
+            let pos = self
+                .alloc
+                .seq_len(id)
+                .ok_or_else(|| anyhow!("decode: unknown seq {id}"))?;
+            let slot = self
+                .alloc
+                .append_token_cow(id)
+                .map_err(|e| anyhow!("decode seq {id}: {e}"))?;
+            if let Some(src) = slot.copied_from {
+                self.pool.copy_block(src, slot.block);
+            }
+            let row = self.model.embed_tokens(&[tok], pos);
+            x.row_mut(i).copy_from_slice(row.row(0));
+            slots.push(slot);
+            lens.push(pos + 1);
+        }
+
+        // Block tables are final once every append above has run, so the
+        // gather views are built once and shared by all layers.
+        let views: Vec<PagedSeq> = seqs
+            .iter()
+            .zip(lens.iter())
+            .map(|(&(id, _), &len)| PagedSeq {
+                blocks: self.alloc.seq_blocks(id).expect("registered above"),
+                len,
+            })
+            .collect();
+
+        for (li, block) in self.model.blocks.iter().enumerate() {
+            let s = block.attn.effective_shape();
+            let width = s.proj_width();
+            let h = x.rmsnorm(&block.norm1, 1e-5);
+            let (q, k, v) = block.attn.project_qkv(&h);
+            for (i, slot) in slots.iter().enumerate() {
+                self.pool.write_row(
+                    li,
+                    slot.block,
+                    slot.slot,
+                    &k.data[i * width..(i + 1) * width],
+                    &v.data[i * width..(i + 1) * width],
+                );
+            }
+            let layer = self.pool.layer_view(li);
+            let attn_out = paged_attention_decode(&q, &layer, &views, s);
+            let y = block.attn.output(&attn_out);
+            let x1 = x.add(&y);
+            x = block.ffn(&x1);
+        }
+
+        let h = x.rmsnorm(&self.model.norm_f, 1e-5);
+        let logits = matmul(&h, &self.embed_t);
+        Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        // Blocks return to the pool when their ref count hits zero; forks
+        // still holding shared blocks keep them alive.
+        let _ = self.alloc.release(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bd::Strategy;
+    use crate::model::ModelConfig;
+    use crate::tensor::DType;
+
+    fn kv() -> KvCacheConfig {
+        KvCacheConfig { block_size: 4, num_blocks: 64 }
+    }
+
+    #[test]
+    fn prefill_matches_reference() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 5);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        let prompt = [7u32, 23, 5, 91, 14];
+        let got = engine.prefill(1, &prompt).unwrap();
+        let mut cache = KvCache::new(model.config.n_layers);
+        let want = model.prefill(&mut cache, &prompt);
+        assert_eq!(got, want.data);
+    }
+
+    #[test]
+    fn batched_decode_is_bit_identical_to_per_seq() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 9);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 4, 17, 200, 31], &[250]];
+        let mut caches = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            engine.prefill(i as SeqId, p).unwrap();
+            let mut c = KvCache::new(model.config.n_layers);
+            let _ = model.prefill(&mut c, p);
+            caches.push(c);
+        }
+        for round in 0..4u32 {
+            let batch: Vec<(SeqId, u32)> =
+                (0..3).map(|i| (i as SeqId, round * 3 + i as u32)).collect();
+            let got = engine.decode(&batch).unwrap();
+            for (i, c) in caches.iter_mut().enumerate() {
+                let want = model.decode_step(c, batch[i].1);
+                assert_eq!(got[i], want.data, "round {round} seq {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bda_batched_decode_matches_bda_per_seq() {
+        let mha = Transformer::new_mha(ModelConfig::tiny(), 13);
+        let model = mha.to_bda(Strategy::ResidualMin, DType::F32).unwrap();
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        engine.prefill(1, &[5, 6, 7, 8, 9]).unwrap();
+        let mut cache = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut cache, &[5, 6, 7, 8, 9]);
+        for tok in [3u32, 77, 12] {
+            let got = engine.decode(&[(1, tok)]).unwrap();
+            let want = model.decode_step(&mut cache, tok);
+            assert_eq!(got[0], want.data);
+        }
+    }
+
+    #[test]
+    fn fork_dedups_kv_and_cow_isolates_parent() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 21);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        let prompt = [11u32, 42, 3, 8, 100]; // 5 tokens -> partial tail block
+        engine.prefill(1, &prompt).unwrap();
+        let used_parent = engine.used_blocks();
+
+        // Fork shares all blocks: zero extra K/V memory.
+        engine.fork(1, 2).unwrap();
+        assert_eq!(engine.used_blocks(), used_parent, "fork must dedup K/V blocks");
+
+        // Child decodes first: copy-on-write in the shared tail block.
+        let child = engine.decode(&[(2, 7)]).unwrap();
+        engine.alloc.check_invariants().unwrap();
+
+        // Parent decodes the same token afterwards; its storage must be
+        // untouched by the child's write — verify against the reference.
+        let parent = engine.decode(&[(1, 7)]).unwrap();
+        let mut cache = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut cache, &prompt);
+        let want = model.decode_step(&mut cache, 7);
+        assert_eq!(parent[0], want.data, "child COW corrupted the parent");
+        assert_eq!(child[0], want.data, "identical histories must agree");
+
+        // Releasing the child frees only its private COW block.
+        engine.release(2);
+        assert_eq!(engine.used_blocks(), used_parent);
+        engine.release(1);
+        assert_eq!(engine.used_blocks(), 0);
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn serves_through_the_scheduler() {
+        use crate::coordinator::{Request, Scheduler, SchedulerConfig};
+        let model = Transformer::new_mha(ModelConfig::tiny(), 11);
+        let engine = PagedNativeBackend::new(model, kv());
+        let mut s = Scheduler::new(
+            engine,
+            SchedulerConfig { max_active: 8, eos_token: None, kv: kv() },
+        );
+        for i in 0..6u64 {
+            s.admit(Request::new(i, vec![5 + i as u32, 6, 7], 4)).unwrap();
+        }
+        let done = s.drain().unwrap();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|r| r.tokens.len() == 4));
+        assert_eq!(s.backend.used_blocks(), 0, "completed seqs must free their blocks");
+    }
+
+    #[test]
+    fn scheduler_serving_matches_per_seq_backend() {
+        use crate::coordinator::{NativeBackend, Request, Scheduler, SchedulerConfig};
+        let model = Transformer::new_mha(ModelConfig::tiny(), 17);
+        let cfg = SchedulerConfig { max_active: 8, eos_token: None, kv: kv() };
+        let mut paged = Scheduler::new(PagedNativeBackend::new(model.clone(), kv()), cfg);
+        let mut perseq = Scheduler::new(NativeBackend::new(model), cfg);
+        for i in 0..5u64 {
+            let prompt: Vec<u32> = (0..3 + i).map(|j| (j * 31 + i) as u32).collect();
+            paged.admit(Request::new(i, prompt.clone(), 6)).unwrap();
+            perseq.admit(Request::new(i, prompt, 6)).unwrap();
+        }
+        let mut a = paged.drain().unwrap();
+        let mut b = perseq.drain().unwrap();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        let ta: Vec<_> = a.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let tb: Vec<_> = b.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        assert_eq!(ta, tb, "paged batched serving must reproduce per-seq decode");
+    }
+}

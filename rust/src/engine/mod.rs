@@ -1,0 +1,22 @@
+//! The paged batched decode engine — the default native serving path.
+//!
+//! Two halves:
+//!
+//! * [`paged_kv::PagedKvPool`] — contiguous per-layer K/V block storage,
+//!   the real memory behind the coordinator's ref-counted
+//!   [`crate::coordinator::kv_cache::BlockAllocator`] bookkeeping;
+//! * [`backend::PagedNativeBackend`] — a drop-in scheduler
+//!   [`crate::coordinator::Backend`] that decodes the entire active set in
+//!   a single batched step against paged storage (batched projections +
+//!   [`crate::attention::paged::paged_attention_decode`] + one logits
+//!   GEMM), with fork/copy-on-write prefix sharing that dedups K/V memory.
+//!
+//! BDA's losslessness (every QK inner product preserved, §3.4) makes the
+//! engine attention-variant-agnostic: the same pool and batched step serve
+//! MHA and BDA models bit-identically to per-sequence decode.
+
+pub mod backend;
+pub mod paged_kv;
+
+pub use backend::PagedNativeBackend;
+pub use paged_kv::PagedKvPool;

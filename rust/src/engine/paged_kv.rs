@@ -1,0 +1,149 @@
+//! Paged K/V storage pool: the *real* memory behind the block allocator's
+//! bookkeeping.
+//!
+//! Per layer, one contiguous K tensor and one contiguous V tensor of
+//! `num_blocks * block_size` rows, indexed by `BlockId` — the layout
+//! vLLM-style paged attention gathers from. Layer widths may differ (the
+//! pruning baseline keeps fewer channels), so each layer sizes its own
+//! buffers. Blocks are plain storage here; ownership, ref counts, and
+//! copy-on-write *decisions* live in
+//! [`crate::coordinator::kv_cache::BlockAllocator`] — this pool only
+//! executes the resulting writes and block copies.
+
+use crate::attention::paged::PagedLayerView;
+use crate::coordinator::kv_cache::{BlockId, KvCacheConfig};
+use crate::tensor::DType;
+
+#[derive(Debug)]
+struct LayerPool {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    width: usize,
+}
+
+/// Block-granular K/V storage for every layer of a model.
+#[derive(Debug)]
+pub struct PagedKvPool {
+    pub config: KvCacheConfig,
+    layers: Vec<LayerPool>,
+}
+
+impl PagedKvPool {
+    /// Allocate a pool with one (K, V) buffer pair per layer, `widths[i]`
+    /// values per token row in layer `i`.
+    pub fn new(config: KvCacheConfig, widths: &[usize]) -> PagedKvPool {
+        let rows = config.num_blocks * config.block_size;
+        let layers = widths
+            .iter()
+            .map(|&w| LayerPool { k: vec![0.0; rows * w], v: vec![0.0; rows * w], width: w })
+            .collect();
+        PagedKvPool { config, layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn width(&self, layer: usize) -> usize {
+        self.layers[layer].width
+    }
+
+    /// Total pool bytes at a logical dtype (capacity, not occupancy).
+    pub fn bytes(&self, dtype: DType) -> usize {
+        self.layers.iter().map(|l| (l.k.len() + l.v.len()) * dtype.size_bytes()).sum()
+    }
+
+    /// Write one token's K/V row into `(block, slot)` of a layer.
+    pub fn write_row(
+        &mut self,
+        layer: usize,
+        block: BlockId,
+        slot: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert!(slot < self.config.block_size);
+        let l = &mut self.layers[layer];
+        debug_assert_eq!(k_row.len(), l.width);
+        debug_assert_eq!(v_row.len(), l.width);
+        let base = (block * self.config.block_size + slot) * l.width;
+        l.k[base..base + l.width].copy_from_slice(k_row);
+        l.v[base..base + l.width].copy_from_slice(v_row);
+    }
+
+    /// Copy a whole block's K/V across every layer (the data half of
+    /// copy-on-write; the allocator decides *when*).
+    pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        let bs = self.config.block_size;
+        for l in &mut self.layers {
+            let n = bs * l.width;
+            l.k.copy_within(src * n..src * n + n, dst * n);
+            l.v.copy_within(src * n..src * n + n, dst * n);
+        }
+    }
+
+    /// Borrow one layer's storage for the paged attention operator.
+    pub fn layer_view(&self, layer: usize) -> PagedLayerView<'_> {
+        let l = &self.layers[layer];
+        PagedLayerView {
+            k: &l.k,
+            v: &l.v,
+            block_size: self.config.block_size,
+            width: l.width,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagedKvPool {
+        PagedKvPool::new(KvCacheConfig { block_size: 4, num_blocks: 8 }, &[6, 6])
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut p = pool();
+        let k: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..6).map(|i| 10.0 + i as f32).collect();
+        p.write_row(1, 3, 2, &k, &v);
+        let view = p.layer_view(1);
+        let base = view.row_offset(&[0, 3], 6); // token 6 -> block 3, slot 2
+        assert_eq!(&view.k[base..base + 6], &k[..]);
+        assert_eq!(&view.v[base..base + 6], &v[..]);
+        // Other layer untouched.
+        assert!(p.layer_view(0).k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_block_copies_all_layers() {
+        let mut p = pool();
+        for layer in 0..2 {
+            for slot in 0..4 {
+                let row = vec![(layer * 10 + slot) as f32; 6];
+                p.write_row(layer, 2, slot, &row, &row);
+            }
+        }
+        p.copy_block(2, 5);
+        for layer in 0..2 {
+            let view = p.layer_view(layer);
+            for slot in 0..4 {
+                let src = view.row_offset(&[0, 0, 2], 8 + slot);
+                let dst = view.row_offset(&[0, 5], 4 + slot);
+                assert_eq!(view.k[src..src + 6], view.k[dst..dst + 6]);
+                assert_eq!(view.v[src..src + 6], view.v[dst..dst + 6]);
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let p = pool();
+        // 2 layers * 2 tensors * 8 blocks * 4 slots * 6 wide * 4 bytes.
+        assert_eq!(p.bytes(DType::F32), 2 * 2 * 8 * 4 * 6 * 4);
+        assert_eq!(p.bytes(DType::F16), 2 * 2 * 8 * 4 * 6 * 2);
+        assert_eq!(p.n_layers(), 2);
+        assert_eq!(p.width(0), 6);
+    }
+}

@@ -4,25 +4,33 @@
 //! Decomposition* (Jialin Zhao, 2025): a lossless algorithmic reformulation
 //! of multi-head attention built as a three-layer Rust + JAX + Pallas stack.
 //!
-//! - **L3 (this crate):** serving coordinator (router, dynamic batcher,
-//!   KV-cache, scheduler), the BD math library, pure-Rust attention
-//!   operators (MHA / BDA / PIFA-style), model definitions, and evaluation
-//!   harnesses for every table and figure in the paper.
+//! - **L3 (this crate):** the serving coordinator (router, dynamic
+//!   batcher, ref-counted block KV-cache, continuous-batching scheduler)
+//!   over the **paged batched decode engine** ([`engine`]): a shared
+//!   block-granular K/V storage pool plus a single batched decode step
+//!   that advances every active sequence at once through paged attention,
+//!   with fork/copy-on-write prefix sharing. Alongside it: the BD math
+//!   library, pure-Rust attention operators (MHA / BDA / PIFA-style /
+//!   paged), model definitions, and evaluation harnesses for every table
+//!   and figure in the paper.
 //! - **L2/L1 (`python/compile/`):** JAX transformer + Pallas kernels,
 //!   AOT-lowered once to `artifacts/*.hlo.txt` and executed from Rust via
-//!   PJRT ([`runtime`]). Python is never on the request path.
+//!   PJRT ([`runtime`], behind the `pjrt` feature). Python is never on the
+//!   request path.
 //!
 //! Entry points: [`bd`] for the decomposition, [`attention`] for the
-//! operators, [`prepare`] for Algorithm 3 model conversion, [`coordinator`]
-//! for serving.
+//! operators, [`prepare`] for Algorithm 3 model conversion, [`engine`] for
+//! the paged decode engine, [`coordinator`] for serving.
 
 pub mod bd;
 pub mod model;
 pub mod prepare;
 pub mod attention;
 pub mod coordinator;
+pub mod engine;
 pub mod bench_support;
 pub mod eval;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod linalg;
 pub mod tensor;

@@ -12,7 +12,7 @@
 
 use bda::attention::AttnShape;
 use bda::bd::{cost, Strategy};
-use bda::coordinator::{self, NativeBackend, ServerConfig};
+use bda::coordinator::{self, NativeBackend, PagedNativeBackend, ServerConfig};
 use bda::eval::{perplexity, trace};
 use bda::model::{ModelConfig, Transformer};
 use bda::prepare::prepare_model;
@@ -138,16 +138,27 @@ fn cmd_serve(args: &Args) -> i32 {
         model
     };
     let n = args.get_usize("requests", 32);
+    let backend = args.get_or("backend", "paged").to_string();
+    if backend != "paged" && backend != "per-seq" {
+        eprintln!("unknown --backend {backend}; expected paged | per-seq");
+        return 2;
+    }
     let cfg = ServerConfig::default();
     let t = trace::generate(trace::TraceConfig {
         n_requests: n,
         vocab_size: model.config.vocab_size,
         ..Default::default()
     });
-    println!("serving {n} requests on {} [{attention}]...", model.config.name);
+    println!("serving {n} requests on {} [{attention} / {backend}]...", model.config.name);
     let timer = Timer::start();
-    let (responses, metrics) =
-        coordinator::server::replay_trace(NativeBackend::new(model), cfg, t).expect("serve");
+    let result = if backend == "per-seq" {
+        coordinator::server::replay_trace(NativeBackend::new(model), cfg, t)
+    } else {
+        // Default: the paged batched decode engine.
+        let engine = PagedNativeBackend::new(model, cfg.scheduler.kv);
+        coordinator::server::replay_trace(engine, cfg, t)
+    };
+    let (responses, metrics) = result.expect("serve");
     let secs = timer.elapsed_secs();
     println!("{}", metrics.snapshot().report());
     println!("wall: {secs:.2}s, completed {}", responses.len());
@@ -254,6 +265,7 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 /// Drive the AOT train_step artifact for a few steps on synthetic data.
+#[cfg(feature = "pjrt")]
 fn run_train(attention: &str, steps: usize, lr_scale: f32, dir: &str) -> anyhow::Result<Vec<f32>> {
     use bda::runtime::{lit_i32, lit_scalar_f32, literal_scalar_f32, Runtime};
     let mut rt = Runtime::open(dir)?;
@@ -269,7 +281,7 @@ fn run_train(attention: &str, steps: usize, lr_scale: f32, dir: &str) -> anyhow:
             let p = &pairs[(i * tc.batch + b) % pairs.len()];
             tokens.extend(p.pack(tc.max_seq_len + 1).iter().map(|&t| t as i32));
         }
-        let mut inputs: Vec<xla::Literal> = state;
+        let mut inputs = state;
         inputs.push(lit_i32(&tokens, &[tc.batch as i64, (tc.max_seq_len + 1) as i64])?);
         inputs.push(lit_scalar_f32(lr_scale));
         let mut out = step.run(&inputs)?;
@@ -283,6 +295,18 @@ fn run_train(attention: &str, steps: usize, lr_scale: f32, dir: &str) -> anyhow:
     Ok(losses)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn run_train(_attention: &str, _steps: usize, _lr_scale: f32, _dir: &str) -> anyhow::Result<Vec<f32>> {
+    anyhow::bail!("built without the `pjrt` feature; rebuild with --features pjrt")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime_check(_args: &Args) -> i32 {
+    eprintln!("runtime-check requires the `pjrt` feature; rebuild with --features pjrt");
+    1
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime_check(args: &Args) -> i32 {
     use bda::runtime::{lit_i32, Runtime};
     let dir = args.get_or("artifacts", "artifacts");

@@ -106,7 +106,14 @@ impl Block {
         let attn_out = attend(&q, &k, &v, s, causal);
         let y = self.attn.output(&attn_out);
         let x1 = x.add(&y);
+        self.ffn(&x1)
+    }
 
+    /// Post-attention half of the block: pre-norm SwiGLU FFN + residual.
+    /// Public so the paged decode engine ([`crate::engine`]) can run the
+    /// attention half against paged K/V storage and reuse this path
+    /// unchanged (keeping batched decode bit-identical to [`Block::forward`]).
+    pub fn ffn(&self, x1: &Tensor) -> Tensor {
         let h2 = x1.rmsnorm(&self.norm2, 1e-5);
         let gated = self.w_gate.forward(&h2).silu().mul_elem(&self.w_up.forward(&h2));
         let ffn = self.w_down.forward(&gated);
@@ -286,8 +293,9 @@ impl Transformer {
     }
 
     /// Token embedding + positional encoding for positions
-    /// [pos0, pos0+len).
-    fn embed_tokens(&self, tokens: &[u32], pos0: usize) -> Tensor {
+    /// [pos0, pos0+len). Public for the paged decode engine, which embeds
+    /// each batched sequence at its own position.
+    pub fn embed_tokens(&self, tokens: &[u32], pos0: usize) -> Tensor {
         let d = self.config.d_model;
         let mut x = Tensor::zeros(&[tokens.len(), d]);
         for (i, &t) in tokens.iter().enumerate() {
@@ -327,9 +335,7 @@ impl Transformer {
             let attn_out = attend_cached(&q, layer, s, prior);
             let y = b.attn.output(&attn_out);
             let x1 = x.add(&y);
-            let h2 = x1.rmsnorm(&b.norm2, 1e-5);
-            let gated = b.w_gate.forward(&h2).silu().mul_elem(&b.w_up.forward(&h2));
-            x = x1.add(&b.w_down.forward(&gated));
+            x = b.ffn(&x1);
         }
         let h = x.slice_rows(x.rows() - 1, x.rows()).rmsnorm(&self.norm_f, 1e-5);
         matmul(&h, &self.embed.transpose())

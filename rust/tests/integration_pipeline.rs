@@ -1,6 +1,8 @@
 //! Whole-pipeline integration: PJRT-backed serving through the coordinator
 //! (queue → batcher → scheduler → AOT executable), plus failure injection.
 
+#![cfg(feature = "pjrt")]
+
 use bda::coordinator::kv_cache::SeqId;
 use bda::coordinator::{Backend, PjrtBackend, Request, Scheduler, SchedulerConfig};
 use anyhow::Result;

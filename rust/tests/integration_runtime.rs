@@ -5,6 +5,8 @@
 //! `make artifacts` first. These tests ARE the cross-layer proof: JAX +
 //! Pallas (build time) → HLO text → Rust PJRT (request path).
 
+#![cfg(feature = "pjrt")]
+
 use bda::runtime::{lit_i32, lit_scalar_f32, literal_scalar_f32, Runtime};
 
 fn runtime() -> Option<Runtime> {

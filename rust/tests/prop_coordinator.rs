@@ -1,10 +1,15 @@
 //! Property tests over coordinator invariants: no request lost or
-//! duplicated, KV blocks never leak, batch bounds respected.
+//! duplicated, KV blocks never leak, batch bounds respected — and the
+//! paged batched engine's decode is bit-identical to per-sequence decode.
 
-use bda::coordinator::kv_cache::{BlockAllocator, KvCacheConfig};
+use bda::coordinator::kv_cache::{BlockAllocator, KvCacheConfig, SeqId};
+use bda::coordinator::scheduler::Backend;
 use bda::coordinator::{
     Batcher, BatcherConfig, Request, RequestQueue, Scheduler, SchedulerConfig,
 };
+use bda::engine::PagedNativeBackend;
+use bda::model::transformer::KvCache;
+use bda::model::{ModelConfig, Transformer};
 use bda::util::rng::Rng;
 use std::time::Duration;
 
@@ -125,6 +130,65 @@ fn prop_allocator_fuzz() {
             alloc.release(id).unwrap();
         }
         assert_eq!(alloc.free_blocks(), alloc.config.num_blocks, "case {case}");
+    }
+}
+
+/// The lossless claim extended to the serving engine: for random prompts,
+/// batch sizes, block sizes, and attention variants (MHA and BDA), the
+/// paged batched engine's decode logits are *bit-identical* to running
+/// each sequence alone through `Transformer::decode_step` — same floats,
+/// not just close ones. Paging, batching, and storage indirection must be
+/// pure data movement.
+#[test]
+fn prop_paged_engine_decode_bit_identical_to_per_seq() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case * 97 + 13);
+        let model = Transformer::new_mha(ModelConfig::tiny(), 300 + case);
+        let model = if case % 2 == 1 {
+            // Odd cases exercise the BDA variant (fp32 preparation).
+            model
+                .to_bda(bda::bd::Strategy::ResidualMin, bda::tensor::DType::F32)
+                .expect("bda prep")
+        } else {
+            model
+        };
+        let kv = KvCacheConfig { block_size: rng.range(1, 8), num_blocks: 512 };
+        let mut engine = PagedNativeBackend::new(model.clone(), kv);
+
+        let batch = rng.range(1, 8);
+        let vocab = model.config.vocab_size as u32;
+        let mut caches: Vec<KvCache> = Vec::new();
+        for i in 0..batch {
+            let plen = rng.range(1, 12);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab as u64) as u32).collect();
+            let got = engine.prefill(i as SeqId, &prompt).expect("prefill");
+            let mut c = KvCache::new(model.config.n_layers);
+            let want = model.prefill(&mut c, &prompt);
+            assert_eq!(got, want.data, "case {case}: prefill logits diverge (seq {i})");
+            caches.push(c);
+        }
+
+        let rounds = rng.range(2, 5);
+        for round in 0..rounds {
+            let step: Vec<(SeqId, u32)> = (0..batch)
+                .map(|i| (i as SeqId, rng.below(vocab as u64) as u32))
+                .collect();
+            let got = engine.decode(&step).expect("decode");
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let want = model.decode_step(cache, step[i].1);
+                assert_eq!(
+                    got[i], want.data,
+                    "case {case} round {round} seq {i}: batched paged decode \
+                     is not bit-identical to per-sequence decode"
+                );
+            }
+            engine.alloc.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+
+        for i in 0..batch {
+            engine.release(i as SeqId);
+        }
+        assert_eq!(engine.used_blocks(), 0, "case {case}: leaked blocks");
     }
 }
 
