@@ -92,8 +92,20 @@ fn pjrt_sections(_n: usize, _cfg: ServerConfig) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if args.flag("help") {
+        println!("usage: serve [--requests N]");
+        println!(
+            "  BDA_NUM_THREADS=N   worker threads for paged attention + GEMMs \
+             (default: all cores; generations are bit-identical at any value)"
+        );
+        return Ok(());
+    }
     let n = args.get_usize("requests", 12);
     let cfg = ServerConfig::default();
+    println!(
+        "decode workers: {} (BDA_NUM_THREADS to override; bit-identical at any thread count)\n",
+        bda::util::threadpool::num_threads()
+    );
 
     pjrt_sections(n, cfg)?;
 
@@ -124,6 +136,11 @@ fn main() -> Result<()> {
                 snap.decode_occupancy * 100.0,
                 snap.tokens_per_step,
             );
+            // Per-step timing split (attention vs GEMM vs sampling): only
+            // the paged engine instruments its decode hot path.
+            if let Some(split) = snap.decode_split() {
+                println!("[{label} / {engine_label}] decode split: {split}");
+            }
             responses.sort_by_key(|r| r.id);
             generations.insert(
                 format!("{label}/{engine_label}"),

@@ -1,18 +1,26 @@
 //! Decode throughput: the paged batched engine vs the per-sequence native
-//! backend, swept over concurrency. Every configuration decodes the same
-//! trace greedily, so generations are bit-identical between the two
-//! backends (asserted) — the speedup is pure engineering, exactly the
+//! backend, plus a paged-attention microbenchmark (blocked parallel kernel
+//! vs the retained serial reference), swept over **thread count × batch
+//! size**. Every configuration decodes the same trace greedily, so
+//! generations are bit-identical between the two backends (asserted) and
+//! across thread counts — the speedup is pure engineering, exactly the
 //! "complementary to engineering-level optimizations" framing of §1.
 //!
-//! The per-sequence backend runs B separate passes over every weight
-//! matrix per decode iteration; the paged engine streams each weight once
-//! for all B rows and attends through the shared block pool, so the gap
-//! widens with concurrency.
+//! `BDA_NUM_THREADS` is latched once per process, so the thread sweep
+//! re-execs this binary once per thread count (child mode is selected by
+//! the `BDA_BENCH_OUT` env var, which names the child's JSON fragment
+//! file). The parent aggregates all fragments into machine-readable
+//! `BENCH_decode.json` in the working directory — the repo's perf
+//! trajectory record.
 //!
 //! Run: cargo bench --bench decode_throughput
 //! Fast smoke: BDA_BENCH_FAST=1 cargo bench --bench decode_throughput
 
-use bda::bench_support::{f2, Table};
+use bda::attention::paged::{
+    paged_attention_decode, paged_attention_decode_serial, PagedLayerView, PagedSeq,
+};
+use bda::attention::AttnShape;
+use bda::bench_support::{bench, f2, scatter_paged_kv, BenchConfig, Table};
 use bda::coordinator::server::replay_trace;
 use bda::coordinator::{
     BatcherConfig, KvCacheConfig, NativeBackend, Request, SchedulerConfig, ServerConfig,
@@ -20,6 +28,9 @@ use bda::coordinator::{
 use bda::engine::PagedNativeBackend;
 use bda::eval::trace::{self, TraceConfig};
 use bda::model::{ModelConfig, Transformer};
+use bda::tensor::Tensor;
+use bda::util::json::Json;
+use bda::util::threadpool;
 use bda::util::timer::Timer;
 use std::time::Duration;
 
@@ -74,57 +85,244 @@ fn run(backend_label: &str, model: &Transformer, concurrency: usize, max_new: us
     }
 }
 
-fn main() {
+/// Paged-attention microbenchmark fixture: `batch` sequences of `len`
+/// tokens each, scattered over an interleaved block layout (seq i owns
+/// blocks i, i+batch, i+2·batch, … — adjacent tables, like a real pool
+/// after round-robin admission).
+struct MicroFixture {
+    q: Tensor,
+    pk: Vec<f32>,
+    pv: Vec<f32>,
+    tables: Vec<Vec<usize>>,
+    lens: Vec<usize>,
+    s: AttnShape,
+    block_size: usize,
+}
+
+impl MicroFixture {
+    fn new(batch: usize, len: usize, s: AttnShape, block_size: usize) -> MicroFixture {
+        let width = s.proj_width();
+        let blocks_per_seq = len.div_ceil(block_size);
+        let num_blocks = blocks_per_seq * batch;
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        let mut tables = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let table: Vec<usize> = (0..blocks_per_seq).map(|b| b * batch + i).collect();
+            let k = Tensor::randn(&[len, width], 1.0, 2 * i as u64 + 1);
+            let v = Tensor::randn(&[len, width], 1.0, 2 * i as u64 + 2);
+            scatter_paged_kv(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, &table);
+            tables.push(table);
+        }
+        MicroFixture {
+            q: Tensor::randn(&[batch, width], 1.0, 7),
+            pk,
+            pv,
+            tables,
+            lens: vec![len; batch],
+            s,
+            block_size,
+        }
+    }
+
+    fn layer(&self) -> PagedLayerView<'_> {
+        PagedLayerView {
+            k: &self.pk,
+            v: &self.pv,
+            block_size: self.block_size,
+            width: self.s.proj_width(),
+        }
+    }
+
+    fn seqs(&self) -> Vec<PagedSeq<'_>> {
+        self.tables
+            .iter()
+            .zip(&self.lens)
+            .map(|(t, &len)| PagedSeq { blocks: t, len })
+            .collect()
+    }
+}
+
+/// One (batch size) microbenchmark row: blocked parallel kernel vs the
+/// serial reference, with a bitwise equality check on the outputs.
+fn micro_row(batch: usize, len: usize, s: AttnShape, cfg: BenchConfig) -> Json {
+    let fx = MicroFixture::new(batch, len, s, 16);
+    let layer = fx.layer();
+    let seqs = fx.seqs();
+
+    let out_par = paged_attention_decode(&fx.q, &layer, &seqs, s);
+    let out_ser = paged_attention_decode_serial(&fx.q, &layer, &seqs, s);
+    assert_eq!(out_par, out_ser, "parallel blocked kernel must match the serial reference");
+
+    let m_ser = bench("paged_attn_serial", cfg, (batch * len) as f64, || {
+        std::hint::black_box(paged_attention_decode_serial(&fx.q, &layer, &seqs, s));
+    });
+    let m_par = bench("paged_attn_parallel", cfg, (batch * len) as f64, || {
+        std::hint::black_box(paged_attention_decode(&fx.q, &layer, &seqs, s));
+    });
+    let serial_us = m_ser.summary.median * 1e6;
+    let parallel_us = m_par.summary.median * 1e6;
+    Json::obj(vec![
+        ("batch", Json::num(batch as f64)),
+        ("len", Json::num(len as f64)),
+        ("serial_us", Json::num(serial_us)),
+        ("parallel_us", Json::num(parallel_us)),
+        ("speedup", Json::num(serial_us / parallel_us)),
+    ])
+}
+
+/// Child mode: measure at the current (env-latched) thread count and write
+/// a JSON fragment to `$BDA_BENCH_OUT`.
+fn run_child(out_path: &str) {
     let fast = std::env::var("BDA_BENCH_FAST").is_ok();
-    let config_name = if fast { "tiny" } else { "deepseek-lite-sim" };
-    let model = Transformer::new_mha(ModelConfig::preset(config_name).unwrap(), 42);
-    let max_new = if fast { 8 } else { 32 };
-    let sweep: &[usize] = if fast { &[1, 8] } else { &[1, 4, 8, 16] };
+    let threads = threadpool::num_threads();
+    let cfg = BenchConfig::from_env();
+
+    // --- paged-attention microbenchmark: batch sweep -----------------------
+    let s = AttnShape::new(256, 8, 32);
+    let len = if fast { 128 } else { 256 };
+    let batches: &[usize] = if fast { &[1, 8] } else { &[1, 4, 8, 16] };
+    let mut micro_rows = Vec::new();
+    let mut micro_table = Table::new(
+        &format!("Paged attention micro ({threads} threads, len {len})"),
+        &["Batch", "serial µs", "parallel µs", "speedup"],
+    );
+    for &b in batches {
+        let row = micro_row(b, len, s, cfg);
+        micro_table.row(vec![
+            b.to_string(),
+            f2(row.get("serial_us").as_f64().unwrap_or(0.0)),
+            f2(row.get("parallel_us").as_f64().unwrap_or(0.0)),
+            format!("{:.2}x", row.get("speedup").as_f64().unwrap_or(0.0)),
+        ]);
+        micro_rows.push(row);
+    }
+    micro_table.print();
+
+    // --- engine-level throughput: only at the sweep's end points -----------
+    // (thread count 1 and the machine maximum; the engine run is the
+    // expensive part and the intermediate points add little signal).
+    let np = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let engine_rows = if threads == 1 || threads == np {
+        let config_name = if fast { "tiny" } else { "deepseek-lite-sim" };
+        let model = Transformer::new_mha(ModelConfig::preset(config_name).unwrap(), 42);
+        let max_new = if fast { 8 } else { 32 };
+        let sweep: &[usize] = if fast { &[1, 8] } else { &[1, 4, 8, 16] };
+        let mut table = Table::new(
+            &format!("Batched paged decode vs per-sequence decode ({threads} threads)"),
+            &["Concurrency", "per-seq tok/s", "paged tok/s", "speedup", "occupancy"],
+        );
+        let mut rows = Vec::new();
+        for &c in sweep {
+            let per_seq = run("per-seq", &model, c, max_new);
+            let paged = run("paged", &model, c, max_new);
+            assert_eq!(
+                paged.generations, per_seq.generations,
+                "paged and per-seq generations must be bit-identical"
+            );
+            assert_eq!(paged.tokens, per_seq.tokens);
+            let tps_seq = per_seq.tokens as f64 / per_seq.wall;
+            let tps_paged = paged.tokens as f64 / paged.wall;
+            table.row(vec![
+                c.to_string(),
+                f2(tps_seq),
+                f2(tps_paged),
+                format!("{:.2}x", tps_paged / tps_seq),
+                format!("{:.0}%", paged.occupancy * 100.0),
+            ]);
+            rows.push(Json::obj(vec![
+                ("concurrency", Json::num(c as f64)),
+                ("per_seq_tok_s", Json::num(tps_seq)),
+                ("paged_tok_s", Json::num(tps_paged)),
+                ("speedup", Json::num(tps_paged / tps_seq)),
+                ("occupancy", Json::num(paged.occupancy)),
+            ]));
+        }
+        table.print();
+        rows
+    } else {
+        Vec::new()
+    };
+
+    let fragment = Json::obj(vec![
+        ("num_threads", Json::num(threads as f64)),
+        ("paged_attention", Json::Arr(micro_rows)),
+        ("engine", Json::Arr(engine_rows)),
+    ]);
+    std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
+}
+
+/// Parent mode: re-exec once per thread count, aggregate the fragments
+/// into BENCH_decode.json, and print the acceptance verdict.
+fn run_parent() {
+    let fast = std::env::var("BDA_BENCH_FAST").is_ok();
+    let np = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts: Vec<usize> = if fast {
+        vec![1, np]
+    } else {
+        [1usize, 2, 4, 8].into_iter().filter(|&t| t < np).chain([np]).collect()
+    };
+    counts.dedup();
 
     println!(
-        "Decode throughput — paged batched engine vs per-sequence backend \
-         ({config_name}, {} params, {} new tokens/request)",
-        model.param_count(),
-        max_new
+        "Decode throughput sweep: thread counts {counts:?} × batch sizes \
+         (machine parallelism {np}, fast={fast})"
     );
-    let mut table = Table::new(
-        "Batched paged decode vs per-sequence decode",
-        &["Concurrency", "per-seq tok/s", "paged tok/s", "speedup", "occupancy"],
-    );
-    let mut speedup_at_8plus = Vec::new();
-    for &c in sweep {
-        let per_seq = run("per-seq", &model, c, max_new);
-        let paged = run("paged", &model, c, max_new);
-        assert_eq!(
-            paged.generations, per_seq.generations,
-            "paged and per-seq generations must be bit-identical"
-        );
-        assert_eq!(paged.tokens, per_seq.tokens);
-        let tps_seq = per_seq.tokens as f64 / per_seq.wall;
-        let tps_paged = paged.tokens as f64 / paged.wall;
-        let speedup = tps_paged / tps_seq;
-        if c >= 8 {
-            speedup_at_8plus.push(speedup);
-        }
-        println!(
-            "  c={c:<3} per-seq {tps_seq:>9.1} tok/s | paged {tps_paged:>9.1} tok/s | \
-             {speedup:.2}x | occupancy {:.0}%",
-            paged.occupancy * 100.0
-        );
-        table.row(vec![
-            c.to_string(),
-            f2(tps_seq),
-            f2(tps_paged),
-            format!("{speedup:.2}x"),
-            format!("{:.0}%", paged.occupancy * 100.0),
-        ]);
+
+    let exe = std::env::current_exe().expect("current_exe");
+    let mut fragments = Vec::new();
+    for &t in &counts {
+        let tmp = std::env::temp_dir().join(format!("bda_bench_decode_{t}.json"));
+        println!("\n--- BDA_NUM_THREADS={t} ---");
+        let status = std::process::Command::new(&exe)
+            .env("BDA_NUM_THREADS", t.to_string())
+            .env("BDA_BENCH_OUT", &tmp)
+            .status()
+            .expect("spawn bench child");
+        assert!(status.success(), "bench child for {t} threads failed");
+        let text = std::fs::read_to_string(&tmp).expect("read child fragment");
+        fragments.push(Json::parse(&text).expect("parse child fragment"));
+        std::fs::remove_file(&tmp).ok();
     }
-    table.print();
-    if let Some(min) = speedup_at_8plus.iter().cloned().reduce(f64::min) {
-        println!(
-            "\npaged engine at >=8 concurrent sequences: min speedup {min:.2}x \
-             ({})",
-            if min > 1.0 { "BEATS per-sequence decode" } else { "NO speedup — investigate" }
-        );
+
+    // Acceptance: paged-attention speedup (blocked parallel kernel vs the
+    // serial reference) at batch >= 8 on the max-thread configuration.
+    let mut accept = f64::INFINITY;
+    if let Some(frag) = fragments.last() {
+        for row in frag.get("paged_attention").as_arr().unwrap_or(&[]) {
+            let batch = row.get("batch").as_usize().unwrap_or(0);
+            let speedup = row.get("speedup").as_f64().unwrap_or(0.0);
+            if batch >= 8 {
+                accept = accept.min(speedup);
+            }
+        }
+    }
+    let accept = if accept.is_finite() { accept } else { 0.0 };
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("decode_throughput")),
+        ("fast", Json::Bool(fast)),
+        ("available_parallelism", Json::num(np as f64)),
+        ("runs", Json::Arr(fragments)),
+        (
+            "acceptance",
+            Json::obj(vec![
+                ("paged_attention_speedup_batch_ge8_max_threads", Json::num(accept)),
+                ("target", Json::num(2.0)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_decode.json", report.to_string()).expect("write BENCH_decode.json");
+    println!(
+        "\npaged attention at batch >= 8, {np} threads: {accept:.2}x vs serial reference \
+         ({}) — recorded in BENCH_decode.json",
+        if accept >= 2.0 { "MEETS the >=2x target" } else { "below the 2x target — investigate" }
+    );
+}
+
+fn main() {
+    match std::env::var("BDA_BENCH_OUT") {
+        Ok(path) => run_child(&path),
+        Err(_) => run_parent(),
     }
 }

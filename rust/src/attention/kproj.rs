@@ -15,7 +15,7 @@ use super::AttnShape;
 use crate::bd::Tag;
 use crate::tensor::matmul::matmul;
 use crate::tensor::{DType, Tensor};
-use crate::util::threadpool::parallel_chunks;
+use crate::util::threadpool::{parallel_chunks, SendPtr};
 
 /// Baseline MHA k-projection: `K = X W_k`.
 pub fn kproj_mha(x: &Tensor, w_k: &Tensor) -> Tensor {
@@ -163,16 +163,6 @@ impl PifaKproj {
 /// EXPERIMENTS.md SS Perf: the naive i-k-j loop here cost BDA its speedup).
 fn matmul_into_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     crate::tensor::matmul::gemm_serial(a, b, c, m, k, n)
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    fn get(self) -> *mut f32 {
-        self.0
-    }
 }
 
 /// Build a PIFA-style projector from per-head QK products via QR column

@@ -9,9 +9,36 @@
 //! dot-product, max-subtraction, and accumulation order — so paged batched
 //! decode is bit-identical to per-sequence decode for both MHA and BDA
 //! (the paper's losslessness carried through the serving layer).
+//!
+//! # The blocked parallel kernel and its bit-exactness contract
+//!
+//! [`paged_attention_decode`] runs a *blocked* kernel parallelized over
+//! independent `(sequence, head)` work items via the crate thread pool
+//! (`BDA_NUM_THREADS` controls the worker count):
+//!
+//! * K/V history is walked **per block** over contiguous rows, hoisting the
+//!   `block_table[t / block_size]` + `t % block_size` indirection out of
+//!   the token loop (one base offset per block instead of a div/mod per
+//!   token);
+//! * the score buffer is a **per-worker scratch** vector reused across all
+//!   work items a worker steals, replacing the per-(head, row) heap
+//!   allocation of the naive loop;
+//! * work items write disjoint `d_h`-wide output slices, so no
+//!   synchronization is needed on the output.
+//!
+//! **Invariant (the contract every change here must keep):** within one
+//! `(sequence, head)` work item, tokens are visited in ascending position
+//! order and every float operation — dot-product accumulation, running max,
+//! `exp`/sum, weighted-V accumulation — happens in exactly the order of the
+//! retained serial reference [`paged_attention_decode_serial`]. Work items
+//! never share accumulators. Therefore the parallel output is bit-identical
+//! to the serial reference at *any* worker count, and determinism across
+//! `BDA_NUM_THREADS` settings is enforced by tests and CI.
 
 use super::AttnShape;
 use crate::tensor::Tensor;
+use crate::util::threadpool::{self, SendPtr};
+use std::cell::RefCell;
 
 /// One layer of paged K/V storage: `num_blocks * block_size` rows of
 /// `width = n_heads * d_h` values each, for K and V respectively.
@@ -43,11 +70,167 @@ pub struct PagedSeq<'a> {
     pub len: usize,
 }
 
+thread_local! {
+    /// Per-worker score scratch, reused across every work item a worker
+    /// processes (workers are scoped threads, so this lives for the whole
+    /// parallel region — at most one growth per worker per call).
+    static SCORE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Validate batch geometry before touching raw storage. These used to be
+/// `debug_assert!`s, which release builds skipped even though they guard
+/// unchecked slice arithmetic — they are real assertions now.
+fn validate(layer: &PagedLayerView, seqs: &[PagedSeq]) {
+    let bs = layer.block_size;
+    assert!(bs > 0, "paged attention: block_size must be positive");
+    for (i, seq) in seqs.iter().enumerate() {
+        assert!(seq.len > 0, "paged attention: seq {i} has empty K/V history");
+        assert!(
+            seq.len <= seq.blocks.len() * bs,
+            "paged attention: seq {i} len {} exceeds block table capacity {}",
+            seq.len,
+            seq.blocks.len() * bs
+        );
+        for &blk in &seq.blocks[..seq.len.div_ceil(bs)] {
+            assert!(
+                (blk + 1) * bs * layer.width <= layer.k.len(),
+                "paged attention: seq {i} block {blk} out of K pool bounds"
+            );
+            assert!(
+                (blk + 1) * bs * layer.width <= layer.v.len(),
+                "paged attention: seq {i} block {blk} out of V pool bounds"
+            );
+        }
+    }
+}
+
 /// Batched paged attention over one layer: row `i` of `q` attends over the
 /// first `seqs[i].len` K/V rows of sequence `i`, gathered through its block
 /// table. Returns the concatenated per-head outputs (B × width), ready for
 /// the output projection.
+///
+/// Runs the blocked kernel in parallel over `(sequence, head)` work items
+/// with up to `BDA_NUM_THREADS` workers; output is bit-identical to
+/// [`paged_attention_decode_serial`] at any worker count (see module docs).
 pub fn paged_attention_decode(
+    q: &Tensor,
+    layer: &PagedLayerView,
+    seqs: &[PagedSeq],
+    s: AttnShape,
+) -> Tensor {
+    paged_attention_decode_with_workers(q, layer, seqs, s, threadpool::num_threads())
+}
+
+/// [`paged_attention_decode`] with an explicit worker count (determinism
+/// tests sweep this; serving uses the `BDA_NUM_THREADS` default).
+pub fn paged_attention_decode_with_workers(
+    q: &Tensor,
+    layer: &PagedLayerView,
+    seqs: &[PagedSeq],
+    s: AttnShape,
+    workers: usize,
+) -> Tensor {
+    let b = q.rows();
+    assert_eq!(seqs.len(), b, "one PagedSeq per query row");
+    let width = s.proj_width();
+    assert_eq!(q.cols(), width, "query width mismatch");
+    assert_eq!(layer.width, width, "storage width mismatch");
+    validate(layer, seqs);
+
+    let scale = 1.0 / (s.d_h as f32).sqrt();
+    let n_heads = s.n_heads;
+    let d_h = s.d_h;
+    let mut out = Tensor::zeros(&[b, width]);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let qd = &q.data;
+    threadpool::parallel_for_with(b * n_heads, workers, |w| {
+        let i = w / n_heads;
+        let h = w % n_heads;
+        let off = h * d_h;
+        let qrow = &qd[i * width + off..i * width + off + d_h];
+        // SAFETY: work item (i, h) writes only out[i*width+off .. +d_h];
+        // these d_h-wide regions are pairwise disjoint across work items.
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * width + off), d_h) };
+        SCORE_SCRATCH.with(|cell| {
+            let mut scores = cell.borrow_mut();
+            attend_head_blocked(qrow, layer, &seqs[i], off, d_h, scale, &mut scores, orow);
+        });
+    });
+    out
+}
+
+/// One `(sequence, head)` work item of the blocked kernel: walk the K/V
+/// history block by block (contiguous rows within a block), scoring into
+/// the per-worker scratch, then softmax + weighted-V accumulate in the same
+/// ascending-token order as the serial reference. `orow` must be zeroed.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_blocked(
+    qrow: &[f32],
+    layer: &PagedLayerView,
+    seq: &PagedSeq,
+    off: usize,
+    d_h: usize,
+    scale: f32,
+    scores: &mut Vec<f32>,
+    orow: &mut [f32],
+) {
+    let visible = seq.len;
+    let bs = layer.block_size;
+    let width = layer.width;
+    scores.clear();
+    scores.reserve(visible);
+
+    // Pass 1: scores, one contiguous row run per block.
+    let mut done = 0usize;
+    for &blk in seq.blocks {
+        if done == visible {
+            break;
+        }
+        let rows = bs.min(visible - done);
+        let base0 = blk * bs * width + off;
+        for r in 0..rows {
+            let krow = &layer.k[base0 + r * width..base0 + r * width + d_h];
+            scores.push(qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale);
+        }
+        done += rows;
+    }
+
+    // Softmax in ascending-token order (identical to the serial reference).
+    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in scores.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+
+    // Pass 2: weighted V accumulation, same block walk, same token order.
+    let mut done = 0usize;
+    for &blk in seq.blocks {
+        if done == visible {
+            break;
+        }
+        let rows = bs.min(visible - done);
+        let base0 = blk * bs * width + off;
+        for r in 0..rows {
+            let w = scores[done + r] * inv;
+            let vrow = &layer.v[base0 + r * width..base0 + r * width + d_h];
+            for (o, vv) in orow.iter_mut().zip(vrow) {
+                *o += w * vv;
+            }
+        }
+        done += rows;
+    }
+}
+
+/// The retained serial reference: the original single-threaded,
+/// token-at-a-time kernel (per-token block indirection, per-(head, row)
+/// score buffer). This is the bit-exactness contract for the blocked
+/// parallel kernel — property tests assert `paged_attention_decode` equals
+/// this function exactly — and the baseline the decode-throughput
+/// microbenchmark measures speedups against.
+pub fn paged_attention_decode_serial(
     q: &Tensor,
     layer: &PagedLayerView,
     seqs: &[PagedSeq],
@@ -58,17 +241,13 @@ pub fn paged_attention_decode(
     let width = s.proj_width();
     assert_eq!(q.cols(), width, "query width mismatch");
     assert_eq!(layer.width, width, "storage width mismatch");
+    validate(layer, seqs);
     let scale = 1.0 / (s.d_h as f32).sqrt();
     let mut out = Tensor::zeros(&[b, width]);
     for h in 0..s.n_heads {
         let off = h * s.d_h;
         for i in 0..b {
             let visible = seqs[i].len;
-            debug_assert!(visible > 0, "seq {i}: empty K/V history");
-            debug_assert!(
-                visible <= seqs[i].blocks.len() * layer.block_size,
-                "seq {i}: len exceeds block table"
-            );
             let qrow = &q.data[i * width + off..i * width + off + s.d_h];
             let mut scores = vec![0.0f32; visible];
             for (t, sc) in scores.iter_mut().enumerate() {
@@ -133,24 +312,7 @@ mod tests {
         out
     }
 
-    /// Scatter `len` contiguous K/V rows into paged pools under a block
-    /// table.
-    fn scatter(
-        pk: &mut [f32],
-        pv: &mut [f32],
-        k: &[f32],
-        v: &[f32],
-        len: usize,
-        width: usize,
-        block_size: usize,
-        table: &[usize],
-    ) {
-        for t in 0..len {
-            let base = (table[t / block_size] * block_size + t % block_size) * width;
-            pk[base..base + width].copy_from_slice(&k[t * width..(t + 1) * width]);
-            pv[base..base + width].copy_from_slice(&v[t * width..(t + 1) * width]);
-        }
-    }
+    use crate::bench_support::scatter_paged_kv as scatter;
 
     #[test]
     fn matches_contiguous_reference_bitwise() {
@@ -182,6 +344,9 @@ mod tests {
         let r2 = reference_row(q.row(1), &k2.data, &v2.data, lens[1], s);
         assert_eq!(out.row(0), &r1[..], "seq 0 must be bit-identical");
         assert_eq!(out.row(1), &r2[..], "seq 1 must be bit-identical");
+        // The serial reference agrees too, bit for bit.
+        let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+        assert_eq!(out, serial);
     }
 
     #[test]
@@ -227,5 +392,70 @@ mod tests {
         // And both match the contiguous reference.
         let r = reference_row(q.row(0), &k.data, &v.data, len, s);
         assert_eq!(outs[0].row(0), &r[..]);
+    }
+
+    #[test]
+    fn parallel_matches_serial_at_every_worker_count() {
+        // Uneven lengths + partial tail blocks, swept over worker counts.
+        let s = AttnShape::new(24, 3, 8);
+        let width = s.proj_width();
+        let (block_size, num_blocks) = (4usize, 16usize);
+        let lens = [1usize, 7, 12, 4];
+        let tables: [&[usize]; 4] = [&[9], &[3, 11], &[0, 5, 14], &[7]];
+        let q = Tensor::randn(&[4, width], 1.0, 31);
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        for (i, (&len, table)) in lens.iter().zip(tables.iter()).enumerate() {
+            let k = Tensor::randn(&[len, width], 1.0, 40 + i as u64);
+            let v = Tensor::randn(&[len, width], 1.0, 50 + i as u64);
+            scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        }
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let seqs: Vec<PagedSeq> = lens
+            .iter()
+            .zip(tables.iter())
+            .map(|(&len, &blocks)| PagedSeq { blocks, len })
+            .collect();
+        let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+        for workers in [1, 2, 8] {
+            let par = paged_attention_decode_with_workers(&q, &layer, &seqs, s, workers);
+            assert_eq!(par, serial, "workers {workers} must be bit-identical to serial");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty K/V history")]
+    fn empty_history_rejected_in_release_builds() {
+        let s = AttnShape::new(8, 1, 4);
+        let width = s.proj_width();
+        let pk = vec![0.0f32; 4 * 2 * width];
+        let pv = pk.clone();
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let q = Tensor::zeros(&[1, width]);
+        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[0], len: 0 }], s);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds block table capacity")]
+    fn len_exceeding_block_table_rejected() {
+        let s = AttnShape::new(8, 1, 4);
+        let width = s.proj_width();
+        let pk = vec![0.0f32; 4 * 2 * width];
+        let pv = pk.clone();
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let q = Tensor::zeros(&[1, width]);
+        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[0], len: 3 }], s);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of K pool bounds")]
+    fn out_of_pool_block_rejected() {
+        let s = AttnShape::new(8, 1, 4);
+        let width = s.proj_width();
+        let pk = vec![0.0f32; 4 * 2 * width]; // pool holds blocks 0..4
+        let pv = pk.clone();
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let q = Tensor::zeros(&[1, width]);
+        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[9], len: 1 }], s);
     }
 }

@@ -129,6 +129,28 @@ impl Table {
     }
 }
 
+/// Scatter `len` contiguous K/V rows into paged block storage under a
+/// block table — the test/bench-side mirror of the engine's prefill
+/// scatter, shared by the paged-attention unit tests, property tests, and
+/// the decode-throughput bench fixture so the layout is defined once.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_paged_kv(
+    pk: &mut [f32],
+    pv: &mut [f32],
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    width: usize,
+    block_size: usize,
+    table: &[usize],
+) {
+    for t in 0..len {
+        let base = (table[t / block_size] * block_size + t % block_size) * width;
+        pk[base..base + width].copy_from_slice(&k[t * width..(t + 1) * width]);
+        pv[base..base + width].copy_from_slice(&v[t * width..(t + 1) * width]);
+    }
+}
+
 /// Format a float to 2 decimal places (table cells).
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")

@@ -6,6 +6,20 @@ use crate::util::stats::Histogram;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Wall-time split of one batched decode step, measured by backends that
+/// instrument their hot path (attention vs everything-GEMM-shaped); the
+/// scheduler adds its own sampling time before forwarding the triple to
+/// [`Metrics::decode_timing`]. Lets perf PRs attribute wins: "2× decode"
+/// means little without knowing which slice shrank.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepTiming {
+    /// Seconds spent in (paged) attention.
+    pub attn: f64,
+    /// Seconds spent in GEMMs: QKV projections, output projection, FFN,
+    /// and the logits matmul.
+    pub gemm: f64,
+}
+
 #[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -24,6 +38,9 @@ struct Inner {
     decode_steps: u64,
     decode_tokens: u64,
     occupancy_sum: f64,
+    decode_attn_secs: f64,
+    decode_gemm_secs: f64,
+    decode_sample_secs: f64,
     latency: Histogram,
     ttft: Histogram,
 }
@@ -45,6 +62,12 @@ pub struct Snapshot {
     pub tokens_per_step: f64,
     /// Mean decode-batch occupancy: batch size / configured max_active.
     pub decode_occupancy: f64,
+    /// Cumulative decode-step wall time spent in attention.
+    pub decode_attn_secs: f64,
+    /// Cumulative decode-step wall time spent in GEMMs.
+    pub decode_gemm_secs: f64,
+    /// Cumulative decode-step wall time spent sampling.
+    pub decode_sample_secs: f64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_mean: f64,
@@ -72,6 +95,9 @@ impl Metrics {
                 decode_steps: 0,
                 decode_tokens: 0,
                 occupancy_sum: 0.0,
+                decode_attn_secs: 0.0,
+                decode_gemm_secs: 0.0,
+                decode_sample_secs: 0.0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
             }),
@@ -104,6 +130,15 @@ impl Metrics {
         if capacity > 0 {
             g.occupancy_sum += batch as f64 / capacity as f64;
         }
+    }
+
+    /// Per-step decode timing split: the backend's attention/GEMM
+    /// measurement plus the scheduler's sampling time.
+    pub fn decode_timing(&self, step: StepTiming, sample_secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_attn_secs += step.attn;
+        g.decode_gemm_secs += step.gemm;
+        g.decode_sample_secs += sample_secs;
     }
 
     pub fn tokens_generated(&self, n: usize) {
@@ -144,6 +179,9 @@ impl Metrics {
             } else {
                 0.0
             },
+            decode_attn_secs: g.decode_attn_secs,
+            decode_gemm_secs: g.decode_gemm_secs,
+            decode_sample_secs: g.decode_sample_secs,
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
             latency_mean: g.latency.mean(),
@@ -154,6 +192,25 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// Human-readable decode-step timing split, or `None` when no backend
+    /// reported timing (per-sequence / mock backends don't instrument).
+    pub fn decode_split(&self) -> Option<String> {
+        let total = self.decode_attn_secs + self.decode_gemm_secs + self.decode_sample_secs;
+        if total <= 0.0 {
+            return None;
+        }
+        let pct = |x: f64| 100.0 * x / total;
+        Some(format!(
+            "attention {:.1}ms ({:.0}%) | gemm {:.1}ms ({:.0}%) | sampling {:.1}ms ({:.0}%)",
+            self.decode_attn_secs * 1e3,
+            pct(self.decode_attn_secs),
+            self.decode_gemm_secs * 1e3,
+            pct(self.decode_gemm_secs),
+            self.decode_sample_secs * 1e3,
+            pct(self.decode_sample_secs),
+        ))
+    }
+
     pub fn report(&self) -> String {
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
@@ -211,6 +268,21 @@ mod tests {
         assert_eq!(s.tokens_per_step, 6.0);
         assert!((s.decode_occupancy - 0.75).abs() < 1e-12);
         assert!(s.report().contains("tok/step"));
+    }
+
+    #[test]
+    fn decode_timing_split_accumulates() {
+        let m = Metrics::new();
+        assert!(m.snapshot().decode_split().is_none(), "no timing yet");
+        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.030 }, 0.005);
+        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.020 }, 0.005);
+        let s = m.snapshot();
+        assert!((s.decode_attn_secs - 0.020).abs() < 1e-12);
+        assert!((s.decode_gemm_secs - 0.050).abs() < 1e-12);
+        assert!((s.decode_sample_secs - 0.010).abs() < 1e-12);
+        let split = s.decode_split().expect("split present");
+        assert!(split.contains("attention"));
+        assert!(split.contains("sampling"));
     }
 
     #[test]

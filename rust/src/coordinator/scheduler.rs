@@ -7,7 +7,7 @@
 //! for deterministic tests.
 
 use super::kv_cache::{BlockAllocator, KvCacheConfig, SeqId};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, StepTiming};
 use super::request::{Request, Response};
 use crate::model::transformer::{KvCache, Transformer};
 use crate::util::rng::Rng;
@@ -32,6 +32,21 @@ pub trait Backend {
     fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>>;
     /// Drop per-sequence state.
     fn release(&mut self, seq: SeqId);
+    /// Free blocks in the backend's *own* KV pool — the engine truth —
+    /// when the backend owns real block storage. `None` means the backend
+    /// has no pool of its own and the scheduler must fall back to its
+    /// admission-side [`BlockAllocator`]. Routing admission through this
+    /// method makes engine-level state the shadow allocator cannot see
+    /// (e.g. `fork`/copy-on-write dedup) visible to capacity decisions.
+    fn free_blocks(&self) -> Option<usize> {
+        None
+    }
+    /// Timing split of the most recent decode step, if this backend
+    /// instruments its hot path. Consumed (take) by the scheduler after
+    /// every step so stale timings are never re-reported.
+    fn take_step_timing(&mut self) -> Option<StepTiming> {
+        None
+    }
 }
 
 /// Backend over the pure-Rust transformer with per-sequence KV caches.
@@ -138,7 +153,19 @@ impl<B: Backend> Scheduler<B> {
     }
 
     pub fn has_capacity_for(&self, req: &Request) -> bool {
-        self.active.len() < self.config.max_active && self.kv.can_admit(req.prompt.len())
+        if self.active.len() >= self.config.max_active {
+            return false;
+        }
+        // Engine pool truth when the backend owns real block storage (so
+        // engine-level forks / copy-on-write are visible to admission);
+        // the admission-side shadow allocator otherwise. Block geometry
+        // comes from this scheduler's config, which every construction
+        // site shares with the backend pool; full capacity-query
+        // unification behind the Backend trait is a ROADMAP item.
+        match self.backend.free_blocks() {
+            Some(free) => req.prompt.len().max(1).div_ceil(self.config.kv.block_size) <= free,
+            None => self.kv.can_admit(req.prompt.len()),
+        }
     }
 
     /// Admit a request: KV registration + prefill + first sampled token.
@@ -198,15 +225,25 @@ impl<B: Backend> Scheduler<B> {
             m.decode_step(batch.len(), self.config.max_active);
         }
         let logits = self.backend.decode(&batch)?;
+        let mut sample_secs = 0.0f64;
         for (a, l) in self.active.iter_mut().zip(logits.iter()) {
             let seq = self.seq_of_req[&a.req.id];
+            // Time only sample() so the metrics split doesn't charge
+            // allocator bookkeeping to the "sampling" bucket.
+            let t = Instant::now();
             let tok = sample(l, &a.req);
+            sample_secs += t.elapsed().as_secs_f64();
             a.generated.push(tok);
             a.last_token = tok;
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
             let _ = self.kv.append_token(seq);
+        }
+        if let Some(m) = &self.metrics {
+            if let Some(t) = self.backend.take_step_timing() {
+                m.decode_timing(t, sample_secs);
+            }
         }
         self.complete_finished(&mut done);
         Ok(done)

@@ -25,11 +25,14 @@
 
 use crate::attention::paged::{paged_attention_decode, PagedSeq};
 use crate::coordinator::kv_cache::{BlockAllocator, KvCacheConfig, KvError, SeqId};
+use crate::coordinator::metrics::StepTiming;
 use crate::coordinator::scheduler::Backend;
 use crate::model::transformer::{KvCache, Transformer};
+use crate::model::weights::FusedQkv;
 use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
+use std::time::Instant;
 
 /// Paged batched serving backend over the native Rust transformer.
 pub struct PagedNativeBackend {
@@ -41,6 +44,12 @@ pub struct PagedNativeBackend {
     /// Cached `embed.transpose()` for the tied LM head (the per-sequence
     /// path re-transposes it every decode step).
     embed_t: Tensor,
+    /// Per-layer packed Q/K/V projection weights (one concatenated GEMM
+    /// per layer instead of three), precomputed at construction.
+    fused_qkv: Vec<FusedQkv>,
+    /// Attention/GEMM wall-time split of the most recent decode step,
+    /// consumed by the scheduler via [`Backend::take_step_timing`].
+    last_timing: Option<StepTiming>,
 }
 
 impl PagedNativeBackend {
@@ -48,10 +57,13 @@ impl PagedNativeBackend {
         let widths: Vec<usize> =
             model.blocks.iter().map(|b| b.attn.effective_shape().proj_width()).collect();
         let embed_t = model.embed.transpose();
+        let fused_qkv = model.blocks.iter().map(|b| b.attn.pack_qkv()).collect();
         PagedNativeBackend {
             alloc: BlockAllocator::new(kv),
             pool: super::paged_kv::PagedKvPool::new(kv, &widths),
             embed_t,
+            fused_qkv,
+            last_timing: None,
             model,
         }
     }
@@ -66,12 +78,13 @@ impl PagedNativeBackend {
     /// diverges — at which point copy-on-write gives it a private tail
     /// block. The K/V dedup counterpart of the allocator-level `fork`.
     ///
-    /// Note: when this backend is driven by a
-    /// [`crate::coordinator::Scheduler`], the scheduler keeps its own
-    /// admission-side [`BlockAllocator`] that knows nothing about forks
-    /// made here — fork through the scheduler's allocator as well, or use
-    /// this API only when driving the engine directly (see ROADMAP
-    /// "scheduler preemption / capacity unification").
+    /// When this backend is driven by a [`crate::coordinator::Scheduler`],
+    /// admission capacity is queried through [`Backend::free_blocks`] —
+    /// this allocator, the engine truth — so blocks consumed by forks and
+    /// their copy-on-write divergence are visible to admission even though
+    /// the scheduler's own bookkeeping allocator never sees them. (Full
+    /// ownership unification — one allocator, preemption — remains a
+    /// ROADMAP item.)
     pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), KvError> {
         self.alloc.fork(parent, child)
     }
@@ -181,11 +194,17 @@ impl Backend for PagedNativeBackend {
             })
             .collect();
 
+        let mut attn_secs = 0.0f64;
+        let mut gemm_secs = 0.0f64;
         for (li, block) in self.model.blocks.iter().enumerate() {
             let s = block.attn.effective_shape();
             let width = s.proj_width();
             let h = x.rmsnorm(&block.norm1, 1e-5);
-            let (q, k, v) = block.attn.project_qkv(&h);
+            let t = Instant::now();
+            // One packed GEMM for Q|K|V (bit-identical to the three
+            // separate projections; see `FusedQkv`).
+            let (q, k, v) = self.fused_qkv[li].project(&h, &block.attn);
+            gemm_secs += t.elapsed().as_secs_f64();
             for (i, slot) in slots.iter().enumerate() {
                 self.pool.write_row(
                     li,
@@ -196,14 +215,21 @@ impl Backend for PagedNativeBackend {
                 );
             }
             let layer = self.pool.layer_view(li);
+            let t = Instant::now();
             let attn_out = paged_attention_decode(&q, &layer, &views, s);
+            attn_secs += t.elapsed().as_secs_f64();
+            let t = Instant::now();
             let y = block.attn.output(&attn_out);
             let x1 = x.add(&y);
             x = block.ffn(&x1);
+            gemm_secs += t.elapsed().as_secs_f64();
         }
 
         let h = x.rmsnorm(&self.model.norm_f, 1e-5);
+        let t = Instant::now();
         let logits = matmul(&h, &self.embed_t);
+        gemm_secs += t.elapsed().as_secs_f64();
+        self.last_timing = Some(StepTiming { attn: attn_secs, gemm: gemm_secs });
         Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
     }
 
@@ -211,6 +237,17 @@ impl Backend for PagedNativeBackend {
         // Blocks return to the pool when their ref count hits zero; forks
         // still holding shared blocks keep them alive.
         let _ = self.alloc.release(seq);
+    }
+
+    /// Engine pool truth for admission: this allocator sees every lease —
+    /// prefills, decode appends, *and* engine-level forks / copy-on-write
+    /// blocks that the scheduler's shadow allocator cannot know about.
+    fn free_blocks(&self) -> Option<usize> {
+        Some(self.alloc.free_blocks())
+    }
+
+    fn take_step_timing(&mut self) -> Option<StepTiming> {
+        self.last_timing.take()
     }
 }
 
@@ -305,6 +342,43 @@ mod tests {
         engine.release(1);
         assert_eq!(engine.used_blocks(), 0);
         engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_sees_engine_level_forks() {
+        use crate::coordinator::{Request, Scheduler, SchedulerConfig};
+        let model = Transformer::new_mha(ModelConfig::tiny(), 23);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let mut s = Scheduler::new(
+            PagedNativeBackend::new(model, kvc),
+            SchedulerConfig { max_active: 8, eos_token: None, kv: kvc },
+        );
+        // One active sequence holding 1 block (4-token prompt).
+        s.admit(Request::new(1, vec![1, 2, 3, 4], 8)).unwrap();
+        // Fork + decode at the engine level: invisible to the scheduler's
+        // shadow allocator, visible to the backend pool.
+        s.backend.fork(1, 99).unwrap();
+        s.backend.decode(&[(99, 7)]).unwrap();
+        assert_eq!(s.backend.free_blocks(), Some(2), "parent block + child boundary block");
+        // Shadow allocator (1 block used of 4) would wrongly admit a
+        // 3-block prompt; engine truth (2 free) must reject it.
+        assert!(s.kv.can_admit(12));
+        let req = Request::new(2, (0u32..12).collect(), 4);
+        assert!(!s.has_capacity_for(&req), "admission must query engine pool truth");
+        // A prompt that fits the engine pool is still admissible.
+        assert!(s.has_capacity_for(&Request::new(3, vec![1, 2, 3], 4)));
+    }
+
+    #[test]
+    fn step_timing_reported_and_consumed() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 29);
+        let mut engine = PagedNativeBackend::new(model, kv());
+        engine.prefill(1, &[1, 2, 3]).unwrap();
+        assert!(engine.take_step_timing().is_none(), "no decode step yet");
+        engine.decode(&[(1, 9)]).unwrap();
+        let t = engine.take_step_timing().expect("decode must record timing");
+        assert!(t.attn >= 0.0 && t.gemm >= 0.0);
+        assert!(engine.take_step_timing().is_none(), "timing is consumed on take");
     }
 
     #[test]

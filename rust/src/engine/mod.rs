@@ -7,9 +7,15 @@
 //!   [`crate::coordinator::kv_cache::BlockAllocator`] bookkeeping;
 //! * [`backend::PagedNativeBackend`] — a drop-in scheduler
 //!   [`crate::coordinator::Backend`] that decodes the entire active set in
-//!   a single batched step against paged storage (batched projections +
-//!   [`crate::attention::paged::paged_attention_decode`] + one logits
-//!   GEMM), with fork/copy-on-write prefix sharing that dedups K/V memory.
+//!   a single batched step against paged storage: per layer, one **fused
+//!   Q/K/V packed GEMM** ([`crate::model::weights::FusedQkv`], precomputed
+//!   at construction) + the **blocked parallel**
+//!   [`crate::attention::paged::paged_attention_decode`] (worker count via
+//!   `BDA_NUM_THREADS`, bit-identical at any setting) + one logits GEMM,
+//!   with fork/copy-on-write prefix sharing that dedups K/V memory. It
+//!   reports its attention/GEMM wall-time split per step through
+//!   [`crate::coordinator::StepTiming`] and exposes pool truth to
+//!   scheduler admission via `Backend::free_blocks`.
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

@@ -9,10 +9,14 @@
 //!   over the **paged batched decode engine** ([`engine`]): a shared
 //!   block-granular K/V storage pool plus a single batched decode step
 //!   that advances every active sequence at once through paged attention,
-//!   with fork/copy-on-write prefix sharing. Alongside it: the BD math
-//!   library, pure-Rust attention operators (MHA / BDA / PIFA-style /
-//!   paged), model definitions, and evaluation harnesses for every table
-//!   and figure in the paper.
+//!   with fork/copy-on-write prefix sharing. The decode hot path is a
+//!   **blocked paged-attention kernel parallelized over (sequence, head)
+//!   work items** (`BDA_NUM_THREADS` sets the worker count; output is
+//!   bit-identical to the serial reference at any setting) with the
+//!   per-layer Q/K/V projections fused into one packed GEMM. Alongside
+//!   it: the BD math library, pure-Rust attention operators (MHA / BDA /
+//!   PIFA-style / paged), model definitions, and evaluation harnesses for
+//!   every table and figure in the paper.
 //! - **L2/L1 (`python/compile/`):** JAX transformer + Pallas kernels,
 //!   AOT-lowered once to `artifacts/*.hlo.txt` and executed from Rust via
 //!   PJRT ([`runtime`], behind the `pjrt` feature). Python is never on the

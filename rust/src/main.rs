@@ -5,6 +5,9 @@
 //!   prepare    [--model M]        Algorithm 3 over a model, report stats
 //!   exactness  [--model M]        BDA vs MHA output diff across dtypes
 //!   serve      [--attention A]    run the serving coordinator on a trace
+//!                                 (--backend paged|per-seq; BDA_NUM_THREADS
+//!                                 sets decode parallelism — output is
+//!                                 bit-identical at any thread count)
 //!   eval-ppl   [--model M]        Fig. 2a-style PPL table (fp32/16/bf16)
 //!   recon      [--model M]        Table 4-style reconstruction errors
 //!   train      [--steps N]        drive the AOT train_step from Rust
@@ -150,6 +153,11 @@ fn cmd_serve(args: &Args) -> i32 {
         ..Default::default()
     });
     println!("serving {n} requests on {} [{attention} / {backend}]...", model.config.name);
+    println!(
+        "paged attention + GEMM workers: {} (set BDA_NUM_THREADS to override; \
+         generations are bit-identical at any thread count)",
+        bda::util::threadpool::num_threads()
+    );
     let timer = Timer::start();
     let result = if backend == "per-seq" {
         coordinator::server::replay_trace(NativeBackend::new(model), cfg, t)
@@ -160,7 +168,11 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let (responses, metrics) = result.expect("serve");
     let secs = timer.elapsed_secs();
-    println!("{}", metrics.snapshot().report());
+    let snap = metrics.snapshot();
+    println!("{}", snap.report());
+    if let Some(split) = snap.decode_split() {
+        println!("decode split: {split}");
+    }
     println!("wall: {secs:.2}s, completed {}", responses.len());
     0
 }

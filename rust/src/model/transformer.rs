@@ -63,6 +63,15 @@ impl AttentionImpl {
         }
     }
 
+    /// Pack this block's Q/K/V projection weights for the batched decode
+    /// engine: one concatenated GEMM (or the BDA compact-basis fusion)
+    /// instead of three kernel launches, precomputed once at backend
+    /// construction. See [`crate::model::weights::FusedQkv`] for the
+    /// bit-exactness argument.
+    pub fn pack_qkv(&self) -> crate::model::weights::FusedQkv {
+        crate::model::weights::FusedQkv::pack(self)
+    }
+
     /// Output projection of concatenated head outputs.
     pub fn output(&self, concat: &Tensor) -> Tensor {
         match self {
@@ -500,6 +509,32 @@ mod tests {
         let b = bda.decode_step(&mut c2, toks[3]);
         let rel = (b.max_abs_diff(&a) as f64) / a.fro_norm().max(1e-9);
         assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn packed_qkv_matches_separate_projections_bitwise() {
+        // The fused-GEMM contract: packed projection == three separate
+        // GEMMs, bit for bit, for every packable attention variant.
+        let x = Tensor::randn(&[5, ModelConfig::tiny().d_model], 1.0, 77);
+        let mha = tiny();
+        let bda = mha.to_bda(Strategy::FirstR, DType::F32).unwrap();
+        let pruned = mha.to_pruned(0.5);
+        for (label, model) in [("mha", &mha), ("bda", &bda), ("pruned", &pruned)] {
+            for (li, block) in model.blocks.iter().enumerate() {
+                let fused = block.attn.pack_qkv();
+                let (q0, k0, v0) = block.attn.project_qkv(&x);
+                let (q1, k1, v1) = fused.project(&x, &block.attn);
+                assert_eq!(q0.data, q1.data, "{label} layer {li}: Q must be bit-identical");
+                assert_eq!(k0.data, k1.data, "{label} layer {li}: K must be bit-identical");
+                assert_eq!(v0.data, v1.data, "{label} layer {li}: V must be bit-identical");
+            }
+        }
+        // FirstR preparation aligns both tags, so BDA must take the
+        // compact-basis fused path, not the fallback.
+        assert!(matches!(
+            bda.blocks[0].attn.pack_qkv(),
+            crate::model::weights::FusedQkv::CompactBasis { .. }
+        ));
     }
 
     #[test]

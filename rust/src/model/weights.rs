@@ -1,16 +1,110 @@
-//! Binary weight serialization for the pure-Rust transformer.
+//! Weight packing and serialization for the pure-Rust transformer.
 //!
-//! Format: magic + JSON header (config + tensor index) + raw little-endian
-//! f32 payloads. Lets prepared (BDA/low-rank/BD) models be deployed
-//! without re-running preparation — the "4s offline prep, then ship"
-//! workflow of the paper.
+//! Two halves:
+//!
+//! * [`FusedQkv`] — runtime weight packing: the per-layer Q/K/V projection
+//!   weights concatenated into one matrix at engine construction, so the
+//!   batched decode step issues a single `[B×d] @ [d×(q+k+v)]` GEMM
+//!   instead of three kernel launches. Bit-identical to the separate
+//!   projections (each output element touches exactly one packed column,
+//!   in the same accumulation order), so the engine's losslessness
+//!   contract survives the fusion.
+//! * [`Checkpoint`] — binary serialization: magic + JSON header (config +
+//!   tensor index) + raw little-endian f32 payloads. Lets prepared
+//!   (BDA/low-rank/BD) models be deployed without re-running preparation —
+//!   the "4s offline prep, then ship" workflow of the paper.
 
+use crate::attention::kproj::kproj_bda;
+use crate::attention::AttnShape;
+use crate::bd::Tag;
 use crate::model::config::ModelConfig;
+use crate::model::AttentionImpl;
+use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
+
+/// Packed Q/K/V projection weights for one attention block, precomputed
+/// once (at backend construction) and reused every decode step.
+///
+/// Every variant is constructed so that its `project` output is
+/// **bitwise identical** to [`AttentionImpl::project_qkv`]: per output
+/// element the same multiply-adds run in the same order (GEMM column
+/// independence; identical k-blocking because the inner dimension is
+/// unchanged), only the number of kernel launches differs.
+#[derive(Clone, Debug)]
+pub enum FusedQkv {
+    /// All three projections are plain GEMMs (MHA, structured pruning):
+    /// one packed `d × (q_cols + k_cols + v_cols)` weight, one GEMM,
+    /// split into Q | K | V.
+    Dense { packed: Tensor, q_cols: usize, k_cols: usize },
+    /// BDA compact-basis fusion (requires a shared basis tag for the QK
+    /// and VO sides): Q stays one GEMM against `b_q`; K' and V' fuse into
+    /// a single widened k-projection — the repeated basis slice
+    /// initializes both halves of the output and one strided GEMM over
+    /// `X_rest` accumulates against the packed `[C_qk | C_vo]`.
+    CompactBasis { b_q: Tensor, c_packed: Tensor, tag: Tag, shape: AttnShape },
+    /// No packing available for this attention variant (per-projection
+    /// low-rank layers, or BDA with differing QK/VO tags); fall back to
+    /// the unfused path.
+    Unfused,
+}
+
+impl FusedQkv {
+    /// Pack the projection weights of an attention block, if its variant
+    /// admits a fused form.
+    pub fn pack(attn: &AttentionImpl) -> FusedQkv {
+        match attn {
+            AttentionImpl::Mha(w) => FusedQkv::Dense {
+                packed: Tensor::concat_cols(&[&w.wq, &w.wk, &w.wv]),
+                q_cols: w.wq.cols(),
+                k_cols: w.wk.cols(),
+            },
+            AttentionImpl::Pruned(p) => FusedQkv::Dense {
+                packed: Tensor::concat_cols(&[&p.wq, &p.wk, &p.wv]),
+                q_cols: p.wq.cols(),
+                k_cols: p.wk.cols(),
+            },
+            AttentionImpl::Bda(w) if w.tag_qk == w.tag_vo => FusedQkv::CompactBasis {
+                b_q: w.b_qk.clone(),
+                c_packed: Tensor::concat_cols(&[&w.c_qk, &w.c_vo]),
+                tag: w.tag_qk,
+                shape: w.shape,
+            },
+            _ => FusedQkv::Unfused,
+        }
+    }
+
+    /// Q/K/V projections through the packed weights; falls back to
+    /// `attn.project_qkv` for [`FusedQkv::Unfused`]. Output is bitwise
+    /// identical to the fallback in every case.
+    pub fn project(&self, x: &Tensor, attn: &AttentionImpl) -> (Tensor, Tensor, Tensor) {
+        match self {
+            FusedQkv::Dense { packed, q_cols, k_cols } => {
+                let qkv = matmul(x, packed);
+                let q = qkv.slice_cols(0, *q_cols);
+                let k = qkv.slice_cols(*q_cols, *q_cols + *k_cols);
+                let v = qkv.slice_cols(*q_cols + *k_cols, qkv.cols());
+                (q, k, v)
+            }
+            FusedQkv::CompactBasis { b_q, c_packed, tag, shape } => {
+                let q = matmul(x, b_q);
+                // One k-projection at doubled head count computes K' | V'
+                // in a single fused pass: the basis repeat covers heads
+                // 0..n (K) and n..2n (V), the GEMM reads X_rest once.
+                let wide = AttnShape::new(shape.d, shape.n_heads * 2, shape.d_h);
+                let kv = kproj_bda(x, c_packed, *tag, wide);
+                let w = shape.proj_width();
+                let k = kv.slice_cols(0, w);
+                let v = kv.slice_cols(w, 2 * w);
+                (q, k, v)
+            }
+            FusedQkv::Unfused => attn.project_qkv(x),
+        }
+    }
+}
 
 const MAGIC: &[u8; 8] = b"BDAW0001";
 

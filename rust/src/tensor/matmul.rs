@@ -8,7 +8,7 @@
 //! matching a 16-bit-storage / 32-bit-accumulate GPU tensor-core pipeline.
 
 use super::{DType, Tensor};
-use crate::util::threadpool::parallel_chunks;
+use crate::util::threadpool::{parallel_chunks, SendPtr};
 
 /// Tuning knobs for the blocked kernel. Values chosen by the perf pass
 /// (EXPERIMENTS.md §Perf) on this CPU.
@@ -54,18 +54,6 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
             unsafe { std::slice::from_raw_parts_mut(c_addr.get().add(lo * n), (hi - lo) * n) };
         gemm_panel(&a[lo * k..hi * k], b, c_panel, hi - lo, k, n, k);
     });
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    // Accessor keeps the closure capturing the whole (Sync) struct rather
-    // than the raw-pointer field (edition-2021 disjoint capture).
-    fn get(self) -> *mut f32 {
-        self.0
-    }
 }
 
 /// Single-threaded panel GEMM: k-blocked, MR-row micro-tiles, B rows

@@ -26,7 +26,16 @@ pub fn num_threads() -> usize {
 /// chunk). `f` must be `Sync`; per-index work should be coarse enough to
 /// amortize the atomic fetch.
 pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
-    let workers = num_threads().min(n.max(1));
+    parallel_for_with(n, num_threads(), f);
+}
+
+/// [`parallel_for`] with an explicit worker count instead of the
+/// `BDA_NUM_THREADS` global. Lets callers (and determinism tests) pin the
+/// parallelism width per call — e.g. the paged-attention property tests
+/// sweep worker counts inside one process, which the env-var route cannot
+/// do because [`num_threads`] is latched on first use.
+pub fn parallel_for_with(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
+    let workers = workers.clamp(1, n.max(1));
     if workers <= 1 || n <= 1 {
         for i in 0..n {
             f(i);
@@ -45,6 +54,22 @@ pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
             });
         }
     });
+}
+
+/// Shared-across-workers raw mutable pointer for data-parallel writers
+/// whose output regions are provably disjoint (blocked GEMM row panels,
+/// paged-attention head slices). The accessor keeps closures capturing the
+/// whole (Sync) struct rather than the raw-pointer field (edition-2021
+/// disjoint capture). Safety is the *caller's* obligation: never write
+/// overlapping regions from different workers.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    pub(crate) fn get(self) -> *mut f32 {
+        self.0
+    }
 }
 
 /// Run `f(chunk_start, chunk_end)` over contiguous chunks of `0..n`,
@@ -90,6 +115,20 @@ mod tests {
     fn zero_work_ok() {
         parallel_for(0, |_| panic!("should not run"));
         parallel_chunks(0, 8, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn explicit_worker_counts_cover_all_indices() {
+        for workers in [1, 2, 8, 64] {
+            let n = 257;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_for_with(n, workers, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "workers {workers} index {i}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Property tests for the blocked parallel paged-attention kernel and the
+//! fused Q/K/V weight packing — the two bit-exactness contracts of the
+//! PR 2 perf work:
+//!
+//! 1. `paged_attention_decode` (blocked, parallel over (seq, head) work
+//!    items) is **bit-identical** to the retained serial reference at any
+//!    worker count, across random batch sizes, block sizes, head counts,
+//!    and history lengths. CI additionally runs the whole suite under
+//!    `BDA_NUM_THREADS=1` and `=8` so the env-driven default path is
+//!    covered end to end.
+//! 2. The packed Q/K/V projection (`FusedQkv`) equals the three separate
+//!    projections bitwise for every packable attention variant, and the
+//!    paged engine built on both stays bit-identical to per-sequence
+//!    decode for MHA and BDA alike.
+
+use bda::attention::bda::BdaWeights;
+use bda::attention::mha::MhaWeights;
+use bda::attention::paged::{
+    paged_attention_decode_serial, paged_attention_decode_with_workers, PagedLayerView, PagedSeq,
+};
+use bda::attention::AttnShape;
+use bda::bd::Strategy;
+use bda::bench_support::scatter_paged_kv;
+use bda::coordinator::kv_cache::{KvCacheConfig, SeqId};
+use bda::coordinator::scheduler::Backend;
+use bda::engine::PagedNativeBackend;
+use bda::model::transformer::KvCache;
+use bda::model::weights::FusedQkv;
+use bda::model::{AttentionImpl, ModelConfig, Transformer};
+use bda::tensor::{DType, Tensor};
+use bda::util::rng::Rng;
+
+/// Fisher–Yates shuffle of 0..n (deterministic per rng state).
+fn permutation(n: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        p.swap(i, j);
+    }
+    p
+}
+
+#[test]
+fn prop_parallel_paged_attention_is_bit_identical_to_serial() {
+    for case in 0..25u64 {
+        let mut rng = Rng::new(case * 9973 + 17);
+        let d_h = [2usize, 4, 8][rng.below(3) as usize];
+        let n_heads = rng.range(1, 4);
+        let d = d_h * rng.range(2, 5); // any d > d_h works for the operator
+        let s = AttnShape::new(d, n_heads, d_h);
+        let width = s.proj_width();
+        let block_size = rng.range(1, 8);
+        let b = rng.range(1, 6);
+        let lens: Vec<usize> = (0..b).map(|_| rng.range(1, 40)).collect();
+
+        // Disjoint per-sequence block tables carved from a shuffled pool.
+        let blocks_needed: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum();
+        let num_blocks = blocks_needed + rng.range(0, 8);
+        let perm = permutation(num_blocks, &mut rng);
+        let mut tables: Vec<Vec<usize>> = Vec::new();
+        let mut next = 0usize;
+        for &len in &lens {
+            let n = len.div_ceil(block_size);
+            tables.push(perm[next..next + n].to_vec());
+            next += n;
+        }
+
+        // Scatter random K/V histories under the tables.
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        for (si, (&len, table)) in lens.iter().zip(&tables).enumerate() {
+            let k = Tensor::randn(&[len, width], 1.0, case * 1000 + si as u64 * 2 + 1);
+            let v = Tensor::randn(&[len, width], 1.0, case * 1000 + si as u64 * 2 + 2);
+            scatter_paged_kv(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        }
+
+        let q = Tensor::randn(&[b, width], 1.0, case * 1000 + 999);
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let seqs: Vec<PagedSeq> =
+            tables.iter().zip(&lens).map(|(t, &len)| PagedSeq { blocks: t, len }).collect();
+
+        let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+        for workers in [1usize, 2, 8] {
+            let par = paged_attention_decode_with_workers(&q, &layer, &seqs, s, workers);
+            assert_eq!(
+                par, serial,
+                "case {case} (b={b}, bs={block_size}, heads={n_heads}, d_h={d_h}): \
+                 workers {workers} diverged from the serial reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fused_qkv_packing_is_bitwise_exact() {
+    for case in 0..10u64 {
+        let mut rng = Rng::new(case * 53 + 3);
+        let d_h = [2usize, 4, 8][rng.below(3) as usize];
+        let s = AttnShape::new(d_h * rng.range(2, 5), rng.range(1, 4), d_h);
+        let w = MhaWeights::random(s, case + 500);
+        let x = Tensor::randn(&[rng.range(1, 9), s.d], 1.0, case + 900);
+
+        // MHA: one packed [d × 3·n·d_h] GEMM == three GEMMs.
+        let attn = AttentionImpl::Mha(w.clone());
+        let fused = FusedQkv::pack(&attn);
+        assert!(matches!(fused, FusedQkv::Dense { .. }));
+        let (q0, k0, v0) = attn.project_qkv(&x);
+        let (q1, k1, v1) = fused.project(&x, &attn);
+        assert_eq!(q0, q1, "mha q case {case}");
+        assert_eq!(k0, k1, "mha k case {case}");
+        assert_eq!(v0, v1, "mha v case {case}");
+
+        // BDA prepared with FirstR aligns the QK and VO tags, so packing
+        // must take the compact-basis fused path and still match bitwise.
+        let bw = BdaWeights::prepare(&w, Strategy::FirstR, DType::F32).unwrap();
+        let battn = AttentionImpl::Bda(bw);
+        let bfused = FusedQkv::pack(&battn);
+        assert!(matches!(bfused, FusedQkv::CompactBasis { .. }));
+        let (q0, k0, v0) = battn.project_qkv(&x);
+        let (q1, k1, v1) = bfused.project(&x, &battn);
+        assert_eq!(q0.data, q1.data, "bda q case {case}");
+        assert_eq!(k0.data, k1.data, "bda k case {case}");
+        assert_eq!(v0.data, v1.data, "bda v case {case}");
+    }
+}
+
+/// End-to-end engine property: batched decode through the paged engine
+/// (blocked parallel attention + fused QKV) reproduces per-sequence decode
+/// bit for bit, for MHA and both BDA preparations, across random batch
+/// compositions and block sizes.
+#[test]
+fn prop_engine_decode_bit_identical_to_per_seq() {
+    for case in 0..3u64 {
+        let mha = Transformer::new_mha(ModelConfig::tiny(), 100 + case);
+        let models = vec![
+            ("mha", mha.clone()),
+            ("bda-residmin", mha.to_bda(Strategy::ResidualMin, DType::F32).unwrap()),
+            ("bda-firstr", mha.to_bda(Strategy::FirstR, DType::F32).unwrap()),
+        ];
+        let mut rng = Rng::new(case * 31 + 7);
+        for (label, model) in models {
+            let kv = KvCacheConfig { block_size: rng.range(2, 8), num_blocks: 256 };
+            let mut engine = PagedNativeBackend::new(model.clone(), kv);
+            let b = rng.range(1, 5);
+            let mut caches = Vec::new();
+            for i in 0..b {
+                let plen = rng.range(1, 9);
+                let prompt: Vec<u32> = (0..plen)
+                    .map(|j| ((case * 7 + i as u64 * 13 + j as u64) % 251) as u32)
+                    .collect();
+                engine.prefill(i as SeqId, &prompt).unwrap();
+                let mut c = KvCache::new(model.config.n_layers);
+                let _ = model.prefill(&mut c, &prompt);
+                caches.push(c);
+            }
+            for round in 0..3u32 {
+                let batch: Vec<(SeqId, u32)> =
+                    (0..b).map(|i| (i as SeqId, (round * 5 + i as u32) % 250)).collect();
+                let got = engine.decode(&batch).unwrap();
+                for (i, c) in caches.iter_mut().enumerate() {
+                    let want = model.decode_step(c, batch[i].1);
+                    assert_eq!(
+                        got[i], want.data,
+                        "{label} case {case} round {round} seq {i}: \
+                         paged batched decode diverged from per-sequence decode"
+                    );
+                }
+            }
+        }
+    }
+}
