@@ -96,15 +96,19 @@ fn main() -> Result<()> {
         println!("usage: serve [--requests N]");
         println!(
             "  BDA_NUM_THREADS=N   worker threads for paged attention + GEMMs \
-             (default: all cores; generations are bit-identical at any value)"
+             (default: all cores; generations are bit-identical at any value; \
+             read once at startup and latched for the process lifetime)"
         );
         return Ok(());
     }
     let n = args.get_usize("requests", 12);
     let cfg = ServerConfig::default();
+    // Constructing the global pool here also logs the resolved worker
+    // count (the observable record of the BDA_NUM_THREADS latch).
     println!(
-        "decode workers: {} (BDA_NUM_THREADS to override; bit-identical at any thread count)\n",
-        bda::util::threadpool::num_threads()
+        "decode workers: {} (persistent parked pool; BDA_NUM_THREADS latches once at startup; \
+         bit-identical at any thread count)\n",
+        bda::util::threadpool::global().workers()
     );
 
     pjrt_sections(n, cfg)?;

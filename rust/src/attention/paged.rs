@@ -13,16 +13,19 @@
 //! # The blocked parallel kernel and its bit-exactness contract
 //!
 //! [`paged_attention_decode`] runs a *blocked* kernel parallelized over
-//! independent `(sequence, head)` work items via the crate thread pool
-//! (`BDA_NUM_THREADS` controls the worker count):
+//! independent `(sequence, head)` work items on the **persistent parked
+//! worker pool** ([`crate::util::threadpool::ThreadPool`]; the process
+//! pool sized by `BDA_NUM_THREADS` by default, or an engine-owned pool via
+//! [`paged_attention_decode_on`]):
 //!
 //! * K/V history is walked **per block** over contiguous rows, hoisting the
 //!   `block_table[t / block_size]` + `t % block_size` indirection out of
 //!   the token loop (one base offset per block instead of a div/mod per
 //!   token);
-//! * the score buffer is a **per-worker scratch** vector reused across all
-//!   work items a worker steals, replacing the per-(head, row) heap
-//!   allocation of the naive loop;
+//! * the score buffer is a **per-worker scratch arena** reused across all
+//!   work items a worker steals — and, because pool workers are
+//!   long-lived, across every layer and decode step of the process —
+//!   replacing the per-(head, row) heap allocation of the naive loop;
 //! * work items write disjoint `d_h`-wide output slices, so no
 //!   synchronization is needed on the output.
 //!
@@ -32,12 +35,15 @@
 //! `exp`/sum, weighted-V accumulation — happens in exactly the order of the
 //! retained serial reference [`paged_attention_decode_serial`]. Work items
 //! never share accumulators. Therefore the parallel output is bit-identical
-//! to the serial reference at *any* worker count, and determinism across
-//! `BDA_NUM_THREADS` settings is enforced by tests and CI.
+//! to the serial reference at *any* worker count — on the shared process
+//! pool or a dedicated one — and determinism across `BDA_NUM_THREADS`
+//! settings is enforced by tests and CI. The full set of serving-layer
+//! invariants (paged == per-sequence decode, parallel == serial, COW fork
+//! semantics) is stated in one place in [`crate::engine`].
 
 use super::AttnShape;
 use crate::tensor::Tensor;
-use crate::util::threadpool::{self, SendPtr};
+use crate::util::threadpool::{self, SendPtr, ThreadPool};
 use std::cell::RefCell;
 
 /// One layer of paged K/V storage: `num_blocks * block_size` rows of
@@ -72,8 +78,9 @@ pub struct PagedSeq<'a> {
 
 thread_local! {
     /// Per-worker score scratch, reused across every work item a worker
-    /// processes (workers are scoped threads, so this lives for the whole
-    /// parallel region — at most one growth per worker per call).
+    /// processes. Pool workers are persistent, so this arena lives across
+    /// layers and decode steps: it grows to the longest history a worker
+    /// has seen and is never reallocated on the hot path afterwards.
     static SCORE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
@@ -110,8 +117,9 @@ fn validate(layer: &PagedLayerView, seqs: &[PagedSeq]) {
 /// the output projection.
 ///
 /// Runs the blocked kernel in parallel over `(sequence, head)` work items
-/// with up to `BDA_NUM_THREADS` workers; output is bit-identical to
-/// [`paged_attention_decode_serial`] at any worker count (see module docs).
+/// on the process-wide parked pool with up to `BDA_NUM_THREADS` workers;
+/// output is bit-identical to [`paged_attention_decode_serial`] at any
+/// worker count (see module docs).
 pub fn paged_attention_decode(
     q: &Tensor,
     layer: &PagedLayerView,
@@ -122,8 +130,33 @@ pub fn paged_attention_decode(
 }
 
 /// [`paged_attention_decode`] with an explicit worker count (determinism
-/// tests sweep this; serving uses the `BDA_NUM_THREADS` default).
+/// tests sweep this; serving uses the `BDA_NUM_THREADS` default). A count
+/// above the process pool's width runs on a transient dedicated pool so
+/// the requested parallelism is real even when `BDA_NUM_THREADS` latched
+/// the process pool small (e.g. the 1-thread CI determinism leg still
+/// exercises genuinely 2- and 8-wide kernels here).
 pub fn paged_attention_decode_with_workers(
+    q: &Tensor,
+    layer: &PagedLayerView,
+    seqs: &[PagedSeq],
+    s: AttnShape,
+    workers: usize,
+) -> Tensor {
+    let process = threadpool::global();
+    if workers > process.workers() {
+        let dedicated = ThreadPool::new(workers);
+        return paged_attention_decode_on(&dedicated, q, layer, seqs, s, workers);
+    }
+    paged_attention_decode_on(process, q, layer, seqs, s, workers)
+}
+
+/// [`paged_attention_decode`] on an explicit [`ThreadPool`] — the entry
+/// point the serving engine uses so one engine owns one pool
+/// (`PagedNativeBackend::with_thread_pool`), groundwork for multi-worker
+/// sharding. `workers` is capped at the pool width; output is
+/// bit-identical to the serial reference on any pool at any width.
+pub fn paged_attention_decode_on(
+    pool: &ThreadPool,
     q: &Tensor,
     layer: &PagedLayerView,
     seqs: &[PagedSeq],
@@ -143,7 +176,7 @@ pub fn paged_attention_decode_with_workers(
     let mut out = Tensor::zeros(&[b, width]);
     let out_ptr = SendPtr(out.data.as_mut_ptr());
     let qd = &q.data;
-    threadpool::parallel_for_with(b * n_heads, workers, |w| {
+    pool.run(b * n_heads, workers, |w| {
         let i = w / n_heads;
         let h = w % n_heads;
         let off = h * d_h;

@@ -53,6 +53,12 @@ impl Measurement {
     pub fn mops(&self) -> f64 {
         self.throughput() / 1e6
     }
+
+    /// Median iteration time in microseconds (latency-style reporting,
+    /// e.g. the decode-throughput dispatch-overhead rows).
+    pub fn median_us(&self) -> f64 {
+        self.summary.median * 1e6
+    }
 }
 
 /// Run a benchmark: calls `f()` repeatedly and times each call.

@@ -4,8 +4,8 @@
 //! [`crate::coordinator::NativeBackend`]'s one-sequence-at-a-time decode
 //! (private contiguous `KvCache` per sequence) with:
 //!
-//! * a single [`PagedKvPool`] holding every sequence's K/V in shared
-//!   block-granular storage, leased through the ref-counted
+//! * a single [`crate::engine::PagedKvPool`] holding every sequence's K/V
+//!   in shared block-granular storage, leased through the ref-counted
 //!   [`BlockAllocator`];
 //! * **one batched decode step** for the whole active set: one embedding
 //!   gather, per layer one batched RMSNorm + one batched Q/K/V projection
@@ -23,7 +23,7 @@
 //! paper's losslessness claim carried through the serving engine (see
 //! `tests/prop_coordinator.rs`).
 
-use crate::attention::paged::{paged_attention_decode, PagedSeq};
+use crate::attention::paged::{paged_attention_decode_on, PagedSeq};
 use crate::coordinator::kv_cache::{BlockAllocator, KvCacheConfig, KvError, SeqId};
 use crate::coordinator::metrics::StepTiming;
 use crate::coordinator::scheduler::Backend;
@@ -31,7 +31,9 @@ use crate::model::transformer::{KvCache, Transformer};
 use crate::model::weights::FusedQkv;
 use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
+use crate::util::threadpool::{self, ThreadPool};
 use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Paged batched serving backend over the native Rust transformer.
@@ -50,10 +52,28 @@ pub struct PagedNativeBackend {
     /// Attention/GEMM wall-time split of the most recent decode step,
     /// consumed by the scheduler via [`Backend::take_step_timing`].
     last_timing: Option<StepTiming>,
+    /// Persistent parked worker pool running the paged-attention hot path.
+    /// Defaults to a handle on the process-wide pool; a dedicated pool
+    /// ([`PagedNativeBackend::with_thread_pool`]) gives this engine its
+    /// own worker set — groundwork for multi-worker sharding. GEMMs
+    /// dispatched through the tensor wrappers still use the process pool.
+    threads: Arc<ThreadPool>,
 }
 
 impl PagedNativeBackend {
     pub fn new(model: Transformer, kv: KvCacheConfig) -> PagedNativeBackend {
+        PagedNativeBackend::with_thread_pool(model, kv, Arc::clone(threadpool::global()))
+    }
+
+    /// Construct with an explicit worker pool: this engine's batched
+    /// paged-attention steps dispatch on `threads` instead of the
+    /// process-wide pool. Output is bit-identical on any pool at any
+    /// width (the kernel's determinism contract).
+    pub fn with_thread_pool(
+        model: Transformer,
+        kv: KvCacheConfig,
+        threads: Arc<ThreadPool>,
+    ) -> PagedNativeBackend {
         let widths: Vec<usize> =
             model.blocks.iter().map(|b| b.attn.effective_shape().proj_width()).collect();
         let embed_t = model.embed.transpose();
@@ -64,6 +84,7 @@ impl PagedNativeBackend {
             embed_t,
             fused_qkv,
             last_timing: None,
+            threads,
             model,
         }
     }
@@ -71,6 +92,11 @@ impl PagedNativeBackend {
     /// Pool sized by the default [`KvCacheConfig`].
     pub fn with_default_pool(model: Transformer) -> PagedNativeBackend {
         PagedNativeBackend::new(model, KvCacheConfig::default())
+    }
+
+    /// The worker pool this engine dispatches paged attention on.
+    pub fn thread_pool(&self) -> &Arc<ThreadPool> {
+        &self.threads
     }
 
     /// Fork `child` from `parent`: shares every current block (table copy +
@@ -216,7 +242,8 @@ impl Backend for PagedNativeBackend {
             }
             let layer = self.pool.layer_view(li);
             let t = Instant::now();
-            let attn_out = paged_attention_decode(&q, &layer, &views, s);
+            let workers = self.threads.workers();
+            let attn_out = paged_attention_decode_on(&self.threads, &q, &layer, &views, s, workers);
             attn_secs += t.elapsed().as_secs_f64();
             let t = Instant::now();
             let y = block.attn.output(&attn_out);
@@ -367,6 +394,27 @@ mod tests {
         assert!(!s.has_capacity_for(&req), "admission must query engine pool truth");
         // A prompt that fits the engine pool is still admissible.
         assert!(s.has_capacity_for(&Request::new(3, vec![1, 2, 3], 4)));
+    }
+
+    #[test]
+    fn dedicated_thread_pool_matches_shared_pool_decode() {
+        // `with_thread_pool` gives the engine its own parked worker set;
+        // generations must stay bit-identical to the shared-pool engine
+        // (the kernel's any-pool/any-width determinism contract).
+        let model = Transformer::new_mha(ModelConfig::tiny(), 31);
+        let mut shared = PagedNativeBackend::new(model.clone(), kv());
+        let mut owned =
+            PagedNativeBackend::with_thread_pool(model, kv(), Arc::new(ThreadPool::new(3)));
+        assert_eq!(owned.thread_pool().workers(), 3);
+        let prompt = [4u32, 8, 15, 16, 23, 42];
+        let a = shared.prefill(1, &prompt).unwrap();
+        let b = owned.prefill(1, &prompt).unwrap();
+        assert_eq!(a, b);
+        for tok in [7u32, 99, 3] {
+            let x = shared.decode(&[(1, tok)]).unwrap();
+            let y = owned.decode(&[(1, tok)]).unwrap();
+            assert_eq!(x, y, "dedicated pool diverged from the shared pool at token {tok}");
+        }
     }
 
     #[test]

@@ -10,12 +10,45 @@
 //!   a single batched step against paged storage: per layer, one **fused
 //!   Q/K/V packed GEMM** ([`crate::model::weights::FusedQkv`], precomputed
 //!   at construction) + the **blocked parallel**
-//!   [`crate::attention::paged::paged_attention_decode`] (worker count via
-//!   `BDA_NUM_THREADS`, bit-identical at any setting) + one logits GEMM,
-//!   with fork/copy-on-write prefix sharing that dedups K/V memory. It
-//!   reports its attention/GEMM wall-time split per step through
+//!   [`crate::attention::paged::paged_attention_decode`] + one logits
+//!   GEMM, with fork/copy-on-write prefix sharing that dedups K/V memory.
+//!   It reports its attention/GEMM wall-time split per step through
 //!   [`crate::coordinator::StepTiming`] and exposes pool truth to
 //!   scheduler admission via `Backend::free_blocks`.
+//!
+//! All parallel regions of the decode step run on the **persistent parked
+//! worker pool** ([`crate::util::threadpool`]): workers are created once
+//! and woken per dispatch, so the per-layer-per-step thread spawn/join of
+//! the scoped implementation is gone and per-worker scratch survives
+//! across layers and steps. Each engine holds a pool handle — the
+//! process-wide pool by default, or a dedicated pool via
+//! [`backend::PagedNativeBackend::with_thread_pool`] (groundwork for
+//! multi-worker sharding).
+//!
+//! # Load-bearing invariants
+//!
+//! Every optimization in the serving layer is constrained by three
+//! bit-exactness invariants, stated here once and property-tested in
+//! `tests/prop_paged_parallel.rs` and `tests/prop_coordinator.rs`:
+//!
+//! 1. **Paged batched decode is bit-identical to per-sequence decode.**
+//!    Every row-level operation of the batched step (embedding, RMSNorm,
+//!    GEMM row, attention accumulation, FFN, logits) is arithmetically
+//!    identical to `Transformer::decode_step`, for MHA and BDA alike —
+//!    the paper's losslessness claim carried through the engine.
+//! 2. **Parallel attention is bit-identical to the serial reference.**
+//!    The blocked kernel assigns `(sequence, head)` work items to workers
+//!    dynamically, but per-row accumulation order is fixed and work items
+//!    never share accumulators, so output does not depend on the worker
+//!    count, the pool instance, or the assignment of items to workers
+//!    (`BDA_NUM_THREADS` is a pure performance knob).
+//! 3. **COW append isolates forks.** [`backend::PagedNativeBackend::fork`]
+//!    copies block *tables* only; both sequences share K/V blocks until
+//!    one appends into a shared tail block, at which point
+//!    `BlockAllocator::append_token_cow` gives the writer a private copy
+//!    first. A fork therefore never observes — or causes — a change in
+//!    the other sequence's history, and identical histories decode to
+//!    bit-identical logits whether or not they share storage.
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

@@ -13,14 +13,16 @@
 //!   **blocked paged-attention kernel parallelized over (sequence, head)
 //!   work items** (`BDA_NUM_THREADS` sets the worker count; output is
 //!   bit-identical to the serial reference at any setting) with the
-//!   per-layer Q/K/V projections fused into one packed GEMM. Alongside
-//!   it: the BD math library, pure-Rust attention operators (MHA / BDA /
-//!   PIFA-style / paged), model definitions, and evaluation harnesses for
-//!   every table and figure in the paper.
+//!   per-layer Q/K/V projections fused into one packed GEMM, and every
+//!   parallel region dispatches on a **persistent parked worker pool**
+//!   ([`util::threadpool`]) — no thread spawn/join on the hot path.
+//!   Alongside it: the BD math library, pure-Rust attention operators
+//!   (MHA / BDA / PIFA-style / paged), model definitions, and evaluation
+//!   harnesses for every table and figure in the paper.
 //! - **L2/L1 (`python/compile/`):** JAX transformer + Pallas kernels,
 //!   AOT-lowered once to `artifacts/*.hlo.txt` and executed from Rust via
-//!   PJRT ([`runtime`], behind the `pjrt` feature). Python is never on the
-//!   request path.
+//!   PJRT (the `runtime` module, behind the `pjrt` feature). Python is
+//!   never on the request path.
 //!
 //! Entry points: [`bd`] for the decomposition, [`attention`] for the
 //! operators, [`prepare`] for Algorithm 3 model conversion, [`engine`] for

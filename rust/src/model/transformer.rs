@@ -6,6 +6,12 @@
 //! cache, memory, PPL), and cross-validation against the AOT-compiled JAX
 //! model. Positional information enters at the embedding layer (GPT-style
 //! sinusoidal), which keeps BD fully lossless (Appendix D).
+//!
+//! In serving, this model is driven by the paged batched engine
+//! ([`crate::engine`]); the per-sequence [`Transformer::decode_step`] path
+//! here is the bit-exactness reference the engine's batched step is
+//! property-tested against. Its GEMMs dispatch on the persistent worker
+//! pool ([`crate::util::threadpool`]) like every other parallel region.
 
 use crate::attention::bda::BdaWeights;
 use crate::attention::mha::MhaWeights;

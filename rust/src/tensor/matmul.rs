@@ -1,11 +1,14 @@
 //! Blocked, multithreaded matrix multiplication — the L3 hot path.
 //!
 //! The Fig. 2b / Tables 6–7 operator benchmarks bottom out here, so this is
-//! written for throughput: row-panel parallelism across the thread pool, a
-//! k-blocked micro-kernel over contiguous rows of B (unit-stride loads for
-//! both operands), and f32 accumulation. Logical f16/bf16 matmuls quantize
-//! the *output* through the dtype (inputs are assumed already quantized),
-//! matching a 16-bit-storage / 32-bit-accumulate GPU tensor-core pipeline.
+//! written for throughput: row-panel parallelism across the persistent
+//! parked worker pool ([`crate::util::threadpool`]; dispatch wakes parked
+//! workers instead of spawning threads, so per-layer-per-step GEMMs carry
+//! no spawn cost), a k-blocked micro-kernel over contiguous rows of B
+//! (unit-stride loads for both operands), and f32 accumulation. Logical
+//! f16/bf16 matmuls quantize the *output* through the dtype (inputs are
+//! assumed already quantized), matching a 16-bit-storage /
+//! 32-bit-accumulate GPU tensor-core pipeline.
 
 use super::{DType, Tensor};
 use crate::util::threadpool::{parallel_chunks, SendPtr};

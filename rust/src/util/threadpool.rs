@@ -1,13 +1,73 @@
-//! A small scoped thread pool for data-parallel loops.
+//! Persistent parked worker pool for data-parallel loops.
 //!
-//! Used by the blocked matmul and batch execution paths (no rayon in the
-//! offline crate set). Work is expressed as "run `f(chunk_index)` for
-//! indices 0..n" with the closure shared across a fixed set of workers.
+//! The serving hot path dispatches one data-parallel region per layer per
+//! decode step (blocked GEMM row panels plus the paged-attention kernel).
+//! The original implementation spawned and joined *scoped OS threads* for
+//! every such region — one spawn/join cycle per layer per step. This
+//! module replaces that with a long-lived [`ThreadPool`]: workers are
+//! created once, parked on a condvar between dispatches, and woken per
+//! region via an epoch counter. [`parallel_for`], [`parallel_for_with`],
+//! and [`parallel_chunks`] keep their exact signatures and index-space
+//! contracts as thin wrappers over the process-wide pool ([`global`]), so
+//! callers (blocked GEMM, paged attention, batched decode) migrated
+//! without change. The pre-pool implementation is retained as
+//! [`scoped_parallel_for_with`] — the spawn-overhead baseline measured by
+//! `benches/decode_throughput.rs` and an independent execution strategy
+//! the pool lifecycle tests compare against.
+//!
+//! # Determinism contract
+//!
+//! Work *assignment* is dynamic (participants claim indices from a shared
+//! atomic counter), but every consumer keeps per-item float work
+//! self-contained: work items never share accumulators and per-item
+//! accumulation order is fixed. Output is therefore bit-identical at any
+//! worker count — the invariant stated centrally in [`crate::engine`] and
+//! enforced by `tests/prop_paged_parallel.rs` at worker counts {1, 2, 8}.
+//!
+//! # Per-worker scratch arenas
+//!
+//! Because workers are persistent, `thread_local!` scratch touched inside
+//! a work item (e.g. the paged-attention score buffer in
+//! [`crate::attention::paged`]) now lives across layers *and* decode
+//! steps: it is allocated once per worker per process instead of once per
+//! dispatch. This is the pool's second win besides spawn amortization.
+//!
+//! # The `BDA_NUM_THREADS` latch
+//!
+//! [`num_threads`] reads `BDA_NUM_THREADS` **once** and latches the result
+//! for the process lifetime; the global pool is sized with it on first
+//! use. Setting the variable after the first dispatch has no effect. To
+//! make the latch visible, the resolved worker count (and whether it came
+//! from the environment or from `available_parallelism`) is logged to
+//! stderr once when the global pool is constructed. Code that needs to
+//! vary the width inside one process passes an explicit count to
+//! [`parallel_for_with`] (which honors widths above the pool size with
+//! one-off scoped threads) or constructs its own [`ThreadPool`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// Number of worker threads to use for data-parallel loops.
+/// Process-unique token per thread (0 is reserved for "no owner"), used to
+/// detect same-thread re-entry into a pool's dispatch path without relying
+/// on the unstable `ThreadId::as_u64`.
+fn thread_token() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TOKEN: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TOKEN.with(|t| *t)
+}
+
+/// Number of worker threads used for data-parallel loops, resolved from
+/// `BDA_NUM_THREADS` (falling back to `available_parallelism`).
+///
+/// **Latch:** the value is computed once and cached for the process
+/// lifetime — later changes to the environment variable are ignored. The
+/// global pool logs the resolved count once at construction (see
+/// [`global`]) so the latched value is observable.
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -21,20 +81,316 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// Run `f(i)` for every `i in 0..n`, distributing indices across up to
-/// `num_threads()` scoped workers via an atomic counter (work stealing by
-/// chunk). `f` must be `Sync`; per-index work should be coarse enough to
-/// amortize the atomic fetch.
-pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
-    parallel_for_with(n, num_threads(), f);
+/// The process-wide pool, created on first use with [`num_threads`]
+/// workers. Logs the resolved worker count (and its source) to stderr
+/// exactly once, at construction — the observable record of the
+/// `BDA_NUM_THREADS` latch.
+pub fn global() -> &'static Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = num_threads();
+        let source = if std::env::var_os("BDA_NUM_THREADS").is_some() {
+            "BDA_NUM_THREADS"
+        } else {
+            "available_parallelism"
+        };
+        eprintln!(
+            "[bda] thread pool: {n} worker{} (from {source}; latched for the process lifetime)",
+            if n == 1 { "" } else { "s" }
+        );
+        Arc::new(ThreadPool::new(n))
+    })
 }
 
-/// [`parallel_for`] with an explicit worker count instead of the
-/// `BDA_NUM_THREADS` global. Lets callers (and determinism tests) pin the
+/// One dispatched parallel region, type-erased so parked workers can run
+/// it: a raw pointer to the dispatcher's stack-held task closure plus a
+/// monomorphized trampoline that restores its type. The dispatch barrier
+/// keeps the pointee alive — [`ThreadPool::run`] does not return until
+/// every worker has reported completion of this epoch.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (),
+    /// Calls `task` at its concrete closure type.
+    call: unsafe fn(*const ()),
+}
+
+// SAFETY: `task` points at a `Sync` closure owned by the dispatching
+// frame, which strictly outlives all worker access (only ticket-holding
+// workers touch the job, and the barrier in `ThreadPool::run` waits for
+// every one of them).
+unsafe impl Send for Job {}
+
+unsafe fn trampoline<F: Fn() + Sync>(task: *const ()) {
+    let f = &*task.cast::<F>();
+    f();
+}
+
+fn erase<F: Fn() + Sync>(task: &F) -> Job {
+    Job { task: (task as *const F).cast(), call: trampoline::<F> }
+}
+
+struct State {
+    /// Bumped once per dispatch; workers track the last epoch they served.
+    epoch: u64,
+    job: Option<Job>,
+    /// Unclaimed worker-participation slots of the current epoch. Claimed
+    /// under this lock, so a dispatch narrower than the pool lets surplus
+    /// workers skip the job — and the barrier — entirely without ever
+    /// touching the dispatcher's frame.
+    tickets: usize,
+    /// Ticket holders that have not yet finished with the current epoch.
+    active: usize,
+    /// First worker panic of the current epoch, rethrown by the dispatcher.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between dispatches.
+    work: Condvar,
+    /// The dispatcher parks here until `active` drops to zero.
+    done: Condvar,
+}
+
+thread_local! {
+    /// True on pool worker threads; a nested dispatch from inside a work
+    /// item runs inline instead of deadlocking on the barrier.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent set of parked worker threads for data-parallel loops.
+///
+/// A pool of width `w` owns `w - 1` OS threads; the dispatching thread is
+/// always participant zero, so `ThreadPool::new(1)` spawns nothing and
+/// runs everything inline. Dropping the pool wakes and joins every
+/// worker. Most code uses the process-wide instance via [`global`] /
+/// [`parallel_for`]; the serving engine can own a dedicated pool
+/// (`PagedNativeBackend::with_thread_pool`) — groundwork for multi-worker
+/// sharding where each engine shard gets its own worker set.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatches: concurrent dispatchers from other threads
+    /// block here (regions run back to back, each at full width) rather
+    /// than degrading to serial execution.
+    gate: Mutex<()>,
+    /// [`thread_token`] of the thread currently holding `gate` (0 = none);
+    /// lets same-thread re-entry — a work item executed by the dispatcher
+    /// that opens another region on this pool — fall back inline instead
+    /// of self-deadlocking on `gate`.
+    gate_owner: AtomicU64,
+    width: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool of the given width (clamped to at least 1). Workers
+    /// are spawned immediately and park until the first dispatch.
+    pub fn new(workers: usize) -> ThreadPool {
+        let width = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                tickets: 0,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..width - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bda-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, gate: Mutex::new(()), gate_owner: AtomicU64::new(0), width }
+    }
+
+    /// Parallelism width of this pool (spawned workers + the dispatcher).
+    pub fn workers(&self) -> usize {
+        self.width
+    }
+
+    /// Run `f(i)` for every `i in 0..n` at up to `width` participants
+    /// (capped by the pool width), blocking until all items finish.
+    ///
+    /// Inline fast path: zero- and one-item dispatches, width 1, and
+    /// nested dispatches (from inside a pool worker, or from the thread
+    /// that already holds this pool's dispatch gate) run serially on the
+    /// calling thread — identical output by the determinism contract,
+    /// with no parking or wakeups involved. Concurrent dispatches from
+    /// *other* threads queue on the gate and run back to back, each at
+    /// full width. Panics in work items are propagated to the caller
+    /// after the barrier, as the scoped implementation did.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, width: usize, f: F) {
+        let width = width.clamp(1, n.max(1)).min(self.width);
+        if n <= 1 || width <= 1 || self.handles.is_empty() || IN_POOL_WORKER.with(Cell::get) {
+            return run_serial(n, &f);
+        }
+        let token = thread_token();
+        if self.gate_owner.load(Ordering::Relaxed) == token {
+            // Same-thread re-entry: this thread is mid-dispatch on this
+            // pool (a work item it executes opened another region);
+            // blocking on the gate would self-deadlock.
+            return run_serial(n, &f);
+        }
+        let gate = self.gate.lock().unwrap();
+        self.gate_owner.store(token, Ordering::Relaxed);
+
+        // The region — index counter and item closure — lives in this
+        // frame; `task` is what gets type-erased and handed to the parked
+        // workers that win a participation ticket.
+        let next = AtomicUsize::new(0);
+        let task = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        };
+        let job = erase(&task);
+        // The dispatcher holds one participant slot; only this many
+        // workers join the region (and its completion barrier).
+        let worker_participants = (width - 1).min(self.handles.len());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.tickets = worker_participants;
+            st.active = worker_participants;
+        }
+        self.shared.work.notify_all();
+
+        // The dispatcher is participant zero. A panic here must still wait
+        // for the barrier: ticket holders borrow into this frame.
+        let caller = catch_unwind(AssertUnwindSafe(&task));
+
+        let worker_panic = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        // Clear ownership and release the gate *before* rethrowing:
+        // unwinding past a held guard would poison it and wedge every
+        // later dispatch.
+        self.gate_owner.store(0, Ordering::Relaxed);
+        drop(gate);
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    /// Wake and join every worker. Any in-flight dispatch has returned by
+    /// the time drop can run (dispatch borrows the pool), so no work is
+    /// lost.
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_serial<F: Fn(usize)>(n: usize, f: &F) {
+    for i in 0..n {
+        f(i);
+    }
+}
+
+/// Body of a parked worker: wait for a new epoch, claim a participation
+/// ticket, run the posted job, and report completion. Tickets are claimed
+/// under the state lock and preset equal to `active`, so the barrier
+/// counts exactly the workers that touched the job; surplus workers (and
+/// stragglers that missed an already-completed epoch) skip both. A worker
+/// that sleeps through an entire epoch simply never sees it — epochs only
+/// advance after their barrier completes, so nothing is lost.
+fn worker_loop(shared: &Shared) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            if st.tickets == 0 {
+                // Not a participant of this region; never touches the
+                // dispatcher's frame, not part of the barrier.
+                continue;
+            }
+            st.tickets -= 1;
+            st.job.expect("unclaimed tickets outlive their job")
+        };
+        // SAFETY: ticket holders are counted in `active`; the dispatcher
+        // blocks until every one of them decrements below, so the task
+        // closure in its frame is alive for the duration of this call.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.task) }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = result {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n` across the process-wide pool at its
+/// full width ([`num_threads`]). `f` must be `Sync`; per-index work should
+/// be coarse enough to amortize the atomic fetch.
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    let pool = global();
+    pool.run(n, pool.workers(), f);
+}
+
+/// [`parallel_for`] with an explicit participant count instead of the
+/// `BDA_NUM_THREADS` default. Lets callers and determinism tests pin the
 /// parallelism width per call — e.g. the paged-attention property tests
 /// sweep worker counts inside one process, which the env-var route cannot
-/// do because [`num_threads`] is latched on first use.
+/// do because [`num_threads`] is latched on first use. Widths up to the
+/// global pool width dispatch on the parked pool; wider requests (a
+/// test/bench case — production never exceeds the pool) are honored with
+/// one-off scoped threads so the requested parallelism is real even when
+/// the pool was sized small.
 pub fn parallel_for_with(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
+    let pool = global();
+    if workers > pool.workers() {
+        return scoped_parallel_for_with(n, workers, f);
+    }
+    pool.run(n, workers, f);
+}
+
+/// The pre-pool implementation: spawn `workers` scoped OS threads for this
+/// one call and join them before returning. Retained as the spawn-overhead
+/// baseline for the `decode_throughput` dispatch benchmark and as an
+/// independent execution strategy the pool lifecycle tests compare
+/// against; production code paths all go through the parked pool.
+pub fn scoped_parallel_for_with(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
     let workers = workers.clamp(1, n.max(1));
     if workers <= 1 || n <= 1 {
         for i in 0..n {
@@ -139,5 +495,136 @@ mod tests {
             total.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 1);
+    }
+
+    // ---- persistent-pool lifecycle -------------------------------------
+
+    #[test]
+    fn repeated_dispatches_match_scoped_execution() {
+        // One long-lived pool, many dispatches: results must be identical
+        // to a fresh scoped-thread execution of the same index space
+        // (no state may leak between dispatches).
+        let pool = ThreadPool::new(4);
+        for round in 0..16u64 {
+            let n = 129;
+            let pooled: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let scoped: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, 4, |i| {
+                pooled[i].fetch_add(round * n as u64 + i as u64, Ordering::Relaxed);
+            });
+            scoped_parallel_for_with(n, 4, |i| {
+                scoped[i].fetch_add(round * n as u64 + i as u64, Ordering::Relaxed);
+            });
+            for i in 0..n {
+                assert_eq!(
+                    pooled[i].load(Ordering::Relaxed),
+                    scoped[i].load(Ordering::Relaxed),
+                    "round {round} index {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        // Drop must wake the parked workers and join every handle; a lost
+        // wakeup or leaked worker shows up here as a hang.
+        let pool = ThreadPool::new(8);
+        let hits = AtomicU64::new(0);
+        pool.run(100, 8, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        drop(pool);
+    }
+
+    #[test]
+    fn zero_and_one_item_dispatch_is_inline() {
+        let pool = ThreadPool::new(4);
+        pool.run(0, 4, |_| panic!("zero-item dispatch must not run the body"));
+        let caller = std::thread::current().id();
+        let seen = Mutex::new(None);
+        pool.run(1, 4, |i| {
+            assert_eq!(i, 0);
+            *seen.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(
+            *seen.lock().unwrap(),
+            Some(caller),
+            "single-item dispatch must take the inline fast path on the caller"
+        );
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        // Inner dispatches come from pool workers (worker-flag fallback)
+        // and from the dispatching thread itself (gate fallback); both
+        // must run inline rather than deadlock on the barrier.
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.run(4, 4, |_| {
+            pool.run(8, 4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_queue_without_deadlock() {
+        // Two threads dispatching on one pool: the loser must block on
+        // the gate and then run at full width (not silently degrade),
+        // and both regions must complete exactly once per index.
+        let pool = ThreadPool::new(4);
+        let n = 300;
+        let a: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let b: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                pool.run(n, 4, |i| {
+                    a[i].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            s.spawn(|| {
+                pool.run(n, 4, |i| {
+                    b[i].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        for i in 0..n {
+            assert_eq!(a[i].load(Ordering::Relaxed), 1, "region A index {i}");
+            assert_eq!(b[i].load(Ordering::Relaxed), 1, "region B index {i}");
+        }
+    }
+
+    #[test]
+    fn width_above_pool_size_is_capped() {
+        let pool = ThreadPool::new(2);
+        let hits: Vec<AtomicU64> = (0..50).map(|_| AtomicU64::new(0)).collect();
+        pool.run(50, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_dispatcher() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, 4, |i| {
+                if i == 33 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(result.is_err(), "a work-item panic must reach the dispatcher");
+        // The pool must survive the panic and serve later dispatches.
+        let hits = AtomicU64::new(0);
+        pool.run(10, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
     }
 }

@@ -12,11 +12,18 @@
 //!    projections bitwise for every packable attention variant, and the
 //!    paged engine built on both stays bit-identical to per-sequence
 //!    decode for MHA and BDA alike.
+//!
+//! Worker counts are pinned per call (`_with_workers` / `_on`) rather
+//! than via `BDA_NUM_THREADS` because the env var is latched once per
+//! process; the kernel routes through the persistent parked pool either
+//! way, so the sweep also exercises pool dispatch at widths below the
+//! pool size and repeated dispatch on long-lived dedicated pools.
 
 use bda::attention::bda::BdaWeights;
 use bda::attention::mha::MhaWeights;
 use bda::attention::paged::{
-    paged_attention_decode_serial, paged_attention_decode_with_workers, PagedLayerView, PagedSeq,
+    paged_attention_decode_on, paged_attention_decode_serial, paged_attention_decode_with_workers,
+    PagedLayerView, PagedSeq,
 };
 use bda::attention::AttnShape;
 use bda::bd::Strategy;
@@ -29,6 +36,7 @@ use bda::model::weights::FusedQkv;
 use bda::model::{AttentionImpl, ModelConfig, Transformer};
 use bda::tensor::{DType, Tensor};
 use bda::util::rng::Rng;
+use bda::util::threadpool::ThreadPool;
 
 /// Fisher–Yates shuffle of 0..n (deterministic per rng state).
 fn permutation(n: usize, rng: &mut Rng) -> Vec<usize> {
@@ -86,6 +94,44 @@ fn prop_parallel_paged_attention_is_bit_identical_to_serial() {
                 par, serial,
                 "case {case} (b={b}, bs={block_size}, heads={n_heads}, d_h={d_h}): \
                  workers {workers} diverged from the serial reference"
+            );
+        }
+    }
+}
+
+/// Dedicated persistent pools: a long-lived [`ThreadPool`] per worker
+/// count, dispatched repeatedly, must stay bit-identical to the serial
+/// reference on every dispatch — per-worker scratch arenas surviving
+/// across dispatches must not leak state between calls.
+#[test]
+fn prop_paged_parallel_bitwise_on_dedicated_pools() {
+    let s = AttnShape::new(24, 3, 8);
+    let width = s.proj_width();
+    let (block_size, num_blocks) = (4usize, 16usize);
+    let lens = [1usize, 7, 12, 4];
+    let tables: [&[usize]; 4] = [&[9], &[3, 11], &[0, 5, 14], &[7]];
+    let q = Tensor::randn(&[4, width], 1.0, 61);
+    let mut pk = vec![0.0f32; num_blocks * block_size * width];
+    let mut pv = vec![0.0f32; num_blocks * block_size * width];
+    for (i, (&len, table)) in lens.iter().zip(tables.iter()).enumerate() {
+        let k = Tensor::randn(&[len, width], 1.0, 70 + i as u64);
+        let v = Tensor::randn(&[len, width], 1.0, 80 + i as u64);
+        scatter_paged_kv(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+    }
+    let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+    let seqs: Vec<PagedSeq> = lens
+        .iter()
+        .zip(tables.iter())
+        .map(|(&len, &blocks)| PagedSeq { blocks, len })
+        .collect();
+    let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        for round in 0..3 {
+            let par = paged_attention_decode_on(&pool, &q, &layer, &seqs, s, workers);
+            assert_eq!(
+                par, serial,
+                "dedicated pool of {workers} diverged from serial on dispatch {round}"
             );
         }
     }
