@@ -1,8 +1,10 @@
 //! Decode throughput: the paged batched engine vs the per-sequence native
 //! backend, plus a paged-attention microbenchmark (blocked parallel kernel
-//! vs the retained serial reference) and a **dispatch-overhead
+//! vs the retained serial reference), a **dispatch-overhead
 //! microbenchmark** (scoped thread spawn/join vs waking the persistent
 //! parked pool — the per-layer-per-step cost the pool amortizes away),
+//! and a **shared-prefix workload** (radix-tree prefix cache off vs on:
+//! identical generations, hit rate, deduped blocks, prefill work saved),
 //! swept over **thread count × batch size**. Every configuration decodes
 //! the same trace greedily, so generations are bit-identical between the
 //! two backends (asserted) and across thread counts — the speedup is pure
@@ -208,6 +210,89 @@ fn dispatch_row(threads: usize, cfg: BenchConfig) -> Json {
     ])
 }
 
+/// Shared-prefix workload: `n` requests whose prompts share a
+/// `shared_len`-token system prompt followed by a short unique suffix,
+/// replayed at bounded concurrency so early completions seed the radix
+/// tree before later admissions. Runs the identical trace with the prefix
+/// cache off and on; generations must be bit-identical (invariant 4), and
+/// the JSON row records the hit rate, blocks deduped, and the prefill
+/// work the cache removed.
+fn prefix_cache_row(fast: bool) -> Json {
+    // tiny's context is 64 tokens, so the workload is sized to leave
+    // decode room: 32 shared + 6 unique prompt tokens + 4 generated.
+    let model = Transformer::new_mha(ModelConfig::tiny(), 42);
+    let vocab = model.config.vocab_size as u32;
+    let shared_len = 32usize;
+    let block_size = 8usize;
+    let n = if fast { 12 } else { 24 };
+    let concurrency = 4usize;
+    let shared: Vec<u32> = (0..shared_len as u32).map(|j| (j * 13 + 7) % vocab).collect();
+    let make_requests = || -> Vec<Request> {
+        (0..n as u64)
+            .map(|i| {
+                let mut prompt = shared.clone();
+                prompt.extend((0..6).map(|j| (1000 + i * 31 + j) as u32 % vocab));
+                Request::new(i, prompt, 4)
+            })
+            .collect()
+    };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: concurrency, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: concurrency,
+            eos_token: None,
+            kv: KvCacheConfig { block_size, num_blocks: 1024 },
+        },
+    };
+    let mut runs = Vec::new();
+    for enabled in [false, true] {
+        let mut backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+        backend.set_prefix_cache(enabled);
+        let timer = Timer::start();
+        let (mut responses, metrics) = replay_trace(backend, cfg, make_requests()).unwrap();
+        let wall = timer.elapsed_secs();
+        let snap = metrics.snapshot();
+        responses.sort_by_key(|r| r.id);
+        let generations: Vec<(u64, Vec<u32>)> =
+            responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        runs.push((wall, snap, generations));
+    }
+    let (cold_wall, cold_snap, cold_gen) = &runs[0];
+    let (warm_wall, warm_snap, warm_gen) = &runs[1];
+    assert_eq!(
+        warm_gen, cold_gen,
+        "prefix-cache hits must not change generations (invariant 4)"
+    );
+    assert_eq!(cold_snap.prefix_hits + cold_snap.prefix_misses, 0, "cache off must not look up");
+    assert!(warm_snap.prefix_blocks_saved > 0, "shared-prefix sweep must produce hits");
+    // Prefill work actually executed, in tokens: every request's prompt
+    // (computed from the workload — the admission-retry loop inflates the
+    // tokens_in counter), minus the tokens adopted from the radix tree.
+    let prefill_cold = (n * (shared_len + 6)) as u64;
+    let prefill_warm = prefill_cold - warm_snap.prefix_blocks_saved * block_size as u64;
+    println!(
+        "prefix cache (shared {shared_len}-token prompt, {n} requests): hit rate {:.0}%, \
+         {} blocks deduped, prefill tokens {prefill_cold} -> {prefill_warm}, \
+         wall {:.3}s -> {:.3}s",
+        100.0 * warm_snap.prefix_hit_rate(),
+        warm_snap.prefix_blocks_saved,
+        cold_wall,
+        warm_wall,
+    );
+    Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("shared_prefix_tokens", Json::num(shared_len as f64)),
+        ("block_size", Json::num(block_size as f64)),
+        ("hit_rate", Json::num(warm_snap.prefix_hit_rate())),
+        ("blocks_saved", Json::num(warm_snap.prefix_blocks_saved as f64)),
+        ("prefill_tokens_cold", Json::num(prefill_cold as f64)),
+        ("prefill_tokens_cached", Json::num(prefill_warm as f64)),
+        ("wall_cold_s", Json::num(*cold_wall)),
+        ("wall_cached_s", Json::num(*warm_wall)),
+        ("wall_speedup", Json::num(cold_wall / warm_wall)),
+    ])
+}
+
 /// Child mode: measure at the current (env-latched) thread count and write
 /// a JSON fragment to `$BDA_BENCH_OUT`.
 fn run_child(out_path: &str) {
@@ -284,11 +369,20 @@ fn run_child(out_path: &str) {
         Vec::new()
     };
 
+    // --- prefix cache: shared-prefix workload (cold vs cached) -------------
+    // Like the engine rows, only at the sweep's end-point thread counts.
+    let prefix_cache = if threads == 1 || threads == np {
+        prefix_cache_row(fast)
+    } else {
+        Json::Null
+    };
+
     let fragment = Json::obj(vec![
         ("num_threads", Json::num(threads as f64)),
         ("dispatch", dispatch),
         ("paged_attention", Json::Arr(micro_rows)),
         ("engine", Json::Arr(engine_rows)),
+        ("prefix_cache", prefix_cache),
     ]);
     std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
 }
@@ -347,6 +441,23 @@ fn run_parent() {
         .map(|frag| frag.get("dispatch").get("speedup").as_f64().unwrap_or(0.0))
         .unwrap_or(0.0);
 
+    // Prefix-cache acceptance from the max-thread fragment: hit rate and
+    // the prefill-token reduction of the shared-prefix sweep.
+    let (prefix_hit_rate, prefix_blocks_saved, prefill_reduction) = fragments
+        .last()
+        .map(|frag| {
+            let pc = frag.get("prefix_cache");
+            let cold = pc.get("prefill_tokens_cold").as_f64().unwrap_or(0.0);
+            let cached = pc.get("prefill_tokens_cached").as_f64().unwrap_or(0.0);
+            let reduction = if cold > 0.0 { 1.0 - cached / cold } else { 0.0 };
+            (
+                pc.get("hit_rate").as_f64().unwrap_or(0.0),
+                pc.get("blocks_saved").as_f64().unwrap_or(0.0),
+                reduction,
+            )
+        })
+        .unwrap_or((0.0, 0.0, 0.0));
+
     let report = Json::obj(vec![
         ("bench", Json::str("decode_throughput")),
         ("fast", Json::Bool(fast)),
@@ -357,11 +468,20 @@ fn run_parent() {
             Json::obj(vec![
                 ("paged_attention_speedup_batch_ge8_max_threads", Json::num(accept)),
                 ("parked_pool_dispatch_speedup_max_threads", Json::num(dispatch_speedup)),
+                ("prefix_cache_hit_rate_max_threads", Json::num(prefix_hit_rate)),
+                ("prefix_cache_blocks_saved_max_threads", Json::num(prefix_blocks_saved)),
+                ("prefix_cache_prefill_reduction_max_threads", Json::num(prefill_reduction)),
                 ("target", Json::num(2.0)),
             ]),
         ),
     ]);
     std::fs::write("BENCH_decode.json", report.to_string()).expect("write BENCH_decode.json");
+    println!(
+        "prefix cache at {np} threads: {:.0}% hit rate, {prefix_blocks_saved:.0} blocks \
+         deduped, prefill work reduced {:.0}%",
+        prefix_hit_rate * 100.0,
+        prefill_reduction * 100.0
+    );
     println!(
         "\npaged attention at batch >= 8, {np} threads: {accept:.2}x vs serial reference \
          ({}) — recorded in BENCH_decode.json",

@@ -49,7 +49,11 @@ pub fn kproj_bda(x: &Tensor, c: &Tensor, tag: Tag, s: AttnShape) -> Tensor {
     // per row panel (stays in cache; avoids strided GEMM reads).
     let xs = &x.data;
     let out_ptr = SendPtr(out.data.as_mut_ptr());
-    let panel = l.div_ceil(crate::util::threadpool::num_threads() * 2).clamp(8, 128);
+    // Sized by the current dispatch pool (the engine's own pool under
+    // `threadpool::with_pool`, like the blocked GEMM) so panel count and
+    // worker count agree; panel boundaries don't affect per-row
+    // accumulation order, so this is a pure scheduling choice.
+    let panel = l.div_ceil(crate::util::threadpool::current_workers() * 2).clamp(8, 128);
     parallel_chunks(l, panel, |lo, hi| {
         let rows = hi - lo;
         let out_panel = unsafe {

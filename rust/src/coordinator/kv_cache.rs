@@ -31,6 +31,12 @@ pub struct BlockAllocator {
     pub config: KvCacheConfig,
     free: Vec<BlockId>,
     ref_counts: Vec<u32>,
+    /// External holds per block (references owned by something other than a
+    /// sequence table — the engine's radix-tree prefix cache). A hold
+    /// contributes to `ref_counts`, so held blocks never return to the free
+    /// list while held; `check_invariants` verifies
+    /// `ref_counts[b] == table refs + holds[b]` for every block.
+    holds: Vec<u32>,
     tables: HashMap<SeqId, SeqTable>,
 }
 
@@ -68,9 +74,90 @@ impl BlockAllocator {
         BlockAllocator {
             free: (0..config.num_blocks).rev().collect(),
             ref_counts: vec![0; config.num_blocks],
+            holds: vec![0; config.num_blocks],
             tables: HashMap::new(),
             config,
         }
+    }
+
+    /// Current reference count of one block (table refs + external holds).
+    pub fn ref_count(&self, block: BlockId) -> u32 {
+        self.ref_counts[block]
+    }
+
+    /// Number of blocks with at least one external hold (prefix-cache
+    /// residency, not per-hold multiplicity).
+    pub fn held_blocks(&self) -> usize {
+        self.holds.iter().filter(|&&h| h > 0).count()
+    }
+
+    /// Take an external hold on `blocks`: each must currently be referenced
+    /// (by a table or a prior hold) — holds extend the life of live blocks,
+    /// they cannot resurrect freed ones. Used by the prefix cache when a
+    /// releasing sequence's prefix blocks move into the radix tree.
+    pub fn hold_blocks(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            debug_assert!(self.ref_counts[b] > 0, "hold on unreferenced block {b}");
+            self.ref_counts[b] += 1;
+            self.holds[b] += 1;
+        }
+    }
+
+    /// Drop an external hold on `blocks`; a block returns to the free list
+    /// when its last reference (table or hold) goes.
+    pub fn release_held(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            debug_assert!(self.holds[b] > 0, "release_held without hold on block {b}");
+            debug_assert!(self.ref_counts[b] > 0);
+            self.holds[b] -= 1;
+            self.ref_counts[b] -= 1;
+            if self.ref_counts[b] == 0 {
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Register a sequence whose first `prefix.len()` blocks are adopted
+    /// from already-live storage (a prefix-cache hit): each prefix block is
+    /// ref-bumped (zero-copy sharing, copy-on-write on divergence like any
+    /// fork), and only the uncovered tail allocates fresh blocks. The
+    /// prefix must cover whole blocks and strictly fewer tokens than
+    /// `total_tokens` (a hit always leaves at least one tail token to
+    /// prefill). On `OutOfBlocks` nothing is modified.
+    pub fn register_with_prefix(
+        &mut self,
+        seq: SeqId,
+        prefix: &[BlockId],
+        total_tokens: usize,
+    ) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::DuplicateSeq(seq));
+        }
+        let need_total = self.blocks_for(total_tokens.max(1));
+        debug_assert!(
+            prefix.len() * self.config.block_size < total_tokens,
+            "prefix ({} blocks) must cover fewer than total_tokens ({total_tokens})",
+            prefix.len()
+        );
+        let tail = need_total.saturating_sub(prefix.len());
+        if tail > self.free.len() {
+            return Err(KvError::OutOfBlocks { need: tail, free: self.free.len() });
+        }
+        let mut table =
+            SeqTable { blocks: Vec::with_capacity(need_total), len_tokens: total_tokens };
+        for &b in prefix {
+            debug_assert!(self.ref_counts[b] > 0, "prefix block {b} is not live");
+            self.ref_counts[b] += 1;
+            table.blocks.push(b);
+        }
+        for _ in 0..tail {
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.ref_counts[b], 0);
+            self.ref_counts[b] = 1;
+            table.blocks.push(b);
+        }
+        self.tables.insert(seq, table);
+        Ok(())
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -202,13 +289,17 @@ impl BlockAllocator {
     }
 
     /// Invariant check (used by property tests): every block is either
-    /// free with ref 0, or referenced by exactly `ref` tables.
+    /// free with ref 0, or referenced by exactly `ref` table entries plus
+    /// external holds.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut refs = vec![0u32; self.config.num_blocks];
         for t in self.tables.values() {
             for &b in &t.blocks {
                 refs[b] += 1;
             }
+        }
+        for (b, &h) in self.holds.iter().enumerate() {
+            refs[b] += h;
         }
         for b in 0..self.config.num_blocks {
             if refs[b] != self.ref_counts[b] {
@@ -363,6 +454,61 @@ mod tests {
         assert_eq!(a.register(1, 4).unwrap_err(), KvError::DuplicateSeq(1));
         assert_eq!(a.release(9).unwrap_err(), KvError::UnknownSeq(9));
         assert_eq!(a.append_token(9).unwrap_err(), KvError::UnknownSeq(9));
+    }
+
+    #[test]
+    fn held_blocks_survive_table_release() {
+        // Regression (prefix-cache holds): a hold keeps blocks leased when
+        // the owning sequence releases; dropping the hold frees them.
+        let mut a = alloc(8);
+        a.register(1, 8).unwrap(); // 2 blocks
+        let blocks = a.seq_blocks(1).unwrap().to_vec();
+        a.hold_blocks(&blocks);
+        assert_eq!(a.held_blocks(), 2);
+        a.check_invariants().unwrap();
+        a.release(1).unwrap();
+        assert_eq!(a.used_blocks(), 2, "held blocks must not return to the pool");
+        assert_eq!(a.ref_count(blocks[0]), 1);
+        a.check_invariants().unwrap();
+        a.release_held(&blocks);
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.held_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn register_with_prefix_shares_and_allocates_tail() {
+        let mut a = alloc(8);
+        a.register(1, 8).unwrap(); // blocks [b0, b1]
+        let prefix = a.seq_blocks(1).unwrap().to_vec();
+        a.hold_blocks(&prefix);
+        a.release(1).unwrap(); // tree-style residency: only holds remain
+
+        // New sequence adopts both prefix blocks + 1 fresh tail block.
+        a.register_with_prefix(2, &prefix, 10).unwrap();
+        assert_eq!(a.seq_len(2), Some(10));
+        assert_eq!(a.seq_blocks(2).unwrap().len(), 3);
+        assert_eq!(&a.seq_blocks(2).unwrap()[..2], &prefix[..]);
+        assert_eq!(a.ref_count(prefix[0]), 2, "hold + table");
+        a.check_invariants().unwrap();
+
+        // Appending into the shared (held) tail region copy-on-writes.
+        // Position 10 is inside block 2 (private), so in-place is fine; but
+        // writing into block 1 via a second adopter must COW.
+        a.register_with_prefix(3, &prefix[..1], 5).unwrap();
+        let s = a.append_token_cow(3).unwrap(); // pos 5, block 1 is private to seq 3
+        assert_eq!(s.copied_from, None);
+        a.check_invariants().unwrap();
+
+        // Capacity errors leave state untouched.
+        let mut b = alloc(2);
+        b.register(9, 8).unwrap();
+        let pfx = b.seq_blocks(9).unwrap().to_vec();
+        b.hold_blocks(&pfx);
+        let err = b.register_with_prefix(10, &pfx, 12).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        assert_eq!(b.active_seqs(), 1);
+        b.check_invariants().unwrap();
     }
 
     #[test]

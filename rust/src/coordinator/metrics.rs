@@ -18,6 +18,16 @@ pub struct StepTiming {
     /// Seconds spent in GEMMs: QKV projections, output projection, FFN,
     /// and the logits matmul.
     pub gemm: f64,
+    /// Prefix-cache lookups since the previous reported step that matched
+    /// at least one cached block (admissions land between decode steps, so
+    /// the engine reports them with the next step's timing).
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups since the previous reported step that matched
+    /// nothing.
+    pub prefix_misses: u64,
+    /// Prompt K/V blocks adopted from the radix tree instead of being
+    /// re-prefilled, since the previous reported step.
+    pub prefix_blocks_saved: u64,
 }
 
 #[derive(Debug)]
@@ -41,6 +51,9 @@ struct Inner {
     decode_attn_secs: f64,
     decode_gemm_secs: f64,
     decode_sample_secs: f64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_blocks_saved: u64,
     latency: Histogram,
     ttft: Histogram,
 }
@@ -68,6 +81,13 @@ pub struct Snapshot {
     pub decode_gemm_secs: f64,
     /// Cumulative decode-step wall time spent sampling.
     pub decode_sample_secs: f64,
+    /// Prefix-cache lookups that matched at least one cached block.
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups that matched nothing.
+    pub prefix_misses: u64,
+    /// Prompt K/V blocks deduplicated against the radix tree (prefill
+    /// work and pool memory saved).
+    pub prefix_blocks_saved: u64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_mean: f64,
@@ -98,6 +118,9 @@ impl Metrics {
                 decode_attn_secs: 0.0,
                 decode_gemm_secs: 0.0,
                 decode_sample_secs: 0.0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+                prefix_blocks_saved: 0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
             }),
@@ -139,6 +162,9 @@ impl Metrics {
         g.decode_attn_secs += step.attn;
         g.decode_gemm_secs += step.gemm;
         g.decode_sample_secs += sample_secs;
+        g.prefix_hits += step.prefix_hits;
+        g.prefix_misses += step.prefix_misses;
+        g.prefix_blocks_saved += step.prefix_blocks_saved;
     }
 
     pub fn tokens_generated(&self, n: usize) {
@@ -182,6 +208,9 @@ impl Metrics {
             decode_attn_secs: g.decode_attn_secs,
             decode_gemm_secs: g.decode_gemm_secs,
             decode_sample_secs: g.decode_sample_secs,
+            prefix_hits: g.prefix_hits,
+            prefix_misses: g.prefix_misses,
+            prefix_blocks_saved: g.prefix_blocks_saved,
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
             latency_mean: g.latency.mean(),
@@ -192,6 +221,32 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// Prefix-cache hit fraction over all lookups (0.0 before any lookup).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_hits + self.prefix_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Human-readable prefix-cache line, or `None` when no lookups ran
+    /// (cache disabled, or a backend without one).
+    pub fn prefix_cache_line(&self) -> Option<String> {
+        let lookups = self.prefix_hits + self.prefix_misses;
+        if lookups == 0 {
+            return None;
+        }
+        Some(format!(
+            "{}/{} prompts hit ({:.0}%), {} K/V blocks deduped",
+            self.prefix_hits,
+            lookups,
+            100.0 * self.prefix_hit_rate(),
+            self.prefix_blocks_saved,
+        ))
+    }
+
     /// Human-readable decode-step timing split, or `None` when no backend
     /// reported timing (per-sequence / mock backends don't instrument).
     pub fn decode_split(&self) -> Option<String> {
@@ -212,11 +267,15 @@ impl Snapshot {
     }
 
     pub fn report(&self) -> String {
+        let prefix = match self.prefix_cache_line() {
+            Some(line) => format!(" | prefix cache: {line}"),
+            None => String::new(),
+        };
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
              ({:.1} tok/s) | batch avg {:.2} | decode: {} steps, {:.2} tok/step, \
              {:.0}% occupancy | latency p50 {:.1}ms p95 {:.1}ms | \
-             ttft p50 {:.1}ms p95 {:.1}ms",
+             ttft p50 {:.1}ms p95 {:.1}ms{prefix}",
             self.requests_admitted,
             self.requests_completed,
             self.requests_rejected,
@@ -274,8 +333,8 @@ mod tests {
     fn decode_timing_split_accumulates() {
         let m = Metrics::new();
         assert!(m.snapshot().decode_split().is_none(), "no timing yet");
-        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.030 }, 0.005);
-        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.020 }, 0.005);
+        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.030, ..Default::default() }, 0.005);
+        m.decode_timing(StepTiming { attn: 0.010, gemm: 0.020, ..Default::default() }, 0.005);
         let s = m.snapshot();
         assert!((s.decode_attn_secs - 0.020).abs() < 1e-12);
         assert!((s.decode_gemm_secs - 0.050).abs() < 1e-12);
@@ -283,6 +342,34 @@ mod tests {
         let split = s.decode_split().expect("split present");
         assert!(split.contains("attention"));
         assert!(split.contains("sampling"));
+    }
+
+    #[test]
+    fn prefix_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        assert!(m.snapshot().prefix_cache_line().is_none(), "no lookups yet");
+        assert!(!m.snapshot().report().contains("prefix cache"));
+        let step1 = StepTiming {
+            prefix_hits: 1,
+            prefix_misses: 3,
+            prefix_blocks_saved: 4,
+            ..Default::default()
+        };
+        let step2 = StepTiming {
+            prefix_hits: 2,
+            prefix_misses: 0,
+            prefix_blocks_saved: 6,
+            ..Default::default()
+        };
+        m.decode_timing(step1, 0.0);
+        m.decode_timing(step2, 0.0);
+        let s = m.snapshot();
+        assert_eq!((s.prefix_hits, s.prefix_misses, s.prefix_blocks_saved), (3, 3, 10));
+        assert!((s.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        let line = s.prefix_cache_line().expect("line present");
+        assert!(line.contains("3/6"));
+        assert!(line.contains("10 K/V blocks"));
+        assert!(s.report().contains("prefix cache"));
     }
 
     #[test]

@@ -175,7 +175,16 @@ impl<B: Backend> Scheduler<B> {
             return Err(req);
         }
         let seq = self.next_seq;
-        if self.kv.register(seq, req.prompt.len()).is_err() {
+        // The shadow allocator is worst-case bookkeeping (no prefix
+        // sharing, no eviction). When the backend owns real block storage
+        // its pool is the admission truth — a backend that can serve the
+        // request (e.g. by adopting a cached prefix or evicting the
+        // radix tree) must not be vetoed by shadow-side pessimism — so
+        // the shadow is maintained only for pool-less backends; its
+        // append/release calls degrade to ignored no-ops otherwise.
+        if self.backend.free_blocks().is_none()
+            && self.kv.register(seq, req.prompt.len()).is_err()
+        {
             return Err(req);
         }
         let logits = match self.backend.prefill(seq, &req.prompt) {
@@ -213,6 +222,14 @@ impl<B: Backend> Scheduler<B> {
         // Finish check before decoding (covers max_new_tokens == 0/1).
         self.complete_finished(&mut done);
         if self.active.is_empty() {
+            // No decode step will run, but admissions may have recorded
+            // backend counters (e.g. prefix-cache hits for max_new <= 1
+            // requests) — surface them rather than dropping the tail.
+            if let Some(m) = &self.metrics {
+                if let Some(t) = self.backend.take_step_timing() {
+                    m.decode_timing(t, 0.0);
+                }
+            }
             return Ok(done);
         }
 
@@ -225,6 +242,9 @@ impl<B: Backend> Scheduler<B> {
             m.decode_step(batch.len(), self.config.max_active);
         }
         let logits = self.backend.decode(&batch)?;
+        // Shadow-allocator growth tracking only applies to pool-less
+        // backends (pool owners were never shadow-registered on admit).
+        let shadow = self.backend.free_blocks().is_none();
         let mut sample_secs = 0.0f64;
         for (a, l) in self.active.iter_mut().zip(logits.iter()) {
             let seq = self.seq_of_req[&a.req.id];
@@ -238,7 +258,9 @@ impl<B: Backend> Scheduler<B> {
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
-            let _ = self.kv.append_token(seq);
+            if shadow {
+                let _ = self.kv.append_token(seq);
+            }
         }
         if let Some(m) = &self.metrics {
             if let Some(t) = self.backend.take_step_timing() {

@@ -14,17 +14,35 @@
 //!   — B rows through every weight matrix instead of B separate passes;
 //! * ref-counted prefix sharing: [`PagedNativeBackend::fork`] duplicates
 //!   block *tables* only, so forked sequences dedup K/V memory, with
-//!   copy-on-write the first time a fork writes into a shared tail block.
+//!   copy-on-write the first time a fork writes into a shared tail block;
+//! * **automatic cross-request prompt sharing**: a radix-tree
+//!   [`PrefixCache`] over released sequences' prompts (enabled by default,
+//!   `BDA_PREFIX_CACHE=0` disables). Admission matches each incoming
+//!   prompt against the tree at block granularity, adopts the longest
+//!   cached prefix zero-copy (COW on divergence), prefills only the
+//!   uncovered tail, and evicts LRU zero-ref leaves under pool pressure.
 //!
 //! Every row-level operation (embedding, RMSNorm, GEMM row, attention
 //! accumulation order, FFN, logits) is arithmetically identical to the
 //! per-sequence path, so batched paged decode returns *bit-identical*
 //! logits to `Transformer::decode_step` for MHA and BDA alike — the
 //! paper's losslessness claim carried through the serving engine (see
-//! `tests/prop_coordinator.rs`).
+//! `tests/prop_coordinator.rs`). The same row determinism is what makes a
+//! prefix-cache hit bitwise-equal to a cold prefill (invariant 4 in
+//! [`crate::engine`]).
+//!
+//! Every parallel region of a decode or prefill — paged attention *and*
+//! the GEMMs dispatched through the tensor wrappers — runs on this
+//! engine's own worker pool: the step body executes under
+//! [`threadpool::with_pool`], so an engine constructed via
+//! [`PagedNativeBackend::with_thread_pool`] is fully isolated from the
+//! process-wide pool (per-shard isolation for multi-worker sharding).
 
+use super::prefix_cache::{PrefixCache, PrefixStats};
 use crate::attention::paged::{paged_attention_decode_on, PagedSeq};
-use crate::coordinator::kv_cache::{BlockAllocator, KvCacheConfig, KvError, SeqId};
+use crate::coordinator::kv_cache::{
+    AppendSlot, BlockAllocator, BlockId, KvCacheConfig, KvError, SeqId,
+};
 use crate::coordinator::metrics::StepTiming;
 use crate::coordinator::scheduler::Backend;
 use crate::model::transformer::{KvCache, Transformer};
@@ -33,8 +51,28 @@ use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, ThreadPool};
 use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Parse a prefix-cache on/off token (shared by `BDA_PREFIX_CACHE` and
+/// the CLI `--prefix-cache` flag): everything is "on" except
+/// `0` / `false` / `off` / `no` (trimmed, case-insensitive).
+pub fn prefix_cache_flag(v: &str) -> bool {
+    !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "false" | "off" | "no")
+}
+
+/// Resolve the `BDA_PREFIX_CACHE` environment knob: the radix-tree prefix
+/// cache is **on** unless the variable opts out per
+/// [`prefix_cache_flag`]. Read at engine construction (not latched
+/// process-wide); [`PagedNativeBackend::set_prefix_cache`] overrides it
+/// per engine.
+pub fn prefix_cache_enabled_from_env() -> bool {
+    match std::env::var("BDA_PREFIX_CACHE") {
+        Err(_) => true,
+        Ok(v) => prefix_cache_flag(&v),
+    }
+}
 
 /// Paged batched serving backend over the native Rust transformer.
 pub struct PagedNativeBackend {
@@ -52,12 +90,24 @@ pub struct PagedNativeBackend {
     /// Attention/GEMM wall-time split of the most recent decode step,
     /// consumed by the scheduler via [`Backend::take_step_timing`].
     last_timing: Option<StepTiming>,
-    /// Persistent parked worker pool running the paged-attention hot path.
+    /// Persistent parked worker pool running the decode hot path.
     /// Defaults to a handle on the process-wide pool; a dedicated pool
     /// ([`PagedNativeBackend::with_thread_pool`]) gives this engine its
-    /// own worker set — groundwork for multi-worker sharding. GEMMs
-    /// dispatched through the tensor wrappers still use the process pool.
+    /// own worker set. Both paged attention *and* the GEMMs dispatched
+    /// through the tensor wrappers ride this pool — prefill and decode
+    /// bodies run under [`threadpool::with_pool`] — so per-engine pools
+    /// give full per-shard isolation.
     threads: Arc<ThreadPool>,
+    /// Radix-tree prefix cache (`None` = disabled): automatic
+    /// cross-request K/V prompt sharing. See [`PrefixCache`].
+    prefix: Option<PrefixCache>,
+    /// Per-sequence token history (prompt + decoded tokens), tracked only
+    /// while the prefix cache is enabled; release inserts each history's
+    /// full-block prefix into the tree.
+    histories: HashMap<SeqId, Vec<u32>>,
+    /// Prefix-cache counters already surfaced through [`StepTiming`]
+    /// (deltas are reported, cumulative stats stay queryable).
+    reported_prefix: PrefixStats,
 }
 
 impl PagedNativeBackend {
@@ -78,6 +128,7 @@ impl PagedNativeBackend {
             model.blocks.iter().map(|b| b.attn.effective_shape().proj_width()).collect();
         let embed_t = model.embed.transpose();
         let fused_qkv = model.blocks.iter().map(|b| b.attn.pack_qkv()).collect();
+        let prefix = prefix_cache_enabled_from_env().then(|| PrefixCache::new(kv.block_size));
         PagedNativeBackend {
             alloc: BlockAllocator::new(kv),
             pool: super::paged_kv::PagedKvPool::new(kv, &widths),
@@ -85,8 +136,52 @@ impl PagedNativeBackend {
             fused_qkv,
             last_timing: None,
             threads,
+            prefix,
+            histories: HashMap::new(),
+            reported_prefix: PrefixStats::default(),
             model,
         }
+    }
+
+    /// Enable or disable the radix-tree prefix cache, overriding the
+    /// `BDA_PREFIX_CACHE` default. Disabling clears the tree and releases
+    /// every cached block back to the pool. Toggling never affects
+    /// generated tokens (invariant 4: a cache hit is bitwise-identical to
+    /// a cold prefill) — only how much prefill work and K/V memory repeat
+    /// prompts cost.
+    pub fn set_prefix_cache(&mut self, enabled: bool) {
+        match (enabled, self.prefix.is_some()) {
+            (true, false) => {
+                self.prefix = Some(PrefixCache::new(self.alloc.config.block_size));
+                // Fresh tree, fresh counters: the delta baseline must
+                // match or the next step's u64 deltas would underflow.
+                self.reported_prefix = PrefixStats::default();
+            }
+            (false, true) => {
+                if let Some(mut cache) = self.prefix.take() {
+                    cache.clear(&mut self.alloc);
+                }
+                self.histories.clear();
+                self.reported_prefix = PrefixStats::default();
+            }
+            _ => {}
+        }
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Cumulative prefix-cache counters (zeroed stats when disabled).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Blocks currently resident in the radix tree (they count as used in
+    /// [`PagedNativeBackend::used_blocks`]; the evictable subset is
+    /// reported as reclaimable through [`Backend::free_blocks`]).
+    pub fn cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map(|c| c.held_blocks()).unwrap_or(0)
     }
 
     /// Pool sized by the default [`KvCacheConfig`].
@@ -112,7 +207,13 @@ impl PagedNativeBackend {
     /// ownership unification — one allocator, preemption — remains a
     /// ROADMAP item.)
     pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), KvError> {
-        self.alloc.fork(parent, child)
+        self.alloc.fork(parent, child)?;
+        // The child shares the parent's history, so its prefix is
+        // insertable into the radix tree on release like any sequence.
+        if let Some(h) = self.histories.get(&parent).cloned() {
+            self.histories.insert(child, h);
+        }
+        Ok(())
     }
 
     /// Total pool capacity in bytes at the model's logical dtype.
@@ -127,18 +228,23 @@ impl PagedNativeBackend {
     }
 
     /// Scatter a contiguous per-layer K/V cache (as produced by
-    /// `Transformer::prefill`) into this sequence's leased blocks.
-    fn scatter_prefill(&mut self, seq: SeqId, cache: &KvCache) -> Result<()> {
+    /// `Transformer::prefill`) into this sequence's leased blocks,
+    /// starting at token position `start`. A cold prefill scatters from 0;
+    /// a prefix-cache hit scatters only the freshly computed tail —
+    /// positions below `start` live in shared (tree-held) blocks that
+    /// already hold bit-identical rows and must not be written.
+    fn scatter_prefill(&mut self, seq: SeqId, cache: &KvCache, start: usize) -> Result<()> {
         let bs = self.alloc.config.block_size;
         let blocks = self
             .alloc
             .seq_blocks(seq)
             .ok_or_else(|| anyhow!("scatter: unknown seq {seq}"))?
             .to_vec();
+        debug_assert_eq!(start % bs, 0, "tail scatter must start on a block boundary");
         for (li, layer) in cache.layers.iter().enumerate() {
             let width = layer.width;
             debug_assert_eq!(width, self.pool.width(li));
-            for t in 0..layer.len {
+            for t in start..layer.len {
                 self.pool.write_row(
                     li,
                     blocks[t / bs],
@@ -149,6 +255,81 @@ impl PagedNativeBackend {
             }
         }
         Ok(())
+    }
+
+    /// Rebuild a contiguous [`KvCache`] holding the first `tokens` rows of
+    /// every layer, gathered from the pool through `blocks` — the cached
+    /// prefix a hit sequence resumes from. The rows are bit-copies of what
+    /// a cold prefill of the same tokens would produce, so the tail
+    /// prefill continues from state identical to the cold path's.
+    ///
+    /// A hit therefore costs one O(prefix × width × layers) memcpy instead
+    /// of the cold path's O(prefix² × width + prefix × d²) attention +
+    /// GEMM work. The *storage* sharing is still zero-copy; only the tail
+    /// prefill's read path is contiguous. Making the tail prefill attend
+    /// directly over the paged view (multi-row paged attention) would
+    /// remove this copy entirely — a ROADMAP item.
+    fn gather_prefix(&self, blocks: &[BlockId], tokens: usize) -> KvCache {
+        let mut cache = KvCache::new(self.model.config.n_layers);
+        for (li, layer) in cache.layers.iter_mut().enumerate() {
+            let width = self.pool.width(li);
+            let view = self.pool.layer_view(li);
+            layer.width = width;
+            layer.len = tokens;
+            layer.k.reserve(tokens * width);
+            layer.v.reserve(tokens * width);
+            for t in 0..tokens {
+                let base = view.row_offset(blocks, t);
+                layer.k.extend_from_slice(&view.k[base..base + width]);
+                layer.v.extend_from_slice(&view.v[base..base + width]);
+            }
+        }
+        cache
+    }
+
+    /// Evict one LRU zero-ref leaf from the prefix cache; false when there
+    /// is no cache or nothing evictable.
+    fn evict_one(&mut self) -> bool {
+        match self.prefix.as_mut() {
+            Some(cache) => cache.evict_lru(&mut self.alloc) > 0,
+            None => false,
+        }
+    }
+
+    /// Register `seq` (adopting `prefix` blocks when non-empty), evicting
+    /// cached blocks under pool pressure until registration fits or the
+    /// tree runs dry. The caller must protect `prefix` with a temporary
+    /// hold so eviction cannot free the very blocks being adopted.
+    fn register_evicting(
+        &mut self,
+        seq: SeqId,
+        prefix: &[BlockId],
+        total_tokens: usize,
+    ) -> Result<(), KvError> {
+        loop {
+            let res = if prefix.is_empty() {
+                self.alloc.register(seq, total_tokens)
+            } else {
+                self.alloc.register_with_prefix(seq, prefix, total_tokens)
+            };
+            match res {
+                Err(KvError::OutOfBlocks { .. }) if self.evict_one() => continue,
+                res => return res,
+            }
+        }
+    }
+
+    /// [`BlockAllocator::append_token_cow`] with the same pressure valve:
+    /// a boundary or COW allocation that runs dry evicts cached leaves
+    /// before giving up. Active sequences' blocks are table-referenced and
+    /// therefore never eviction victims.
+    fn append_evicting(&mut self, seq: SeqId) -> Result<AppendSlot, KvError> {
+        loop {
+            match self.alloc.append_token_cow(seq) {
+                Err(KvError::OutOfBlocks { .. }) if self.evict_one() => continue,
+                res => return res,
+            }
+        }
     }
 }
 
@@ -162,24 +343,147 @@ impl Backend for PagedNativeBackend {
     }
 
     fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
-        if prompt.is_empty() {
-            bail!("prefill: empty prompt for seq {seq}");
-        }
-        self.alloc
-            .register(seq, prompt.len())
-            .map_err(|e| anyhow!("prefill seq {seq}: {e}"))?;
-        // Prompt processing reuses the reference prefill (identical logits
-        // by construction); the engine's batching win is the decode loop,
-        // where steps outnumber prefills max_new_tokens to one.
-        let mut cache = KvCache::new(self.model.config.n_layers);
-        let logits = self.model.prefill(&mut cache, prompt);
-        self.scatter_prefill(seq, &cache)?;
-        Ok(logits.data)
+        // GEMMs inside the prefill ride this engine's pool, not the
+        // process-wide one (per-engine GEMM pools).
+        let threads = Arc::clone(&self.threads);
+        threadpool::with_pool(&threads, || self.prefill_inner(seq, prompt))
     }
 
     /// The batched decode step: all sequences advance one token in one
-    /// pass over the model.
+    /// pass over the model. Attention *and* GEMMs dispatch on this
+    /// engine's worker pool.
     fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        let threads = Arc::clone(&self.threads);
+        threadpool::with_pool(&threads, || self.decode_inner(seqs))
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        // Instead of freeing the sequence's prefix, insert its full-block
+        // history (prompt + generated tokens — all deterministic K/V) into
+        // the radix tree so future requests sharing the prefix skip its
+        // prefill. The tree takes its own holds; the table release below
+        // then frees only unshared blocks.
+        let history = self.histories.remove(&seq);
+        if let (Some(cache), Some(history)) = (self.prefix.as_mut(), history) {
+            let bs = self.alloc.config.block_size;
+            let full = history.len() / bs * bs;
+            if full > 0 {
+                if let Some(blocks) = self.alloc.seq_blocks(seq) {
+                    let blocks = blocks[..full / bs].to_vec();
+                    cache.insert(&history[..full], &blocks, &mut self.alloc);
+                }
+            }
+        }
+        // Blocks return to the pool when their ref count hits zero; forks
+        // and the prefix cache still holding shared blocks keep them alive.
+        let _ = self.alloc.release(seq);
+    }
+
+    /// Engine pool truth for admission: free blocks plus everything the
+    /// prefix cache could evict on demand — cached-but-unpinned K/V is
+    /// reclaimable capacity, not occupancy. This allocator sees every
+    /// lease: prefills, decode appends, engine-level forks /
+    /// copy-on-write, *and* radix-tree holds.
+    fn free_blocks(&self) -> Option<usize> {
+        let cache = self.prefix.as_ref();
+        let evictable = cache.map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
+        Some(self.alloc.free_blocks() + evictable)
+    }
+
+    /// The last decode step's attention/GEMM split, with the prefix-cache
+    /// counter delta accumulated since the previous take merged in. The
+    /// delta is reported even when no decode step ran (e.g. a trace of
+    /// `max_new_tokens <= 1` requests completes without decoding), so the
+    /// metrics surface never under-counts admissions.
+    fn take_step_timing(&mut self) -> Option<StepTiming> {
+        let mut timing = self.last_timing.take();
+        let stats = self.prefix_stats();
+        // Only admission counters are reported; insert/evict churn alone
+        // must not fabricate a timing entry.
+        let pending = stats.lookups != self.reported_prefix.lookups
+            || stats.blocks_saved != self.reported_prefix.blocks_saved;
+        if pending {
+            let t = timing.get_or_insert_with(StepTiming::default);
+            t.prefix_hits = stats.hits - self.reported_prefix.hits;
+            t.prefix_misses = stats.misses() - self.reported_prefix.misses();
+            t.prefix_blocks_saved = stats.blocks_saved - self.reported_prefix.blocks_saved;
+            self.reported_prefix = stats;
+        }
+        timing
+    }
+}
+
+impl PagedNativeBackend {
+    fn prefill_inner(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("prefill: empty prompt for seq {seq}");
+        }
+        // Longest cached whole-block prefix (never the full prompt: at
+        // least one tail token is left so the tail prefill produces the
+        // last-position logits).
+        let mut hit = match self.prefix.as_mut() {
+            Some(cache) => cache.lookup(prompt),
+            None => Vec::new(),
+        };
+        let registered = if hit.is_empty() {
+            self.register_evicting(seq, &[], prompt.len())
+        } else {
+            // Temporary hold: the matched blocks are tree-only until
+            // registration bumps their table refs, and the eviction
+            // pressure valve inside `register_evicting` must not reclaim
+            // them.
+            self.alloc.hold_blocks(&hit);
+            let adopted = self.register_evicting(seq, &hit, prompt.len());
+            self.alloc.release_held(&hit);
+            match adopted {
+                Ok(()) => Ok(()),
+                Err(_) => {
+                    // The tail didn't fit around the held prefix (the hold
+                    // itself can pin the only evictable leaf). Drop the
+                    // hit and admit cold: without the hold the matched
+                    // leaf is evictable like any other, so a prompt that
+                    // fits the pool is never rejected because of a
+                    // partial cache match.
+                    hit.clear();
+                    self.register_evicting(seq, &[], prompt.len())
+                }
+            }
+        };
+        registered.map_err(|e| anyhow!("prefill seq {seq}: {e}"))?;
+        // Stats are recorded only for registrations that stuck, so
+        // admissions requeued on capacity errors don't inflate hit rates
+        // or the blocks-saved arithmetic.
+        if let Some(cache) = self.prefix.as_mut() {
+            cache.record_admission(hit.len());
+        }
+
+        let logits = if hit.is_empty() {
+            // Cold path: prompt processing reuses the reference prefill
+            // (identical logits by construction); the engine's batching
+            // win is the decode loop, where steps outnumber prefills
+            // max_new_tokens to one.
+            let mut cache = KvCache::new(self.model.config.n_layers);
+            let logits = self.model.prefill(&mut cache, prompt);
+            self.scatter_prefill(seq, &cache, 0)?;
+            logits
+        } else {
+            // Hit: resume from the cached rows (bit-copies of a cold
+            // prefill's) and run only the uncovered tail; scatter only the
+            // tail rows — the prefix blocks are shared and already hold
+            // identical data.
+            let covered = hit.len() * self.alloc.config.block_size;
+            let mut cache = self.gather_prefix(&hit, covered);
+            let logits = self.model.prefill(&mut cache, &prompt[covered..]);
+            self.scatter_prefill(seq, &cache, covered)?;
+            logits
+        };
+        if self.prefix.is_some() {
+            self.histories.insert(seq, prompt.to_vec());
+        }
+        Ok(logits.data)
+    }
+
+    fn decode_inner(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
         if seqs.is_empty() {
             return Ok(Vec::new());
         }
@@ -196,12 +500,16 @@ impl Backend for PagedNativeBackend {
                 .alloc
                 .seq_len(id)
                 .ok_or_else(|| anyhow!("decode: unknown seq {id}"))?;
+            // Boundary/COW allocations evict cached prefixes under pool
+            // pressure before erroring out of the batched step.
             let slot = self
-                .alloc
-                .append_token_cow(id)
+                .append_evicting(id)
                 .map_err(|e| anyhow!("decode seq {id}: {e}"))?;
             if let Some(src) = slot.copied_from {
                 self.pool.copy_block(src, slot.block);
+            }
+            if let Some(h) = self.histories.get_mut(&id) {
+                h.push(tok); // the token whose K/V row lands at `pos`
             }
             let row = self.model.embed_tokens(&[tok], pos);
             x.row_mut(i).copy_from_slice(row.row(0));
@@ -256,25 +564,11 @@ impl Backend for PagedNativeBackend {
         let t = Instant::now();
         let logits = matmul(&h, &self.embed_t);
         gemm_secs += t.elapsed().as_secs_f64();
-        self.last_timing = Some(StepTiming { attn: attn_secs, gemm: gemm_secs });
+        // The prefix-cache delta is merged in at take_step_timing time, so
+        // admissions surface even when no further decode step runs.
+        let timing = StepTiming { attn: attn_secs, gemm: gemm_secs, ..Default::default() };
+        self.last_timing = Some(timing);
         Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
-    }
-
-    fn release(&mut self, seq: SeqId) {
-        // Blocks return to the pool when their ref count hits zero; forks
-        // still holding shared blocks keep them alive.
-        let _ = self.alloc.release(seq);
-    }
-
-    /// Engine pool truth for admission: this allocator sees every lease —
-    /// prefills, decode appends, *and* engine-level forks / copy-on-write
-    /// blocks that the scheduler's shadow allocator cannot know about.
-    fn free_blocks(&self) -> Option<usize> {
-        Some(self.alloc.free_blocks())
-    }
-
-    fn take_step_timing(&mut self) -> Option<StepTiming> {
-        self.last_timing.take()
     }
 }
 
@@ -363,11 +657,17 @@ mod tests {
         assert_eq!(parent[0], want.data, "child COW corrupted the parent");
         assert_eq!(child[0], want.data, "identical histories must agree");
 
-        // Releasing the child frees only its private COW block.
+        // Releasing the child frees only its private COW block (its full
+        // shared prefix block may move into the prefix cache, which the
+        // parent's table already keeps alive — still zero extra blocks).
         engine.release(2);
         assert_eq!(engine.used_blocks(), used_parent);
         engine.release(1);
-        assert_eq!(engine.used_blocks(), 0);
+        assert_eq!(
+            engine.used_blocks(),
+            engine.cached_blocks(),
+            "only radix-tree residency may outlive the sequences"
+        );
         engine.alloc.check_invariants().unwrap();
     }
 
@@ -418,9 +718,150 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_hit_is_bitwise_identical_to_cold_prefill() {
+        // Invariant 4 at the engine level: serve + release a prompt, then
+        // re-serve a request sharing its prefix — the hit's prefill logits
+        // and all subsequent decode logits must equal a cold per-sequence
+        // run bit for bit.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 37);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        engine.set_prefix_cache(true);
+        let shared: Vec<u32> = (0..11).map(|j| (j * 19 + 3) % 250).collect();
+        engine.prefill(1, &shared).unwrap();
+        engine.decode(&[(1, 8)]).unwrap();
+        engine.release(1);
+        assert!(engine.cached_blocks() > 0, "release must seed the radix tree");
+
+        let mut prompt = shared.clone();
+        prompt.extend([123u32, 45]);
+        let before = engine.prefix_stats();
+        let got = engine.prefill(2, &prompt).unwrap();
+        let after = engine.prefix_stats();
+        assert_eq!(after.hits, before.hits + 1, "second request must hit the cache");
+        assert!(after.blocks_saved > before.blocks_saved);
+
+        let mut cache = KvCache::new(model.config.n_layers);
+        let want = model.prefill(&mut cache, &prompt);
+        assert_eq!(got, want.data, "hit prefill logits must be bit-identical to cold");
+        for tok in [7u32, 200, 5, 64] {
+            let g = engine.decode(&[(2, tok)]).unwrap();
+            let w = model.decode_step(&mut cache, tok);
+            assert_eq!(g[0], w.data, "decode after a cache hit diverged at token {tok}");
+        }
+        engine.release(2);
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pool_pressure_evicts_cached_blocks() {
+        // A full pool with only tree-held blocks must admit a new prompt
+        // by evicting LRU leaves, and free_blocks must report the cached
+        // blocks as reclaimable beforehand.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 41);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let mut engine = PagedNativeBackend::new(model, kvc);
+        engine.set_prefix_cache(true);
+        engine.prefill(1, &(0u32..12).collect::<Vec<_>>()).unwrap(); // 3 blocks
+        engine.release(1);
+        assert_eq!(engine.cached_blocks(), 3);
+        assert_eq!(engine.alloc.free_blocks(), 1);
+        assert_eq!(
+            engine.free_blocks(),
+            Some(4),
+            "evictable cached blocks count as reclaimable capacity"
+        );
+        // An unrelated 16-token prompt needs all 4 blocks: the tree must
+        // give its residency back.
+        engine.prefill(2, &(100u32..116).collect::<Vec<_>>()).unwrap();
+        assert_eq!(engine.cached_blocks(), 0, "pressure must evict the cached prefix");
+        assert_eq!(engine.used_blocks(), 4);
+        engine.alloc.check_invariants().unwrap();
+        assert!(engine.prefix_stats().evicted_blocks >= 3);
+        engine.release(2);
+    }
+
+    #[test]
+    fn partial_hit_under_pressure_falls_back_to_cold_admission() {
+        // Regression: the temporary hold on a matched prefix pins that
+        // leaf against eviction; when the tail then can't fit, admission
+        // must drop the hit and register cold (evicting the leaf) rather
+        // than reject a prompt the pool can serve.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 53);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let mut engine = PagedNativeBackend::new(model.clone(), kvc);
+        engine.set_prefix_cache(true);
+        let warm: Vec<u32> = (0..12).collect();
+        engine.prefill(1, &warm).unwrap();
+        engine.release(1);
+        assert_eq!((engine.cached_blocks(), engine.alloc.free_blocks()), (3, 1));
+
+        // Shares only the first block (tokens 0..4), then diverges; needs
+        // 4 blocks total but only 1 is free and the hold pins the leaf.
+        let mut prompt: Vec<u32> = (0..4).collect();
+        prompt.extend(200..212);
+        let got = engine.prefill(2, &prompt).unwrap();
+        let stats = engine.prefix_stats();
+        assert_eq!(stats.hits, 0, "dropped hit must be recorded as a miss");
+        assert_eq!(engine.cached_blocks(), 0, "fallback must evict the cached leaf");
+        // And the cold admission is still bit-identical to the reference.
+        let mut cache = KvCache::new(model.config.n_layers);
+        let want = model.prefill(&mut cache, &prompt);
+        assert_eq!(got, want.data);
+        engine.release(2);
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disabling_prefix_cache_releases_residency() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 43);
+        let mut engine = PagedNativeBackend::new(model, kv());
+        engine.set_prefix_cache(true);
+        engine.prefill(1, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        engine.release(1);
+        assert!(engine.cached_blocks() > 0);
+        engine.set_prefix_cache(false);
+        assert!(!engine.prefix_cache_enabled());
+        assert_eq!(engine.used_blocks(), 0, "disabling must free every cached block");
+        engine.alloc.check_invariants().unwrap();
+        // Disabled engines serve normally with zeroed stats.
+        engine.prefill(2, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        assert_eq!(engine.prefix_stats(), super::PrefixStats::default());
+        engine.release(2);
+        assert_eq!(engine.used_blocks(), 0);
+    }
+
+    #[test]
+    fn step_timing_reports_prefix_counters() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 47);
+        let mut engine = PagedNativeBackend::new(model, kv());
+        engine.set_prefix_cache(true);
+        let prompt: Vec<u32> = (0..9).collect();
+        engine.prefill(1, &prompt).unwrap();
+        engine.decode(&[(1, 2)]).unwrap();
+        let t = engine.take_step_timing().unwrap();
+        assert_eq!((t.prefix_hits, t.prefix_misses), (0, 1), "cold admission is a miss");
+        engine.release(1);
+        engine.prefill(2, &prompt).unwrap();
+        engine.decode(&[(2, 2)]).unwrap();
+        let t = engine.take_step_timing().unwrap();
+        assert_eq!((t.prefix_hits, t.prefix_misses), (1, 0), "warm admission is a hit");
+        assert_eq!(t.prefix_blocks_saved, 2, "8 of 9 prompt tokens ride cached blocks");
+        engine.decode(&[(2, 3)]).unwrap();
+        let t = engine.take_step_timing().unwrap();
+        assert_eq!(
+            (t.prefix_hits, t.prefix_misses, t.prefix_blocks_saved),
+            (0, 0, 0),
+            "deltas are consumed per step"
+        );
+    }
+
+    #[test]
     fn step_timing_reported_and_consumed() {
         let model = Transformer::new_mha(ModelConfig::tiny(), 29);
         let mut engine = PagedNativeBackend::new(model, kv());
+        // Cache off: with it on, the prefill's admission counters alone
+        // would (correctly) surface a timing entry before any decode.
+        engine.set_prefix_cache(false);
         engine.prefill(1, &[1, 2, 3]).unwrap();
         assert!(engine.take_step_timing().is_none(), "no decode step yet");
         engine.decode(&[(1, 9)]).unwrap();
@@ -444,7 +885,12 @@ mod tests {
         let done = s.drain().unwrap();
         assert_eq!(done.len(), 6);
         assert!(done.iter().all(|r| r.tokens.len() == 4));
-        assert_eq!(s.backend.used_blocks(), 0, "completed seqs must free their blocks");
+        assert_eq!(
+            s.backend.used_blocks(),
+            s.backend.cached_blocks(),
+            "completed seqs must free everything except radix-tree residency"
+        );
+        s.backend.alloc.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The paged batched decode engine — the default native serving path.
 //!
-//! Two halves:
+//! Three parts:
 //!
 //! * [`paged_kv::PagedKvPool`] — contiguous per-layer K/V block storage,
 //!   the real memory behind the coordinator's ref-counted
@@ -14,7 +14,15 @@
 //!   GEMM, with fork/copy-on-write prefix sharing that dedups K/V memory.
 //!   It reports its attention/GEMM wall-time split per step through
 //!   [`crate::coordinator::StepTiming`] and exposes pool truth to
-//!   scheduler admission via `Backend::free_blocks`.
+//!   scheduler admission via `Backend::free_blocks`;
+//! * [`prefix_cache::PrefixCache`] — a radix tree over released
+//!   sequences' prompts whose nodes own ref-counted block fragments in
+//!   the pool: **automatic cross-request K/V prompt sharing** (SGLang-style
+//!   RadixAttention). Admission adopts the longest cached whole-block
+//!   prefix zero-copy and prefills only the uncovered tail; LRU zero-ref
+//!   leaves are evicted under pool pressure (and counted as reclaimable
+//!   capacity by admission). On by default; `BDA_PREFIX_CACHE=0`
+//!   disables.
 //!
 //! All parallel regions of the decode step run on the **persistent parked
 //! worker pool** ([`crate::util::threadpool`]): workers are created once
@@ -27,7 +35,7 @@
 //!
 //! # Load-bearing invariants
 //!
-//! Every optimization in the serving layer is constrained by three
+//! Every optimization in the serving layer is constrained by four
 //! bit-exactness invariants, stated here once and property-tested in
 //! `tests/prop_paged_parallel.rs` and `tests/prop_coordinator.rs`:
 //!
@@ -49,6 +57,15 @@
 //!    first. A fork therefore never observes — or causes — a change in
 //!    the other sequence's history, and identical histories decode to
 //!    bit-identical logits whether or not they share storage.
+//! 4. **A prefix-cache hit is bit-identical to a cold prefill.** Causal
+//!    attention makes the K/V row at position `t` a function of tokens
+//!    `0..=t` only, and every operator on the path (GEMM rows, RMSNorm,
+//!    paged attention) is row-deterministic — so two requests sharing a
+//!    token prefix produce identical prefix K/V. Adopting the cached
+//!    blocks ([`prefix_cache::PrefixCache`]) and prefilling only the
+//!    uncovered tail therefore yields the same logits, bit for bit, as
+//!    prefilling the whole prompt from scratch — for MHA and BDA alike.
+//!    Prompt caching is pure data reuse, never an approximation.
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve
@@ -56,6 +73,8 @@
 
 pub mod backend;
 pub mod paged_kv;
+pub mod prefix_cache;
 
 pub use backend::PagedNativeBackend;
 pub use paged_kv::PagedKvPool;
+pub use prefix_cache::{PrefixCache, PrefixStats};

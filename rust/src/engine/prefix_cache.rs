@@ -1,0 +1,590 @@
+//! Radix-tree prefix cache: automatic cross-request K/V prompt sharing.
+//!
+//! The engine's `fork`/copy-on-write machinery (PR 1–3) dedups K/V when a
+//! caller *explicitly* forks a sequence. This module makes the sharing
+//! automatic: a radix tree over prompt token sequences whose nodes own
+//! ref-counted block-table fragments in the live
+//! [`crate::engine::PagedKvPool`]. On admission the engine matches an
+//! incoming prompt against the tree at **block granularity**, adopts the
+//! longest cached prefix into the new sequence (zero-copy table adoption,
+//! copy-on-write on divergence — exactly a fork from the tree), and
+//! prefills only the uncovered tail. On release a sequence's full-block
+//! prefix is inserted into the tree (ref-bumped via
+//! [`BlockAllocator::hold_blocks`]) instead of freed, with LRU eviction of
+//! zero-ref leaves when pool pressure demands — the eviction machinery the
+//! scheduler-preemption roadmap item builds on.
+//!
+//! # Why a cache hit is bitwise-lossless
+//!
+//! Causal attention makes the K/V row of position `t` a function of tokens
+//! `0..=t` only, and every operator on that path (GEMM rows, RMSNorm,
+//! paged attention) is row-deterministic. Two requests sharing a token
+//! prefix therefore produce **bit-identical** prefix K/V, so adopting the
+//! cached rows and prefilling only the tail yields logits bit-identical to
+//! a cold full prefill — for MHA and BDA alike (BDA's losslessness, §3.4,
+//! keeps the cache attention-variant-agnostic). This is invariant 4 of
+//! [`crate::engine`], property-tested in `tests/prop_paged_parallel.rs`.
+//!
+//! # Structure
+//!
+//! Each node owns an *edge*: one or more whole blocks of tokens
+//! (`tokens.len() == blocks.len() * block_size`) plus the pool blocks
+//! holding their K/V. Children of a node differ in their first block's
+//! token content. Insertion splits a node at a block boundary when a new
+//! sequence diverges mid-edge; matching walks block-by-block and never
+//! returns a partial block (a hit must leave ≥ 1 tail token so the tail
+//! prefill produces the last-position logits).
+//!
+//! Safety is ref-count-based, not policy-based: the tree holds its blocks
+//! through [`BlockAllocator::hold_blocks`], active sequences hold theirs
+//! through their tables, and eviction only ever drops the *tree's* hold —
+//! a block shared with a live sequence survives eviction (the allocator
+//! frees blocks only at ref zero). "Zero-ref leaf" below means a leaf
+//! whose blocks are referenced by the tree alone (`ref_count == 1`).
+
+use crate::coordinator::kv_cache::{BlockAllocator, BlockId};
+
+/// Index of the root sentinel node (empty edge, never evicted).
+const ROOT: usize = 0;
+
+/// Cumulative prefix-cache counters (monotonic; diff two snapshots for a
+/// per-step delta).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prompt lookups performed (one per engine prefill while enabled).
+    pub lookups: u64,
+    /// Lookups that matched at least one cached block.
+    pub hits: u64,
+    /// Prompt blocks adopted from the tree instead of being re-prefilled.
+    pub blocks_saved: u64,
+    /// Blocks inserted into the tree by releasing sequences.
+    pub inserted_blocks: u64,
+    /// Blocks returned to the pool by LRU eviction.
+    pub evicted_blocks: u64,
+}
+
+impl PrefixStats {
+    /// Lookups that matched nothing.
+    pub fn misses(&self) -> u64 {
+        self.lookups - self.hits
+    }
+
+    /// Hit fraction over all lookups (0.0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Token content of this edge; always `blocks.len() * block_size` long
+    /// (empty only for the root sentinel).
+    tokens: Vec<u32>,
+    /// Pool blocks holding the K/V rows for `tokens`, in order. The tree
+    /// holds one allocator hold per block.
+    blocks: Vec<BlockId>,
+    children: Vec<usize>,
+    parent: usize,
+    /// LRU tick of the last lookup/insert that touched this node.
+    last_used: u64,
+}
+
+/// Radix tree over prompt token sequences, nodes owning ref-counted block
+/// fragments in the paged K/V pool. See the module docs for semantics.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_size: usize,
+    /// Slab of nodes; `None` marks a freed slot. Slot [`ROOT`] is the
+    /// sentinel and always live.
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    tick: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(block_size: usize) -> PrefixCache {
+        assert!(block_size > 0, "prefix cache needs a positive block size");
+        PrefixCache {
+            block_size,
+            nodes: vec![Some(Node {
+                tokens: Vec::new(),
+                blocks: Vec::new(),
+                children: Vec::new(),
+                parent: ROOT,
+                last_used: 0,
+            })],
+            free_slots: Vec::new(),
+            tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Cumulative counters since construction.
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("live node")
+    }
+
+    fn new_node(&mut self, parent: usize, tokens: Vec<u32>, blocks: Vec<BlockId>) -> usize {
+        debug_assert_eq!(tokens.len(), blocks.len() * self.block_size);
+        debug_assert!(!blocks.is_empty());
+        let node = Node { tokens, blocks, children: Vec::new(), parent, last_used: self.tick };
+        match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Some(node);
+                slot
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Live nodes excluding the root (the tree's size, for tests/reports).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().flatten().count() - 1
+    }
+
+    /// Blocks currently held by the tree.
+    pub fn held_blocks(&self) -> usize {
+        self.nodes.iter().flatten().map(|n| n.blocks.len()).sum()
+    }
+
+    /// Child of `node` whose edge starts with the block-sized token run at
+    /// `want` (children are distinguished by their first block).
+    fn child_matching(&self, node: usize, want: &[u32]) -> Option<usize> {
+        self.node(node)
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.node(c).tokens[..self.block_size] == *want)
+    }
+
+    /// Longest cached whole-block prefix of `prompt`, capped so at least
+    /// one prompt token is left uncovered. Returns the matched blocks in
+    /// order (empty on a miss); the caller adopts them into a new
+    /// sequence's table via [`BlockAllocator::register_with_prefix`].
+    /// Touches every matched node's LRU stamp. Counters are **not**
+    /// updated here — call [`PrefixCache::record_admission`] once the
+    /// sequence is actually registered, so retried admissions don't
+    /// inflate hit statistics.
+    pub fn lookup(&mut self, prompt: &[u32]) -> Vec<BlockId> {
+        let bs = self.block_size;
+        let max_blocks = prompt.len().saturating_sub(1) / bs;
+        self.tick += 1;
+        let tick = self.tick;
+        let mut matched: Vec<BlockId> = Vec::new();
+        let mut node = ROOT;
+        'walk: while matched.len() < max_blocks {
+            let pos = matched.len() * bs;
+            let Some(child) = self.child_matching(node, &prompt[pos..pos + bs]) else {
+                break;
+            };
+            self.node_mut(child).last_used = tick;
+            let edge_blocks = self.node(child).blocks.len();
+            for b in 0..edge_blocks {
+                if matched.len() == max_blocks {
+                    break 'walk;
+                }
+                let lo = matched.len() * bs;
+                if self.node(child).tokens[b * bs..(b + 1) * bs] == prompt[lo..lo + bs] {
+                    matched.push(self.node(child).blocks[b]);
+                } else {
+                    break 'walk;
+                }
+            }
+            node = child;
+        }
+        matched
+    }
+
+    /// Record one served admission that adopted `adopted_blocks` cached
+    /// blocks (0 = miss). Kept separate from [`PrefixCache::lookup`] so
+    /// the engine counts each request once, after its registration
+    /// succeeded — an admission requeued on pool pressure and retried
+    /// later contributes a single lookup, not one per attempt.
+    pub fn record_admission(&mut self, adopted_blocks: usize) {
+        self.stats.lookups += 1;
+        if adopted_blocks > 0 {
+            self.stats.hits += 1;
+            self.stats.blocks_saved += adopted_blocks as u64;
+        }
+    }
+
+    /// Insert a released sequence's whole-block prefix: `tokens` must be a
+    /// multiple of the block size and `blocks` its backing pool blocks
+    /// (`blocks.len() * block_size == tokens.len()`). Ranges the tree
+    /// already covers (by token content) are deduplicated — the existing
+    /// nodes keep their blocks and the duplicates stay with the releasing
+    /// sequence (freed by its table release). Only the uncovered tail
+    /// becomes a new node, whose blocks get an allocator hold so they
+    /// outlive the sequence.
+    pub fn insert(&mut self, tokens: &[u32], blocks: &[BlockId], alloc: &mut BlockAllocator) {
+        let bs = self.block_size;
+        assert_eq!(tokens.len(), blocks.len() * bs, "insert needs whole blocks");
+        let total = blocks.len();
+        if total == 0 {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let mut covered = 0usize;
+        let mut node = ROOT;
+        while covered < total {
+            let pos = covered * bs;
+            let Some(child) = self.child_matching(node, &tokens[pos..pos + bs]) else {
+                // No child shares the next block: everything remaining
+                // becomes one new leaf under `node`.
+                self.attach(node, &tokens[pos..], &blocks[covered..], alloc);
+                return;
+            };
+            self.node_mut(child).last_used = tick;
+            let edge_blocks = self.node(child).blocks.len();
+            let mut m = 0;
+            while m < edge_blocks
+                && covered + m < total
+                && self.node(child).tokens[m * bs..(m + 1) * bs]
+                    == tokens[(covered + m) * bs..(covered + m + 1) * bs]
+            {
+                m += 1;
+            }
+            covered += m;
+            if m == edge_blocks {
+                node = child;
+                continue;
+            }
+            if covered == total {
+                // The input is a prefix of this edge: fully covered, no
+                // split needed (lookups match partial edges fine).
+                return;
+            }
+            // Divergence mid-edge: split the edge at block boundary `m`
+            // and attach the remainder as a new sibling leaf.
+            self.split(child, m);
+            self.attach(child, &tokens[covered * bs..], &blocks[covered..], alloc);
+            return;
+        }
+    }
+
+    /// Create a leaf under `parent` holding `blocks`, taking allocator
+    /// holds so the blocks survive the owning sequence's release.
+    fn attach(
+        &mut self,
+        parent: usize,
+        tokens: &[u32],
+        blocks: &[BlockId],
+        alloc: &mut BlockAllocator,
+    ) {
+        alloc.hold_blocks(blocks);
+        self.stats.inserted_blocks += blocks.len() as u64;
+        let id = self.new_node(parent, tokens.to_vec(), blocks.to_vec());
+        self.node_mut(parent).children.push(id);
+    }
+
+    /// Split `node`'s edge after `at_blocks` blocks: `node` keeps the
+    /// front, a new child takes the back (and inherits `node`'s children).
+    fn split(&mut self, node: usize, at_blocks: usize) {
+        let bs = self.block_size;
+        debug_assert!(at_blocks > 0 && at_blocks < self.node(node).blocks.len());
+        let n = self.node_mut(node);
+        let back_tokens = n.tokens.split_off(at_blocks * bs);
+        let back_blocks = n.blocks.split_off(at_blocks);
+        let back_children = std::mem::take(&mut n.children);
+        let back = self.new_node(node, back_tokens, back_blocks);
+        self.node_mut(back).children = back_children;
+        for c in self.node(back).children.clone() {
+            self.node_mut(c).parent = back;
+        }
+        self.node_mut(node).children.push(back);
+    }
+
+    /// Evict the least-recently-used zero-ref leaf — a leaf whose blocks
+    /// are referenced by the tree alone (`ref_count == 1`), so dropping
+    /// the tree's hold returns exactly those blocks to the pool. Returns
+    /// the number of blocks freed (0 when nothing is evictable). Repeated
+    /// calls cascade: evicting a leaf can turn its parent into the next
+    /// evictable leaf.
+    pub fn evict_lru(&mut self, alloc: &mut BlockAllocator) -> usize {
+        let mut victim: Option<(usize, u64)> = None;
+        for (id, slot) in self.nodes.iter().enumerate().skip(1) {
+            let Some(n) = slot.as_ref() else { continue };
+            if !n.children.is_empty() {
+                continue;
+            }
+            if !n.blocks.iter().all(|&b| alloc.ref_count(b) == 1) {
+                continue; // shared with a live sequence: not zero-ref
+            }
+            let older = match victim {
+                None => true,
+                Some((_, last_used)) => n.last_used < last_used,
+            };
+            if older {
+                victim = Some((id, n.last_used));
+            }
+        }
+        let Some((id, _)) = victim else { return 0 };
+        let node = self.nodes[id].take().expect("victim is live");
+        self.free_slots.push(id);
+        let parent = self.node_mut(node.parent);
+        parent.children.retain(|&c| c != id);
+        alloc.release_held(&node.blocks);
+        self.stats.evicted_blocks += node.blocks.len() as u64;
+        node.blocks.len()
+    }
+
+    /// Blocks eviction could reclaim right now: the total over maximal
+    /// subtrees in which every node's blocks are tree-only (`ref_count ==
+    /// 1`). Admission counts these as free — cached-but-unpinned K/V is
+    /// reclaimable capacity, not occupancy.
+    ///
+    /// Cost: one tree walk with an O(1) ref-count probe per held block,
+    /// so O(held blocks) ≤ O(pool size) per call — cheap next to the
+    /// prefill each admission check gates, but called per queued request
+    /// per scheduler tick. If that ever shows up in profiles, the fix is
+    /// an incrementally maintained counter invalidated on
+    /// insert/evict/adopt/release transitions.
+    pub fn evictable_blocks(&self, alloc: &BlockAllocator) -> usize {
+        self.evictable_walk(ROOT, alloc).0
+    }
+
+    /// Post-order walk returning `(evictable_count, subtree_fully_evictable)`.
+    /// A node's own blocks count only if every descendant is fully
+    /// evictable (leaf-first eviction can only reach it then).
+    fn evictable_walk(&self, id: usize, alloc: &BlockAllocator) -> (usize, bool) {
+        let n = self.node(id);
+        let mut sum = 0;
+        let mut all = true;
+        for &c in &n.children {
+            let (s, f) = self.evictable_walk(c, alloc);
+            sum += s;
+            all &= f;
+        }
+        if id != ROOT && all && n.blocks.iter().all(|&b| alloc.ref_count(b) == 1) {
+            (sum + n.blocks.len(), true)
+        } else {
+            (sum, false)
+        }
+    }
+
+    /// Drop every hold and empty the tree (used when the cache is turned
+    /// off on a live engine).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
+        let mut evicted = 0u64;
+        for slot in self.nodes.iter_mut().skip(1) {
+            if let Some(n) = slot.take() {
+                alloc.release_held(&n.blocks);
+                evicted += n.blocks.len() as u64;
+            }
+        }
+        self.stats.evicted_blocks += evicted;
+        self.nodes.truncate(1);
+        self.free_slots.clear();
+        self.node_mut(ROOT).children.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::{KvCacheConfig, SeqId};
+
+    const BS: usize = 4;
+
+    fn alloc(blocks: usize) -> BlockAllocator {
+        BlockAllocator::new(KvCacheConfig { block_size: BS, num_blocks: blocks })
+    }
+
+    /// Register `seq` for `tokens`, then release it into the tree the way
+    /// the engine does: insert the full-block prefix, drop the table.
+    fn serve_and_release(
+        cache: &mut PrefixCache,
+        a: &mut BlockAllocator,
+        seq: SeqId,
+        tokens: &[u32],
+    ) -> Vec<BlockId> {
+        a.register(seq, tokens.len()).unwrap();
+        let blocks = a.seq_blocks(seq).unwrap().to_vec();
+        let full = tokens.len() / BS * BS;
+        cache.insert(&tokens[..full], &blocks[..full / BS], a);
+        a.release(seq).unwrap();
+        a.check_invariants().unwrap();
+        blocks
+    }
+
+    fn toks(seed: u32, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| seed * 100 + i).collect()
+    }
+
+    #[test]
+    fn lookup_hits_longest_cached_prefix() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(32);
+        let t = toks(1, 12); // 3 full blocks
+        let blocks = serve_and_release(&mut c, &mut a, 1, &t);
+        assert_eq!(c.held_blocks(), 3);
+        assert_eq!(a.used_blocks(), 3, "tree keeps the prefix alive");
+
+        // Identical prompt + tail: all 3 blocks hit.
+        let mut p = t.clone();
+        p.extend([777, 778]);
+        let m = c.lookup(&p);
+        assert_eq!(m, blocks[..3].to_vec());
+        c.record_admission(m.len());
+
+        // Prompt equal to the cached tokens: capped at (len-1)/bs blocks so
+        // one tail token is always left to prefill.
+        let m = c.lookup(&t);
+        assert_eq!(m.len(), 2);
+        c.record_admission(m.len());
+
+        // Diverging in the second block: only the first block hits.
+        let mut q = t.clone();
+        q[5] = 999;
+        let m = c.lookup(&q);
+        assert_eq!(m, blocks[..1].to_vec());
+        c.record_admission(m.len());
+
+        // Diverging in the first block: miss. Lookups retried without a
+        // recorded admission (requeued requests) don't count.
+        assert!(c.lookup(&toks(9, 12)).is_empty());
+        assert!(c.lookup(&toks(9, 12)).is_empty());
+        c.record_admission(0);
+        let s = c.stats();
+        assert_eq!((s.lookups, s.hits), (4, 3));
+        assert_eq!(s.blocks_saved, 3 + 2 + 1);
+    }
+
+    #[test]
+    fn insert_dedups_and_splits_on_divergence() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(32);
+        let t1 = toks(1, 12);
+        serve_and_release(&mut c, &mut a, 1, &t1);
+        assert_eq!(c.node_count(), 1);
+
+        // Same content from a different sequence: deduplicated, nothing new
+        // held, the duplicate blocks free with the releasing table.
+        let used = a.used_blocks();
+        serve_and_release(&mut c, &mut a, 2, &t1);
+        assert_eq!(c.node_count(), 1);
+        assert_eq!(c.held_blocks(), 3);
+        assert_eq!(a.used_blocks(), used);
+
+        // Shared first block, divergent second: the 3-block edge splits at
+        // block 1 and the new branch hangs off the front half.
+        let mut t2 = toks(1, 12);
+        t2[6] = 555;
+        serve_and_release(&mut c, &mut a, 3, &t2);
+        assert_eq!(c.node_count(), 3, "front + back + new branch");
+        assert_eq!(c.held_blocks(), 5);
+
+        // Both variants still hit fully.
+        let mut p1 = t1.clone();
+        p1.push(0);
+        let mut p2 = t2.clone();
+        p2.push(0);
+        assert_eq!(c.lookup(&p1).len(), 3);
+        assert_eq!(c.lookup(&p2).len(), 3);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn referenced_blocks_never_freed_and_eviction_frees_exactly_unshared() {
+        // The satellite regression: (a) blocks held by the tree are never
+        // returned to the pool while referenced, (b) evicting a zero-ref
+        // leaf frees exactly its unshared blocks.
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        let t = toks(3, 8); // 2 full blocks
+        serve_and_release(&mut c, &mut a, 1, &t);
+        assert_eq!(a.used_blocks(), 2);
+
+        // A hit sequence adopts the cached blocks: the leaf is no longer
+        // zero-ref, so eviction must refuse to touch it.
+        let hit = c.lookup(&[&t[..], &[42]].concat());
+        assert_eq!(hit.len(), 2);
+        a.register_with_prefix(7, &hit, 9).unwrap();
+        assert_eq!(c.evict_lru(&mut a), 0, "shared leaf must not be evicted");
+        assert_eq!(c.evictable_blocks(&a), 0);
+        a.check_invariants().unwrap();
+
+        // Extend the tree under the shared node with the hit sequence's
+        // private continuation, then release it.
+        let mut hist = t.clone();
+        hist.extend([42, 43, 44, 45]); // 9th..12th tokens -> 3rd full block
+        let blocks = a.seq_blocks(7).unwrap().to_vec();
+        c.insert(&hist, &blocks[..3], &mut a);
+        a.release(7).unwrap();
+        a.check_invariants().unwrap();
+        assert_eq!(c.held_blocks(), 3);
+        assert_eq!(a.used_blocks(), 3);
+
+        // Everything is zero-ref now. Evicting the LRU leaf frees exactly
+        // the leaf's single unshared block; the shared parent survives
+        // until a second eviction cascades to it.
+        assert_eq!(c.evictable_blocks(&a), 3);
+        assert_eq!(c.evict_lru(&mut a), 1, "leaf owns exactly one block");
+        assert_eq!(a.used_blocks(), 2);
+        assert_eq!(c.evict_lru(&mut a), 2, "parent becomes the next leaf");
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(c.evict_lru(&mut a), 0, "empty tree has nothing to evict");
+        a.check_invariants().unwrap();
+        assert_eq!(c.stats().evicted_blocks, 3);
+    }
+
+    #[test]
+    fn eviction_is_lru_ordered() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        serve_and_release(&mut c, &mut a, 1, &toks(1, 4));
+        serve_and_release(&mut c, &mut a, 2, &toks(2, 4));
+        // Touch branch 1 so branch 2 becomes the LRU.
+        let one_hit = c.lookup(&[&toks(1, 4)[..], &[9]].concat());
+        assert_eq!(one_hit.len(), 1);
+        c.evict_lru(&mut a);
+        assert!(c.lookup(&[&toks(1, 4)[..], &[9]].concat()).len() == 1, "MRU branch survives");
+        assert!(c.lookup(&[&toks(2, 4)[..], &[9]].concat()).is_empty(), "LRU branch evicted");
+    }
+
+    #[test]
+    fn clear_releases_every_hold() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        serve_and_release(&mut c, &mut a, 1, &toks(1, 8));
+        serve_and_release(&mut c, &mut a, 2, &toks(2, 12));
+        assert!(a.used_blocks() > 0);
+        c.clear(&mut a);
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(c.node_count(), 0);
+        assert_eq!(c.held_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn short_prompts_are_uncacheable() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(8);
+        // 3 tokens < block size: nothing inserted, lookups miss.
+        serve_and_release(&mut c, &mut a, 1, &toks(1, 3));
+        assert_eq!(c.node_count(), 0);
+        assert!(c.lookup(&toks(1, 3)).is_empty());
+        assert_eq!(a.used_blocks(), 0);
+    }
+}

@@ -7,7 +7,10 @@
 //!   serve      [--attention A]    run the serving coordinator on a trace
 //!                                 (--backend paged|per-seq; BDA_NUM_THREADS
 //!                                 sets decode parallelism — output is
-//!                                 bit-identical at any thread count)
+//!                                 bit-identical at any thread count;
+//!                                 --prefix-cache on|off overrides the
+//!                                 BDA_PREFIX_CACHE default for the paged
+//!                                 engine's radix-tree prompt cache)
 //!   eval-ppl   [--model M]        Fig. 2a-style PPL table (fp32/16/bf16)
 //!   recon      [--model M]        Table 4-style reconstruction errors
 //!   train      [--steps N]        drive the AOT train_step from Rust
@@ -162,8 +165,18 @@ fn cmd_serve(args: &Args) -> i32 {
     let result = if backend == "per-seq" {
         coordinator::server::replay_trace(NativeBackend::new(model), cfg, t)
     } else {
-        // Default: the paged batched decode engine.
-        let engine = PagedNativeBackend::new(model, cfg.scheduler.kv);
+        // Default: the paged batched decode engine, with the radix-tree
+        // prefix cache following BDA_PREFIX_CACHE unless --prefix-cache
+        // overrides it (a pure perf/memory knob: cache hits are
+        // bitwise-identical to cold prefills).
+        let mut engine = PagedNativeBackend::new(model, cfg.scheduler.kv);
+        if let Some(v) = args.get("prefix-cache") {
+            engine.set_prefix_cache(bda::engine::backend::prefix_cache_flag(v));
+        }
+        println!(
+            "prefix cache: {}",
+            if engine.prefix_cache_enabled() { "enabled" } else { "disabled" }
+        );
         coordinator::server::replay_trace(engine, cfg, t)
     };
     let (responses, metrics) = result.expect("serve");
@@ -172,6 +185,9 @@ fn cmd_serve(args: &Args) -> i32 {
     println!("{}", snap.report());
     if let Some(split) = snap.decode_split() {
         println!("decode split: {split}");
+    }
+    if let Some(line) = snap.prefix_cache_line() {
+        println!("prefix cache: {line}");
     }
     println!("wall: {secs:.2}s, completed {}", responses.len());
     0

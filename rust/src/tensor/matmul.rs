@@ -4,7 +4,9 @@
 //! written for throughput: row-panel parallelism across the persistent
 //! parked worker pool ([`crate::util::threadpool`]; dispatch wakes parked
 //! workers instead of spawning threads, so per-layer-per-step GEMMs carry
-//! no spawn cost), a k-blocked micro-kernel over contiguous rows of B
+//! no spawn cost — and rides the caller's ambient pool under
+//! [`crate::util::threadpool::with_pool`], so engine GEMMs use the
+//! engine's dedicated workers), a k-blocked micro-kernel over contiguous rows of B
 //! (unit-stride loads for both operands), and f32 accumulation. Logical
 //! f16/bf16 matmuls quantize the *output* through the dtype (inputs are
 //! assumed already quantized), matching a 16-bit-storage /
@@ -46,8 +48,14 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
 
-    // Choose a row-panel size that gives each worker a few panels.
-    let threads = crate::util::threadpool::num_threads();
+    // Choose a row-panel size that gives each worker a few panels. Sized
+    // by the *current* dispatch pool — the engine's own pool when the call
+    // runs under `threadpool::with_pool` (per-engine GEMM pools), the
+    // process-wide width otherwise. Panel boundaries never change
+    // per-element accumulation order (each output row accumulates over k
+    // in the same fixed order regardless of row partitioning), so this is
+    // a pure scheduling choice.
+    let threads = crate::util::threadpool::current_workers();
     let panel = (m.div_ceil(threads * 4)).clamp(MR, 64.max(MR));
 
     // SAFETY of the parallel write: panels are disjoint row ranges of C.

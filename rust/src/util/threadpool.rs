@@ -44,11 +44,66 @@
 //! [`parallel_for_with`] (which honors widths above the pool size with
 //! one-off scoped threads) or constructs its own [`ThreadPool`].
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+thread_local! {
+    /// Ambient pool override stack for the calling thread (see
+    /// [`with_pool`]). Empty means [`parallel_for`]-family wrappers
+    /// dispatch on the process-wide pool.
+    static AMBIENT_POOL: RefCell<Vec<Arc<ThreadPool>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with `pool` as this thread's ambient pool: every
+/// [`parallel_for`] / [`parallel_for_with`] / [`parallel_chunks`] region
+/// dispatched *by this thread* inside `f` — notably the GEMMs issued
+/// through the tensor `matmul` wrappers — runs on `pool` instead of the
+/// process-wide one. This is how the paged engine routes **all** of a
+/// decode step's parallel work (attention and GEMMs alike) onto its own
+/// worker set (`PagedNativeBackend::with_thread_pool`): per-engine
+/// isolation for multi-worker sharding without threading a pool handle
+/// through every tensor-level call signature.
+///
+/// The override is a stack (nesting restores the outer pool) and is
+/// per-thread only — pool *workers* never inherit it, which is irrelevant
+/// in practice because nested dispatch from inside a work item runs
+/// inline. Output is unaffected by pool routing (the determinism
+/// contract); this is purely a scheduling-isolation knob.
+pub fn with_pool<R>(pool: &Arc<ThreadPool>, f: impl FnOnce() -> R) -> R {
+    AMBIENT_POOL.with(|s| s.borrow_mut().push(Arc::clone(pool)));
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            AMBIENT_POOL.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+    let _guard = Guard;
+    f()
+}
+
+/// The pool the calling thread's `parallel_*` wrappers currently dispatch
+/// on: the innermost [`with_pool`] override, or the process-wide pool.
+pub fn current() -> Arc<ThreadPool> {
+    AMBIENT_POOL
+        .with(|s| s.borrow().last().cloned())
+        .unwrap_or_else(|| Arc::clone(global()))
+}
+
+/// Worker count of the calling thread's current dispatch pool — what
+/// panel-sizing heuristics (e.g. the blocked GEMM) should divide work by.
+pub fn current_workers() -> usize {
+    // Avoid constructing the global pool just to size panels when no
+    // override is active.
+    match AMBIENT_POOL.with(|s| s.borrow().last().cloned()) {
+        Some(pool) => pool.workers(),
+        None => num_threads(),
+    }
+}
 
 /// Process-unique token per thread (0 is reserved for "no owner"), used to
 /// detect same-thread re-entry into a pool's dispatch path without relying
@@ -360,11 +415,13 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-/// Run `f(i)` for every `i in 0..n` across the process-wide pool at its
-/// full width ([`num_threads`]). `f` must be `Sync`; per-index work should
-/// be coarse enough to amortize the atomic fetch.
+/// Run `f(i)` for every `i in 0..n` across the calling thread's current
+/// dispatch pool at its full width — the process-wide pool
+/// ([`num_threads`] workers) unless a [`with_pool`] override is active.
+/// `f` must be `Sync`; per-index work should be coarse enough to amortize
+/// the atomic fetch.
 pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
-    let pool = global();
+    let pool = current();
     pool.run(n, pool.workers(), f);
 }
 
@@ -378,7 +435,7 @@ pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
 /// one-off scoped threads so the requested parallelism is real even when
 /// the pool was sized small.
 pub fn parallel_for_with(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
-    let pool = global();
+    let pool = current();
     if workers > pool.workers() {
         return scoped_parallel_for_with(n, workers, f);
     }
@@ -607,6 +664,59 @@ mod tests {
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
         }
+    }
+
+    // ---- ambient pool override (per-engine GEMM pools) ------------------
+
+    #[test]
+    fn with_pool_overrides_and_restores_current() {
+        let dedicated = Arc::new(ThreadPool::new(3));
+        let inner = Arc::new(ThreadPool::new(2));
+        let before = current();
+        with_pool(&dedicated, || {
+            assert!(Arc::ptr_eq(&current(), &dedicated));
+            assert_eq!(current_workers(), 3);
+            // Nesting stacks: the innermost override wins, then unwinds.
+            with_pool(&inner, || {
+                assert!(Arc::ptr_eq(&current(), &inner));
+                assert_eq!(current_workers(), 2);
+            });
+            assert!(Arc::ptr_eq(&current(), &dedicated));
+        });
+        assert!(Arc::ptr_eq(&current(), &before), "override must restore the outer pool");
+    }
+
+    #[test]
+    fn with_pool_routes_wrapper_dispatches() {
+        // parallel_for under an override must produce identical coverage
+        // (the determinism contract makes routing unobservable in output).
+        let dedicated = Arc::new(ThreadPool::new(2));
+        let n = 301;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        with_pool(&dedicated, || {
+            parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            parallel_chunks(n, 16, |lo, hi| {
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 2, "index {i}");
+        }
+    }
+
+    #[test]
+    fn with_pool_restores_on_panic() {
+        let dedicated = Arc::new(ThreadPool::new(2));
+        let before = current();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            with_pool(&dedicated, || panic!("boom"));
+        }));
+        assert!(result.is_err());
+        assert!(Arc::ptr_eq(&current(), &before), "guard must pop the override on unwind");
     }
 
     #[test]

@@ -1,6 +1,6 @@
-//! Property tests for the blocked parallel paged-attention kernel and the
-//! fused Q/K/V weight packing — the two bit-exactness contracts of the
-//! PR 2 perf work:
+//! Property tests for the blocked parallel paged-attention kernel, the
+//! fused Q/K/V weight packing, and the radix-tree prefix cache — the
+//! bit-exactness contracts of the serving engine:
 //!
 //! 1. `paged_attention_decode` (blocked, parallel over (seq, head) work
 //!    items) is **bit-identical** to the retained serial reference at any
@@ -12,6 +12,10 @@
 //!    projections bitwise for every packable attention variant, and the
 //!    paged engine built on both stays bit-identical to per-sequence
 //!    decode for MHA and BDA alike.
+//! 3. A **prefix-cache hit is bitwise-identical to a cold prefill**
+//!    (engine invariant 4): adopting cached prompt blocks and prefilling
+//!    only the tail changes no logits, for MHA and BDA, at worker counts
+//!    {1, 2, 8}.
 //!
 //! Worker counts are pinned per call (`_with_workers` / `_on`) rather
 //! than via `BDA_NUM_THREADS` because the env var is latched once per
@@ -37,6 +41,7 @@ use bda::model::{AttentionImpl, ModelConfig, Transformer};
 use bda::tensor::{DType, Tensor};
 use bda::util::rng::Rng;
 use bda::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 /// Fisher–Yates shuffle of 0..n (deterministic per rng state).
 fn permutation(n: usize, rng: &mut Rng) -> Vec<usize> {
@@ -167,6 +172,68 @@ fn prop_fused_qkv_packing_is_bitwise_exact() {
         assert_eq!(q0.data, q1.data, "bda q case {case}");
         assert_eq!(k0.data, k1.data, "bda k case {case}");
         assert_eq!(v0.data, v1.data, "bda v case {case}");
+    }
+}
+
+/// Invariant 4 (the prefix-cache contract): decode after a prefix-cache
+/// hit is **bitwise identical** to cold-prefill decode, for MHA and BDA,
+/// at worker counts {1, 2, 8}. Each engine owns a dedicated pool of the
+/// swept width (its GEMMs and attention both ride it via the ambient-pool
+/// override), serves and releases a warm-up request to seed the radix
+/// tree, then serves a second request sharing the prompt prefix — the
+/// hit's prefill logits and every subsequent decode step must equal a
+/// cold per-sequence run float for float.
+#[test]
+fn prop_prefix_cache_hit_decode_bitwise_identical_to_cold() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 400);
+    let models = vec![
+        ("mha", mha.clone()),
+        ("bda", mha.to_bda(Strategy::ResidualMin, DType::F32).unwrap()),
+    ];
+    for (label, model) in models {
+        for workers in [1usize, 2, 8] {
+            let kv = KvCacheConfig { block_size: 4, num_blocks: 128 };
+            let pool = Arc::new(ThreadPool::new(workers));
+            let mut engine = PagedNativeBackend::with_thread_pool(model.clone(), kv, pool);
+            engine.set_prefix_cache(true); // force on regardless of env
+            let shared: Vec<u32> = (0..13).map(|j| (j * 31 + 5) % 250).collect();
+            engine.prefill(1, &shared).unwrap();
+            for tok in [9u32, 11] {
+                engine.decode(&[(1, tok)]).unwrap();
+            }
+            engine.release(1);
+            assert!(engine.cached_blocks() > 0, "{label}/{workers}: tree not seeded");
+
+            let mut prompt = shared.clone();
+            prompt.extend([77u32, 3]);
+            let before = engine.prefix_stats();
+            let got_prefill = engine.prefill(2, &prompt).unwrap();
+            let after = engine.prefix_stats();
+            assert_eq!(after.hits, before.hits + 1, "{label}/{workers}: lookup must hit");
+            assert_eq!(
+                after.blocks_saved - before.blocks_saved,
+                3,
+                "{label}/{workers}: 12 of 15 prompt tokens ride cached blocks"
+            );
+
+            let mut cache = KvCache::new(model.config.n_layers);
+            let want_prefill = model.prefill(&mut cache, &prompt);
+            assert_eq!(
+                got_prefill, want_prefill.data,
+                "{label}/{workers}: hit prefill logits diverged from cold prefill"
+            );
+            for tok in [4u32, 19, 249, 8] {
+                let got = engine.decode(&[(2, tok)]).unwrap();
+                let want = model.decode_step(&mut cache, tok);
+                assert_eq!(
+                    got[0], want.data,
+                    "{label}/{workers}: decode after a cache hit diverged at token {tok}"
+                );
+            }
+            engine.release(2);
+            engine.alloc.check_invariants().unwrap();
+            assert_eq!(engine.used_blocks(), engine.cached_blocks());
+        }
     }
 }
 
