@@ -154,6 +154,9 @@ fn main() -> Result<()> {
             if let Some(line) = snap.prefix_cache_line() {
                 println!("[{label} / {engine_label}] prefix cache: {line}");
             }
+            if let Some(line) = snap.preemption_line() {
+                println!("[{label} / {engine_label}] preemption: {line}");
+            }
             responses.sort_by_key(|r| r.id);
             generations.insert(
                 format!("{label}/{engine_label}"),

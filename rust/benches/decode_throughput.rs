@@ -266,8 +266,8 @@ fn prefix_cache_row(fast: bool) -> Json {
     assert_eq!(cold_snap.prefix_hits + cold_snap.prefix_misses, 0, "cache off must not look up");
     assert!(warm_snap.prefix_blocks_saved > 0, "shared-prefix sweep must produce hits");
     // Prefill work actually executed, in tokens: every request's prompt
-    // (computed from the workload — the admission-retry loop inflates the
-    // tokens_in counter), minus the tokens adopted from the radix tree.
+    // (computed from the workload), minus the tokens adopted from the
+    // radix tree.
     let prefill_cold = (n * (shared_len + 6)) as u64;
     let prefill_warm = prefill_cold - warm_snap.prefix_blocks_saved * block_size as u64;
     println!(
@@ -290,6 +290,76 @@ fn prefix_cache_row(fast: bool) -> Json {
         ("wall_cold_s", Json::num(*cold_wall)),
         ("wall_cached_s", Json::num(*warm_wall)),
         ("wall_speedup", Json::num(cold_wall / warm_wall)),
+    ])
+}
+
+/// Overload workload: the same trace replayed on an ample pool and on a
+/// deliberately tiny one, so decode steps exhaust the pool and the engine
+/// preempts victims (recompute-on-resume) instead of erroring. The two
+/// runs must produce bit-identical generations (engine invariant 5); the
+/// JSON row records the preemption/recompute cost and how gracefully
+/// throughput degrades under memory pressure.
+fn preemption_row(fast: bool) -> Json {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 57);
+    let vocab = model.config.vocab_size as u32;
+    let n = if fast { 8 } else { 16 };
+    let concurrency = 4usize;
+    let overload_blocks = 12usize; // 4 × 5-block peak demand vs 12 blocks
+    let make_requests = || -> Vec<Request> {
+        (0..n as u64)
+            .map(|i| {
+                let prompt: Vec<u32> =
+                    (0..8u64).map(|j| ((i * 31 + j * 7 + 3) % vocab as u64) as u32).collect();
+                Request::new(i, prompt, 12)
+            })
+            .collect()
+    };
+    let run = |num_blocks: usize| {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: concurrency, max_wait: Duration::from_millis(0) },
+            scheduler: SchedulerConfig {
+                max_active: concurrency,
+                eos_token: None,
+                kv: KvCacheConfig { block_size: 4, num_blocks },
+            },
+        };
+        let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+        let timer = Timer::start();
+        let (mut responses, metrics) = replay_trace(backend, cfg, make_requests()).unwrap();
+        let wall = timer.elapsed_secs();
+        let snap = metrics.snapshot();
+        responses.sort_by_key(|r| r.id);
+        let generations: Vec<(u64, Vec<u32>)> =
+            responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (generations, snap, wall)
+    };
+    let (ample_gen, ample_snap, ample_wall) = run(1024);
+    let (tight_gen, tight_snap, tight_wall) = run(overload_blocks);
+    assert_eq!(tight_gen, ample_gen, "preemption must not change generations (invariant 5)");
+    assert_eq!(ample_snap.preemptions, 0, "the ample pool must not preempt");
+    assert!(tight_snap.preemptions > 0, "the overload sweep must actually preempt");
+    let ample_tok_s = ample_snap.tokens_out as f64 / ample_wall;
+    let overload_tok_s = tight_snap.tokens_out as f64 / tight_wall;
+    println!(
+        "preemption ({n} requests, {overload_blocks}-block pool): {} preempted, \
+         {} resumed, {} tokens recomputed, throughput {:.1} -> {:.1} tok/s \
+         ({:.2}x of ample)",
+        tight_snap.preemptions,
+        tight_snap.resumes,
+        tight_snap.recomputed_tokens,
+        ample_tok_s,
+        overload_tok_s,
+        overload_tok_s / ample_tok_s,
+    );
+    Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("pool_blocks", Json::num(overload_blocks as f64)),
+        ("preemptions", Json::num(tight_snap.preemptions as f64)),
+        ("resumes", Json::num(tight_snap.resumes as f64)),
+        ("recomputed_tokens", Json::num(tight_snap.recomputed_tokens as f64)),
+        ("ample_tok_s", Json::num(ample_tok_s)),
+        ("overload_tok_s", Json::num(overload_tok_s)),
+        ("overload_throughput_ratio", Json::num(overload_tok_s / ample_tok_s)),
     ])
 }
 
@@ -377,12 +447,20 @@ fn run_child(out_path: &str) {
         Json::Null
     };
 
+    // --- preemption: overload workload (tiny pool vs ample pool) -----------
+    let preemption = if threads == 1 || threads == np {
+        preemption_row(fast)
+    } else {
+        Json::Null
+    };
+
     let fragment = Json::obj(vec![
         ("num_threads", Json::num(threads as f64)),
         ("dispatch", dispatch),
         ("paged_attention", Json::Arr(micro_rows)),
         ("engine", Json::Arr(engine_rows)),
         ("prefix_cache", prefix_cache),
+        ("preemption", preemption),
     ]);
     std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
 }
@@ -409,8 +487,13 @@ fn run_parent() {
     for &t in &counts {
         let tmp = std::env::temp_dir().join(format!("bda_bench_decode_{t}.json"));
         println!("\n--- BDA_NUM_THREADS={t} ---");
+        // Sweep cells must be independent of the parent's environment:
+        // both engine knobs are reset explicitly per fragment (a parent
+        // launched with BDA_PREFIX_CACHE=0 or a stale BDA_NUM_THREADS
+        // must not leak into the children and skew the sweep).
         let status = std::process::Command::new(&exe)
             .env("BDA_NUM_THREADS", t.to_string())
+            .env("BDA_PREFIX_CACHE", "1")
             .env("BDA_BENCH_OUT", &tmp)
             .status()
             .expect("spawn bench child");
@@ -458,6 +541,21 @@ fn run_parent() {
         })
         .unwrap_or((0.0, 0.0, 0.0));
 
+    // Preemption acceptance from the max-thread fragment: how much the
+    // overload run preempted/recomputed, and the throughput it retained
+    // relative to the ample-pool run (graceful degradation, not an error).
+    let (preemptions, recomputed_tokens, overload_ratio) = fragments
+        .last()
+        .map(|frag| {
+            let p = frag.get("preemption");
+            (
+                p.get("preemptions").as_f64().unwrap_or(0.0),
+                p.get("recomputed_tokens").as_f64().unwrap_or(0.0),
+                p.get("overload_throughput_ratio").as_f64().unwrap_or(0.0),
+            )
+        })
+        .unwrap_or((0.0, 0.0, 0.0));
+
     let report = Json::obj(vec![
         ("bench", Json::str("decode_throughput")),
         ("fast", Json::Bool(fast)),
@@ -471,6 +569,9 @@ fn run_parent() {
                 ("prefix_cache_hit_rate_max_threads", Json::num(prefix_hit_rate)),
                 ("prefix_cache_blocks_saved_max_threads", Json::num(prefix_blocks_saved)),
                 ("prefix_cache_prefill_reduction_max_threads", Json::num(prefill_reduction)),
+                ("preemptions_overload_max_threads", Json::num(preemptions)),
+                ("recomputed_tokens_overload_max_threads", Json::num(recomputed_tokens)),
+                ("overload_throughput_ratio_max_threads", Json::num(overload_ratio)),
                 ("target", Json::num(2.0)),
             ]),
         ),
@@ -490,6 +591,12 @@ fn run_parent() {
     println!(
         "parked-pool dispatch at {np} threads: {dispatch_speedup:.2}x faster than \
          scoped spawn/join per parallel region"
+    );
+    println!(
+        "overload at {np} threads: {preemptions:.0} preemptions, \
+         {recomputed_tokens:.0} tokens recomputed, {:.0}% of ample-pool throughput \
+         retained (identical generations — invariant 5)",
+        overload_ratio * 100.0
     );
 }
 

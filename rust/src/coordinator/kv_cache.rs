@@ -25,6 +25,17 @@ impl Default for KvCacheConfig {
 pub type SeqId = u64;
 pub type BlockId = usize;
 
+/// `BDA_TEST_POOL_BLOCKS`: the overload knob for the test suite. Tests
+/// that drive the preempt/resume path read it to size their "small" pool
+/// (`None` when unset or unparsable — tests fall back to their hand-built
+/// tiny pools), so CI can force pool pressure in every determinism-matrix
+/// cell instead of relying on one hand-constructed fixture. A pure test
+/// harness knob: generated tokens never change (engine invariant 5 —
+/// preempt→resume is bitwise-identical to an uninterrupted run).
+pub fn test_pool_blocks() -> Option<usize> {
+    std::env::var("BDA_TEST_POOL_BLOCKS").ok()?.trim().parse().ok()
+}
+
 /// Block pool + per-sequence block tables.
 #[derive(Debug)]
 pub struct BlockAllocator {
@@ -83,6 +94,15 @@ impl BlockAllocator {
     /// Current reference count of one block (table refs + external holds).
     pub fn ref_count(&self, block: BlockId) -> u32 {
         self.ref_counts[block]
+    }
+
+    /// Number of external holds on one block (the hold component of
+    /// [`BlockAllocator::ref_count`]). The prefix cache uses it to tell a
+    /// block it alone holds (`ref == 1`, `holds == 1`) from a block whose
+    /// single reference is a sequence table (`holds == 0`) — only the
+    /// former is reclaimable by dropping the tree's hold.
+    pub fn hold_count(&self, block: BlockId) -> u32 {
+        self.holds[block]
     }
 
     /// Number of blocks with at least one external hold (prefix-cache
@@ -260,15 +280,27 @@ impl BlockAllocator {
 
     /// Release a sequence; blocks return to the pool when refs hit zero.
     pub fn release(&mut self, seq: SeqId) -> Result<(), KvError> {
+        self.release_counting(seq).map(|_| ())
+    }
+
+    /// Release a sequence's whole table in one pass and report how many
+    /// blocks actually returned to the free list. Shared references are
+    /// respected: blocks still held by forks' tables or by external holds
+    /// (the prefix cache) survive with their counts decremented. The
+    /// engine's preemption path uses the count to tell whether evicting a
+    /// victim reclaimed real capacity or only dropped shared references.
+    pub fn release_counting(&mut self, seq: SeqId) -> Result<usize, KvError> {
         let table = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let mut freed = 0;
         for b in table.blocks {
             debug_assert!(self.ref_counts[b] > 0);
             self.ref_counts[b] -= 1;
             if self.ref_counts[b] == 0 {
                 self.free.push(b);
+                freed += 1;
             }
         }
-        Ok(())
+        Ok(freed)
     }
 
     pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
@@ -509,6 +541,45 @@ mod tests {
         assert!(matches!(err, KvError::OutOfBlocks { .. }));
         assert_eq!(b.active_seqs(), 1);
         b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_counting_respects_shares_and_holds() {
+        // The preemption path's bulk release: freeing a victim reports how
+        // many blocks actually came back — blocks still referenced by a
+        // fork's table or a prefix-cache hold stay leased.
+        let mut a = alloc(8);
+        a.register(1, 8).unwrap(); // 2 blocks
+        a.fork(1, 2).unwrap();
+        a.append_token_cow(2).unwrap(); // boundary: child gets 1 private block
+        let child_blocks = a.seq_blocks(2).unwrap().to_vec();
+        a.hold_blocks(&child_blocks[..1]); // tree-style hold on the shared block
+        // Child release: block 0 shared with parent + held, block 1 (COW)
+        // private -> exactly 1 block returns.
+        assert_eq!(a.release_counting(2).unwrap(), 1);
+        a.check_invariants().unwrap();
+        // Parent release: block 0 still held -> 1 of 2 returns.
+        assert_eq!(a.release_counting(1).unwrap(), 1);
+        assert_eq!(a.used_blocks(), 1, "held block outlives both tables");
+        a.release_held(&child_blocks[..1]);
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+        assert_eq!(a.release_counting(9).unwrap_err(), KvError::UnknownSeq(9));
+    }
+
+    #[test]
+    fn hold_count_distinguishes_holds_from_table_refs() {
+        let mut a = alloc(8);
+        a.register(1, 4).unwrap();
+        let b = a.seq_blocks(1).unwrap()[0];
+        assert_eq!((a.ref_count(b), a.hold_count(b)), (1, 0));
+        a.hold_blocks(&[b]);
+        assert_eq!((a.ref_count(b), a.hold_count(b)), (2, 1));
+        a.release(1).unwrap();
+        assert_eq!((a.ref_count(b), a.hold_count(b)), (1, 1));
+        a.release_held(&[b]);
+        assert_eq!((a.ref_count(b), a.hold_count(b)), (0, 0));
+        a.check_invariants().unwrap();
     }
 
     #[test]

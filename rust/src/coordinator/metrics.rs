@@ -28,6 +28,17 @@ pub struct StepTiming {
     /// Prompt K/V blocks adopted from the radix tree instead of being
     /// re-prefilled, since the previous reported step.
     pub prefix_blocks_saved: u64,
+    /// Active sequences preempted during this step: the pool ran dry and
+    /// a victim's blocks were released (recompute-on-resume) instead of
+    /// erroring out of the batched step.
+    pub preemptions: u64,
+    /// Preempted sequences re-admitted ahead of the waiting queue since
+    /// the previous reported step (the scheduler merges these in).
+    pub resumes: u64,
+    /// Tokens replayed through the prefill path by those resumes — the
+    /// recompute cost of preemption (resume output stays bit-identical;
+    /// engine invariant 5).
+    pub recomputed_tokens: u64,
 }
 
 #[derive(Debug)]
@@ -54,6 +65,9 @@ struct Inner {
     prefix_hits: u64,
     prefix_misses: u64,
     prefix_blocks_saved: u64,
+    preemptions: u64,
+    resumes: u64,
+    recomputed_tokens: u64,
     latency: Histogram,
     ttft: Histogram,
 }
@@ -88,6 +102,14 @@ pub struct Snapshot {
     /// Prompt K/V blocks deduplicated against the radix tree (prefill
     /// work and pool memory saved).
     pub prefix_blocks_saved: u64,
+    /// Active sequences preempted under pool exhaustion (blocks released,
+    /// recompute-on-resume) instead of erroring out of the batched step.
+    pub preemptions: u64,
+    /// Preempted sequences re-admitted ahead of the waiting queue.
+    pub resumes: u64,
+    /// Tokens replayed through the prefill path by resumes — the
+    /// recompute cost of graceful overload handling.
+    pub recomputed_tokens: u64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_mean: f64,
@@ -121,6 +143,9 @@ impl Metrics {
                 prefix_hits: 0,
                 prefix_misses: 0,
                 prefix_blocks_saved: 0,
+                preemptions: 0,
+                resumes: 0,
+                recomputed_tokens: 0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
             }),
@@ -165,6 +190,9 @@ impl Metrics {
         g.prefix_hits += step.prefix_hits;
         g.prefix_misses += step.prefix_misses;
         g.prefix_blocks_saved += step.prefix_blocks_saved;
+        g.preemptions += step.preemptions;
+        g.resumes += step.resumes;
+        g.recomputed_tokens += step.recomputed_tokens;
     }
 
     pub fn tokens_generated(&self, n: usize) {
@@ -211,6 +239,9 @@ impl Metrics {
             prefix_hits: g.prefix_hits,
             prefix_misses: g.prefix_misses,
             prefix_blocks_saved: g.prefix_blocks_saved,
+            preemptions: g.preemptions,
+            resumes: g.resumes,
+            recomputed_tokens: g.recomputed_tokens,
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
             latency_mean: g.latency.mean(),
@@ -247,6 +278,18 @@ impl Snapshot {
         ))
     }
 
+    /// Human-readable preemption line, or `None` when the run never hit
+    /// pool exhaustion (no preemptions and no resumes).
+    pub fn preemption_line(&self) -> Option<String> {
+        if self.preemptions == 0 && self.resumes == 0 {
+            return None;
+        }
+        Some(format!(
+            "{} preempted, {} resumed, {} tokens recomputed",
+            self.preemptions, self.resumes, self.recomputed_tokens,
+        ))
+    }
+
     /// Human-readable decode-step timing split, or `None` when no backend
     /// reported timing (per-sequence / mock backends don't instrument).
     pub fn decode_split(&self) -> Option<String> {
@@ -267,10 +310,13 @@ impl Snapshot {
     }
 
     pub fn report(&self) -> String {
-        let prefix = match self.prefix_cache_line() {
+        let mut prefix = match self.prefix_cache_line() {
             Some(line) => format!(" | prefix cache: {line}"),
             None => String::new(),
         };
+        if let Some(line) = self.preemption_line() {
+            prefix.push_str(&format!(" | preemption: {line}"));
+        }
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
              ({:.1} tok/s) | batch avg {:.2} | decode: {} steps, {:.2} tok/step, \
@@ -370,6 +416,22 @@ mod tests {
         assert!(line.contains("3/6"));
         assert!(line.contains("10 K/V blocks"));
         assert!(s.report().contains("prefix cache"));
+    }
+
+    #[test]
+    fn preemption_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        assert!(m.snapshot().preemption_line().is_none(), "no preemptions yet");
+        assert!(!m.snapshot().report().contains("preemption"));
+        m.decode_timing(StepTiming { preemptions: 2, ..Default::default() }, 0.0);
+        let resumed = StepTiming { resumes: 2, recomputed_tokens: 31, ..Default::default() };
+        m.decode_timing(resumed, 0.0);
+        let s = m.snapshot();
+        assert_eq!((s.preemptions, s.resumes, s.recomputed_tokens), (2, 2, 31));
+        let line = s.preemption_line().expect("line present");
+        assert!(line.contains("2 preempted"));
+        assert!(line.contains("31 tokens recomputed"));
+        assert!(s.report().contains("preemption"));
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub use metrics::{Metrics, StepTiming};
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
 pub use queue::RequestQueue;
 pub use request::{Request, RequestId, Response};
-pub use scheduler::{Backend, NativeBackend, Scheduler, SchedulerConfig};
+pub use scheduler::{Backend, DecodeOutcome, NativeBackend, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig};
 
 // The paged batched decode engine is the default native serving backend;

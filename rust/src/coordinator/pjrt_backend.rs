@@ -8,7 +8,7 @@
 //! path end to end.
 
 use super::kv_cache::SeqId;
-use super::scheduler::Backend;
+use super::scheduler::{Backend, DecodeOutcome};
 use crate::runtime::{lit_i32, Executable, Runtime};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -63,7 +63,7 @@ impl Backend for PjrtBackend {
         self.seqs.insert(seq, prompt.to_vec());
         self.logits_last(prompt)
     }
-    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
         let mut out = Vec::with_capacity(seqs.len());
         for &(id, tok) in seqs {
             let tokens = self
@@ -74,7 +74,7 @@ impl Backend for PjrtBackend {
             let t = tokens.clone();
             out.push(self.logits_last(&t)?);
         }
-        Ok(out)
+        Ok(DecodeOutcome::complete(out))
     }
     fn release(&mut self, seq: SeqId) {
         self.seqs.remove(&seq);
@@ -179,8 +179,11 @@ impl Backend for PjrtIncrementalBackend {
         }
         Ok(logits)
     }
-    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
-        seqs.iter().map(|&(id, tok)| self.step(id, tok)).collect()
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
+        seqs.iter()
+            .map(|&(id, tok)| self.step(id, tok))
+            .collect::<Result<Vec<_>>>()
+            .map(DecodeOutcome::complete)
     }
     fn release(&mut self, seq: SeqId) {
         self.seqs.remove(&seq);

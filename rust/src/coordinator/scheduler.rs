@@ -1,5 +1,9 @@
 //! Continuous-batching scheduler: admits requests (prefill), interleaves
 //! batched decode steps across active sequences, samples, and completes.
+//! Sequences a pool-owning backend preempts under memory pressure are
+//! parked and re-admitted ahead of the waiting queue with their token
+//! record replayed through the prefill path (recompute-on-resume, bitwise
+//! — engine invariant 5).
 //!
 //! The backend abstraction separates coordination from compute so the same
 //! scheduler serves: the native Rust transformer (incremental KV decode),
@@ -16,6 +20,41 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Result of one batched decode step: per-sequence logits for every
+/// sequence that advanced, plus the sequences the backend **preempted**
+/// under pool exhaustion instead of erroring out of the step.
+///
+/// A preempted sequence's backend state (K/V blocks, history) is gone by
+/// the time the outcome is returned — the caller owns its token record
+/// and re-admits it later by replaying that record through the prefill
+/// path (recompute-on-resume). Row determinism makes the recomputed K/V
+/// bit-identical, so a resumed sequence's output equals an uninterrupted
+/// run's (engine invariant 5).
+#[derive(Debug)]
+pub struct DecodeOutcome {
+    /// One entry per input sequence, in input order: `Some(logits)` for
+    /// sequences that advanced, `None` for preempted ones.
+    pub logits: Vec<Option<Vec<f32>>>,
+    /// Sequences preempted during this step (their `logits` entry is
+    /// `None`); the step itself still succeeds for everyone else.
+    pub preempted: Vec<SeqId>,
+}
+
+impl DecodeOutcome {
+    /// Outcome of a step that advanced every sequence (backends without a
+    /// pool never preempt).
+    pub fn complete(logits: Vec<Vec<f32>>) -> DecodeOutcome {
+        DecodeOutcome { logits: logits.into_iter().map(Some).collect(), preempted: Vec::new() }
+    }
+
+    /// All logits, panicking if any sequence was preempted — for tests
+    /// and benches that drive a backend with an ample pool directly.
+    pub fn expect_complete(self) -> Vec<Vec<f32>> {
+        assert!(self.preempted.is_empty(), "unexpected preemption of {:?}", self.preempted);
+        self.logits.into_iter().map(|l| l.expect("logits present")).collect()
+    }
+}
+
 /// Model compute interface used by the scheduler.
 ///
 /// Not `Send` by itself (the PJRT wrapper types are thread-pinned); the
@@ -28,8 +67,11 @@ pub trait Backend {
     /// position.
     fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>>;
     /// One decode step for a batch of sequences, feeding each its last
-    /// token; returns per-sequence logits.
-    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>>;
+    /// token. A pool-owning backend whose pool runs dry mid-step preempts
+    /// victims (reported in the outcome) rather than failing the step;
+    /// `Err` is reserved for genuine failures — including exhaustion with
+    /// no preemptible sequence left.
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome>;
     /// Drop per-sequence state.
     fn release(&mut self, seq: SeqId);
     /// Free blocks in the backend's *own* KV pool — the engine truth —
@@ -77,7 +119,7 @@ impl Backend for NativeBackend {
         Ok(logits.data)
     }
 
-    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
         // Per-sequence incremental decode (each has its own cache).
         let mut out = Vec::with_capacity(seqs.len());
         for &(id, tok) in seqs {
@@ -88,7 +130,7 @@ impl Backend for NativeBackend {
             let logits = self.model.decode_step(cache, tok);
             out.push(logits.data);
         }
-        Ok(out)
+        Ok(DecodeOutcome::complete(out))
     }
 
     fn release(&mut self, seq: SeqId) {
@@ -118,27 +160,58 @@ struct ActiveSeq {
     last_token: u32,
 }
 
+/// A preempted sequence parked for resume: the backend released its
+/// blocks; the scheduler keeps the full token record and replays
+/// `prompt + generated[..len-1]` through the prefill path when capacity
+/// returns (the last generated token has no K/V row yet — it is the next
+/// decode step's input, exactly as it was at preemption time).
+struct ParkedSeq {
+    /// The sequence id it ran under — reused on resume, so engine-side
+    /// victim selection ("youngest = largest id") keeps respecting
+    /// original admission order across preempt/resume cycles.
+    seq: SeqId,
+    state: ActiveSeq,
+}
+
 /// The continuous-batching engine.
 pub struct Scheduler<B: Backend> {
     pub backend: B,
     pub config: SchedulerConfig,
-    pub kv: BlockAllocator,
+    /// Shadow admission allocator, maintained **only** for pool-less
+    /// backends (`Backend::free_blocks() == None`). Pool-owning backends
+    /// retire it entirely (`None`): the engine allocator is the single
+    /// owner of block truth — admission, growth, forks, copy-on-write,
+    /// prefix-cache holds, and preemption all live in one place.
+    pub kv: Option<BlockAllocator>,
     active: Vec<ActiveSeq>,
+    /// Preempted sequences awaiting resume, re-admitted ahead of the
+    /// waiting queue (oldest admission first).
+    preempted: Vec<ParkedSeq>,
     next_seq: SeqId,
     seq_of_req: HashMap<u64, SeqId>,
     metrics: Option<Arc<Metrics>>,
+    /// Resume counters accumulated since the last step-timing report
+    /// (merged into the next [`StepTiming`] forwarded to the metrics).
+    pending_resumes: u64,
+    pending_recomputed: u64,
 }
 
 impl<B: Backend> Scheduler<B> {
     pub fn new(backend: B, config: SchedulerConfig) -> Scheduler<B> {
+        // One allocator owner per pool: backends that report their own
+        // block truth never get a shadow.
+        let kv = backend.free_blocks().is_none().then(|| BlockAllocator::new(config.kv));
         Scheduler {
             backend,
-            kv: BlockAllocator::new(config.kv),
+            kv,
             config,
             active: Vec::new(),
+            preempted: Vec::new(),
             next_seq: 1,
             seq_of_req: HashMap::new(),
             metrics: None,
+            pending_resumes: 0,
+            pending_recomputed: 0,
         }
     }
 
@@ -152,20 +225,41 @@ impl<B: Backend> Scheduler<B> {
         self.active.len()
     }
 
+    /// Sequences preempted under pool pressure and parked for resume.
+    pub fn preempted_count(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// Free blocks available to admission, from whichever allocator owns
+    /// the pool truth (engine pool for pool-owning backends, the shadow
+    /// otherwise).
+    fn admission_free_blocks(&self) -> usize {
+        match self.backend.free_blocks() {
+            Some(free) => free,
+            None => self.kv.as_ref().map(|kv| kv.free_blocks()).unwrap_or(usize::MAX),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.config.kv.block_size)
+    }
+
     pub fn has_capacity_for(&self, req: &Request) -> bool {
         if self.active.len() >= self.config.max_active {
             return false;
         }
-        // Engine pool truth when the backend owns real block storage (so
-        // engine-level forks / copy-on-write are visible to admission);
-        // the admission-side shadow allocator otherwise. Block geometry
-        // comes from this scheduler's config, which every construction
-        // site shares with the backend pool; full capacity-query
-        // unification behind the Backend trait is a ROADMAP item.
-        match self.backend.free_blocks() {
-            Some(free) => req.prompt.len().max(1).div_ceil(self.config.kv.block_size) <= free,
-            None => self.kv.can_admit(req.prompt.len()),
+        // Parked (preempted) sequences outrank the waiting queue: their
+        // requests are mid-generation, so new admissions wait until every
+        // parked sequence is resumed.
+        if !self.preempted.is_empty() {
+            return false;
         }
+        // Engine pool truth when the backend owns real block storage (so
+        // engine-level forks / copy-on-write / prefix-cache residency are
+        // visible to admission); the admission-side shadow allocator
+        // otherwise. Block geometry comes from this scheduler's config,
+        // which every construction site shares with the backend pool.
+        self.blocks_for(req.prompt.len()) <= self.admission_free_blocks()
     }
 
     /// Admit a request: KV registration + prefill + first sampled token.
@@ -176,21 +270,20 @@ impl<B: Backend> Scheduler<B> {
         }
         let seq = self.next_seq;
         // The shadow allocator is worst-case bookkeeping (no prefix
-        // sharing, no eviction). When the backend owns real block storage
-        // its pool is the admission truth — a backend that can serve the
-        // request (e.g. by adopting a cached prefix or evicting the
-        // radix tree) must not be vetoed by shadow-side pessimism — so
-        // the shadow is maintained only for pool-less backends; its
-        // append/release calls degrade to ignored no-ops otherwise.
-        if self.backend.free_blocks().is_none()
-            && self.kv.register(seq, req.prompt.len()).is_err()
-        {
-            return Err(req);
+        // sharing, no eviction) for pool-less backends only; pool owners
+        // retired it (`self.kv` is `None`) — their own allocator is the
+        // single source of block truth.
+        if let Some(kv) = &mut self.kv {
+            if kv.register(seq, req.prompt.len()).is_err() {
+                return Err(req);
+            }
         }
         let logits = match self.backend.prefill(seq, &req.prompt) {
             Ok(l) => l,
             Err(_) => {
-                let _ = self.kv.release(seq);
+                if let Some(kv) = &mut self.kv {
+                    let _ = kv.release(seq);
+                }
                 return Err(req);
             }
         };
@@ -212,10 +305,93 @@ impl<B: Backend> Scheduler<B> {
         Ok(())
     }
 
+    /// Resume parked (preempted) sequences — oldest admission first, ahead
+    /// of any queued work — by replaying each one's token record through
+    /// the prefill path. The replayed K/V is bit-identical to the released
+    /// state (engine invariant 5), so generation continues exactly where
+    /// it stopped; the replay prefill's logits are discarded because the
+    /// token they produced is already in the record.
+    fn try_resume(&mut self) -> Result<()> {
+        if self.preempted.is_empty() {
+            return Ok(());
+        }
+        self.preempted.sort_unstable_by_key(|p| p.seq);
+        while !self.preempted.is_empty() && self.active.len() < self.config.max_active {
+            let replay_len = {
+                let s = &self.preempted[0].state;
+                s.req.prompt.len() + s.generated.len().saturating_sub(1)
+            };
+            let need = self.blocks_for(replay_len);
+            if need > self.config.kv.num_blocks {
+                // The same terminal condition the uninterrupted run would
+                // have hit: this sequence cannot fit the pool even alone.
+                anyhow::bail!(
+                    "resume of request {} needs {need} blocks but the pool has {} total",
+                    self.preempted[0].state.req.id,
+                    self.config.kv.num_blocks,
+                );
+            }
+            if need > self.admission_free_blocks() {
+                if self.active.is_empty() {
+                    // Nothing left to complete or preempt, maximum
+                    // reclaimable capacity reached, still short: the pool
+                    // genuinely cannot serve this sequence.
+                    anyhow::bail!(
+                        "resume of request {} needs {need} blocks but only {} are reclaimable",
+                        self.preempted[0].state.req.id,
+                        self.admission_free_blocks(),
+                    );
+                }
+                break; // wait for completions to free capacity
+            }
+            let p = self.preempted.remove(0);
+            let replay: Vec<u32> = p
+                .state
+                .req
+                .prompt
+                .iter()
+                .chain(p.state.generated[..p.state.generated.len().saturating_sub(1)].iter())
+                .copied()
+                .collect();
+            if let Some(kv) = &mut self.kv {
+                let _ = kv.register(p.seq, replay.len());
+            }
+            self.backend.prefill(p.seq, &replay)?;
+            self.pending_resumes += 1;
+            self.pending_recomputed += replay.len() as u64;
+            self.seq_of_req.insert(p.state.req.id, p.seq);
+            self.active.push(p.state);
+        }
+        Ok(())
+    }
+
+    /// Forward the backend's step timing to the metrics sink, with any
+    /// resume counters accumulated since the previous report merged in.
+    fn flush_step_timing(&mut self, sample_secs: f64) {
+        let Some(m) = &self.metrics else {
+            self.pending_resumes = 0;
+            self.pending_recomputed = 0;
+            return;
+        };
+        let mut timing = self.backend.take_step_timing();
+        if self.pending_resumes > 0 || self.pending_recomputed > 0 {
+            let t = timing.get_or_insert_with(StepTiming::default);
+            t.resumes += self.pending_resumes;
+            t.recomputed_tokens += self.pending_recomputed;
+            self.pending_resumes = 0;
+            self.pending_recomputed = 0;
+        }
+        if let Some(t) = timing {
+            m.decode_timing(t, sample_secs);
+        }
+    }
+
     /// One decode iteration over all active sequences. Returns completed
     /// responses.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
+        // Parked sequences are re-admitted before anything else runs.
+        self.try_resume()?;
         if self.active.is_empty() {
             return Ok(done);
         }
@@ -225,11 +401,7 @@ impl<B: Backend> Scheduler<B> {
             // No decode step will run, but admissions may have recorded
             // backend counters (e.g. prefix-cache hits for max_new <= 1
             // requests) — surface them rather than dropping the tail.
-            if let Some(m) = &self.metrics {
-                if let Some(t) = self.backend.take_step_timing() {
-                    m.decode_timing(t, 0.0);
-                }
-            }
+            self.flush_step_timing(0.0);
             return Ok(done);
         }
 
@@ -241,32 +413,63 @@ impl<B: Backend> Scheduler<B> {
         if let Some(m) = &self.metrics {
             m.decode_step(batch.len(), self.config.max_active);
         }
-        let logits = self.backend.decode(&batch)?;
-        // Shadow-allocator growth tracking only applies to pool-less
-        // backends (pool owners were never shadow-registered on admit).
-        let shadow = self.backend.free_blocks().is_none();
+        let outcome = self.backend.decode(&batch)?;
+        anyhow::ensure!(
+            outcome.logits.len() == batch.len(),
+            "backend returned {} logit rows for a {}-sequence batch",
+            outcome.logits.len(),
+            batch.len(),
+        );
+        // The scheduler parks on the `None` logit rows; `preempted` is the
+        // same information in id form (kept for tests/metrics consumers).
+        // A backend that lets the two drift has a bug — catch it early.
+        debug_assert!(
+            {
+                let mut none_ids: Vec<SeqId> = batch
+                    .iter()
+                    .zip(&outcome.logits)
+                    .filter(|(_, l)| l.is_none())
+                    .map(|(&(id, _), _)| id)
+                    .collect();
+                none_ids.sort_unstable();
+                let mut reported = outcome.preempted.clone();
+                reported.sort_unstable();
+                none_ids == reported
+            },
+            "backend's preempted list disagrees with its None logit rows"
+        );
         let mut sample_secs = 0.0f64;
-        for (a, l) in self.active.iter_mut().zip(logits.iter()) {
+        let stepped = std::mem::take(&mut self.active);
+        for (mut a, l) in stepped.into_iter().zip(outcome.logits) {
             let seq = self.seq_of_req[&a.req.id];
+            let Some(l) = l else {
+                // Preempted by the backend: its engine-side state is gone
+                // and no token was produced this step. Park the request's
+                // token record for a recompute-on-resume re-admission.
+                self.seq_of_req.remove(&a.req.id);
+                if let Some(kv) = &mut self.kv {
+                    let _ = kv.release(seq);
+                }
+                self.preempted.push(ParkedSeq { seq, state: a });
+                continue;
+            };
             // Time only sample() so the metrics split doesn't charge
             // allocator bookkeeping to the "sampling" bucket.
             let t = Instant::now();
-            let tok = sample(l, &a.req);
+            let tok = sample(&l, &a.req);
             sample_secs += t.elapsed().as_secs_f64();
             a.generated.push(tok);
             a.last_token = tok;
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
-            if shadow {
-                let _ = self.kv.append_token(seq);
+            // Shadow-allocator growth tracking, pool-less backends only.
+            if let Some(kv) = &mut self.kv {
+                let _ = kv.append_token(seq);
             }
+            self.active.push(a);
         }
-        if let Some(m) = &self.metrics {
-            if let Some(t) = self.backend.take_step_timing() {
-                m.decode_timing(t, sample_secs);
-            }
-        }
+        self.flush_step_timing(sample_secs);
         self.complete_finished(&mut done);
         Ok(done)
     }
@@ -282,7 +485,9 @@ impl<B: Backend> Scheduler<B> {
             if a.generated.len() >= a.req.max_new_tokens || hit_eos || full {
                 let a = self.active.remove(i);
                 let seq = self.seq_of_req.remove(&a.req.id).unwrap();
-                let _ = self.kv.release(seq);
+                if let Some(kv) = &mut self.kv {
+                    let _ = kv.release(seq);
+                }
                 self.backend.release(seq);
                 let now = Instant::now();
                 done.push(Response {
@@ -301,10 +506,11 @@ impl<B: Backend> Scheduler<B> {
         }
     }
 
-    /// Drain: run steps until every active sequence completes.
+    /// Drain: run steps until every active *and parked* sequence
+    /// completes.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
-        while !self.active.is_empty() {
+        while !self.active.is_empty() || !self.preempted.is_empty() {
             out.extend(self.step()?);
         }
         Ok(out)
@@ -393,7 +599,7 @@ pub mod test_support {
             self.steps.insert(seq, 0);
             Ok(self.logits_for(seq, 0))
         }
-        fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
             seqs.iter()
                 .map(|&(id, _)| {
                     let s = self.steps.get_mut(&id).expect("unknown seq");
@@ -401,7 +607,8 @@ pub mod test_support {
                     let step = *s;
                     Ok(self.logits_for(id, step))
                 })
-                .collect()
+                .collect::<Result<Vec<_>>>()
+                .map(DecodeOutcome::complete)
         }
         fn release(&mut self, seq: SeqId) {
             self.released.push(seq);
@@ -413,6 +620,7 @@ pub mod test_support {
 mod tests {
     use super::test_support::MockBackend;
     use super::*;
+    use crate::coordinator::metrics::Snapshot;
 
     fn sched(max_active: usize) -> Scheduler<MockBackend> {
         Scheduler::new(
@@ -469,12 +677,12 @@ mod tests {
     #[test]
     fn kv_blocks_freed_on_completion() {
         let mut s = sched(8);
-        let free0 = s.kv.free_blocks();
+        let free0 = s.kv.as_ref().unwrap().free_blocks();
         s.admit(Request::new(1, vec![1, 2, 3, 4, 5], 6)).unwrap();
-        assert!(s.kv.free_blocks() < free0);
+        assert!(s.kv.as_ref().unwrap().free_blocks() < free0);
         s.drain().unwrap();
-        assert_eq!(s.kv.free_blocks(), free0);
-        s.kv.check_invariants().unwrap();
+        assert_eq!(s.kv.as_ref().unwrap().free_blocks(), free0);
+        s.kv.as_ref().unwrap().check_invariants().unwrap();
         assert_eq!(s.backend.released, vec![1]);
     }
 
@@ -510,8 +718,162 @@ mod tests {
         s.backend.fail_prefill = true;
         let r = s.admit(Request::new(1, vec![1], 2));
         assert!(r.is_err());
-        s.kv.check_invariants().unwrap();
-        assert_eq!(s.kv.used_blocks(), 0, "failed admit must not leak blocks");
+        s.kv.as_ref().unwrap().check_invariants().unwrap();
+        assert_eq!(s.kv.as_ref().unwrap().used_blocks(), 0, "failed admit must not leak blocks");
+    }
+
+    /// Pool-less mock whose logits are a pure function of (seq id,
+    /// history length), so a preempt→resume replay is transparent: a
+    /// resumed sequence continues the exact token stream an uninterrupted
+    /// run produces. Preempts the youngest batch member on one chosen
+    /// decode call.
+    struct PreemptingMock {
+        vocab: usize,
+        lens: HashMap<SeqId, usize>,
+        prefills_per_seq: HashMap<SeqId, usize>,
+        preempt_on_call: usize,
+        calls: usize,
+        unreported_preemptions: u64,
+    }
+
+    impl PreemptingMock {
+        fn new(vocab: usize, preempt_on_call: usize) -> PreemptingMock {
+            PreemptingMock {
+                vocab,
+                lens: HashMap::new(),
+                prefills_per_seq: HashMap::new(),
+                preempt_on_call,
+                calls: 0,
+                unreported_preemptions: 0,
+            }
+        }
+
+        fn logits_for(&self, seq: SeqId, len: usize) -> Vec<f32> {
+            let mut l = vec![0.0; self.vocab];
+            l[(seq as usize + len) % self.vocab] = 10.0;
+            l
+        }
+    }
+
+    impl Backend for PreemptingMock {
+        fn vocab_size(&self) -> usize {
+            self.vocab
+        }
+        fn max_seq_len(&self) -> usize {
+            64
+        }
+        fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+            self.lens.insert(seq, prompt.len());
+            *self.prefills_per_seq.entry(seq).or_insert(0) += 1;
+            Ok(self.logits_for(seq, prompt.len()))
+        }
+        fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
+            self.calls += 1;
+            let victim = (self.calls == self.preempt_on_call && seqs.len() > 1)
+                .then(|| seqs.iter().map(|&(id, _)| id).max().unwrap());
+            let mut out = DecodeOutcome { logits: Vec::new(), preempted: Vec::new() };
+            for &(id, _) in seqs {
+                if victim == Some(id) {
+                    self.lens.remove(&id);
+                    out.logits.push(None);
+                    out.preempted.push(id);
+                    self.unreported_preemptions += 1;
+                } else {
+                    let len = self.lens.get_mut(&id).expect("unknown seq");
+                    *len += 1;
+                    let len = *len;
+                    out.logits.push(Some(self.logits_for(id, len)));
+                }
+            }
+            Ok(out)
+        }
+        fn release(&mut self, seq: SeqId) {
+            self.lens.remove(&seq);
+        }
+        fn take_step_timing(&mut self) -> Option<StepTiming> {
+            (self.unreported_preemptions > 0).then(|| {
+                let t = StepTiming {
+                    preemptions: self.unreported_preemptions,
+                    ..Default::default()
+                };
+                self.unreported_preemptions = 0;
+                t
+            })
+        }
+    }
+
+    fn preempting_sched(preempt_on_call: usize) -> Scheduler<PreemptingMock> {
+        Scheduler::new(
+            PreemptingMock::new(16, preempt_on_call),
+            SchedulerConfig {
+                max_active: 4,
+                eos_token: None,
+                kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+            },
+        )
+    }
+
+    #[test]
+    fn preempted_sequence_resumes_with_uninterrupted_token_stream() {
+        let run = |preempt_on_call: usize| -> (Vec<(u64, Vec<u32>)>, Snapshot) {
+            let metrics = Arc::new(Metrics::new());
+            let mut s = preempting_sched(preempt_on_call);
+            s.set_metrics(metrics.clone());
+            s.admit(Request::new(1, vec![1, 2, 3], 5)).unwrap();
+            s.admit(Request::new(2, vec![1, 2], 4)).unwrap();
+            let mut done = s.drain().unwrap();
+            done.sort_by_key(|r| r.id);
+            (done.into_iter().map(|r| (r.id, r.tokens)).collect(), metrics.snapshot())
+        };
+        let (clean, clean_snap) = run(usize::MAX);
+        let (preempted, snap) = run(2);
+        assert_eq!(clean_snap.preemptions, 0);
+        assert_eq!(snap.preemptions, 1, "the chosen decode call must preempt");
+        assert_eq!(snap.resumes, 1, "the parked sequence must resume");
+        // Replay = 2 prompt tokens + 1 already-generated token.
+        assert_eq!(snap.recomputed_tokens, 3);
+        assert_eq!(preempted, clean, "preempt→resume must not change the token stream");
+    }
+
+    #[test]
+    fn parked_sequences_outrank_the_waiting_queue() {
+        let mut s = preempting_sched(2);
+        s.admit(Request::new(1, vec![1, 2, 3], 6)).unwrap();
+        s.admit(Request::new(2, vec![1, 2], 5)).unwrap();
+        s.step().unwrap(); // both advance
+        s.step().unwrap(); // youngest (seq 2) preempted
+        assert_eq!(s.preempted_count(), 1);
+        assert_eq!(s.active_count(), 1);
+        let probe = Request::new(9, vec![1], 1);
+        assert!(
+            !s.has_capacity_for(&probe),
+            "admission must wait while a preempted sequence is parked"
+        );
+        s.step().unwrap(); // resume runs ahead of anything else
+        assert_eq!(s.preempted_count(), 0);
+        assert_eq!(s.active_count(), 2);
+        assert_eq!(s.backend.prefills_per_seq[&2], 2, "resume must replay via the prefill path");
+        assert!(s.has_capacity_for(&probe));
+        let done = s.drain().unwrap();
+        assert_eq!(done.len(), 2);
+        // The shadow allocator (pool-less mock) is fully reconciled.
+        assert_eq!(s.kv.as_ref().unwrap().used_blocks(), 0);
+        s.kv.as_ref().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pooled_backends_retire_the_shadow_allocator() {
+        use crate::engine::PagedNativeBackend;
+        use crate::model::{ModelConfig, Transformer};
+        let model = Transformer::new_mha(ModelConfig::tiny(), 19);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 32 };
+        let s = Scheduler::new(
+            PagedNativeBackend::new(model, kvc),
+            SchedulerConfig { max_active: 4, eos_token: None, kv: kvc },
+        );
+        assert!(s.kv.is_none(), "pool-owning backends must not get a shadow allocator");
+        let mock = sched(4);
+        assert!(mock.kv.is_some(), "pool-less backends keep the shadow");
     }
 
     #[test]

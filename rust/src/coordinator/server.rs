@@ -60,7 +60,7 @@ impl Server {
                         match sched.admit(r) {
                             Ok(()) => {}
                             Err(r) => {
-                                if sched.active_count() == 0 {
+                                if sched.active_count() == 0 && sched.preempted_count() == 0 {
                                     // Can't ever admit: drop with rejection.
                                     m.rejected();
                                     break;
@@ -142,12 +142,16 @@ pub fn replay_trace<B: Backend>(
     sched.set_metrics(metrics.clone());
     let mut out = Vec::new();
     let mut pending: std::collections::VecDeque<Request> = trace.into();
-    while !pending.is_empty() || sched.active_count() > 0 {
-        // Admit as many as capacity allows.
+    while !pending.is_empty() || sched.active_count() > 0 || sched.preempted_count() > 0 {
+        // Admit as many as capacity allows. Count an admission only when
+        // it sticks: under overload (parked preempted sequences block the
+        // queue) the head request is retried once per step, and counting
+        // attempts would inflate requests_admitted/tokens_in per retry.
         while let Some(req) = pending.pop_front() {
-            metrics.admitted(req.prompt.len());
+            let prompt_tokens = req.prompt.len();
             match sched.admit(req) {
                 Ok(()) => {
+                    metrics.admitted(prompt_tokens);
                     if sched.active_count() >= config.batcher.max_batch {
                         break;
                     }

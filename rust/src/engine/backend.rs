@@ -20,7 +20,17 @@
 //!   `BDA_PREFIX_CACHE=0` disables). Admission matches each incoming
 //!   prompt against the tree at block granularity, adopts the longest
 //!   cached prefix zero-copy (COW on divergence), prefills only the
-//!   uncovered tail, and evicts LRU zero-ref leaves under pool pressure.
+//!   uncovered tail, and evicts LRU zero-ref leaves under pool pressure;
+//! * **victim preemption with recompute-on-resume**: when a decode step
+//!   exhausts the pool *and* the tree has nothing left to evict, the
+//!   youngest batch member is preempted — its committed full-block prefix
+//!   donated to the prefix cache, its blocks released, the sequence
+//!   reported in the step's
+//!   [`crate::coordinator::scheduler::DecodeOutcome`] — instead of the
+//!   whole batched step failing. The scheduler re-admits preempted
+//!   sequences ahead of the waiting queue by replaying their token record
+//!   through the prefill path; the replayed K/V is bit-identical (engine
+//!   invariant 5), so overload degrades throughput, never correctness.
 //!
 //! Every row-level operation (embedding, RMSNorm, GEMM row, attention
 //! accumulation order, FFN, logits) is arithmetically identical to the
@@ -44,7 +54,7 @@ use crate::coordinator::kv_cache::{
     AppendSlot, BlockAllocator, BlockId, KvCacheConfig, KvError, SeqId,
 };
 use crate::coordinator::metrics::StepTiming;
-use crate::coordinator::scheduler::Backend;
+use crate::coordinator::scheduler::{Backend, DecodeOutcome};
 use crate::model::transformer::{KvCache, Transformer};
 use crate::model::weights::FusedQkv;
 use crate::tensor::matmul::matmul;
@@ -322,7 +332,9 @@ impl PagedNativeBackend {
     /// [`BlockAllocator::append_token_cow`] with the same pressure valve:
     /// a boundary or COW allocation that runs dry evicts cached leaves
     /// before giving up. Active sequences' blocks are table-referenced and
-    /// therefore never eviction victims.
+    /// therefore never eviction victims — when the tree runs dry too, the
+    /// decode step escalates to **preempting** an active sequence (see
+    /// [`PagedNativeBackend::preempt`]) instead of failing the batch.
     fn append_evicting(&mut self, seq: SeqId) -> Result<AppendSlot, KvError> {
         loop {
             match self.alloc.append_token_cow(seq) {
@@ -330,6 +342,54 @@ impl PagedNativeBackend {
                 res => return res,
             }
         }
+    }
+
+    /// Preempt `seq` mid-decode: donate its committed full-block prefix to
+    /// the prefix cache (a warm start for the resume's replay — and still
+    /// reclaimable, since tree leaves are evictable under pressure), then
+    /// release its table and drop its history. The caller replays the
+    /// sequence's token record through the prefill path on resume; row
+    /// determinism makes the recomputed K/V bit-identical (engine
+    /// invariant 5).
+    ///
+    /// `pending_append` marks a victim that already leased this step's
+    /// append slot: its history carries one token whose K/V row has *not*
+    /// been written yet (rows land in the per-layer loop, after every
+    /// append), so that token is excluded from the donation — the tree
+    /// must only ever hold fully written rows.
+    fn preempt(&mut self, seq: SeqId, pending_append: bool) {
+        let mut history = self.histories.remove(&seq);
+        if pending_append {
+            if let Some(h) = history.as_mut() {
+                h.pop();
+            }
+        }
+        self.cache_history_then_release(seq, history, true);
+    }
+
+    /// The shared back half of [`Backend::release`] and
+    /// [`PagedNativeBackend::preempt`]: insert the sequence's committed
+    /// full-block history into the prefix cache (the tree takes its own
+    /// holds; `donated` routes the blocks through the donation counter),
+    /// then release the table — a bulk release respecting refs/holds, so
+    /// blocks shared with forks or the tree survive and everything
+    /// private returns to the pool.
+    fn cache_history_then_release(&mut self, seq: SeqId, history: Option<Vec<u32>>, donated: bool) {
+        if let (Some(cache), Some(h)) = (self.prefix.as_mut(), history) {
+            let bs = self.alloc.config.block_size;
+            let full = h.len() / bs * bs;
+            if full > 0 {
+                if let Some(blocks) = self.alloc.seq_blocks(seq) {
+                    let blocks = blocks[..full / bs].to_vec();
+                    if donated {
+                        cache.donate(&h[..full], &blocks, &mut self.alloc);
+                    } else {
+                        cache.insert(&h[..full], &blocks, &mut self.alloc);
+                    }
+                }
+            }
+        }
+        let _ = self.alloc.release_counting(seq);
     }
 }
 
@@ -351,8 +411,10 @@ impl Backend for PagedNativeBackend {
 
     /// The batched decode step: all sequences advance one token in one
     /// pass over the model. Attention *and* GEMMs dispatch on this
-    /// engine's worker pool.
-    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+    /// engine's worker pool. Pool exhaustion never fails the step while a
+    /// preemptible sequence holds blocks: the youngest batch member is
+    /// preempted (recompute-on-resume) and reported in the outcome.
+    fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
         let threads = Arc::clone(&self.threads);
         threadpool::with_pool(&threads, || self.decode_inner(seqs))
     }
@@ -361,29 +423,22 @@ impl Backend for PagedNativeBackend {
         // Instead of freeing the sequence's prefix, insert its full-block
         // history (prompt + generated tokens — all deterministic K/V) into
         // the radix tree so future requests sharing the prefix skip its
-        // prefill. The tree takes its own holds; the table release below
-        // then frees only unshared blocks.
+        // prefill. Blocks return to the pool when their ref count hits
+        // zero; forks and the prefix cache still holding shared blocks
+        // keep them alive.
         let history = self.histories.remove(&seq);
-        if let (Some(cache), Some(history)) = (self.prefix.as_mut(), history) {
-            let bs = self.alloc.config.block_size;
-            let full = history.len() / bs * bs;
-            if full > 0 {
-                if let Some(blocks) = self.alloc.seq_blocks(seq) {
-                    let blocks = blocks[..full / bs].to_vec();
-                    cache.insert(&history[..full], &blocks, &mut self.alloc);
-                }
-            }
-        }
-        // Blocks return to the pool when their ref count hits zero; forks
-        // and the prefix cache still holding shared blocks keep them alive.
-        let _ = self.alloc.release(seq);
+        self.cache_history_then_release(seq, history, false);
     }
 
     /// Engine pool truth for admission: free blocks plus everything the
     /// prefix cache could evict on demand — cached-but-unpinned K/V is
-    /// reclaimable capacity, not occupancy. This allocator sees every
-    /// lease: prefills, decode appends, engine-level forks /
-    /// copy-on-write, *and* radix-tree holds.
+    /// reclaimable capacity, not occupancy. Leaves pinned by anything
+    /// beyond the tree's own hold (an admission in flight holding the
+    /// matched prefix, a sequence table still referencing the rows) are
+    /// *excluded*: counting them would overstate reclaimable capacity to
+    /// the scheduler. This allocator sees every lease: prefills, decode
+    /// appends, engine-level forks / copy-on-write, *and* radix-tree
+    /// holds.
     fn free_blocks(&self) -> Option<usize> {
         let cache = self.prefix.as_ref();
         let evictable = cache.map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
@@ -421,22 +476,27 @@ impl PagedNativeBackend {
         // Longest cached whole-block prefix (never the full prompt: at
         // least one tail token is left so the tail prefill produces the
         // last-position logits).
-        let mut hit = match self.prefix.as_mut() {
+        let hit = match self.prefix.as_mut() {
             Some(cache) => cache.lookup(prompt),
             None => Vec::new(),
         };
-        let registered = if hit.is_empty() {
-            self.register_evicting(seq, &[], prompt.len())
+        // `adopted` is decided exactly once, at the registration that
+        // stuck: the number of cached blocks this admission actually rides
+        // on. Hit/miss stats derive from it atomically below — a failed
+        // adoption attempt must not leave hit-path counters behind before
+        // the cold fallback records its miss, or rates could exceed 1.0.
+        let (registered, adopted) = if hit.is_empty() {
+            (self.register_evicting(seq, &[], prompt.len()), 0)
         } else {
             // Temporary hold: the matched blocks are tree-only until
             // registration bumps their table refs, and the eviction
             // pressure valve inside `register_evicting` must not reclaim
             // them.
             self.alloc.hold_blocks(&hit);
-            let adopted = self.register_evicting(seq, &hit, prompt.len());
+            let adoption = self.register_evicting(seq, &hit, prompt.len());
             self.alloc.release_held(&hit);
-            match adopted {
-                Ok(()) => Ok(()),
+            match adoption {
+                Ok(()) => (Ok(()), hit.len()),
                 Err(_) => {
                     // The tail didn't fit around the held prefix (the hold
                     // itself can pin the only evictable leaf). Drop the
@@ -444,20 +504,19 @@ impl PagedNativeBackend {
                     // leaf is evictable like any other, so a prompt that
                     // fits the pool is never rejected because of a
                     // partial cache match.
-                    hit.clear();
-                    self.register_evicting(seq, &[], prompt.len())
+                    (self.register_evicting(seq, &[], prompt.len()), 0)
                 }
             }
         };
         registered.map_err(|e| anyhow!("prefill seq {seq}: {e}"))?;
-        // Stats are recorded only for registrations that stuck, so
-        // admissions requeued on capacity errors don't inflate hit rates
-        // or the blocks-saved arithmetic.
+        // One stats record per admission that stuck — requeued admissions
+        // don't inflate lookups, and a dropped hit counts as the miss its
+        // cold registration actually was.
         if let Some(cache) = self.prefix.as_mut() {
-            cache.record_admission(hit.len());
+            cache.record_admission(adopted);
         }
 
-        let logits = if hit.is_empty() {
+        let logits = if adopted == 0 {
             // Cold path: prompt processing reuses the reference prefill
             // (identical logits by construction); the engine's batching
             // win is the decode loop, where steps outnumber prefills
@@ -471,7 +530,7 @@ impl PagedNativeBackend {
             // prefill's) and run only the uncovered tail; scatter only the
             // tail rows — the prefix blocks are shared and already hold
             // identical data.
-            let covered = hit.len() * self.alloc.config.block_size;
+            let covered = adopted * self.alloc.config.block_size;
             let mut cache = self.gather_prefix(&hit, covered);
             let logits = self.model.prefill(&mut cache, &prompt[covered..]);
             self.scatter_prefill(seq, &cache, covered)?;
@@ -483,47 +542,91 @@ impl PagedNativeBackend {
         Ok(logits.data)
     }
 
-    fn decode_inner(&mut self, seqs: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode_inner(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
         if seqs.is_empty() {
-            return Ok(Vec::new());
+            return Ok(DecodeOutcome { logits: Vec::new(), preempted: Vec::new() });
         }
         let b = seqs.len();
         let d = self.model.config.d_model;
 
-        // Lease a write slot per sequence (copy-on-write against forks),
-        // then embed each last token at its own position.
-        let mut x = Tensor::zeros(&[b, d]);
-        let mut slots = Vec::with_capacity(b);
-        let mut lens = Vec::with_capacity(b);
-        for (i, &(id, tok)) in seqs.iter().enumerate() {
-            let pos = self
-                .alloc
-                .seq_len(id)
-                .ok_or_else(|| anyhow!("decode: unknown seq {id}"))?;
-            // Boundary/COW allocations evict cached prefixes under pool
-            // pressure before erroring out of the batched step.
-            let slot = self
-                .append_evicting(id)
-                .map_err(|e| anyhow!("decode seq {id}: {e}"))?;
-            if let Some(src) = slot.copied_from {
-                self.pool.copy_block(src, slot.block);
+        // Phase 1 — lease a write slot per sequence (copy-on-write against
+        // forks). Boundary/COW allocations first evict cached prefixes
+        // under pool pressure; if the tree runs dry too, the **youngest**
+        // batch member (largest SeqId — admitted last) is preempted and
+        // its blocks reclaimed, so exhaustion parks low-priority work
+        // instead of erroring out of the whole step.
+        let mut slots: Vec<Option<AppendSlot>> = vec![None; b];
+        let mut parked = vec![false; b];
+        let mut preempted: Vec<SeqId> = Vec::new();
+        for i in 0..b {
+            if parked[i] {
+                continue;
             }
-            if let Some(h) = self.histories.get_mut(&id) {
-                h.push(tok); // the token whose K/V row lands at `pos`
+            let (id, tok) = seqs[i];
+            loop {
+                match self.append_evicting(id) {
+                    Ok(slot) => {
+                        if let Some(src) = slot.copied_from {
+                            self.pool.copy_block(src, slot.block);
+                        }
+                        if let Some(h) = self.histories.get_mut(&id) {
+                            // The token whose K/V row is written below.
+                            h.push(tok);
+                        }
+                        slots[i] = Some(slot);
+                        break;
+                    }
+                    Err(KvError::OutOfBlocks { .. }) => {
+                        let victim = (0..b)
+                            .filter(|&j| !parked[j])
+                            .max_by_key(|&j| seqs[j].0)
+                            .expect("the requester itself is a candidate");
+                        if seqs[victim].0 == id && (0..b).filter(|&j| !parked[j]).count() == 1 {
+                            // No lower-priority sequence holds blocks and
+                            // the tree is dry: genuine exhaustion — this
+                            // sequence cannot grow even with the whole
+                            // pool to itself.
+                            return Err(anyhow!(
+                                "decode seq {id}: out of KV blocks with no \
+                                 preemptible sequence left"
+                            ));
+                        }
+                        self.preempt(seqs[victim].0, slots[victim].is_some());
+                        parked[victim] = true;
+                        slots[victim] = None;
+                        preempted.push(seqs[victim].0);
+                        if seqs[victim].0 == id {
+                            break; // the requester parked itself
+                        }
+                    }
+                    Err(e) => return Err(anyhow!("decode seq {id}: {e}")),
+                }
             }
-            let row = self.model.embed_tokens(&[tok], pos);
-            x.row_mut(i).copy_from_slice(row.row(0));
-            slots.push(slot);
-            lens.push(pos + 1);
         }
+
+        // Phase 2 — embed each survivor's last token at its position.
+        let survivors: Vec<usize> = (0..b).filter(|&i| !parked[i]).collect();
+        debug_assert!(!survivors.is_empty(), "phase 1 errors before parking everyone");
+        let sb = survivors.len();
+        let mut x = Tensor::zeros(&[sb, d]);
+        let mut lens = Vec::with_capacity(sb);
+        for (row, &i) in survivors.iter().enumerate() {
+            let (id, tok) = seqs[i];
+            let len = self.alloc.seq_len(id).expect("survivor appended above");
+            let emb = self.model.embed_tokens(&[tok], len - 1);
+            x.row_mut(row).copy_from_slice(emb.row(0));
+            lens.push(len);
+        }
+        let sslots: Vec<AppendSlot> =
+            survivors.iter().map(|&i| slots[i].expect("survivor slot")).collect();
 
         // Block tables are final once every append above has run, so the
         // gather views are built once and shared by all layers.
-        let views: Vec<PagedSeq> = seqs
+        let views: Vec<PagedSeq> = survivors
             .iter()
             .zip(lens.iter())
-            .map(|(&(id, _), &len)| PagedSeq {
-                blocks: self.alloc.seq_blocks(id).expect("registered above"),
+            .map(|(&i, &len)| PagedSeq {
+                blocks: self.alloc.seq_blocks(seqs[i].0).expect("registered above"),
                 len,
             })
             .collect();
@@ -539,7 +642,7 @@ impl PagedNativeBackend {
             // separate projections; see `FusedQkv`).
             let (q, k, v) = self.fused_qkv[li].project(&h, &block.attn);
             gemm_secs += t.elapsed().as_secs_f64();
-            for (i, slot) in slots.iter().enumerate() {
+            for (i, slot) in sslots.iter().enumerate() {
                 self.pool.write_row(
                     li,
                     slot.block,
@@ -566,9 +669,18 @@ impl PagedNativeBackend {
         gemm_secs += t.elapsed().as_secs_f64();
         // The prefix-cache delta is merged in at take_step_timing time, so
         // admissions surface even when no further decode step runs.
-        let timing = StepTiming { attn: attn_secs, gemm: gemm_secs, ..Default::default() };
+        let timing = StepTiming {
+            attn: attn_secs,
+            gemm: gemm_secs,
+            preemptions: preempted.len() as u64,
+            ..Default::default()
+        };
         self.last_timing = Some(timing);
-        Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; b];
+        for (row, &i) in survivors.iter().enumerate() {
+            out[i] = Some(logits.row(row).to_vec());
+        }
+        Ok(DecodeOutcome { logits: out, preempted })
     }
 }
 
@@ -609,7 +721,7 @@ mod tests {
         for round in 0..4u32 {
             let batch: Vec<(SeqId, u32)> =
                 (0..3).map(|i| (i as SeqId, round * 3 + i as u32)).collect();
-            let got = engine.decode(&batch).unwrap();
+            let got = engine.decode(&batch).unwrap().expect_complete();
             for (i, c) in caches.iter_mut().enumerate() {
                 let want = model.decode_step(c, batch[i].1);
                 assert_eq!(got[i], want.data, "round {round} seq {i}");
@@ -626,7 +738,7 @@ mod tests {
         let mut cache = KvCache::new(model.config.n_layers);
         let _ = model.prefill(&mut cache, &[5, 6, 7, 8, 9]);
         for tok in [3u32, 77, 12] {
-            let got = engine.decode(&[(1, tok)]).unwrap();
+            let got = engine.decode(&[(1, tok)]).unwrap().expect_complete();
             let want = model.decode_step(&mut cache, tok);
             assert_eq!(got[0], want.data);
         }
@@ -645,12 +757,12 @@ mod tests {
         assert_eq!(engine.used_blocks(), used_parent, "fork must dedup K/V blocks");
 
         // Child decodes first: copy-on-write in the shared tail block.
-        let child = engine.decode(&[(2, 7)]).unwrap();
+        let child = engine.decode(&[(2, 7)]).unwrap().expect_complete();
         engine.alloc.check_invariants().unwrap();
 
         // Parent decodes the same token afterwards; its storage must be
         // untouched by the child's write — verify against the reference.
-        let parent = engine.decode(&[(1, 7)]).unwrap();
+        let parent = engine.decode(&[(1, 7)]).unwrap().expect_complete();
         let mut cache = KvCache::new(model.config.n_layers);
         let _ = model.prefill(&mut cache, &prompt);
         let want = model.decode_step(&mut cache, 7);
@@ -685,11 +797,12 @@ mod tests {
         // Fork + decode at the engine level: invisible to the scheduler's
         // shadow allocator, visible to the backend pool.
         s.backend.fork(1, 99).unwrap();
-        s.backend.decode(&[(99, 7)]).unwrap();
+        s.backend.decode(&[(99, 7)]).unwrap().expect_complete();
         assert_eq!(s.backend.free_blocks(), Some(2), "parent block + child boundary block");
-        // Shadow allocator (1 block used of 4) would wrongly admit a
-        // 3-block prompt; engine truth (2 free) must reject it.
-        assert!(s.kv.can_admit(12));
+        // The shadow allocator is retired for pool-owning backends: the
+        // engine allocator is the single owner of block truth, so a
+        // 3-block prompt must be rejected on engine state (2 free).
+        assert!(s.kv.is_none(), "pooled backend must not carry a shadow allocator");
         let req = Request::new(2, (0u32..12).collect(), 4);
         assert!(!s.has_capacity_for(&req), "admission must query engine pool truth");
         // A prompt that fits the engine pool is still admissible.
@@ -711,8 +824,8 @@ mod tests {
         let b = owned.prefill(1, &prompt).unwrap();
         assert_eq!(a, b);
         for tok in [7u32, 99, 3] {
-            let x = shared.decode(&[(1, tok)]).unwrap();
-            let y = owned.decode(&[(1, tok)]).unwrap();
+            let x = shared.decode(&[(1, tok)]).unwrap().expect_complete();
+            let y = owned.decode(&[(1, tok)]).unwrap().expect_complete();
             assert_eq!(x, y, "dedicated pool diverged from the shared pool at token {tok}");
         }
     }
@@ -728,7 +841,7 @@ mod tests {
         engine.set_prefix_cache(true);
         let shared: Vec<u32> = (0..11).map(|j| (j * 19 + 3) % 250).collect();
         engine.prefill(1, &shared).unwrap();
-        engine.decode(&[(1, 8)]).unwrap();
+        engine.decode(&[(1, 8)]).unwrap().expect_complete();
         engine.release(1);
         assert!(engine.cached_blocks() > 0, "release must seed the radix tree");
 
@@ -744,7 +857,7 @@ mod tests {
         let want = model.prefill(&mut cache, &prompt);
         assert_eq!(got, want.data, "hit prefill logits must be bit-identical to cold");
         for tok in [7u32, 200, 5, 64] {
-            let g = engine.decode(&[(2, tok)]).unwrap();
+            let g = engine.decode(&[(2, tok)]).unwrap().expect_complete();
             let w = model.decode_step(&mut cache, tok);
             assert_eq!(g[0], w.data, "decode after a cache hit diverged at token {tok}");
         }
@@ -812,6 +925,123 @@ mod tests {
     }
 
     #[test]
+    fn decode_preempts_youngest_instead_of_erroring() {
+        // Two 8-token sequences fill a 4-block pool exactly; both need a
+        // boundary block on the next step. The step must not fail: the
+        // youngest (seq 2) is preempted, the oldest advances with logits
+        // bit-identical to the uninterrupted reference, and the victim
+        // resumes bitwise after a replay prefill.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 61);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let mut engine = PagedNativeBackend::new(model.clone(), kvc);
+        engine.set_prefix_cache(false);
+        let p1: Vec<u32> = (0..8).collect();
+        let p2: Vec<u32> = (100..108).collect();
+        engine.prefill(1, &p1).unwrap();
+        engine.prefill(2, &p2).unwrap();
+        assert_eq!(engine.alloc.free_blocks(), 0);
+
+        let out = engine.decode(&[(1, 7), (2, 9)]).unwrap();
+        assert_eq!(out.preempted, vec![2], "the youngest sequence must yield");
+        assert!(out.logits[1].is_none());
+        let mut c1 = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut c1, &p1);
+        let w1 = model.decode_step(&mut c1, 7);
+        assert_eq!(out.logits[0].as_ref().unwrap(), &w1.data, "survivor diverged");
+        assert!(engine.alloc.seq_len(2).is_none(), "victim state must be released");
+        assert_eq!(engine.take_step_timing().unwrap().preemptions, 1);
+        engine.alloc.check_invariants().unwrap();
+
+        // Resume: replay the victim's token record (just its prompt here)
+        // and continue — bit-identical to never having been preempted.
+        engine.release(1);
+        engine.prefill(2, &p2).unwrap();
+        let got = engine.decode(&[(2, 9)]).unwrap().expect_complete();
+        let mut c2 = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut c2, &p2);
+        let w2 = model.decode_step(&mut c2, 9);
+        assert_eq!(got[0], w2.data, "resumed decode diverged from uninterrupted run");
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preemption_donates_history_and_resume_is_bitwise() {
+        // With the prefix cache on, a victim's committed full-block
+        // history is donated to the radix tree before its table release
+        // (a warm start when pressure allows; reclaimable when it
+        // doesn't), and a replay-resume continues bit-identically.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 59);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 6 };
+        let mut engine = PagedNativeBackend::new(model.clone(), kvc);
+        engine.set_prefix_cache(true);
+        let p1: Vec<u32> = (0..8).collect();
+        let p2: Vec<u32> = (100..108).collect();
+        engine.prefill(1, &p1).unwrap();
+        engine.prefill(2, &p2).unwrap();
+        let mut c1 = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut c1, &p1);
+        let mut c2 = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut c2, &p2);
+
+        // Decode until growth exhausts the pool and preempts seq 2.
+        let mut fed2: Vec<u32> = Vec::new();
+        let mut preempted = false;
+        for round in 0..6u32 {
+            let (t1, t2) = (7 + round, 9 + round);
+            let out = engine.decode(&[(1, t1), (2, t2)]).unwrap();
+            let w1 = model.decode_step(&mut c1, t1);
+            assert_eq!(out.logits[0].as_ref().unwrap(), &w1.data, "round {round}");
+            if out.preempted.is_empty() {
+                let w2 = model.decode_step(&mut c2, t2);
+                assert_eq!(out.logits[1].as_ref().unwrap(), &w2.data, "round {round}");
+                fed2.push(t2);
+            } else {
+                assert_eq!(out.preempted, vec![2], "youngest must be the victim");
+                assert!(out.logits[1].is_none());
+                preempted = true;
+                break;
+            }
+        }
+        assert!(preempted, "the 6-block pool must force a preemption");
+        assert!(
+            engine.prefix_stats().donated_blocks >= 2,
+            "victim must donate its committed full-block prefix"
+        );
+        engine.alloc.check_invariants().unwrap();
+
+        // Resume: free capacity (seq 1 completes), replay everything the
+        // victim committed, continue — bitwise vs the uninterrupted run.
+        engine.release(1);
+        let mut replay = p2.clone();
+        replay.extend(&fed2);
+        engine.prefill(2, &replay).unwrap();
+        let next = 9 + fed2.len() as u32;
+        let got = engine.decode(&[(2, next)]).unwrap().expect_complete();
+        let want = model.decode_step(&mut c2, next);
+        assert_eq!(got[0], want.data, "resumed decode diverged from uninterrupted run");
+        engine.release(2);
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lone_sequence_exhaustion_still_errors() {
+        // The terminal case the acceptance criterion reserves for Err: a
+        // single sequence that cannot grow even with the whole pool — no
+        // lower-priority victim holds blocks, so preemption cannot help.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 67);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 2 };
+        let mut engine = PagedNativeBackend::new(model, kvc);
+        engine.set_prefix_cache(false);
+        engine.prefill(1, &(0u32..8).collect::<Vec<_>>()).unwrap(); // fills the pool
+        let err = engine.decode(&[(1, 3)]).unwrap_err();
+        assert!(
+            err.to_string().contains("no preemptible sequence"),
+            "unexpected error: {err}"
+        );
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
     fn disabling_prefix_cache_releases_residency() {
         let model = Transformer::new_mha(ModelConfig::tiny(), 43);
         let mut engine = PagedNativeBackend::new(model, kv());
@@ -837,16 +1067,16 @@ mod tests {
         engine.set_prefix_cache(true);
         let prompt: Vec<u32> = (0..9).collect();
         engine.prefill(1, &prompt).unwrap();
-        engine.decode(&[(1, 2)]).unwrap();
+        engine.decode(&[(1, 2)]).unwrap().expect_complete();
         let t = engine.take_step_timing().unwrap();
         assert_eq!((t.prefix_hits, t.prefix_misses), (0, 1), "cold admission is a miss");
         engine.release(1);
         engine.prefill(2, &prompt).unwrap();
-        engine.decode(&[(2, 2)]).unwrap();
+        engine.decode(&[(2, 2)]).unwrap().expect_complete();
         let t = engine.take_step_timing().unwrap();
         assert_eq!((t.prefix_hits, t.prefix_misses), (1, 0), "warm admission is a hit");
         assert_eq!(t.prefix_blocks_saved, 2, "8 of 9 prompt tokens ride cached blocks");
-        engine.decode(&[(2, 3)]).unwrap();
+        engine.decode(&[(2, 3)]).unwrap().expect_complete();
         let t = engine.take_step_timing().unwrap();
         assert_eq!(
             (t.prefix_hits, t.prefix_misses, t.prefix_blocks_saved),
@@ -864,7 +1094,7 @@ mod tests {
         engine.set_prefix_cache(false);
         engine.prefill(1, &[1, 2, 3]).unwrap();
         assert!(engine.take_step_timing().is_none(), "no decode step yet");
-        engine.decode(&[(1, 9)]).unwrap();
+        engine.decode(&[(1, 9)]).unwrap().expect_complete();
         let t = engine.take_step_timing().expect("decode must record timing");
         assert!(t.attn >= 0.0 && t.gemm >= 0.0);
         assert!(engine.take_step_timing().is_none(), "timing is consumed on take");

@@ -33,11 +33,21 @@
 //! [`backend::PagedNativeBackend::with_thread_pool`] (groundwork for
 //! multi-worker sharding).
 //!
+//! When a decode step exhausts the pool *and* the tree has nothing left
+//! to evict, the engine **preempts** the youngest batch member — donating
+//! its committed full-block prefix to the prefix cache, releasing its
+//! blocks, and reporting it through
+//! [`crate::coordinator::scheduler::DecodeOutcome`] — instead of failing
+//! the batched step. The scheduler parks preempted sequences and
+//! re-admits them ahead of the waiting queue by replaying their token
+//! record through the prefill path (recompute-on-resume).
+//!
 //! # Load-bearing invariants
 //!
-//! Every optimization in the serving layer is constrained by four
+//! Every optimization in the serving layer is constrained by five
 //! bit-exactness invariants, stated here once and property-tested in
-//! `tests/prop_paged_parallel.rs` and `tests/prop_coordinator.rs`:
+//! `tests/prop_paged_parallel.rs`, `tests/prop_coordinator.rs`, and
+//! `tests/prop_preemption.rs`:
 //!
 //! 1. **Paged batched decode is bit-identical to per-sequence decode.**
 //!    Every row-level operation of the batched step (embedding, RMSNorm,
@@ -66,6 +76,16 @@
 //!    uncovered tail therefore yields the same logits, bit for bit, as
 //!    prefilling the whole prompt from scratch — for MHA and BDA alike.
 //!    Prompt caching is pure data reuse, never an approximation.
+//! 5. **Preempt→resume is bit-identical to an uninterrupted run.** A
+//!    preempted sequence's K/V is discarded entirely; its resume replays
+//!    the token record (prompt + tokens generated so far, minus the
+//!    not-yet-written last token) through the prefill path. Because every
+//!    K/V row is a row-deterministic function of its own token and
+//!    position (the same fact behind invariants 1 and 4), the recomputed
+//!    state equals the released state float for float, so the resumed
+//!    sequence's remaining generation — greedy or seeded-sampled — is
+//!    exactly what the uninterrupted run would have produced, for MHA and
+//!    BDA alike. Preemption trades recompute for memory, never output.
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

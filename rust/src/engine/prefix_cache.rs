@@ -59,6 +59,10 @@ pub struct PrefixStats {
     pub blocks_saved: u64,
     /// Blocks inserted into the tree by releasing sequences.
     pub inserted_blocks: u64,
+    /// Subset of `inserted_blocks` donated by *preempted* sequences (their
+    /// committed full-block prefix moves into the tree so resume gets a
+    /// warm start instead of a full recompute).
+    pub donated_blocks: u64,
     /// Blocks returned to the pool by LRU eviction.
     pub evicted_blocks: u64,
 }
@@ -283,6 +287,18 @@ impl PrefixCache {
         }
     }
 
+    /// [`PrefixCache::insert`] for a *preempted* sequence: identical tree
+    /// semantics (dedup, splitting, holds), but the blocks that actually
+    /// enter the tree are additionally counted as `donated_blocks`. The
+    /// donation keeps the victim's committed K/V reachable — evictable
+    /// under pressure like any zero-ref leaf, but a warm start for the
+    /// resume's replay prefill when the pool recovers first.
+    pub fn donate(&mut self, tokens: &[u32], blocks: &[BlockId], alloc: &mut BlockAllocator) {
+        let before = self.stats.inserted_blocks;
+        self.insert(tokens, blocks, alloc);
+        self.stats.donated_blocks += self.stats.inserted_blocks - before;
+    }
+
     /// Create a leaf under `parent` holding `blocks`, taking allocator
     /// holds so the blocks survive the owning sequence's release.
     fn attach(
@@ -315,12 +331,21 @@ impl PrefixCache {
         self.node_mut(node).children.push(back);
     }
 
+    /// Is this block's *only* reference the tree's own hold? Exactly then
+    /// does dropping the hold return it to the pool: a second reference —
+    /// a sequence table, or an extra hold pinning the block for an
+    /// in-flight admission — means eviction would reclaim nothing (or,
+    /// for a hold-less table-only ref, corrupt live state).
+    fn sole_tree_ref(alloc: &BlockAllocator, b: BlockId) -> bool {
+        alloc.ref_count(b) == 1 && alloc.hold_count(b) == 1
+    }
+
     /// Evict the least-recently-used zero-ref leaf — a leaf whose blocks
-    /// are referenced by the tree alone (`ref_count == 1`), so dropping
-    /// the tree's hold returns exactly those blocks to the pool. Returns
-    /// the number of blocks freed (0 when nothing is evictable). Repeated
-    /// calls cascade: evicting a leaf can turn its parent into the next
-    /// evictable leaf.
+    /// are referenced by the tree's hold alone (see `sole_tree_ref`), so
+    /// dropping the hold returns exactly those blocks to the pool.
+    /// Returns the number of blocks freed (0 when nothing is evictable).
+    /// Repeated calls cascade: evicting a leaf can turn its parent into
+    /// the next evictable leaf.
     pub fn evict_lru(&mut self, alloc: &mut BlockAllocator) -> usize {
         let mut victim: Option<(usize, u64)> = None;
         for (id, slot) in self.nodes.iter().enumerate().skip(1) {
@@ -328,8 +353,8 @@ impl PrefixCache {
             if !n.children.is_empty() {
                 continue;
             }
-            if !n.blocks.iter().all(|&b| alloc.ref_count(b) == 1) {
-                continue; // shared with a live sequence: not zero-ref
+            if !n.blocks.iter().all(|&b| Self::sole_tree_ref(alloc, b)) {
+                continue; // shared with a live sequence or pinned: not zero-ref
             }
             let older = match victim {
                 None => true,
@@ -350,9 +375,13 @@ impl PrefixCache {
     }
 
     /// Blocks eviction could reclaim right now: the total over maximal
-    /// subtrees in which every node's blocks are tree-only (`ref_count ==
-    /// 1`). Admission counts these as free — cached-but-unpinned K/V is
-    /// reclaimable capacity, not occupancy.
+    /// subtrees in which every node's blocks carry the tree's hold and
+    /// nothing else (see `sole_tree_ref`). Admission counts
+    /// these as free — cached-but-unpinned K/V is reclaimable capacity,
+    /// not occupancy. Leaves pinned by an extra hold (an admission in
+    /// flight adopting them) are **not** counted: they cannot actually be
+    /// reclaimed until the hold drops, and counting them would overstate
+    /// capacity to the scheduler.
     ///
     /// Cost: one tree walk with an O(1) ref-count probe per held block,
     /// so O(held blocks) ≤ O(pool size) per call — cheap next to the
@@ -376,7 +405,7 @@ impl PrefixCache {
             sum += s;
             all &= f;
         }
-        if id != ROOT && all && n.blocks.iter().all(|&b| alloc.ref_count(b) == 1) {
+        if id != ROOT && all && n.blocks.iter().all(|&b| Self::sole_tree_ref(alloc, b)) {
             (sum + n.blocks.len(), true)
         } else {
             (sum, false)
@@ -547,6 +576,54 @@ mod tests {
         assert_eq!(c.evict_lru(&mut a), 0, "empty tree has nothing to evict");
         a.check_invariants().unwrap();
         assert_eq!(c.stats().evicted_blocks, 3);
+    }
+
+    #[test]
+    fn hold_pinned_leaves_are_not_counted_evictable() {
+        // The admission-in-flight regression: a temporary hold on a
+        // matched leaf (the engine pins the hit blocks between lookup and
+        // registration) must remove the leaf from both eviction and the
+        // evictable-capacity count the scheduler admits against.
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        let t = toks(4, 8); // 2 full blocks
+        let blocks = serve_and_release(&mut c, &mut a, 1, &t);
+        assert_eq!(c.evictable_blocks(&a), 2);
+
+        a.hold_blocks(&blocks[..2]); // in-flight admission pins the leaf
+        assert_eq!(c.evictable_blocks(&a), 0, "pinned leaf is not reclaimable");
+        assert_eq!(c.evict_lru(&mut a), 0, "pinned leaf must not be evicted");
+        a.release_held(&blocks[..2]);
+        assert_eq!(c.evictable_blocks(&a), 2, "dropping the pin restores evictability");
+        assert_eq!(c.evict_lru(&mut a), 2);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn donate_counts_only_fresh_blocks() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        let t = toks(5, 12); // 3 full blocks
+        serve_and_release(&mut c, &mut a, 1, &t);
+        assert_eq!(c.stats().donated_blocks, 0, "plain release is not a donation");
+
+        // A preempted sequence donates the same content extended by one
+        // block: only the uncovered tail counts as donated.
+        let mut hist = t.clone();
+        hist.extend(900..904);
+        a.register(2, hist.len()).unwrap();
+        let blocks = a.seq_blocks(2).unwrap().to_vec();
+        c.donate(&hist, &blocks, &mut a);
+        a.release(2).unwrap();
+        let s = c.stats();
+        assert_eq!(s.donated_blocks, 1, "3 of 4 donated blocks dedup against the tree");
+        assert_eq!(s.inserted_blocks, 4);
+        a.check_invariants().unwrap();
+
+        // The donated prefix is a warm start: a resume replay hits it.
+        let mut p = hist.clone();
+        p.push(42);
+        assert_eq!(c.lookup(&p).len(), 4);
     }
 
     #[test]

@@ -189,6 +189,9 @@ fn cmd_serve(args: &Args) -> i32 {
     if let Some(line) = snap.prefix_cache_line() {
         println!("prefix cache: {line}");
     }
+    if let Some(line) = snap.preemption_line() {
+        println!("preemption: {line}");
+    }
     println!("wall: {secs:.2}s, completed {}", responses.len());
     0
 }

@@ -21,7 +21,7 @@ fn prop_scheduler_conservation() {
     for case in 0..30u64 {
         let mut rng = Rng::new(case * 61 + 5);
         let mut sched = make_sched(rng.range(1, 8), rng.range(8, 64));
-        let free0 = sched.kv.free_blocks();
+        let free0 = sched.kv.as_ref().unwrap().free_blocks();
         let n_req = rng.range(1, 24);
         let mut expected: Vec<(u64, usize)> = Vec::new();
         let mut pending: Vec<Request> = (0..n_req as u64)
@@ -49,7 +49,8 @@ fn prop_scheduler_conservation() {
                 assert!(stall < 100, "case {case}: deadlock with {} done", done.len());
             }
             done.extend(completed);
-            sched.kv.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            let kv = sched.kv.as_ref().unwrap();
+            kv.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
         }
         // Conservation: exactly once each, correct token counts.
         let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
@@ -60,7 +61,8 @@ fn prop_scheduler_conservation() {
             let want = expected.iter().find(|(id, _)| *id == r.id).unwrap().1;
             assert_eq!(r.tokens.len(), want.max(1).min(64), "case {case} req {}", r.id);
         }
-        assert_eq!(sched.kv.free_blocks(), free0, "case {case}: leaked blocks");
+        let free_end = sched.kv.as_ref().unwrap().free_blocks();
+        assert_eq!(free_end, free0, "case {case}: leaked blocks");
     }
 }
 
@@ -173,7 +175,7 @@ fn prop_paged_engine_decode_bit_identical_to_per_seq() {
             let step: Vec<(SeqId, u32)> = (0..batch)
                 .map(|i| (i as SeqId, rng.below(vocab as u64) as u32))
                 .collect();
-            let got = engine.decode(&step).expect("decode");
+            let got = engine.decode(&step).expect("decode").expect_complete();
             for (i, cache) in caches.iter_mut().enumerate() {
                 let want = model.decode_step(cache, step[i].1);
                 assert_eq!(

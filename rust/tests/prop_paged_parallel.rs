@@ -199,7 +199,7 @@ fn prop_prefix_cache_hit_decode_bitwise_identical_to_cold() {
             let shared: Vec<u32> = (0..13).map(|j| (j * 31 + 5) % 250).collect();
             engine.prefill(1, &shared).unwrap();
             for tok in [9u32, 11] {
-                engine.decode(&[(1, tok)]).unwrap();
+                engine.decode(&[(1, tok)]).unwrap().expect_complete();
             }
             engine.release(1);
             assert!(engine.cached_blocks() > 0, "{label}/{workers}: tree not seeded");
@@ -223,7 +223,7 @@ fn prop_prefix_cache_hit_decode_bitwise_identical_to_cold() {
                 "{label}/{workers}: hit prefill logits diverged from cold prefill"
             );
             for tok in [4u32, 19, 249, 8] {
-                let got = engine.decode(&[(2, tok)]).unwrap();
+                let got = engine.decode(&[(2, tok)]).unwrap().expect_complete();
                 let want = model.decode_step(&mut cache, tok);
                 assert_eq!(
                     got[0], want.data,
@@ -269,7 +269,7 @@ fn prop_engine_decode_bit_identical_to_per_seq() {
             for round in 0..3u32 {
                 let batch: Vec<(SeqId, u32)> =
                     (0..b).map(|i| (i as SeqId, (round * 5 + i as u32) % 250)).collect();
-                let got = engine.decode(&batch).unwrap();
+                let got = engine.decode(&batch).unwrap().expect_complete();
                 for (i, c) in caches.iter_mut().enumerate() {
                     let want = model.decode_step(c, batch[i].1);
                     assert_eq!(

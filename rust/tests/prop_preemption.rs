@@ -1,0 +1,133 @@
+//! Property tests for engine invariant 5: a run forced through
+//! preempt→resume by a tiny block pool is **bitwise-identical** to an
+//! uninterrupted run on an ample pool — same responses, same tokens —
+//! for MHA and BDA, at worker counts {1, 2, 8}, with the prefix cache on
+//! and off. Preemption (victim eviction + recompute-on-resume) must trade
+//! recompute for memory, never output.
+//!
+//! The "small" pool size honors the `BDA_TEST_POOL_BLOCKS` overload knob
+//! (see `coordinator::kv_cache::test_pool_blocks`), so CI's determinism
+//! matrix can force the preempt/resume path in every
+//! threads × prefix-cache configuration rather than relying on one
+//! hand-built fixture.
+
+use bda::bd::Strategy;
+use bda::coordinator::kv_cache::test_pool_blocks;
+use bda::coordinator::server::replay_trace;
+use bda::coordinator::{BatcherConfig, KvCacheConfig, Request, SchedulerConfig, ServerConfig};
+use bda::engine::PagedNativeBackend;
+use bda::model::{ModelConfig, Transformer};
+use bda::tensor::DType;
+use bda::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The overload pool size: the env knob when set (clamped so one sequence
+/// always fits alone — 8-token prompts + 10 generated = 5 blocks of 4),
+/// a hand-tuned 10 otherwise. At concurrency 3, anything below 15 blocks
+/// is guaranteed to exhaust mid-decode (3 × 5-block peak demand).
+fn overload_pool_blocks() -> usize {
+    test_pool_blocks().map(|n| n.clamp(6, 64)).unwrap_or(10)
+}
+
+fn server_config(num_blocks: usize) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 3,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks },
+        },
+    }
+}
+
+/// 6 requests with distinct 8-token prompts, 10 new tokens each: peak
+/// demand 3 × 5 blocks at concurrency 3.
+fn overload_trace(vocab: u32) -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..8u64).map(|j| ((i * 37 + j * 13 + 5) % vocab as u64) as u32).collect();
+            Request::new(i, prompt, 10)
+        })
+        .collect()
+}
+
+type Generations = Vec<(u64, Vec<u32>)>;
+
+fn run_with_pool(
+    model: &Transformer,
+    workers: usize,
+    cache: bool,
+    num_blocks: usize,
+) -> (Generations, bda::coordinator::metrics::Snapshot) {
+    let cfg = server_config(num_blocks);
+    let pool = Arc::new(ThreadPool::new(workers));
+    let mut backend = PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+    backend.set_prefix_cache(cache);
+    let trace = overload_trace(model.config.vocab_size as u32);
+    let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("overload serve");
+    responses.sort_by_key(|r| r.id);
+    let generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    (generations, metrics.snapshot())
+}
+
+#[test]
+fn prop_preempt_resume_bitwise_identical_to_uninterrupted() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 771);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    let small = overload_pool_blocks();
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for workers in [1usize, 2, 8] {
+            for cache in [false, true] {
+                let tag = format!("{label}/workers={workers}/cache={cache}");
+                let (ample_gen, ample_snap) = run_with_pool(model, workers, cache, 512);
+                assert_eq!(ample_snap.preemptions, 0, "{tag}: ample pool must not preempt");
+                assert_eq!(ample_gen.len(), 6, "{tag}: lost responses on the ample pool");
+
+                let (tight_gen, tight_snap) = run_with_pool(model, workers, cache, small);
+                if small < 15 {
+                    assert!(
+                        tight_snap.preemptions > 0,
+                        "{tag}: a {small}-block pool must force preemption"
+                    );
+                    assert_eq!(
+                        tight_snap.resumes, tight_snap.preemptions,
+                        "{tag}: every preempted sequence must resume exactly once per park"
+                    );
+                    assert!(tight_snap.recomputed_tokens > 0, "{tag}: resumes must recompute");
+                }
+                assert_eq!(
+                    tight_gen, ample_gen,
+                    "{tag}: preempt→resume changed generations (invariant 5 violated)"
+                );
+            }
+        }
+    }
+}
+
+/// The same invariant through an engine built entirely from environment
+/// defaults (`BDA_NUM_THREADS` worker count on the global pool,
+/// `BDA_PREFIX_CACHE` cache setting) — the configuration each CI
+/// determinism-matrix cell actually pins, so the preempt/resume path is
+/// exercised under every (threads, prefix-cache) combination.
+#[test]
+fn preempt_resume_bitwise_under_env_default_engine() {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 772);
+    let small = overload_pool_blocks();
+    let run = |num_blocks: usize| {
+        let cfg = server_config(num_blocks);
+        let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+        let trace = overload_trace(model.config.vocab_size as u32);
+        let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("env serve");
+        responses.sort_by_key(|r| r.id);
+        let gens: Generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (gens, metrics.snapshot())
+    };
+    let (ample_gen, _) = run(512);
+    let (tight_gen, tight_snap) = run(small);
+    if small < 15 {
+        assert!(tight_snap.preemptions > 0, "the {small}-block pool must force preemption");
+    }
+    assert_eq!(tight_gen, ample_gen, "env-default engine violated invariant 5");
+}
