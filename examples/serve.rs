@@ -8,12 +8,16 @@
 //!
 //! Run: cargo run --release --example serve [-- --requests 24]
 
-use bda::coordinator::{server, NativeBackend, PagedNativeBackend, Request, ServerConfig};
+use bda::coordinator::{
+    server, BatcherConfig, KvCacheConfig, NativeBackend, PagedNativeBackend, Request,
+    SchedulerConfig, ServerConfig,
+};
 use bda::eval::trace;
 use bda::model::{ModelConfig, Transformer};
 use bda::util::cli::Args;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::time::Duration;
 
 fn make_trace(n: usize, vocab: usize, seed: u64) -> Vec<Request> {
     trace::generate(trace::TraceConfig {
@@ -93,7 +97,21 @@ fn pjrt_sections(_n: usize, _cfg: ServerConfig) -> Result<()> {
 fn main() -> Result<()> {
     let args = Args::from_env();
     if args.flag("help") {
-        println!("usage: serve [--requests N]");
+        println!("usage: serve [--requests N] [--trace-out FILE] [--prom-out FILE]");
+        println!(
+            "  --trace-out FILE    enable structured tracing (implies BDA_TRACE=1) \
+             and write a Chrome trace-event JSON file at exit — load it in \
+             Perfetto or chrome://tracing for per-worker and per-sequence \
+             timelines of the final overload section"
+        );
+        println!(
+            "  --prom-out FILE     write the overload section's metrics snapshot \
+             in Prometheus text exposition format"
+        );
+        println!(
+            "  BDA_TRACE=1         record spans without writing a file (the \
+             per-phase span counts are printed instead)"
+        );
         println!(
             "  BDA_NUM_THREADS=N   worker threads for paged attention + GEMMs \
              (default: all cores; generations are bit-identical at any value; \
@@ -105,7 +123,14 @@ fn main() -> Result<()> {
              is bitwise-identical to a cold prefill, so this only changes \
              prefill work and memory, never tokens)"
         );
+        println!("  BDA_QUIET=1         suppress one-shot informational stderr lines");
         return Ok(());
+    }
+    // Tracing must be on before the global pool spins up so workers can
+    // tag their trace tracks at spawn (the builder thread name is an
+    // identical fallback, but eager tagging keeps the intent obvious).
+    if args.get("trace-out").is_some() {
+        bda::obs::set_enabled(true);
     }
     let n = args.get_usize("requests", 12);
     let cfg = ServerConfig::default();
@@ -221,5 +246,66 @@ fn main() -> Result<()> {
             "NO — investigate!"
         }
     );
+
+    // Overload + trace export: replay a trace against a deliberately tiny
+    // block pool so decode steps exhaust it and the engine preempts
+    // (recompute-on-resume). With tracing on, this run is what populates
+    // the full request lifecycle — enqueue → admit → prefill → token… →
+    // preempt → park → resume → complete — on the per-sequence tracks of
+    // the exported Chrome trace (the CI trace check validates exactly
+    // that). Without tracing, it still demonstrates graceful degradation.
+    println!("\n=== Overload: preemption + recompute-on-resume (tiny block pool) ===");
+    let overload_cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 4,
+            eos_token: None,
+            // 4 sequences × 5-block peak demand vs a 12-block pool.
+            kv: KvCacheConfig { block_size: 4, num_blocks: 12 },
+        },
+    };
+    let overload_trace: Vec<Request> = (0..8u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..8u64).map(|j| ((i * 31 + j * 7 + 3) % vocab as u64) as u32).collect();
+            Request::new(i, prompt, 12)
+        })
+        .collect();
+    let backend = PagedNativeBackend::new(model.clone(), overload_cfg.scheduler.kv);
+    let (responses, metrics) = server::replay_trace(backend, overload_cfg, overload_trace)?;
+    let snap = metrics.snapshot();
+    println!(
+        "[overload] {} requests completed | {}",
+        responses.len(),
+        snap.preemption_line().unwrap_or_else(|| "no preemption (pool was ample?)".into()),
+    );
+    if let Some(line) = snap.tbt_line() {
+        println!("[overload] tbt: {line}");
+    }
+    if let Some(line) = snap.step_phase_line() {
+        println!("[overload] step: {line}");
+    }
+    if let Some(path) = args.get("prom-out") {
+        std::fs::write(path, bda::obs::export::prometheus_text(&snap))?;
+        println!("[overload] prometheus metrics written to {path}");
+    }
+
+    if bda::obs::enabled() {
+        bda::obs::flush();
+        let events = bda::obs::take_collected();
+        let labels = bda::obs::thread_labels();
+        println!("\n=== Structured trace (whole process) ===");
+        println!("{} spans recorded, {} dropped", events.len(), bda::obs::dropped_total());
+        for (name, count) in bda::obs::export::phase_counts(&events) {
+            println!("  {name:>13}: {count}");
+        }
+        let (seqs, gaps) = bda::obs::export::timeline_summary(&events);
+        println!("  per-sequence timelines: {seqs} sequences, {gaps} TBT gaps");
+        if let Some(path) = args.get("trace-out") {
+            let doc = bda::obs::export::chrome_trace(&events, &labels);
+            std::fs::write(path, doc.to_string())?;
+            println!("chrome trace written to {path} (load in Perfetto / chrome://tracing)");
+        }
+    }
     Ok(())
 }

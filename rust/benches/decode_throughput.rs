@@ -28,13 +28,14 @@ use bda::attention::AttnShape;
 use bda::bench_support::{bench, f2, scatter_paged_kv, BenchConfig, Table};
 use bda::coordinator::server::replay_trace;
 use bda::coordinator::{
-    BatcherConfig, KvCacheConfig, NativeBackend, Request, SchedulerConfig, ServerConfig,
+    BatcherConfig, KvCacheConfig, NativeBackend, Request, SchedulerConfig, ServerConfig, Snapshot,
 };
 use bda::engine::PagedNativeBackend;
 use bda::eval::trace::{self, TraceConfig};
 use bda::model::{ModelConfig, Transformer};
 use bda::tensor::Tensor;
 use bda::util::json::Json;
+use bda::util::stats::Quantiles;
 use bda::util::threadpool;
 use bda::util::timer::Timer;
 use std::time::Duration;
@@ -67,6 +68,19 @@ struct Run {
     wall: f64,
     occupancy: f64,
     generations: Vec<(u64, Vec<u32>)>,
+    snap: Snapshot,
+}
+
+/// p50/p95/p99 of a latency distribution, in milliseconds, as a JSON
+/// object (the schema of the `ttft_ms` / `tbt_ms` / `step_*_ms` bench
+/// fields documented in docs/benchmarks.md).
+fn quantiles_ms_json(q: &Quantiles) -> Json {
+    Json::obj(vec![
+        ("p50", Json::num(q.p50 * 1e3)),
+        ("p95", Json::num(q.p95 * 1e3)),
+        ("p99", Json::num(q.p99 * 1e3)),
+        ("count", Json::num(q.count as f64)),
+    ])
 }
 
 fn run(backend_label: &str, model: &Transformer, concurrency: usize, max_new: usize) -> Run {
@@ -87,6 +101,7 @@ fn run(backend_label: &str, model: &Transformer, concurrency: usize, max_new: us
         wall,
         occupancy: snap.decode_occupancy,
         generations: responses.into_iter().map(|r| (r.id, r.tokens)).collect(),
+        snap,
     }
 }
 
@@ -425,12 +440,29 @@ fn run_child(out_path: &str) {
                 format!("{:.2}x", tps_paged / tps_seq),
                 format!("{:.0}%", paged.occupancy * 100.0),
             ]);
+            // Tail-latency record for the paged run: TTFT and TBT
+            // (per-sequence token timelines) plus the per-step phase
+            // split, each as p50/p95/p99 in milliseconds.
+            let ps = &paged.snap;
+            let ttft = Quantiles {
+                p50: ps.ttft_p50,
+                p95: ps.ttft_p95,
+                p99: ps.ttft_p99,
+                mean: 0.0,
+                count: ps.requests_completed,
+                sum: 0.0,
+            };
             rows.push(Json::obj(vec![
                 ("concurrency", Json::num(c as f64)),
                 ("per_seq_tok_s", Json::num(tps_seq)),
                 ("paged_tok_s", Json::num(tps_paged)),
                 ("speedup", Json::num(tps_paged / tps_seq)),
                 ("occupancy", Json::num(paged.occupancy)),
+                ("ttft_ms", quantiles_ms_json(&ttft)),
+                ("tbt_ms", quantiles_ms_json(&ps.tbt)),
+                ("step_attn_ms", quantiles_ms_json(&ps.step_attn)),
+                ("step_gemm_ms", quantiles_ms_json(&ps.step_gemm)),
+                ("step_sample_ms", quantiles_ms_json(&ps.step_sample)),
             ]));
         }
         table.print();

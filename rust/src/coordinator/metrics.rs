@@ -1,8 +1,16 @@
-//! Serving metrics: request counters, token throughput, latency/TTFT
-//! histograms. Shared across coordinator threads behind a mutex (update
-//! rates are per-request, not per-token-hot-loop).
+//! Serving metrics: request counters, token throughput, latency/TTFT/TBT
+//! and per-step-phase histograms.
+//!
+//! Aggregate state lives behind one mutex, but the per-step hot-path
+//! counters ([`Metrics::decode_step`], [`Metrics::tokens_generated`]) are
+//! relaxed atomics on the `Metrics` struct itself: a decode step records
+//! its counters without serializing on the report mutex, so snapshot
+//! readers never stall the decode loop. The occupancy accumulator is an
+//! `f64` carried in an `AtomicU64` via a `to_bits` CAS loop (exact
+//! mean-of-ratios semantics preserved, no lock).
 
-use crate::util::stats::Histogram;
+use crate::util::stats::{Histogram, Quantiles};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -45,6 +53,14 @@ pub struct StepTiming {
 pub struct Metrics {
     inner: Mutex<Inner>,
     start: Instant,
+    // Hot-path counters: updated once per decode step / completion batch
+    // with relaxed atomics so per-step recording never contends with
+    // snapshot readers on the mutex.
+    tokens_out: AtomicU64,
+    decode_steps: AtomicU64,
+    decode_tokens: AtomicU64,
+    /// Sum of per-step batch/capacity ratios, as `f64::to_bits`.
+    occupancy_sum_bits: AtomicU64,
 }
 
 #[derive(Debug)]
@@ -53,12 +69,8 @@ struct Inner {
     requests_completed: u64,
     requests_rejected: u64,
     tokens_in: u64,
-    tokens_out: u64,
     batches: u64,
     batch_size_sum: u64,
-    decode_steps: u64,
-    decode_tokens: u64,
-    occupancy_sum: f64,
     decode_attn_secs: f64,
     decode_gemm_secs: f64,
     decode_sample_secs: f64,
@@ -70,6 +82,38 @@ struct Inner {
     recomputed_tokens: u64,
     latency: Histogram,
     ttft: Histogram,
+    /// Time-between-tokens: per-step gaps between consecutive tokens of
+    /// one sequence (a gap spanning a preemption includes parked time —
+    /// that is what the waiting client experiences).
+    tbt: Histogram,
+    // Per-step phase latency (seconds per batched decode step). Only
+    // steps with real backend timing are recorded, so mock backends and
+    // admission-only iterations don't pollute the distributions.
+    step_attn: Histogram,
+    step_gemm: Histogram,
+    step_sample: Histogram,
+}
+
+/// `num / den`, or 0.0 when the denominator is not positive. Every ratio
+/// field in [`Snapshot`] is guarded here, in one place.
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Add `v` to an `f64` accumulator stored as bits in an `AtomicU64`.
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
 }
 
 /// A point-in-time snapshot for reporting.
@@ -112,9 +156,19 @@ pub struct Snapshot {
     pub recomputed_tokens: u64,
     pub latency_p50: f64,
     pub latency_p95: f64,
+    pub latency_p99: f64,
     pub latency_mean: f64,
     pub ttft_p50: f64,
     pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    /// Time-between-tokens distribution (seconds).
+    pub tbt: Quantiles,
+    /// Per-decode-step attention latency distribution (seconds).
+    pub step_attn: Quantiles,
+    /// Per-decode-step GEMM latency distribution (seconds).
+    pub step_gemm: Quantiles,
+    /// Per-decode-step sampling latency distribution (seconds).
+    pub step_sample: Quantiles,
 }
 
 impl Default for Metrics {
@@ -131,12 +185,8 @@ impl Metrics {
                 requests_completed: 0,
                 requests_rejected: 0,
                 tokens_in: 0,
-                tokens_out: 0,
                 batches: 0,
                 batch_size_sum: 0,
-                decode_steps: 0,
-                decode_tokens: 0,
-                occupancy_sum: 0.0,
                 decode_attn_secs: 0.0,
                 decode_gemm_secs: 0.0,
                 decode_sample_secs: 0.0,
@@ -148,8 +198,16 @@ impl Metrics {
                 recomputed_tokens: 0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
+                tbt: Histogram::latency(),
+                step_attn: Histogram::latency(),
+                step_gemm: Histogram::latency(),
+                step_sample: Histogram::latency(),
             }),
             start: Instant::now(),
+            tokens_out: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            decode_tokens: AtomicU64::new(0),
+            occupancy_sum_bits: AtomicU64::new(0.0f64.to_bits()),
         }
     }
 
@@ -171,22 +229,28 @@ impl Metrics {
 
     /// One batched decode iteration: `batch` sequences stepped together
     /// out of `capacity` (= scheduler `max_active`) decode slots.
+    /// Lock-free: three relaxed counter updates.
     pub fn decode_step(&self, batch: usize, capacity: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.decode_steps += 1;
-        g.decode_tokens += batch as u64;
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_tokens.fetch_add(batch as u64, Ordering::Relaxed);
         if capacity > 0 {
-            g.occupancy_sum += batch as f64 / capacity as f64;
+            atomic_f64_add(&self.occupancy_sum_bits, batch as f64 / capacity as f64);
         }
     }
 
     /// Per-step decode timing split: the backend's attention/GEMM
-    /// measurement plus the scheduler's sampling time.
+    /// measurement plus the scheduler's sampling time. Steps with real
+    /// backend timing also feed the per-step phase histograms.
     pub fn decode_timing(&self, step: StepTiming, sample_secs: f64) {
         let mut g = self.inner.lock().unwrap();
         g.decode_attn_secs += step.attn;
         g.decode_gemm_secs += step.gemm;
         g.decode_sample_secs += sample_secs;
+        if step.attn > 0.0 || step.gemm > 0.0 {
+            g.step_attn.record(step.attn);
+            g.step_gemm.record(step.gemm);
+            g.step_sample.record(sample_secs);
+        }
         g.prefix_hits += step.prefix_hits;
         g.prefix_misses += step.prefix_misses;
         g.prefix_blocks_saved += step.prefix_blocks_saved;
@@ -195,8 +259,21 @@ impl Metrics {
         g.recomputed_tokens += step.recomputed_tokens;
     }
 
+    /// Lock-free: one relaxed counter update.
     pub fn tokens_generated(&self, n: usize) {
-        self.inner.lock().unwrap().tokens_out += n as u64;
+        self.tokens_out.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record a batch of time-between-tokens gaps (seconds), one lock for
+    /// the whole step's worth of samples.
+    pub fn record_tbts(&self, gaps: &[f64]) {
+        if gaps.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for &v in gaps {
+            g.tbt.record(v);
+        }
     }
 
     pub fn completed(&self, latency: f64, ttft: f64) {
@@ -209,30 +286,22 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = self.start.elapsed().as_secs_f64();
+        let tokens_out = self.tokens_out.load(Ordering::Relaxed);
+        let decode_steps = self.decode_steps.load(Ordering::Relaxed);
+        let decode_tokens = self.decode_tokens.load(Ordering::Relaxed);
+        let occupancy_sum = f64::from_bits(self.occupancy_sum_bits.load(Ordering::Relaxed));
         Snapshot {
             elapsed,
             requests_admitted: g.requests_admitted,
             requests_completed: g.requests_completed,
             requests_rejected: g.requests_rejected,
             tokens_in: g.tokens_in,
-            tokens_out: g.tokens_out,
-            tokens_per_sec: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
-            mean_batch_size: if g.batches > 0 {
-                g.batch_size_sum as f64 / g.batches as f64
-            } else {
-                0.0
-            },
-            decode_steps: g.decode_steps,
-            tokens_per_step: if g.decode_steps > 0 {
-                g.decode_tokens as f64 / g.decode_steps as f64
-            } else {
-                0.0
-            },
-            decode_occupancy: if g.decode_steps > 0 {
-                g.occupancy_sum / g.decode_steps as f64
-            } else {
-                0.0
-            },
+            tokens_out,
+            tokens_per_sec: ratio(tokens_out as f64, elapsed),
+            mean_batch_size: ratio(g.batch_size_sum as f64, g.batches as f64),
+            decode_steps,
+            tokens_per_step: ratio(decode_tokens as f64, decode_steps as f64),
+            decode_occupancy: ratio(occupancy_sum, decode_steps as f64),
             decode_attn_secs: g.decode_attn_secs,
             decode_gemm_secs: g.decode_gemm_secs,
             decode_sample_secs: g.decode_sample_secs,
@@ -244,9 +313,15 @@ impl Metrics {
             recomputed_tokens: g.recomputed_tokens,
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
+            latency_p99: g.latency.quantile(0.99),
             latency_mean: g.latency.mean(),
             ttft_p50: g.ttft.quantile(0.5),
             ttft_p95: g.ttft.quantile(0.95),
+            ttft_p99: g.ttft.quantile(0.99),
+            tbt: g.tbt.quantiles(),
+            step_attn: g.step_attn.quantiles(),
+            step_gemm: g.step_gemm.quantiles(),
+            step_sample: g.step_sample.quantiles(),
         }
     }
 }
@@ -254,12 +329,7 @@ impl Metrics {
 impl Snapshot {
     /// Prefix-cache hit fraction over all lookups (0.0 before any lookup).
     pub fn prefix_hit_rate(&self) -> f64 {
-        let lookups = self.prefix_hits + self.prefix_misses;
-        if lookups == 0 {
-            0.0
-        } else {
-            self.prefix_hits as f64 / lookups as f64
-        }
+        ratio(self.prefix_hits as f64, (self.prefix_hits + self.prefix_misses) as f64)
     }
 
     /// Human-readable prefix-cache line, or `None` when no lookups ran
@@ -297,7 +367,7 @@ impl Snapshot {
         if total <= 0.0 {
             return None;
         }
-        let pct = |x: f64| 100.0 * x / total;
+        let pct = |x: f64| 100.0 * ratio(x, total);
         Some(format!(
             "attention {:.1}ms ({:.0}%) | gemm {:.1}ms ({:.0}%) | sampling {:.1}ms ({:.0}%)",
             self.decode_attn_secs * 1e3,
@@ -309,19 +379,56 @@ impl Snapshot {
         ))
     }
 
+    /// Time-between-tokens percentile line, or `None` with fewer than one
+    /// recorded gap (single-token generations have no TBT).
+    pub fn tbt_line(&self) -> Option<String> {
+        if self.tbt.count == 0 {
+            return None;
+        }
+        Some(format!(
+            "p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+            self.tbt.p50 * 1e3,
+            self.tbt.p95 * 1e3,
+            self.tbt.p99 * 1e3,
+        ))
+    }
+
+    /// Per-step phase percentile line, or `None` when no instrumented
+    /// backend ran.
+    pub fn step_phase_line(&self) -> Option<String> {
+        if self.step_attn.count == 0 {
+            return None;
+        }
+        let fmt = |q: &Quantiles| {
+            format!("p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms", q.p50 * 1e3, q.p95 * 1e3, q.p99 * 1e3)
+        };
+        Some(format!(
+            "attn {} | gemm {} | sample {}",
+            fmt(&self.step_attn),
+            fmt(&self.step_gemm),
+            fmt(&self.step_sample),
+        ))
+    }
+
     pub fn report(&self) -> String {
-        let mut prefix = match self.prefix_cache_line() {
+        let mut extra = match self.prefix_cache_line() {
             Some(line) => format!(" | prefix cache: {line}"),
             None => String::new(),
         };
         if let Some(line) = self.preemption_line() {
-            prefix.push_str(&format!(" | preemption: {line}"));
+            extra.push_str(&format!(" | preemption: {line}"));
+        }
+        if let Some(line) = self.tbt_line() {
+            extra.push_str(&format!(" | tbt {line}"));
+        }
+        if let Some(line) = self.step_phase_line() {
+            extra.push_str(&format!(" | step {line}"));
         }
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
              ({:.1} tok/s) | batch avg {:.2} | decode: {} steps, {:.2} tok/step, \
-             {:.0}% occupancy | latency p50 {:.1}ms p95 {:.1}ms | \
-             ttft p50 {:.1}ms p95 {:.1}ms{prefix}",
+             {:.0}% occupancy | latency p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms | \
+             ttft p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms{extra}",
             self.requests_admitted,
             self.requests_completed,
             self.requests_rejected,
@@ -334,8 +441,10 @@ impl Snapshot {
             self.decode_occupancy * 100.0,
             self.latency_p50 * 1e3,
             self.latency_p95 * 1e3,
+            self.latency_p99 * 1e3,
             self.ttft_p50 * 1e3,
             self.ttft_p95 * 1e3,
+            self.ttft_p99 * 1e3,
         )
     }
 }
@@ -361,6 +470,8 @@ mod tests {
         assert_eq!(s.tokens_out, 7);
         assert_eq!(s.mean_batch_size, 2.0);
         assert!(s.latency_p50 > 0.0);
+        assert!(s.latency_p99 >= s.latency_p95);
+        assert!(s.ttft_p99 >= s.ttft_p95);
     }
 
     #[test]
@@ -388,6 +499,39 @@ mod tests {
         let split = s.decode_split().expect("split present");
         assert!(split.contains("attention"));
         assert!(split.contains("sampling"));
+    }
+
+    #[test]
+    fn step_phase_histograms_skip_untimed_steps() {
+        let m = Metrics::new();
+        // Mock/admission-only step: no backend timing → no histogram sample.
+        m.decode_timing(StepTiming::default(), 0.001);
+        assert_eq!(m.snapshot().step_attn.count, 0);
+        assert!(m.snapshot().step_phase_line().is_none());
+        m.decode_timing(StepTiming { attn: 0.002, gemm: 0.004, ..Default::default() }, 0.001);
+        let s = m.snapshot();
+        assert_eq!(s.step_attn.count, 1);
+        assert_eq!(s.step_gemm.count, 1);
+        assert_eq!(s.step_sample.count, 1);
+        assert!(s.step_attn.p50 >= 0.002);
+        let line = s.step_phase_line().expect("line present");
+        assert!(line.contains("attn") && line.contains("p99"));
+        assert!(s.report().contains("step attn"));
+    }
+
+    #[test]
+    fn tbt_records_in_batches() {
+        let m = Metrics::new();
+        assert!(m.snapshot().tbt_line().is_none(), "no gaps yet");
+        m.record_tbts(&[]);
+        assert_eq!(m.snapshot().tbt.count, 0);
+        m.record_tbts(&[0.010, 0.012]);
+        m.record_tbts(&[0.011]);
+        let s = m.snapshot();
+        assert_eq!(s.tbt.count, 3);
+        assert!(s.tbt.p50 >= 0.010);
+        assert!(s.tbt.p99 >= s.tbt.p50);
+        assert!(s.report().contains("tbt p50"));
     }
 
     #[test]
@@ -441,6 +585,22 @@ mod tests {
         let r = m.snapshot().report();
         assert!(r.contains("admitted"));
         assert!(r.contains("tok/s"));
+        assert!(r.contains("p99"));
+    }
+
+    #[test]
+    fn empty_snapshot_ratios_are_zero() {
+        let s = Metrics::new().snapshot();
+        for v in [
+            s.tokens_per_sec,
+            s.mean_batch_size,
+            s.tokens_per_step,
+            s.decode_occupancy,
+            s.prefix_hit_rate(),
+        ] {
+            assert_eq!(v, 0.0);
+            assert!(v.is_finite());
+        }
     }
 
     #[test]
@@ -453,6 +613,7 @@ mod tests {
                     for _ in 0..100 {
                         m.admitted(1);
                         m.tokens_generated(1);
+                        m.decode_step(1, 4);
                     }
                 });
             }
@@ -460,5 +621,7 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.requests_admitted, 400);
         assert_eq!(snap.tokens_out, 400);
+        assert_eq!(snap.decode_steps, 400);
+        assert!((snap.decode_occupancy - 0.25).abs() < 1e-9);
     }
 }

@@ -18,7 +18,7 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
-pub use metrics::{Metrics, StepTiming};
+pub use metrics::{Metrics, Snapshot, StepTiming};
 #[cfg(feature = "pjrt")]
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
 pub use queue::RequestQueue;

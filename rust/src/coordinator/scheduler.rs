@@ -14,6 +14,7 @@ use super::kv_cache::{BlockAllocator, KvCacheConfig, SeqId};
 use super::metrics::{Metrics, StepTiming};
 use super::request::{Request, Response};
 use crate::model::transformer::{KvCache, Transformer};
+use crate::obs::{self, Phase};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -157,6 +158,10 @@ struct ActiveSeq {
     req: Request,
     generated: Vec<u32>,
     first_token_at: Option<Instant>,
+    /// When the most recent token was sampled — the previous point of the
+    /// sequence's time-between-tokens (TBT) series. Reuses the sampling
+    /// timer's clock read, so TBT tracking adds none of its own.
+    last_token_at: Option<Instant>,
     last_token: u32,
 }
 
@@ -171,6 +176,9 @@ struct ParkedSeq {
     /// original admission order across preempt/resume cycles.
     seq: SeqId,
     state: ActiveSeq,
+    /// When the backend evicted it — the parked interval shows up as a
+    /// `park` span on the sequence's trace track.
+    parked_at: Instant,
 }
 
 /// The continuous-batching engine.
@@ -268,6 +276,9 @@ impl<B: Backend> Scheduler<B> {
         if !self.has_capacity_for(&req) {
             return Err(req);
         }
+        // Tracing clock reads are gated so a disabled trace adds nothing
+        // to the admission path beyond one relaxed load.
+        let admit_start = obs::enabled().then(Instant::now);
         let seq = self.next_seq;
         // The shadow allocator is worst-case bookkeeping (no prefix
         // sharing, no eviction) for pool-less backends only; pool owners
@@ -278,6 +289,7 @@ impl<B: Backend> Scheduler<B> {
                 return Err(req);
             }
         }
+        let prefill_start = admit_start.map(|_| Instant::now());
         let logits = match self.backend.prefill(seq, &req.prompt) {
             Ok(l) => l,
             Err(_) => {
@@ -287,19 +299,34 @@ impl<B: Backend> Scheduler<B> {
                 return Err(req);
             }
         };
+        if let Some(t) = prefill_start {
+            obs::span_at(Phase::Prefill, req.id, t, t.elapsed());
+        }
         self.next_seq += 1;
         let first = sample(&logits, &req);
         self.seq_of_req.insert(req.id, seq);
+        let first_at = Instant::now();
         let mut seq_state = ActiveSeq {
             last_token: first,
             generated: vec![first],
-            first_token_at: Some(Instant::now()),
+            first_token_at: Some(first_at),
+            last_token_at: Some(first_at),
             req,
         };
         // A request asking for 0 tokens completes immediately on next step;
         // normalize to at least the first token.
         if seq_state.req.max_new_tokens == 0 {
             seq_state.generated.clear();
+        }
+        if let Some(t0) = admit_start {
+            let r = &seq_state.req;
+            // Queue wait (arrival → admission start), then the admission
+            // itself; plus the first token of the sequence's timeline.
+            obs::span_at(Phase::Enqueue, r.id, r.arrival, t0.saturating_duration_since(r.arrival));
+            obs::span_at(Phase::Admit, r.id, t0, t0.elapsed());
+            if !seq_state.generated.is_empty() {
+                obs::event_at(Phase::Token, r.id, first_at);
+            }
         }
         self.active.push(seq_state);
         Ok(())
@@ -356,7 +383,14 @@ impl<B: Backend> Scheduler<B> {
             if let Some(kv) = &mut self.kv {
                 let _ = kv.register(p.seq, replay.len());
             }
+            let resume_start = obs::enabled().then(Instant::now);
             self.backend.prefill(p.seq, &replay)?;
+            if let Some(t) = resume_start {
+                let id = p.state.req.id;
+                let parked = t.saturating_duration_since(p.parked_at);
+                obs::span_at(Phase::Park, id, p.parked_at, parked);
+                obs::span_at(Phase::Resume, id, t, t.elapsed());
+            }
             self.pending_resumes += 1;
             self.pending_recomputed += replay.len() as u64;
             self.seq_of_req.insert(p.state.req.id, p.seq);
@@ -413,7 +447,11 @@ impl<B: Backend> Scheduler<B> {
         if let Some(m) = &self.metrics {
             m.decode_step(batch.len(), self.config.max_active);
         }
+        let step_start = obs::enabled().then(Instant::now);
         let outcome = self.backend.decode(&batch)?;
+        if let Some(t) = step_start {
+            obs::span_at(Phase::DecodeStep, batch.len() as u64, t, t.elapsed());
+        }
         anyhow::ensure!(
             outcome.logits.len() == batch.len(),
             "backend returned {} logit rows for a {}-sequence batch",
@@ -439,6 +477,7 @@ impl<B: Backend> Scheduler<B> {
             "backend's preempted list disagrees with its None logit rows"
         );
         let mut sample_secs = 0.0f64;
+        let mut tbts: Vec<f64> = Vec::new();
         let stepped = std::mem::take(&mut self.active);
         for (mut a, l) in stepped.into_iter().zip(outcome.logits) {
             let seq = self.seq_of_req[&a.req.id];
@@ -450,27 +489,43 @@ impl<B: Backend> Scheduler<B> {
                 if let Some(kv) = &mut self.kv {
                     let _ = kv.release(seq);
                 }
-                self.preempted.push(ParkedSeq { seq, state: a });
+                obs::instant(Phase::Preempt, a.req.id);
+                self.preempted.push(ParkedSeq { seq, state: a, parked_at: Instant::now() });
                 continue;
             };
             // Time only sample() so the metrics split doesn't charge
-            // allocator bookkeeping to the "sampling" bucket.
+            // allocator bookkeeping to the "sampling" bucket. The closing
+            // clock read doubles as the token timestamp for TBT and the
+            // sequence's trace timeline — no extra reads per token.
             let t = Instant::now();
             let tok = sample(&l, &a.req);
-            sample_secs += t.elapsed().as_secs_f64();
+            let now = Instant::now();
+            sample_secs += (now - t).as_secs_f64();
+            obs::span_at(Phase::Sample, a.req.id, t, now - t);
+            obs::event_at(Phase::Token, a.req.id, now);
             a.generated.push(tok);
             a.last_token = tok;
             if a.first_token_at.is_none() {
-                a.first_token_at = Some(Instant::now());
+                a.first_token_at = Some(now);
             }
+            if let Some(prev) = a.last_token_at {
+                tbts.push(now.saturating_duration_since(prev).as_secs_f64());
+            }
+            a.last_token_at = Some(now);
             // Shadow-allocator growth tracking, pool-less backends only.
             if let Some(kv) = &mut self.kv {
                 let _ = kv.append_token(seq);
             }
             self.active.push(a);
         }
+        if let Some(m) = &self.metrics {
+            m.record_tbts(&tbts);
+        }
         self.flush_step_timing(sample_secs);
         self.complete_finished(&mut done);
+        // Step boundary: drain every thread's trace ring (a single relaxed
+        // load when tracing has never been enabled).
+        obs::flush();
         Ok(done)
     }
 
@@ -490,6 +545,7 @@ impl<B: Backend> Scheduler<B> {
                 }
                 self.backend.release(seq);
                 let now = Instant::now();
+                obs::event_at(Phase::Complete, a.req.id, now);
                 done.push(Response {
                     id: a.req.id,
                     prompt_len: a.req.prompt.len(),

@@ -36,6 +36,9 @@ impl Server {
         let q = queue.clone();
         let m = metrics.clone();
         let engine = std::thread::spawn(move || -> Result<()> {
+            if crate::obs::enabled() {
+                crate::obs::set_thread_label("bda-engine");
+            }
             let mut sched = Scheduler::new(backend, config.scheduler);
             sched.set_metrics(m.clone());
             let batcher = Batcher::new(config.batcher);
@@ -89,6 +92,9 @@ impl Server {
                 m.completed(resp.latency, resp.ttft);
                 let _ = tx.send(resp);
             }
+            // Final trace drain: spans recorded after the last step's
+            // flush (completions above) must not be stranded in the rings.
+            crate::obs::flush();
             Ok(())
         });
         Server { queue, metrics, responses: rx, engine: Some(engine) }
@@ -168,6 +174,8 @@ pub fn replay_trace<B: Backend>(
             out.push(resp);
         }
     }
+    // Trailing spans (final completions) drain with the run.
+    crate::obs::flush();
     Ok((out, metrics))
 }
 

@@ -57,6 +57,7 @@ use crate::coordinator::metrics::StepTiming;
 use crate::coordinator::scheduler::{Backend, DecodeOutcome};
 use crate::model::transformer::{KvCache, Transformer};
 use crate::model::weights::FusedQkv;
+use crate::obs::{self, Phase};
 use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, ThreadPool};
@@ -515,6 +516,11 @@ impl PagedNativeBackend {
         if let Some(cache) = self.prefix.as_mut() {
             cache.record_admission(adopted);
         }
+        if adopted > 0 {
+            // Thread-track marker: this admission rode `adopted` cached
+            // prompt blocks instead of re-prefilling them.
+            obs::instant(Phase::PrefixAdopt, adopted as u64);
+        }
 
         let logits = if adopted == 0 {
             // Cold path: prompt processing reuses the reference prefill
@@ -641,7 +647,9 @@ impl PagedNativeBackend {
             // One packed GEMM for Q|K|V (bit-identical to the three
             // separate projections; see `FusedQkv`).
             let (q, k, v) = self.fused_qkv[li].project(&h, &block.attn);
-            gemm_secs += t.elapsed().as_secs_f64();
+            let dt = t.elapsed();
+            gemm_secs += dt.as_secs_f64();
+            obs::span_at(Phase::Gemm, li as u64, t, dt);
             for (i, slot) in sslots.iter().enumerate() {
                 self.pool.write_row(
                     li,
@@ -655,18 +663,25 @@ impl PagedNativeBackend {
             let t = Instant::now();
             let workers = self.threads.workers();
             let attn_out = paged_attention_decode_on(&self.threads, &q, &layer, &views, s, workers);
-            attn_secs += t.elapsed().as_secs_f64();
+            let dt = t.elapsed();
+            attn_secs += dt.as_secs_f64();
+            obs::span_at(Phase::Attn, li as u64, t, dt);
             let t = Instant::now();
             let y = block.attn.output(&attn_out);
             let x1 = x.add(&y);
             x = block.ffn(&x1);
-            gemm_secs += t.elapsed().as_secs_f64();
+            let dt = t.elapsed();
+            gemm_secs += dt.as_secs_f64();
+            obs::span_at(Phase::Gemm, li as u64, t, dt);
         }
 
         let h = x.rmsnorm(&self.model.norm_f, 1e-5);
         let t = Instant::now();
         let logits = matmul(&h, &self.embed_t);
-        gemm_secs += t.elapsed().as_secs_f64();
+        let dt = t.elapsed();
+        gemm_secs += dt.as_secs_f64();
+        // Logit projection: one past the last layer index on the GEMM track.
+        obs::span_at(Phase::Gemm, self.model.blocks.len() as u64, t, dt);
         // The prefix-cache delta is merged in at take_step_timing time, so
         // admissions surface even when no further decode step runs.
         let timing = StepTiming {

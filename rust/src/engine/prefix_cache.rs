@@ -43,6 +43,8 @@
 //! whose blocks are referenced by the tree alone (`ref_count == 1`).
 
 use crate::coordinator::kv_cache::{BlockAllocator, BlockId};
+use crate::obs::{self, Phase};
+use std::time::Instant;
 
 /// Index of the root sentinel node (empty edge, never evicted).
 const ROOT: usize = 0;
@@ -190,6 +192,15 @@ impl PrefixCache {
     /// sequence is actually registered, so retried admissions don't
     /// inflate hit statistics.
     pub fn lookup(&mut self, prompt: &[u32]) -> Vec<BlockId> {
+        let lookup_start = obs::enabled().then(Instant::now);
+        let matched = self.lookup_inner(prompt);
+        if let Some(t) = lookup_start {
+            obs::span_at(Phase::PrefixLookup, prompt.len() as u64, t, t.elapsed());
+        }
+        matched
+    }
+
+    fn lookup_inner(&mut self, prompt: &[u32]) -> Vec<BlockId> {
         let bs = self.block_size;
         let max_blocks = prompt.len().saturating_sub(1) / bs;
         self.tick += 1;
@@ -371,6 +382,7 @@ impl PrefixCache {
         parent.children.retain(|&c| c != id);
         alloc.release_held(&node.blocks);
         self.stats.evicted_blocks += node.blocks.len() as u64;
+        obs::instant(Phase::PrefixEvict, node.blocks.len() as u64);
         node.blocks.len()
     }
 

@@ -26,7 +26,9 @@
 //!
 //! Entry points: [`bd`] for the decomposition, [`attention`] for the
 //! operators, [`prepare`] for Algorithm 3 model conversion, [`engine`] for
-//! the paged decode engine, [`coordinator`] for serving.
+//! the paged decode engine, [`coordinator`] for serving, [`obs`] for
+//! structured tracing and per-sequence timelines (Perfetto/Prometheus
+//! export, gated by `BDA_TRACE`).
 
 pub mod bd;
 pub mod model;
@@ -34,6 +36,7 @@ pub mod prepare;
 pub mod attention;
 pub mod coordinator;
 pub mod engine;
+pub mod obs;
 pub mod bench_support;
 pub mod eval;
 #[cfg(feature = "pjrt")]

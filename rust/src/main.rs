@@ -10,7 +10,13 @@
 //!                                 bit-identical at any thread count;
 //!                                 --prefix-cache on|off overrides the
 //!                                 BDA_PREFIX_CACHE default for the paged
-//!                                 engine's radix-tree prompt cache)
+//!                                 engine's radix-tree prompt cache;
+//!                                 --trace-out FILE enables structured
+//!                                 tracing and writes a Perfetto-loadable
+//!                                 Chrome trace; --prom-out FILE writes the
+//!                                 metrics snapshot in Prometheus text
+//!                                 format; BDA_TRACE=1 records without a
+//!                                 file)
 //!   eval-ppl   [--model M]        Fig. 2a-style PPL table (fp32/16/bf16)
 //!   recon      [--model M]        Table 4-style reconstruction errors
 //!   train      [--steps N]        drive the AOT train_step from Rust
@@ -136,6 +142,11 @@ fn cmd_exactness(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    // Turn tracing on before any engine work (pool spin-up, prefill) so
+    // the whole run lands in the exported trace.
+    if args.get("trace-out").is_some() {
+        bda::obs::set_enabled(true);
+    }
     let model = model_from_args(args);
     let attention = args.get_or("attention", "bda");
     let model = if attention == "bda" {
@@ -192,7 +203,39 @@ fn cmd_serve(args: &Args) -> i32 {
     if let Some(line) = snap.preemption_line() {
         println!("preemption: {line}");
     }
+    if let Some(line) = snap.tbt_line() {
+        println!("tbt: {line}");
+    }
+    if let Some(line) = snap.step_phase_line() {
+        println!("step phases: {line}");
+    }
     println!("wall: {secs:.2}s, completed {}", responses.len());
+    if let Some(path) = args.get("prom-out") {
+        if let Err(e) = std::fs::write(path, bda::obs::export::prometheus_text(&snap)) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        println!("prometheus metrics written to {path}");
+    }
+    if bda::obs::enabled() {
+        bda::obs::flush();
+        let events = bda::obs::take_collected();
+        let labels = bda::obs::thread_labels();
+        if let Some(path) = args.get("trace-out") {
+            let doc = bda::obs::export::chrome_trace(&events, &labels);
+            if let Err(e) = std::fs::write(path, doc.to_string()) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            println!(
+                "chrome trace written to {path} ({} spans, {} dropped) — load in Perfetto",
+                events.len(),
+                bda::obs::dropped_total()
+            );
+        } else {
+            println!("trace: {} spans recorded (pass --trace-out FILE to export)", events.len());
+        }
+    }
     0
 }
 

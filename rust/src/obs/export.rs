@@ -1,0 +1,272 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable) and
+//! Prometheus text exposition.
+//!
+//! The Chrome exporter lays the recorded stream out on two process rows:
+//!
+//! * **pid 1 — `bda workers`**: one track per recording thread (engine
+//!   thread, pool workers), carrying the thread-track phases
+//!   (`decode_step`, `attn`, `gemm`, `sample`, `prefix_*`, `work`).
+//! * **pid 2 — `bda sequences`**: one track per request id, carrying the
+//!   lifecycle phases (`enqueue` → `admit`/`prefill` → `token`… →
+//!   `preempt`/`park`/`resume` → `complete`), which reads as a swimlane
+//!   per sequence in Perfetto.
+//!
+//! All events are emitted as `"X"` (complete) events with microsecond
+//! `ts`/`dur`; instants get `dur: 0`. Track names arrive as `"M"`
+//! metadata events, per the trace-event format.
+
+use super::recorder::SpanEvent;
+use super::timeline;
+use crate::coordinator::metrics::Snapshot;
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+use std::collections::BTreeSet;
+
+/// Process id for per-thread (worker/engine) tracks.
+const PID_WORKERS: u64 = 1;
+/// Process id for per-sequence (request lifecycle) tracks.
+const PID_SEQS: u64 = 2;
+
+fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(value))])),
+    ])
+}
+
+/// Build a Chrome trace-event JSON document from a recorded stream.
+///
+/// `labels` maps thread ids to display names (from
+/// [`super::thread_labels`]); unlabeled threads fall back to
+/// `thread-{tid}`.
+pub fn chrome_trace(events: &[SpanEvent], labels: &[(u32, String)]) -> Json {
+    let mut sorted: Vec<SpanEvent> = events.to_vec();
+    sorted.sort_by_key(|e| e.seqno);
+
+    let mut out = vec![
+        meta_event("process_name", PID_WORKERS, 0, "bda workers"),
+        meta_event("process_name", PID_SEQS, 0, "bda sequences"),
+    ];
+
+    let mut labeled: BTreeSet<u32> = BTreeSet::new();
+    for (tid, label) in labels {
+        out.push(meta_event("thread_name", PID_WORKERS, *tid as u64, label));
+        labeled.insert(*tid);
+    }
+    let mut seq_tracks: BTreeSet<u64> = BTreeSet::new();
+    for e in &sorted {
+        if !labeled.contains(&e.tid) {
+            out.push(meta_event(
+                "thread_name",
+                PID_WORKERS,
+                e.tid as u64,
+                &format!("thread-{}", e.tid),
+            ));
+            labeled.insert(e.tid);
+        }
+        if e.phase.is_lifecycle() && seq_tracks.insert(e.id) {
+            out.push(meta_event("thread_name", PID_SEQS, e.id, &format!("seq {}", e.id)));
+        }
+    }
+
+    for e in &sorted {
+        let (pid, tid) = if e.phase.is_lifecycle() {
+            (PID_SEQS, e.id)
+        } else {
+            (PID_WORKERS, e.tid as u64)
+        };
+        out.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(e.phase.name())),
+            ("cat", Json::str(if e.phase.is_lifecycle() { "lifecycle" } else { "thread" })),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(e.start_ns as f64 / 1e3)),
+            ("dur", Json::num(e.dur_ns as f64 / 1e3)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("id", Json::num(e.id as f64)),
+                    ("seqno", Json::num(e.seqno as f64)),
+                ]),
+            ),
+        ]));
+    }
+
+    Json::obj(vec![("traceEvents", Json::Arr(out)), ("displayTimeUnit", Json::str("ms"))])
+}
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+fn prom_summary(out: &mut String, name: &str, help: &str, q: &Quantiles) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
+    for (label, v) in [("0.5", q.p50), ("0.95", q.p95), ("0.99", q.p99)] {
+        out.push_str(&format!("{name}{{quantile=\"{label}\"}} {v}\n"));
+    }
+    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", q.sum, q.count));
+}
+
+/// Render a metrics [`Snapshot`] in Prometheus text exposition format
+/// (scrape-style consumption; write to a file or serve as-is).
+pub fn prometheus_text(s: &Snapshot) -> String {
+    let mut out = String::new();
+    let counters: [(&str, &str, f64); 12] = [
+        ("bda_requests_admitted_total", "Requests admitted", s.requests_admitted as f64),
+        ("bda_requests_completed_total", "Requests completed", s.requests_completed as f64),
+        ("bda_requests_rejected_total", "Requests rejected", s.requests_rejected as f64),
+        ("bda_tokens_in_total", "Prompt tokens admitted", s.tokens_in as f64),
+        ("bda_tokens_out_total", "Tokens generated", s.tokens_out as f64),
+        ("bda_decode_steps_total", "Batched decode steps", s.decode_steps as f64),
+        ("bda_preemptions_total", "Sequences preempted", s.preemptions as f64),
+        ("bda_resumes_total", "Preempted sequences resumed", s.resumes as f64),
+        ("bda_recomputed_tokens_total", "Tokens replayed on resume", s.recomputed_tokens as f64),
+        ("bda_prefix_hits_total", "Prefix-cache lookup hits", s.prefix_hits as f64),
+        ("bda_prefix_misses_total", "Prefix-cache lookup misses", s.prefix_misses as f64),
+        ("bda_prefix_blocks_saved_total", "K/V blocks deduplicated", s.prefix_blocks_saved as f64),
+    ];
+    for (name, help, v) in counters {
+        prom_counter(&mut out, name, help, v);
+    }
+    prom_gauge(&mut out, "bda_tokens_per_sec", "Generation throughput", s.tokens_per_sec);
+    prom_gauge(&mut out, "bda_decode_occupancy", "Mean decode-batch occupancy", s.decode_occupancy);
+    prom_gauge(&mut out, "bda_mean_batch_size", "Mean formed batch size", s.mean_batch_size);
+    let latency = Quantiles {
+        p50: s.latency_p50,
+        p95: s.latency_p95,
+        p99: s.latency_p99,
+        mean: s.latency_mean,
+        count: s.requests_completed,
+        sum: s.latency_mean * s.requests_completed as f64,
+    };
+    let ttft = Quantiles {
+        p50: s.ttft_p50,
+        p95: s.ttft_p95,
+        p99: s.ttft_p99,
+        mean: 0.0,
+        count: s.requests_completed,
+        sum: 0.0,
+    };
+    prom_summary(&mut out, "bda_request_latency_seconds", "End-to-end request latency", &latency);
+    prom_summary(&mut out, "bda_ttft_seconds", "Time to first token", &ttft);
+    prom_summary(&mut out, "bda_tbt_seconds", "Time between tokens", &s.tbt);
+    prom_summary(&mut out, "bda_step_attn_seconds", "Per-step attention time", &s.step_attn);
+    prom_summary(&mut out, "bda_step_gemm_seconds", "Per-step GEMM time", &s.step_gemm);
+    prom_summary(&mut out, "bda_step_sample_seconds", "Per-step sampling time", &s.step_sample);
+    out
+}
+
+/// Per-lifecycle-phase event counts in a recorded stream — the CI trace
+/// check asserts each expected phase appears at least once.
+pub fn phase_counts(events: &[SpanEvent]) -> Vec<(&'static str, usize)> {
+    super::Phase::ALL
+        .iter()
+        .map(|p| (p.name(), events.iter().filter(|e| e.phase == *p).count()))
+        .collect()
+}
+
+/// Summarize per-sequence timelines for human output: sequence count and
+/// total TBT samples derivable from the stream.
+pub fn timeline_summary(events: &[SpanEvent]) -> (usize, usize) {
+    let tls = timeline::timelines(events);
+    let gaps = tls.iter().map(|t| t.tbt_secs().len()).sum();
+    (tls.len(), gaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Phase;
+
+    fn ev(phase: Phase, id: u64, tid: u32, seqno: u64) -> SpanEvent {
+        SpanEvent { seqno, phase, id, tid, start_ns: seqno * 1000, dur_ns: 500 }
+    }
+
+    #[test]
+    fn chrome_trace_routes_tracks() {
+        let events = vec![
+            ev(Phase::Admit, 7, 1, 0),
+            ev(Phase::Attn, 0, 2, 1),
+            ev(Phase::Token, 7, 1, 2),
+            ev(Phase::Complete, 7, 1, 3),
+        ];
+        let labels = vec![(1u32, "engine".to_string()), (2u32, "bda-pool-0".to_string())];
+        let doc = chrome_trace(&events, &labels);
+        let arr = doc.get("traceEvents").as_arr().expect("traceEvents array");
+        // 2 process_name + 2 thread_name (workers) + 1 seq track + 4 events.
+        assert_eq!(arr.len(), 9);
+        let xs: Vec<&Json> = arr.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(xs.len(), 4);
+        // Lifecycle events land on pid 2 with tid = request id.
+        let admit = xs.iter().find(|e| e.get("name").as_str() == Some("admit")).unwrap();
+        assert_eq!(admit.get("pid").as_f64(), Some(2.0));
+        assert_eq!(admit.get("tid").as_f64(), Some(7.0));
+        // Thread-track events land on pid 1 with tid = thread id.
+        let attn = xs.iter().find(|e| e.get("name").as_str() == Some("attn")).unwrap();
+        assert_eq!(attn.get("pid").as_f64(), Some(1.0));
+        assert_eq!(attn.get("tid").as_f64(), Some(2.0));
+        // The serialized document round-trips through the JSON parser.
+        let reparsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn chrome_trace_labels_unknown_threads() {
+        let events = vec![ev(Phase::Work, 0, 9, 0)];
+        let doc = chrome_trace(&events, &[]);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        let named = arr.iter().any(|e| {
+            e.get("ph").as_str() == Some("M")
+                && e.get("args").get("name").as_str() == Some("thread-9")
+        });
+        assert!(named);
+    }
+
+    #[test]
+    fn phase_counts_cover_all_phases() {
+        let events = vec![ev(Phase::Token, 1, 1, 0), ev(Phase::Token, 1, 1, 1)];
+        let counts = phase_counts(&events);
+        assert_eq!(counts.len(), Phase::ALL.len());
+        let token = counts.iter().find(|(n, _)| *n == "token").unwrap();
+        assert_eq!(token.1, 2);
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let m = crate::coordinator::metrics::Metrics::new();
+        m.admitted(4);
+        m.tokens_generated(10);
+        m.record_tbts(&[0.01, 0.02]);
+        m.completed(0.5, 0.1);
+        let text = prometheus_text(&m.snapshot());
+        assert!(text.contains("bda_requests_admitted_total 4"));
+        assert!(text.contains("bda_tokens_out_total 10"));
+        assert!(text.contains("bda_tbt_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("bda_tbt_seconds_count 2"));
+        // Every line is a comment or `name{labels} value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2 || line.is_empty(),
+                "malformed line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn timeline_summary_counts() {
+        let events = vec![
+            ev(Phase::Token, 1, 1, 0),
+            ev(Phase::Token, 1, 1, 1),
+            ev(Phase::Token, 2, 1, 2),
+        ];
+        assert_eq!(timeline_summary(&events), (2, 1));
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-sequence token timelines derived from the recorded event stream.
+//!
+//! Lifecycle events (phase `is_lifecycle()`) are keyed by request id;
+//! grouping them and ordering by time yields one timeline per sequence:
+//! admission, prefill, every generated token, preempt/park/resume, and
+//! completion. The gaps between consecutive `Token` instants are the
+//! time-between-tokens (TBT) samples — note that a gap spanning a
+//! preemption includes the parked time, which is exactly what a waiting
+//! client observes.
+
+use super::recorder::SpanEvent;
+use super::Phase;
+use std::collections::BTreeMap;
+
+/// All lifecycle events of one request, ordered by start time.
+#[derive(Clone, Debug)]
+pub struct SeqTimeline {
+    /// Request id.
+    pub id: u64,
+    pub events: Vec<SpanEvent>,
+}
+
+impl SeqTimeline {
+    /// Start times (ns since epoch) of the generated tokens, in order.
+    pub fn token_times_ns(&self) -> Vec<u64> {
+        self.events.iter().filter(|e| e.phase == Phase::Token).map(|e| e.start_ns).collect()
+    }
+
+    /// Time-between-tokens samples in seconds: gaps between consecutive
+    /// `Token` instants. Empty for sequences with fewer than two tokens.
+    pub fn tbt_secs(&self) -> Vec<f64> {
+        let t = self.token_times_ns();
+        t.windows(2).map(|w| (w[1] - w[0]) as f64 * 1e-9).collect()
+    }
+
+    /// Whether this sequence was preempted at least once.
+    pub fn preempted(&self) -> bool {
+        self.events.iter().any(|e| e.phase == Phase::Preempt)
+    }
+}
+
+/// Group the lifecycle events of a recorded stream into per-sequence
+/// timelines, ordered by request id; events within a timeline are ordered
+/// by start time (ties broken by seqno, which preserves producer order).
+pub fn timelines(events: &[SpanEvent]) -> Vec<SeqTimeline> {
+    let mut by_id: BTreeMap<u64, Vec<SpanEvent>> = BTreeMap::new();
+    for e in events {
+        if e.phase.is_lifecycle() {
+            by_id.entry(e.id).or_default().push(*e);
+        }
+    }
+    by_id
+        .into_iter()
+        .map(|(id, mut events)| {
+            events.sort_by_key(|e| (e.start_ns, e.seqno));
+            SeqTimeline { id, events }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(phase: Phase, id: u64, start_ns: u64, seqno: u64) -> SpanEvent {
+        SpanEvent { seqno, phase, id, tid: 1, start_ns, dur_ns: 0 }
+    }
+
+    #[test]
+    fn groups_by_request_and_orders_by_time() {
+        let events = vec![
+            ev(Phase::Token, 2, 300, 4),
+            ev(Phase::Admit, 1, 100, 0),
+            ev(Phase::Token, 1, 200, 2),
+            ev(Phase::Admit, 2, 150, 1),
+            ev(Phase::Attn, 9, 0, 3), // thread-track: excluded
+            ev(Phase::Token, 1, 250, 5),
+        ];
+        let tl = timelines(&events);
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].id, 1);
+        assert_eq!(tl[0].events.len(), 3);
+        assert!(tl[0].events.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+        assert_eq!(tl[1].id, 2);
+    }
+
+    #[test]
+    fn tbt_is_token_gaps() {
+        let events = vec![
+            ev(Phase::Token, 7, 1_000_000_000, 0),
+            ev(Phase::Token, 7, 1_500_000_000, 1),
+            ev(Phase::Token, 7, 1_750_000_000, 2),
+            ev(Phase::Complete, 7, 1_750_000_100, 3),
+        ];
+        let tl = timelines(&events);
+        let tbt = tl[0].tbt_secs();
+        assert_eq!(tbt.len(), 2);
+        assert!((tbt[0] - 0.5).abs() < 1e-9);
+        assert!((tbt[1] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_has_no_tbt() {
+        let events = vec![ev(Phase::Token, 1, 10, 0)];
+        assert!(timelines(&events)[0].tbt_secs().is_empty());
+    }
+
+    #[test]
+    fn preemption_detection() {
+        let with = vec![ev(Phase::Preempt, 1, 10, 0)];
+        let without = vec![ev(Phase::Token, 1, 10, 0)];
+        assert!(timelines(&with)[0].preempted());
+        assert!(!timelines(&without)[0].preempted());
+    }
+}

@@ -97,11 +97,14 @@ impl Histogram {
         if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
     }
 
-    /// Approximate quantile from bucket bounds. `q` in [0,1].
+    /// Approximate quantile from bucket bounds. `q` is clamped to [0,1],
+    /// so out-of-range requests degrade to the min/max bucket instead of
+    /// walking off the count array.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
+        let q = q.clamp(0.0, 1.0);
         let target = (q * self.total as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
@@ -113,6 +116,20 @@ impl Histogram {
         self.max
     }
 
+    /// One-shot p50/p95/p99 summary of this histogram. All fields are 0
+    /// when the histogram is empty (quantiles of nothing are 0 by the
+    /// same convention as [`Histogram::quantile`]).
+    pub fn quantiles(&self) -> Quantiles {
+        Quantiles {
+            p50: self.quantile(0.5),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            mean: self.mean(),
+            count: self.total,
+            sum: self.sum,
+        }
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.bounds.len(), other.bounds.len());
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
@@ -122,6 +139,22 @@ impl Histogram {
         self.sum += other.sum;
         self.max = self.max.max(other.max);
     }
+}
+
+/// p50/p95/p99 + mean/count/sum summary of one [`Histogram`], in the
+/// histogram's native unit (seconds for the latency histograms).
+///
+/// Snapshot-friendly: plain `Copy` data, all-zero for an empty histogram
+/// (via [`Quantiles::default`]), so `Snapshot` can embed one per tracked
+/// distribution without optionality.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub count: u64,
+    pub sum: f64,
 }
 
 #[cfg(test)]
@@ -194,5 +227,60 @@ mod tests {
         h.record(1.0);
         h.record(3.0);
         assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_quantiles_are_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantiles(), Quantiles::default());
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let mut h = Histogram::latency();
+        h.record(0.004);
+        // Every quantile of a one-sample histogram lands in the sample's
+        // bucket: at least the sample, at most one log-bucket above it.
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= 0.004 && v <= 0.004 * 1.3, "q={q} v={v}");
+        }
+        let s = h.quantiles();
+        assert_eq!(s.count, 1);
+        assert!((s.mean - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_out_of_range_quantile_clamps() {
+        let mut h = Histogram::latency();
+        h.record(0.001);
+        h.record(0.010);
+        assert_eq!(h.quantile(-0.5), h.quantile(0.0));
+        assert_eq!(h.quantile(1.5), h.quantile(1.0));
+        assert!(!h.quantile(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn histogram_quantile_above_max_bucket_returns_max() {
+        let mut h = Histogram::new(1e-3, 1.0, 4);
+        h.record(50.0); // beyond the last bound → overflow bucket
+        assert_eq!(h.quantile(0.99), 50.0);
+    }
+
+    #[test]
+    fn quantiles_summary_ordered() {
+        let mut h = Histogram::latency();
+        let mut x = 1e-4;
+        for _ in 0..500 {
+            h.record(x);
+            x *= 1.01;
+        }
+        let q = h.quantiles();
+        assert!(q.p50 <= q.p95 && q.p95 <= q.p99);
+        assert_eq!(q.count, 500);
+        assert!(q.sum > 0.0 && q.mean > 0.0);
     }
 }

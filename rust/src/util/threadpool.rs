@@ -137,9 +137,11 @@ pub fn num_threads() -> usize {
 }
 
 /// The process-wide pool, created on first use with [`num_threads`]
-/// workers. Logs the resolved worker count (and its source) to stderr
-/// exactly once, at construction — the observable record of the
-/// `BDA_NUM_THREADS` latch.
+/// workers. Announces the resolved worker count (and its source) exactly
+/// once, at construction — the observable record of the
+/// `BDA_NUM_THREADS` latch. The announcement goes through
+/// [`crate::obs::announce`], so library embedders can silence it with
+/// `BDA_QUIET=1` instead of getting unconditional stderr.
 pub fn global() -> &'static Arc<ThreadPool> {
     static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
     POOL.get_or_init(|| {
@@ -149,10 +151,10 @@ pub fn global() -> &'static Arc<ThreadPool> {
         } else {
             "available_parallelism"
         };
-        eprintln!(
+        crate::obs::announce(&format!(
             "[bda] thread pool: {n} worker{} (from {source}; latched for the process lifetime)",
             if n == 1 { "" } else { "s" }
-        );
+        ));
         Arc::new(ThreadPool::new(n))
     })
 }
@@ -260,7 +262,7 @@ impl ThreadPool {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("bda-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -374,8 +376,15 @@ fn run_serial<F: Fn(usize)>(n: usize, f: &F) {
 /// stragglers that missed an already-completed epoch) skip both. A worker
 /// that sleeps through an entire epoch simply never sees it — epochs only
 /// advance after their barrier completes, so nothing is lost.
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, index: usize) {
     IN_POOL_WORKER.with(|w| w.set(true));
+    // Worker-id tagging for trace tracks. When tracing is off at spawn
+    // this is skipped — the recorder falls back to the thread's builder
+    // name (`bda-pool-{index}`, identical) if tracing turns on later, and
+    // skipping avoids eagerly allocating a ring per worker.
+    if crate::obs::enabled() {
+        crate::obs::set_thread_label(&format!("bda-pool-{index}"));
+    }
     let mut seen = 0u64;
     loop {
         let job = {
@@ -401,7 +410,11 @@ fn worker_loop(shared: &Shared) {
         // SAFETY: ticket holders are counted in `active`; the dispatcher
         // blocks until every one of them decrements below, so the task
         // closure in its frame is alive for the duration of this call.
+        let work_start = crate::obs::enabled().then(std::time::Instant::now);
         let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.task) }));
+        if let Some(t) = work_start {
+            crate::obs::span_at(crate::obs::Phase::Work, seen, t, t.elapsed());
+        }
         let mut st = shared.state.lock().unwrap();
         if let Err(p) = result {
             if st.panic.is_none() {

@@ -1,0 +1,212 @@
+//! Property tests for the structured-tracing subsystem (`bda::obs`):
+//!
+//! 1. **Zero perturbation**: decode output is bitwise identical with
+//!    tracing on vs off — for MHA and BDA, at worker counts {1, 8}, under
+//!    an overload pool that forces preempt→resume. Tracing observes the
+//!    engine; it must never steer it.
+//! 2. **Lifecycle coverage**: a traced overload run records every request
+//!    lifecycle phase (enqueue → admit → prefill → token… → preempt →
+//!    park → resume → complete) plus the thread-track phases, and the
+//!    Chrome-trace export round-trips through the JSON parser.
+//! 3. **Drain ordering**: flushing rings filled by concurrent producer
+//!    threads yields a stream whose per-thread sequence numbers are
+//!    strictly increasing (producer FIFO survives the merge).
+//!
+//! The enable gate and the recorder registry are process-global, so every
+//! test serializes on one mutex and resets the gate + collection buffer
+//! around its body (the lib unit tests never flip the gate for the same
+//! reason — this binary owns it).
+
+use bda::bd::Strategy;
+use bda::coordinator::server::replay_trace;
+use bda::coordinator::{BatcherConfig, KvCacheConfig, Request, SchedulerConfig, ServerConfig};
+use bda::engine::PagedNativeBackend;
+use bda::model::{ModelConfig, Transformer};
+use bda::obs::{self, Phase};
+use bda::tensor::DType;
+use bda::util::json::Json;
+use bda::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Serialize on the process-global tracing state; a panicked holder must
+/// not wedge the remaining tests.
+fn serialized() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Drop anything a previous test (or an untraced run) left behind and put
+/// the gate into a known state.
+fn reset(enabled: bool) {
+    obs::set_enabled(false);
+    let _ = obs::take_collected();
+    obs::set_enabled(enabled);
+}
+
+/// Overload geometry (mirrors `prop_preemption.rs`): 3-way concurrency
+/// against a 10-block pool, 6 requests of 8 prompt + 10 new tokens — peak
+/// demand 3 × 5 blocks, so decode must preempt.
+fn overload_config() -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 3,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks: 10 },
+        },
+    }
+}
+
+fn overload_trace(vocab: u32) -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..8u64).map(|j| ((i * 37 + j * 13 + 5) % vocab as u64) as u32).collect();
+            Request::new(i, prompt, 10)
+        })
+        .collect()
+}
+
+type Generations = Vec<(u64, Vec<u32>)>;
+
+fn run_overload(model: &Transformer, workers: usize) -> (Generations, u64) {
+    let cfg = overload_config();
+    let pool = Arc::new(ThreadPool::new(workers));
+    let backend = PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+    let trace = overload_trace(model.config.vocab_size as u32);
+    let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("overload serve");
+    responses.sort_by_key(|r| r.id);
+    let generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    (generations, metrics.snapshot().preemptions)
+}
+
+#[test]
+fn prop_decode_bitwise_identical_with_tracing_on_vs_off() {
+    let _g = serialized();
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 881);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for workers in [1usize, 8] {
+            let tag = format!("{label}/workers={workers}");
+            reset(false);
+            let (off_gen, off_preempt) = run_overload(model, workers);
+            assert!(off_preempt > 0, "{tag}: the overload pool must preempt");
+            assert!(
+                obs::take_collected().is_empty(),
+                "{tag}: a disabled trace must record nothing"
+            );
+
+            reset(true);
+            let (on_gen, on_preempt) = run_overload(model, workers);
+            let events = obs::take_collected();
+            obs::set_enabled(false);
+            assert!(!events.is_empty(), "{tag}: an enabled trace must record");
+            assert_eq!(on_preempt, off_preempt, "{tag}: tracing changed scheduling");
+            assert_eq!(
+                on_gen, off_gen,
+                "{tag}: tracing on vs off changed decode output (must be bitwise identical)"
+            );
+        }
+    }
+}
+
+#[test]
+fn traced_overload_run_covers_full_request_lifecycle() {
+    let _g = serialized();
+    reset(true);
+    let model = Transformer::new_mha(ModelConfig::tiny(), 882);
+    let (generations, preemptions) = run_overload(&model, 2);
+    let events = obs::take_collected();
+    obs::set_enabled(false);
+    assert_eq!(generations.len(), 6);
+    assert!(preemptions > 0, "lifecycle coverage needs a preempting run");
+
+    // Every lifecycle phase must appear, plus the decode-path thread
+    // tracks (the paged engine instruments attn/gemm; the scheduler
+    // emits decode_step/sample).
+    let count = |p: Phase| events.iter().filter(|e| e.phase == p).count();
+    for phase in [
+        Phase::Enqueue,
+        Phase::Admit,
+        Phase::Prefill,
+        Phase::Token,
+        Phase::Preempt,
+        Phase::Park,
+        Phase::Resume,
+        Phase::Complete,
+        Phase::DecodeStep,
+        Phase::Attn,
+        Phase::Gemm,
+        Phase::Sample,
+    ] {
+        assert!(count(phase) >= 1, "phase {} missing from the trace", phase.name());
+    }
+    // One complete per request; every preemption parks and resumes.
+    assert_eq!(count(Phase::Complete), 6);
+    assert_eq!(count(Phase::Preempt), preemptions as usize);
+    assert_eq!(count(Phase::Park), count(Phase::Resume));
+
+    // Per-sequence timelines: 6 sequences, each with ≥ 10 tokens, and at
+    // least one preempted timeline whose TBT series still covers the gap.
+    let timelines = bda::obs::timeline::timelines(&events);
+    assert_eq!(timelines.len(), 6);
+    assert!(timelines.iter().all(|t| t.token_times_ns().len() >= 10));
+    assert!(timelines.iter().any(|t| t.preempted()));
+    assert!(timelines.iter().all(|t| !t.tbt_secs().is_empty()));
+
+    // The Chrome-trace export is valid JSON and carries every event as an
+    // "X" record (plus "M" track-name metadata).
+    let doc = bda::obs::export::chrome_trace(&events, &obs::thread_labels());
+    let reparsed = Json::parse(&doc.to_string()).expect("exported trace must parse");
+    let arr = reparsed.get("traceEvents").as_arr().expect("traceEvents");
+    let xs = arr.iter().filter(|e| e.get("ph").as_str() == Some("X")).count();
+    assert_eq!(xs, events.len());
+}
+
+#[test]
+fn flush_preserves_per_thread_seqno_order_under_concurrent_producers() {
+    let _g = serialized();
+    reset(true);
+    const THREADS: usize = 4;
+    const PER_THREAD: u64 = 256; // well under the 4096-event ring capacity
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            s.spawn(move || {
+                for i in 0..PER_THREAD {
+                    // id encodes (producer, local index) so the merged
+                    // stream can be checked for per-producer FIFO.
+                    obs::instant(Phase::Work, ((t as u64) << 32) | i);
+                }
+            });
+        }
+    });
+    let events = obs::take_collected();
+    obs::set_enabled(false);
+    let work: Vec<_> = events.iter().filter(|e| e.phase == Phase::Work).collect();
+    assert_eq!(work.len(), THREADS * PER_THREAD as usize, "no event may be lost");
+
+    // Per recording thread: seqnos strictly increase (producer order
+    // survives the drain) and local indices arrive in FIFO order.
+    let mut tids: Vec<u32> = work.iter().map(|e| e.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(tids.len(), THREADS, "each producer thread gets its own ring");
+    for tid in tids {
+        let mine: Vec<_> = work.iter().filter(|e| e.tid == tid).collect();
+        assert!(
+            mine.windows(2).all(|w| w[0].seqno < w[1].seqno),
+            "tid {tid}: drained seqnos must be strictly increasing"
+        );
+        assert!(
+            mine.windows(2).all(|w| (w[0].id & 0xffff_ffff) < (w[1].id & 0xffff_ffff)),
+            "tid {tid}: producer FIFO order must survive the drain"
+        );
+    }
+    // The merged stream carries globally unique seqnos.
+    let mut seqnos: Vec<u64> = work.iter().map(|e| e.seqno).collect();
+    seqnos.sort_unstable();
+    seqnos.dedup();
+    assert_eq!(seqnos.len(), work.len());
+}
