@@ -123,6 +123,13 @@ fn main() -> Result<()> {
              is bitwise-identical to a cold prefill, so this only changes \
              prefill work and memory, never tokens)"
         );
+        println!(
+            "  BDA_PREFILL_CHUNK=N prefill chunk budget in prompt tokens (default \
+             512; 0 = unbounded/monolithic) — prompts longer than N are split \
+             into chunks fused into batched decode steps, bounding time-between-\
+             tokens for active sequences; a pure scheduling knob, generations \
+             are bit-identical at any budget"
+        );
         println!("  BDA_QUIET=1         suppress one-shot informational stderr lines");
         return Ok(());
     }
@@ -181,6 +188,9 @@ fn main() -> Result<()> {
             }
             if let Some(line) = snap.preemption_line() {
                 println!("[{label} / {engine_label}] preemption: {line}");
+            }
+            if let Some(line) = snap.chunked_prefill_line() {
+                println!("[{label} / {engine_label}] chunked prefill: {line}");
             }
             responses.sort_by_key(|r| r.id);
             generations.insert(
@@ -262,6 +272,10 @@ fn main() -> Result<()> {
             eos_token: None,
             // 4 sequences × 5-block peak demand vs a 12-block pool.
             kv: KvCacheConfig { block_size: 4, num_blocks: 12 },
+            // Default chunk budget (BDA_PREFILL_CHUNK) — prompts here are
+            // short, but keeping the knob live means the trace export
+            // records prefill_chunk spans alongside preempt/park/resume.
+            ..Default::default()
         },
     };
     let overload_trace: Vec<Request> = (0..8u64)
@@ -284,6 +298,9 @@ fn main() -> Result<()> {
     }
     if let Some(line) = snap.step_phase_line() {
         println!("[overload] step: {line}");
+    }
+    if let Some(line) = snap.chunked_prefill_line() {
+        println!("[overload] chunked prefill: {line}");
     }
     if let Some(path) = args.get("prom-out") {
         std::fs::write(path, bda::obs::export::prometheus_text(&snap))?;

@@ -28,7 +28,8 @@ use bda::attention::AttnShape;
 use bda::bench_support::{bench, f2, scatter_paged_kv, BenchConfig, Table};
 use bda::coordinator::server::replay_trace;
 use bda::coordinator::{
-    BatcherConfig, KvCacheConfig, NativeBackend, Request, SchedulerConfig, ServerConfig, Snapshot,
+    BatcherConfig, KvCacheConfig, Metrics, NativeBackend, Request, Scheduler, SchedulerConfig,
+    ServerConfig, Snapshot,
 };
 use bda::engine::PagedNativeBackend;
 use bda::eval::trace::{self, TraceConfig};
@@ -59,6 +60,7 @@ fn config(concurrency: usize) -> ServerConfig {
             max_active: concurrency,
             eos_token: None,
             kv: KvCacheConfig { block_size: 16, num_blocks: 1024 },
+            ..Default::default()
         },
     }
 }
@@ -158,7 +160,7 @@ impl MicroFixture {
         self.tables
             .iter()
             .zip(&self.lens)
-            .map(|(t, &len)| PagedSeq { blocks: t, len })
+            .map(|(t, &len)| PagedSeq { blocks: t, len, q_rows: 1 })
             .collect()
     }
 }
@@ -257,6 +259,7 @@ fn prefix_cache_row(fast: bool) -> Json {
             max_active: concurrency,
             eos_token: None,
             kv: KvCacheConfig { block_size, num_blocks: 1024 },
+            ..Default::default()
         },
     };
     let mut runs = Vec::new();
@@ -336,6 +339,7 @@ fn preemption_row(fast: bool) -> Json {
                 max_active: concurrency,
                 eos_token: None,
                 kv: KvCacheConfig { block_size: 4, num_blocks },
+                ..Default::default()
             },
         };
         let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
@@ -375,6 +379,94 @@ fn preemption_row(fast: bool) -> Json {
         ("ample_tok_s", Json::num(ample_tok_s)),
         ("overload_tok_s", Json::num(overload_tok_s)),
         ("overload_throughput_ratio", Json::num(overload_tok_s / ample_tok_s)),
+    ])
+}
+
+/// Mixed-traffic workload: short requests decode steadily until a long
+/// prompt lands mid-stream. Run monolithically (unbounded chunk budget —
+/// the whole prompt fuses into one step, stalling every decode row riding
+/// it) and chunked (fixed token budget — the prompt spreads over several
+/// steps). Generations must be bit-identical (engine invariant 6); the
+/// JSON row records both runs' decode TBT tails and the prefill tokens
+/// each step carried, showing the chunked run bounds the per-token stall
+/// independent of prompt length.
+fn chunked_prefill_row(fast: bool) -> Json {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 91);
+    let vocab = model.config.vocab_size as u32;
+    let n_short = if fast { 3u64 } else { 4 };
+    let chunk_budget = 8usize;
+    let long_len = 40usize; // tiny's 64-token context: 40 prompt + 8 new
+    let run = |prefill_chunk: usize| {
+        let cfg = SchedulerConfig {
+            max_active: n_short as usize + 1,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks: 1024 },
+            prefill_chunk,
+        };
+        let backend = PagedNativeBackend::new(model.clone(), cfg.kv);
+        let mut sched = Scheduler::new(backend, cfg);
+        let metrics = std::sync::Arc::new(Metrics::new());
+        sched.set_metrics(metrics.clone());
+        let mut done = Vec::new();
+        for i in 0..n_short {
+            let prompt: Vec<u32> =
+                (0..4u64).map(|j| ((i * 29 + j * 11 + 2) % vocab as u64) as u32).collect();
+            sched.admit(Request::new(i, prompt, 20)).unwrap();
+        }
+        // Let the short sequences reach steady-state decode...
+        for _ in 0..4 {
+            done.extend(sched.step().unwrap());
+        }
+        // ...then the long prompt arrives mid-decode.
+        let long: Vec<u32> =
+            (0..long_len as u64).map(|j| ((j * 13 + 5) % vocab as u64) as u32).collect();
+        sched.admit(Request::new(99, long, 8)).unwrap();
+        done.extend(sched.drain().unwrap());
+        done.sort_by_key(|r| r.id);
+        let gens: Vec<(u64, Vec<u32>)> = done.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (gens, metrics.snapshot())
+    };
+    let (mono_gen, mono_snap) = run(0);
+    let (chunk_gen, chunk_snap) = run(chunk_budget);
+    assert_eq!(
+        chunk_gen, mono_gen,
+        "chunked prefill must not change generations (invariant 6)"
+    );
+    assert!(
+        chunk_snap.prefill_chunks >= (long_len / chunk_budget) as u64,
+        "the long prompt must actually run in chunks"
+    );
+    let per_step = |s: &Snapshot| {
+        if s.prefill_chunks > 0 {
+            s.chunked_tokens as f64 / s.prefill_chunks as f64
+        } else {
+            0.0
+        }
+    };
+    let tbt_ratio =
+        if mono_snap.tbt.p99 > 0.0 { chunk_snap.tbt.p99 / mono_snap.tbt.p99 } else { 0.0 };
+    println!(
+        "chunked prefill ({long_len}-token prompt mid-decode, budget {chunk_budget}): \
+         tbt p95 {:.2}ms -> {:.2}ms, p99 {:.2}ms -> {:.2}ms, \
+         prefill tok/step {:.1} -> {:.1} (identical generations — invariant 6)",
+        mono_snap.tbt.p95 * 1e3,
+        chunk_snap.tbt.p95 * 1e3,
+        mono_snap.tbt.p99 * 1e3,
+        chunk_snap.tbt.p99 * 1e3,
+        per_step(&mono_snap),
+        per_step(&chunk_snap),
+    );
+    Json::obj(vec![
+        ("short_requests", Json::num(n_short as f64)),
+        ("long_prompt_tokens", Json::num(long_len as f64)),
+        ("chunk_budget", Json::num(chunk_budget as f64)),
+        ("monolithic_tbt_ms", quantiles_ms_json(&mono_snap.tbt)),
+        ("chunked_tbt_ms", quantiles_ms_json(&chunk_snap.tbt)),
+        ("monolithic_prefill_tokens_per_step", Json::num(per_step(&mono_snap))),
+        ("chunked_prefill_tokens_per_step", Json::num(per_step(&chunk_snap))),
+        ("chunked_prefill_chunks", Json::num(chunk_snap.prefill_chunks as f64)),
+        ("chunked_tokens", Json::num(chunk_snap.chunked_tokens as f64)),
+        ("tbt_p99_ratio_chunked_vs_monolithic", Json::num(tbt_ratio)),
     ])
 }
 
@@ -486,6 +578,13 @@ fn run_child(out_path: &str) {
         Json::Null
     };
 
+    // --- chunked prefill: long prompt mid-decode (monolithic vs chunked) ---
+    let chunked_prefill = if threads == 1 || threads == np {
+        chunked_prefill_row(fast)
+    } else {
+        Json::Null
+    };
+
     let fragment = Json::obj(vec![
         ("num_threads", Json::num(threads as f64)),
         ("dispatch", dispatch),
@@ -493,6 +592,7 @@ fn run_child(out_path: &str) {
         ("engine", Json::Arr(engine_rows)),
         ("prefix_cache", prefix_cache),
         ("preemption", preemption),
+        ("chunked_prefill", chunked_prefill),
     ]);
     std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
 }
@@ -588,6 +688,22 @@ fn run_parent() {
         })
         .unwrap_or((0.0, 0.0, 0.0));
 
+    // Chunked-prefill acceptance from the max-thread fragment: the decode
+    // TBT tail of the chunked run relative to monolithic, and the prefill
+    // tokens a fused step carried (bounded by the chunk budget, not the
+    // prompt length).
+    let (chunked_tbt_p99_ratio, chunked_tok_per_step, mono_tok_per_step) = fragments
+        .last()
+        .map(|frag| {
+            let c = frag.get("chunked_prefill");
+            (
+                c.get("tbt_p99_ratio_chunked_vs_monolithic").as_f64().unwrap_or(0.0),
+                c.get("chunked_prefill_tokens_per_step").as_f64().unwrap_or(0.0),
+                c.get("monolithic_prefill_tokens_per_step").as_f64().unwrap_or(0.0),
+            )
+        })
+        .unwrap_or((0.0, 0.0, 0.0));
+
     let report = Json::obj(vec![
         ("bench", Json::str("decode_throughput")),
         ("fast", Json::Bool(fast)),
@@ -604,6 +720,9 @@ fn run_parent() {
                 ("preemptions_overload_max_threads", Json::num(preemptions)),
                 ("recomputed_tokens_overload_max_threads", Json::num(recomputed_tokens)),
                 ("overload_throughput_ratio_max_threads", Json::num(overload_ratio)),
+                ("chunked_prefill_tbt_p99_ratio_max_threads", Json::num(chunked_tbt_p99_ratio)),
+                ("chunked_prefill_tokens_per_step_max_threads", Json::num(chunked_tok_per_step)),
+                ("monolithic_prefill_tokens_per_step_max_threads", Json::num(mono_tok_per_step)),
                 ("target", Json::num(2.0)),
             ]),
         ),
@@ -629,6 +748,12 @@ fn run_parent() {
          {recomputed_tokens:.0} tokens recomputed, {:.0}% of ample-pool throughput \
          retained (identical generations — invariant 5)",
         overload_ratio * 100.0
+    );
+    println!(
+        "chunked prefill at {np} threads: tbt p99 at {:.2}x of monolithic, \
+         prefill tok/step {mono_tok_per_step:.1} -> {chunked_tok_per_step:.1} \
+         (identical generations — invariant 6)",
+        chunked_tbt_p99_ratio
     );
 }
 

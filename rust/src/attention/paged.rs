@@ -1,19 +1,26 @@
-//! Batched paged attention — the decode-time operator of the serving
-//! engine ([`crate::engine`]).
+//! Batched paged attention — the decode- and prefill-time operator of the
+//! serving engine ([`crate::engine`]).
 //!
-//! One call attends every active sequence's single query row against its
-//! own K/V history, where histories live in a shared block pool (vLLM-style
-//! paged attention) instead of per-sequence contiguous buffers. The block
-//! table supplies the indirection; arithmetic is kept *exactly* the same as
-//! the contiguous cached path (`model::transformer::attend_cached`) — same
-//! dot-product, max-subtraction, and accumulation order — so paged batched
-//! decode is bit-identical to per-sequence decode for both MHA and BDA
-//! (the paper's losslessness carried through the serving layer).
+//! One call attends every active sequence's query rows against its own K/V
+//! history, where histories live in a shared block pool (vLLM-style paged
+//! attention) instead of per-sequence contiguous buffers. A sequence
+//! contributes [`PagedSeq::q_rows`] consecutive query rows: one for a
+//! decode step, N for a prefill chunk — causal masking falls out of the
+//! per-row visible length (row `j` of a sequence whose pool holds `len`
+//! tokens sees exactly `len - q_rows + j + 1` of them), so prompt chunks
+//! and decode steps ride the same kernel in one fused batched call. The
+//! block table supplies the indirection; arithmetic is kept *exactly* the
+//! same as the contiguous cached path
+//! (`model::transformer::attend_cached`) — same dot-product,
+//! max-subtraction, and accumulation order — so paged batched decode is
+//! bit-identical to per-sequence decode and chunked prefill is
+//! bit-identical to monolithic prefill, for both MHA and BDA (the paper's
+//! losslessness carried through the serving layer).
 //!
 //! # The blocked parallel kernel and its bit-exactness contract
 //!
 //! [`paged_attention_decode`] runs a *blocked* kernel parallelized over
-//! independent `(sequence, head)` work items on the **persistent parked
+//! independent `(query row, head)` work items on the **persistent parked
 //! worker pool** ([`crate::util::threadpool::ThreadPool`]; the process
 //! pool sized by `BDA_NUM_THREADS` by default, or an engine-owned pool via
 //! [`paged_attention_decode_on`]):
@@ -30,16 +37,19 @@
 //!   synchronization is needed on the output.
 //!
 //! **Invariant (the contract every change here must keep):** within one
-//! `(sequence, head)` work item, tokens are visited in ascending position
-//! order and every float operation — dot-product accumulation, running max,
-//! `exp`/sum, weighted-V accumulation — happens in exactly the order of the
-//! retained serial reference [`paged_attention_decode_serial`]. Work items
-//! never share accumulators. Therefore the parallel output is bit-identical
-//! to the serial reference at *any* worker count — on the shared process
-//! pool or a dedicated one — and determinism across `BDA_NUM_THREADS`
-//! settings is enforced by tests and CI. The full set of serving-layer
-//! invariants (paged == per-sequence decode, parallel == serial, COW fork
-//! semantics) is stated in one place in [`crate::engine`].
+//! `(query row, head)` work item, visible tokens are visited in ascending
+//! position order and every float operation — dot-product accumulation,
+//! running max, `exp`/sum, weighted-V accumulation — happens in exactly the
+//! order of the retained serial reference
+//! [`paged_attention_decode_serial`]. Work items never share accumulators,
+//! and a row's arithmetic never depends on how many sibling rows share its
+//! call (a chunk of N rows equals N single-row calls, bit for bit).
+//! Therefore the parallel output is bit-identical to the serial reference
+//! at *any* worker count — on the shared process pool or a dedicated one —
+//! and determinism across `BDA_NUM_THREADS` settings is enforced by tests
+//! and CI. The full set of serving-layer invariants (paged == per-sequence
+//! decode, parallel == serial, COW fork semantics, chunked == monolithic
+//! prefill) is stated in one place in [`crate::engine`].
 
 use super::AttnShape;
 use crate::tensor::Tensor;
@@ -67,13 +77,23 @@ impl<'a> PagedLayerView<'a> {
     }
 }
 
-/// One sequence's view for a batched decode step: its block table and its
-/// K/V length *including* the token being decoded (whose K/V row must
-/// already be written to storage).
+/// One sequence's view for a fused batched step: its block table, its K/V
+/// length *including* every token being processed this call (whose K/V
+/// rows must already be written to storage), and how many query rows it
+/// contributes to the batch.
+///
+/// A decode step is `q_rows == 1`; a prefill chunk is `q_rows == n` for an
+/// `n`-token chunk. Causal masking is positional: the sequence's query row
+/// `j` (0-based within its chunk) attends over the first
+/// `len - q_rows + j + 1` pool rows, i.e. the resident prefix plus its own
+/// position — exactly what `attend_cached` sees with
+/// `prior = len - q_rows`.
 #[derive(Clone, Copy, Debug)]
 pub struct PagedSeq<'a> {
     pub blocks: &'a [usize],
     pub len: usize,
+    /// Query rows this sequence contributes to the batched call (≥ 1).
+    pub q_rows: usize,
 }
 
 thread_local! {
@@ -92,6 +112,13 @@ fn validate(layer: &PagedLayerView, seqs: &[PagedSeq]) {
     assert!(bs > 0, "paged attention: block_size must be positive");
     for (i, seq) in seqs.iter().enumerate() {
         assert!(seq.len > 0, "paged attention: seq {i} has empty K/V history");
+        assert!(seq.q_rows > 0, "paged attention: seq {i} has zero query rows");
+        assert!(
+            seq.q_rows <= seq.len,
+            "paged attention: seq {i} q_rows {} exceeds K/V len {}",
+            seq.q_rows,
+            seq.len
+        );
         assert!(
             seq.len <= seq.blocks.len() * bs,
             "paged attention: seq {i} len {} exceeds block table capacity {}",
@@ -111,12 +138,13 @@ fn validate(layer: &PagedLayerView, seqs: &[PagedSeq]) {
     }
 }
 
-/// Batched paged attention over one layer: row `i` of `q` attends over the
-/// first `seqs[i].len` K/V rows of sequence `i`, gathered through its block
-/// table. Returns the concatenated per-head outputs (B × width), ready for
-/// the output projection.
+/// Batched paged attention over one layer: sequence `i` contributes
+/// `seqs[i].q_rows` consecutive rows of `q` (in batch order), each
+/// causally attending over its visible prefix of the sequence's K/V rows,
+/// gathered through the block table. Returns the concatenated per-head
+/// outputs (`sum(q_rows)` × width), ready for the output projection.
 ///
-/// Runs the blocked kernel in parallel over `(sequence, head)` work items
+/// Runs the blocked kernel in parallel over `(query row, head)` work items
 /// on the process-wide parked pool with up to `BDA_NUM_THREADS` workers;
 /// output is bit-identical to [`paged_attention_decode_serial`] at any
 /// worker count (see module docs).
@@ -163,52 +191,63 @@ pub fn paged_attention_decode_on(
     s: AttnShape,
     workers: usize,
 ) -> Tensor {
-    let b = q.rows();
-    assert_eq!(seqs.len(), b, "one PagedSeq per query row");
+    let total_rows: usize = seqs.iter().map(|seq| seq.q_rows).sum();
+    assert_eq!(q.rows(), total_rows, "query rows must equal the summed per-seq q_rows");
     let width = s.proj_width();
     assert_eq!(q.cols(), width, "query width mismatch");
     assert_eq!(layer.width, width, "storage width mismatch");
     validate(layer, seqs);
 
+    // (sequence index, visible K/V length) per global query row, in batch
+    // order — the only per-row state the work items need.
+    let mut rows: Vec<(usize, usize)> = Vec::with_capacity(total_rows);
+    for (i, seq) in seqs.iter().enumerate() {
+        for j in 0..seq.q_rows {
+            rows.push((i, seq.len - seq.q_rows + j + 1));
+        }
+    }
+
     let scale = 1.0 / (s.d_h as f32).sqrt();
     let n_heads = s.n_heads;
     let d_h = s.d_h;
-    let mut out = Tensor::zeros(&[b, width]);
+    let mut out = Tensor::zeros(&[total_rows, width]);
     let out_ptr = SendPtr(out.data.as_mut_ptr());
     let qd = &q.data;
-    pool.run(b * n_heads, workers, |w| {
-        let i = w / n_heads;
+    pool.run(total_rows * n_heads, workers, |w| {
+        let r = w / n_heads;
         let h = w % n_heads;
+        let (i, visible) = rows[r];
         let off = h * d_h;
-        let qrow = &qd[i * width + off..i * width + off + d_h];
-        // SAFETY: work item (i, h) writes only out[i*width+off .. +d_h];
+        let qrow = &qd[r * width + off..r * width + off + d_h];
+        // SAFETY: work item (r, h) writes only out[r*width+off .. +d_h];
         // these d_h-wide regions are pairwise disjoint across work items.
         let orow =
-            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * width + off), d_h) };
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * width + off), d_h) };
         SCORE_SCRATCH.with(|cell| {
             let mut scores = cell.borrow_mut();
-            attend_head_blocked(qrow, layer, &seqs[i], off, d_h, scale, &mut scores, orow);
+            attend_head_blocked(qrow, layer, &seqs[i], visible, off, d_h, scale, &mut scores, orow);
         });
     });
     out
 }
 
-/// One `(sequence, head)` work item of the blocked kernel: walk the K/V
-/// history block by block (contiguous rows within a block), scoring into
-/// the per-worker scratch, then softmax + weighted-V accumulate in the same
-/// ascending-token order as the serial reference. `orow` must be zeroed.
+/// One `(query row, head)` work item of the blocked kernel: walk the
+/// row's `visible`-token causal prefix block by block (contiguous rows
+/// within a block), scoring into the per-worker scratch, then softmax +
+/// weighted-V accumulate in the same ascending-token order as the serial
+/// reference. `orow` must be zeroed.
 #[allow(clippy::too_many_arguments)]
 fn attend_head_blocked(
     qrow: &[f32],
     layer: &PagedLayerView,
     seq: &PagedSeq,
+    visible: usize,
     off: usize,
     d_h: usize,
     scale: f32,
     scores: &mut Vec<f32>,
     orow: &mut [f32],
 ) {
-    let visible = seq.len;
     let bs = layer.block_size;
     let width = layer.width;
     scores.clear();
@@ -269,40 +308,44 @@ pub fn paged_attention_decode_serial(
     seqs: &[PagedSeq],
     s: AttnShape,
 ) -> Tensor {
-    let b = q.rows();
-    assert_eq!(seqs.len(), b, "one PagedSeq per query row");
+    let total_rows: usize = seqs.iter().map(|seq| seq.q_rows).sum();
+    assert_eq!(q.rows(), total_rows, "query rows must equal the summed per-seq q_rows");
     let width = s.proj_width();
     assert_eq!(q.cols(), width, "query width mismatch");
     assert_eq!(layer.width, width, "storage width mismatch");
     validate(layer, seqs);
     let scale = 1.0 / (s.d_h as f32).sqrt();
-    let mut out = Tensor::zeros(&[b, width]);
+    let mut out = Tensor::zeros(&[total_rows, width]);
     for h in 0..s.n_heads {
         let off = h * s.d_h;
-        for i in 0..b {
-            let visible = seqs[i].len;
-            let qrow = &q.data[i * width + off..i * width + off + s.d_h];
-            let mut scores = vec![0.0f32; visible];
-            for (t, sc) in scores.iter_mut().enumerate() {
-                let base = layer.row_offset(seqs[i].blocks, t) + off;
-                let krow = &layer.k[base..base + s.d_h];
-                *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
-            }
-            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0;
-            for v in scores.iter_mut() {
-                *v = (*v - max).exp();
-                sum += *v;
-            }
-            let inv = 1.0 / sum;
-            let orow = &mut out.data[i * width + off..i * width + off + s.d_h];
-            for (t, sc) in scores.iter().enumerate() {
-                let w = sc * inv;
-                let base = layer.row_offset(seqs[i].blocks, t) + off;
-                let vrow = &layer.v[base..base + s.d_h];
-                for (o, vv) in orow.iter_mut().zip(vrow) {
-                    *o += w * vv;
+        let mut r = 0usize;
+        for seq in seqs {
+            for j in 0..seq.q_rows {
+                let visible = seq.len - seq.q_rows + j + 1;
+                let qrow = &q.data[r * width + off..r * width + off + s.d_h];
+                let mut scores = vec![0.0f32; visible];
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    let base = layer.row_offset(seq.blocks, t) + off;
+                    let krow = &layer.k[base..base + s.d_h];
+                    *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                 }
+                let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0;
+                for v in scores.iter_mut() {
+                    *v = (*v - max).exp();
+                    sum += *v;
+                }
+                let inv = 1.0 / sum;
+                let orow = &mut out.data[r * width + off..r * width + off + s.d_h];
+                for (t, sc) in scores.iter().enumerate() {
+                    let w = sc * inv;
+                    let base = layer.row_offset(seq.blocks, t) + off;
+                    let vrow = &layer.v[base..base + s.d_h];
+                    for (o, vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+                r += 1;
             }
         }
     }
@@ -368,8 +411,8 @@ mod tests {
 
         let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
         let seqs = [
-            PagedSeq { blocks: tables[0], len: lens[0] },
-            PagedSeq { blocks: tables[1], len: lens[1] },
+            PagedSeq { blocks: tables[0], len: lens[0], q_rows: 1 },
+            PagedSeq { blocks: tables[1], len: lens[1], q_rows: 1 },
         ];
         let out = paged_attention_decode(&q, &layer, &seqs, s);
 
@@ -394,7 +437,8 @@ mod tests {
         let mut pv = vec![0.0f32; 4 * 2 * width];
         scatter(&mut pk, &mut pv, &k.data, &v.data, 1, width, 2, &[3]);
         let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
-        let out = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[3], len: 1 }], s);
+        let seqs = [PagedSeq { blocks: &[3], len: 1, q_rows: 1 }];
+        let out = paged_attention_decode(&q, &layer, &seqs, s);
         assert_eq!(out.data, v.data);
     }
 
@@ -417,7 +461,7 @@ mod tests {
             outs.push(paged_attention_decode(
                 &q,
                 &layer,
-                &[PagedSeq { blocks: table, len }],
+                &[PagedSeq { blocks: table, len, q_rows: 1 }],
                 s,
             ));
         }
@@ -447,13 +491,108 @@ mod tests {
         let seqs: Vec<PagedSeq> = lens
             .iter()
             .zip(tables.iter())
-            .map(|(&len, &blocks)| PagedSeq { blocks, len })
+            .map(|(&len, &blocks)| PagedSeq { blocks, len, q_rows: 1 })
             .collect();
         let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
         for workers in [1, 2, 8] {
             let par = paged_attention_decode_with_workers(&q, &layer, &seqs, s, workers);
             assert_eq!(par, serial, "workers {workers} must be bit-identical to serial");
         }
+    }
+
+    #[test]
+    fn multi_row_chunk_matches_single_row_sweep() {
+        // A chunk of N query rows must equal N single-row calls bit for
+        // bit: row j sees exactly the first j+1 tokens (causal), and its
+        // arithmetic is independent of how many sibling rows share the
+        // call. This is the kernel-level statement of invariant 6
+        // (chunked prefill == monolithic prefill).
+        let s = AttnShape::new(16, 2, 4);
+        let width = s.proj_width();
+        let (block_size, len) = (4usize, 7usize);
+        let table: &[usize] = &[2, 0];
+        let q = Tensor::randn(&[len, width], 1.0, 61);
+        let k = Tensor::randn(&[len, width], 1.0, 62);
+        let v = Tensor::randn(&[len, width], 1.0, 63);
+        let mut pk = vec![0.0f32; 4 * block_size * width];
+        let mut pv = vec![0.0f32; 4 * block_size * width];
+        scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+
+        let chunk =
+            paged_attention_decode(&q, &layer, &[PagedSeq { blocks: table, len, q_rows: len }], s);
+        for r in 0..len {
+            let qr = q.slice_rows(r, r + 1);
+            let single = paged_attention_decode(
+                &qr,
+                &layer,
+                &[PagedSeq { blocks: table, len: r + 1, q_rows: 1 }],
+                s,
+            );
+            assert_eq!(chunk.row(r), single.row(0), "row {r} must match its single-row call");
+            let refr = reference_row(q.row(r), &k.data, &v.data, r + 1, s);
+            assert_eq!(chunk.row(r), &refr[..], "row {r} must match the contiguous reference");
+        }
+    }
+
+    #[test]
+    fn mixed_decode_and_chunk_rows_parallel_matches_serial() {
+        // A fused batch of decode rows (q_rows = 1) and prefill chunks
+        // (q_rows > 1, including a chunk with resident prior context) must
+        // be bit-identical to the serial reference at every worker count.
+        let s = AttnShape::new(24, 3, 8);
+        let width = s.proj_width();
+        let (block_size, num_blocks) = (4usize, 16usize);
+        let lens = [5usize, 9, 1, 8];
+        let q_rows = [1usize, 9, 1, 3]; // decode, whole-prompt chunk, decode, tail chunk
+        let tables: [&[usize]; 4] = [&[9, 1], &[3, 11, 6], &[0], &[7, 12]];
+        let total: usize = q_rows.iter().sum();
+        let q = Tensor::randn(&[total, width], 1.0, 71);
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        for (i, (&len, table)) in lens.iter().zip(tables.iter()).enumerate() {
+            let k = Tensor::randn(&[len, width], 1.0, 80 + i as u64);
+            let v = Tensor::randn(&[len, width], 1.0, 90 + i as u64);
+            scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        }
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let seqs: Vec<PagedSeq> = lens
+            .iter()
+            .zip(q_rows.iter())
+            .zip(tables.iter())
+            .map(|((&len, &q_rows), &blocks)| PagedSeq { blocks, len, q_rows })
+            .collect();
+        let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+        for workers in [1, 2, 8] {
+            let par = paged_attention_decode_with_workers(&q, &layer, &seqs, s, workers);
+            assert_eq!(par, serial, "workers {workers} must be bit-identical to serial");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero query rows")]
+    fn zero_query_rows_rejected() {
+        let s = AttnShape::new(8, 1, 4);
+        let width = s.proj_width();
+        let pk = vec![0.0f32; 4 * 2 * width];
+        let pv = pk.clone();
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let q = Tensor::zeros(&[0, width]);
+        let seqs = [PagedSeq { blocks: &[0], len: 1, q_rows: 0 }];
+        let _ = paged_attention_decode(&q, &layer, &seqs, s);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds K/V len")]
+    fn q_rows_exceeding_len_rejected() {
+        let s = AttnShape::new(8, 1, 4);
+        let width = s.proj_width();
+        let pk = vec![0.0f32; 4 * 2 * width];
+        let pv = pk.clone();
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let q = Tensor::zeros(&[2, width]);
+        let seqs = [PagedSeq { blocks: &[0], len: 1, q_rows: 2 }];
+        let _ = paged_attention_decode(&q, &layer, &seqs, s);
     }
 
     #[test]
@@ -465,7 +604,8 @@ mod tests {
         let pv = pk.clone();
         let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
         let q = Tensor::zeros(&[1, width]);
-        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[0], len: 0 }], s);
+        let seqs = [PagedSeq { blocks: &[0], len: 0, q_rows: 1 }];
+        let _ = paged_attention_decode(&q, &layer, &seqs, s);
     }
 
     #[test]
@@ -477,7 +617,8 @@ mod tests {
         let pv = pk.clone();
         let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
         let q = Tensor::zeros(&[1, width]);
-        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[0], len: 3 }], s);
+        let seqs = [PagedSeq { blocks: &[0], len: 3, q_rows: 1 }];
+        let _ = paged_attention_decode(&q, &layer, &seqs, s);
     }
 
     #[test]
@@ -489,6 +630,7 @@ mod tests {
         let pv = pk.clone();
         let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
         let q = Tensor::zeros(&[1, width]);
-        let _ = paged_attention_decode(&q, &layer, &[PagedSeq { blocks: &[9], len: 1 }], s);
+        let seqs = [PagedSeq { blocks: &[9], len: 1, q_rows: 1 }];
+        let _ = paged_attention_decode(&q, &layer, &seqs, s);
     }
 }

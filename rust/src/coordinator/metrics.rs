@@ -47,6 +47,12 @@ pub struct StepTiming {
     /// recompute cost of preemption (resume output stays bit-identical;
     /// engine invariant 5).
     pub recomputed_tokens: u64,
+    /// Prefill chunks fused into this batched step alongside the decode
+    /// rows (Sarathi-style continuous batching; engine invariant 6 keeps
+    /// the chunked output bitwise equal to a monolithic prefill).
+    pub prefill_chunks: u64,
+    /// Prompt tokens those chunks pushed through the step.
+    pub chunked_tokens: u64,
 }
 
 #[derive(Debug)]
@@ -80,6 +86,8 @@ struct Inner {
     preemptions: u64,
     resumes: u64,
     recomputed_tokens: u64,
+    prefill_chunks: u64,
+    chunked_tokens: u64,
     latency: Histogram,
     ttft: Histogram,
     /// Time-between-tokens: per-step gaps between consecutive tokens of
@@ -154,6 +162,11 @@ pub struct Snapshot {
     /// Tokens replayed through the prefill path by resumes — the
     /// recompute cost of graceful overload handling.
     pub recomputed_tokens: u64,
+    /// Prefill chunks fused into batched decode steps (chunked prefill /
+    /// continuous batching).
+    pub prefill_chunks: u64,
+    /// Prompt tokens processed through those fused chunks.
+    pub chunked_tokens: u64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
@@ -196,6 +209,8 @@ impl Metrics {
                 preemptions: 0,
                 resumes: 0,
                 recomputed_tokens: 0,
+                prefill_chunks: 0,
+                chunked_tokens: 0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
                 tbt: Histogram::latency(),
@@ -257,6 +272,8 @@ impl Metrics {
         g.preemptions += step.preemptions;
         g.resumes += step.resumes;
         g.recomputed_tokens += step.recomputed_tokens;
+        g.prefill_chunks += step.prefill_chunks;
+        g.chunked_tokens += step.chunked_tokens;
     }
 
     /// Lock-free: one relaxed counter update.
@@ -311,6 +328,8 @@ impl Metrics {
             preemptions: g.preemptions,
             resumes: g.resumes,
             recomputed_tokens: g.recomputed_tokens,
+            prefill_chunks: g.prefill_chunks,
+            chunked_tokens: g.chunked_tokens,
             latency_p50: g.latency.quantile(0.5),
             latency_p95: g.latency.quantile(0.95),
             latency_p99: g.latency.quantile(0.99),
@@ -357,6 +376,21 @@ impl Snapshot {
         Some(format!(
             "{} preempted, {} resumed, {} tokens recomputed",
             self.preemptions, self.resumes, self.recomputed_tokens,
+        ))
+    }
+
+    /// Human-readable chunked-prefill line, or `None` when prefill never
+    /// ran chunked (budget unbounded with no fused steps, or a backend
+    /// without chunking support).
+    pub fn chunked_prefill_line(&self) -> Option<String> {
+        if self.prefill_chunks == 0 && self.chunked_tokens == 0 {
+            return None;
+        }
+        Some(format!(
+            "{} chunks, {} prompt tokens ({:.1} tok/chunk)",
+            self.prefill_chunks,
+            self.chunked_tokens,
+            ratio(self.chunked_tokens as f64, self.prefill_chunks as f64),
         ))
     }
 
@@ -417,6 +451,9 @@ impl Snapshot {
         };
         if let Some(line) = self.preemption_line() {
             extra.push_str(&format!(" | preemption: {line}"));
+        }
+        if let Some(line) = self.chunked_prefill_line() {
+            extra.push_str(&format!(" | chunked prefill: {line}"));
         }
         if let Some(line) = self.tbt_line() {
             extra.push_str(&format!(" | tbt {line}"));
@@ -576,6 +613,26 @@ mod tests {
         assert!(line.contains("2 preempted"));
         assert!(line.contains("31 tokens recomputed"));
         assert!(s.report().contains("preemption"));
+    }
+
+    #[test]
+    fn chunked_prefill_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        assert!(m.snapshot().chunked_prefill_line().is_none(), "no chunks yet");
+        assert!(!m.snapshot().report().contains("chunked prefill"));
+        let step = |chunks, tokens| StepTiming {
+            prefill_chunks: chunks,
+            chunked_tokens: tokens,
+            ..Default::default()
+        };
+        m.decode_timing(step(1, 512), 0.0);
+        m.decode_timing(step(2, 520), 0.0);
+        let s = m.snapshot();
+        assert_eq!((s.prefill_chunks, s.chunked_tokens), (3, 1032));
+        let line = s.chunked_prefill_line().expect("line present");
+        assert!(line.contains("3 chunks"));
+        assert!(line.contains("1032 prompt tokens"));
+        assert!(s.report().contains("chunked prefill"));
     }
 
     #[test]

@@ -5,6 +5,17 @@
 //! record replayed through the prefill path (recompute-on-resume, bitwise
 //! — engine invariant 5).
 //!
+//! On backends that support it ([`Backend::supports_chunked_prefill`]),
+//! prompt prefill is **chunked**: admission only reserves blocks
+//! ([`Backend::begin_prefill`]), and the prompt's query rows are then fed
+//! through the same fused batched step as the active decodes, at most
+//! [`SchedulerConfig::prefill_chunk`] prompt tokens per step
+//! (Sarathi/vLLM-style continuous batching). A long prompt no longer
+//! stalls every active sequence for its full length — time-between-tokens
+//! stays bounded by the chunk budget — and the generated tokens are
+//! bit-identical at any budget (engine invariant 6). Preempted sequences
+//! resume through the same chunked path, ahead of the waiting queue.
+//!
 //! The backend abstraction separates coordination from compute so the same
 //! scheduler serves: the native Rust transformer (incremental KV decode),
 //! the PJRT artifact backend (AOT-compiled JAX model), and a mock backend
@@ -56,6 +67,23 @@ impl DecodeOutcome {
     }
 }
 
+/// One unit of work in a fused batched step ([`Backend::step`]): either a
+/// single-token decode for an active sequence, or a chunk of a sequence's
+/// prompt prefill. A chunk-capable backend runs both through the same
+/// batched forward pass — one embedding gather, batched GEMMs over every
+/// row, one multi-row paged-attention call per layer — so a prefill chunk
+/// costs the decodes riding the same step no extra passes.
+#[derive(Clone, Debug)]
+pub enum StepWork {
+    /// Append `token` to `seq`'s K/V and decode one row.
+    Decode { seq: SeqId, token: u32 },
+    /// Process prompt positions `start .. start + tokens.len()` of `seq`.
+    /// The sequence's blocks were reserved by [`Backend::begin_prefill`];
+    /// the returned logits row is the chunk's last position (only the
+    /// final chunk's row is sampled).
+    PrefillChunk { seq: SeqId, tokens: Vec<u32>, start: usize },
+}
+
 /// Model compute interface used by the scheduler.
 ///
 /// Not `Send` by itself (the PJRT wrapper types are thread-pinned); the
@@ -89,6 +117,39 @@ pub trait Backend {
     /// every step so stale timings are never re-reported.
     fn take_step_timing(&mut self) -> Option<StepTiming> {
         None
+    }
+    /// Whether this backend can run prompt prefill as [`StepWork::PrefillChunk`]
+    /// entries fused into batched steps. When `false` the scheduler uses
+    /// the monolithic [`Backend::prefill`] path unchanged.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+    /// Reserve a sequence's K/V blocks (adopting any cached prefix) without
+    /// running the forward pass; the prompt rows are then fed through
+    /// [`Backend::step`] as chunks. Returns the number of leading prompt
+    /// tokens already resident from a prefix-cache hit — the scheduler
+    /// starts chunking after them. Only meaningful when
+    /// [`Backend::supports_chunked_prefill`] is `true`.
+    fn begin_prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<usize> {
+        let _ = (seq, prompt);
+        anyhow::bail!("backend does not support chunked prefill")
+    }
+    /// One fused batched step over mixed decode + prefill-chunk work. The
+    /// default forwards pure-decode work to [`Backend::decode`]; backends
+    /// that advertise [`Backend::supports_chunked_prefill`] override it.
+    /// Returns one logits entry per work item, in order (`None` only for
+    /// preempted decode entries; a chunk entry's row is its last position).
+    fn step(&mut self, work: &[StepWork]) -> Result<DecodeOutcome> {
+        let batch: Vec<(SeqId, u32)> = work
+            .iter()
+            .map(|w| match w {
+                StepWork::Decode { seq, token } => Ok((*seq, *token)),
+                StepWork::PrefillChunk { seq, .. } => Err(anyhow::anyhow!(
+                    "backend does not support chunked prefill (chunk for seq {seq})"
+                )),
+            })
+            .collect::<Result<_>>()?;
+        self.decode(&batch)
     }
 }
 
@@ -146,12 +207,30 @@ pub struct SchedulerConfig {
     /// Optional stop token.
     pub eos_token: Option<u32>,
     pub kv: KvCacheConfig,
+    /// Prompt-token budget per batched step for chunked prefill (`0` =
+    /// unbounded: the whole remaining prompt in one chunk). Ignored on
+    /// backends without chunked-prefill support. Defaults from
+    /// `BDA_PREFILL_CHUNK` (unset → 512). Generated tokens are
+    /// bit-identical at any value (engine invariant 6); the budget only
+    /// trades prefill throughput against decode time-between-tokens.
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_active: 16, eos_token: None, kv: KvCacheConfig::default() }
+        SchedulerConfig {
+            max_active: 16,
+            eos_token: None,
+            kv: KvCacheConfig::default(),
+            prefill_chunk: prefill_chunk_from_env(),
+        }
     }
+}
+
+/// Per-step chunked-prefill token budget from `BDA_PREFILL_CHUNK`:
+/// `0` = unbounded, unset or unparseable = 512.
+pub fn prefill_chunk_from_env() -> usize {
+    std::env::var("BDA_PREFILL_CHUNK").ok().and_then(|v| v.parse::<usize>().ok()).unwrap_or(512)
 }
 
 struct ActiveSeq {
@@ -181,6 +260,33 @@ struct ParkedSeq {
     parked_at: Instant,
 }
 
+/// A sequence whose prompt (or preemption replay) is mid-chunked-prefill:
+/// its blocks are reserved ([`Backend::begin_prefill`]) and its remaining
+/// token rows are fed through batched steps under the per-step budget.
+/// It joins `active` when the last chunk completes.
+struct PrefillingSeq {
+    seq: SeqId,
+    /// The full token record being prefilled: the prompt for an
+    /// admission, `prompt + generated[..len-1]` for a resume.
+    tokens: Vec<u32>,
+    /// Leading tokens already resident (prefix-cache adoption at
+    /// `begin_prefill`, plus every chunk processed so far).
+    covered: usize,
+    kind: PrefillKind,
+}
+
+enum PrefillKind {
+    /// A fresh admission: the final chunk's logits row is sampled for the
+    /// first token. `prefill_begin` anchors the aggregate `prefill` span
+    /// (block reservation through final chunk) on the request's trace
+    /// track; the per-step `prefill_chunk` spans nest under it.
+    Admission { req: Request, prefill_begin: Instant },
+    /// A preempt→resume replay: the final chunk's logits are discarded
+    /// (the token they produce is already in the record) and the parked
+    /// [`ActiveSeq`] rejoins decode unchanged.
+    Resume { state: ActiveSeq, parked_at: Instant, resume_begin: Instant },
+}
+
 /// The continuous-batching engine.
 pub struct Scheduler<B: Backend> {
     pub backend: B,
@@ -195,6 +301,10 @@ pub struct Scheduler<B: Backend> {
     /// Preempted sequences awaiting resume, re-admitted ahead of the
     /// waiting queue (oldest admission first).
     preempted: Vec<ParkedSeq>,
+    /// Sequences mid-chunked-prefill (chunk-capable backends only).
+    /// Resumes are inserted at the front so they outrank queued
+    /// admissions, matching the monolithic resume priority.
+    prefilling: Vec<PrefillingSeq>,
     next_seq: SeqId,
     seq_of_req: HashMap<u64, SeqId>,
     metrics: Option<Arc<Metrics>>,
@@ -215,6 +325,7 @@ impl<B: Backend> Scheduler<B> {
             config,
             active: Vec::new(),
             preempted: Vec::new(),
+            prefilling: Vec::new(),
             next_seq: 1,
             seq_of_req: HashMap::new(),
             metrics: None,
@@ -238,6 +349,11 @@ impl<B: Backend> Scheduler<B> {
         self.preempted.len()
     }
 
+    /// Sequences whose prompt is mid-chunked-prefill (not yet decoding).
+    pub fn prefilling_count(&self) -> usize {
+        self.prefilling.len()
+    }
+
     /// Free blocks available to admission, from whichever allocator owns
     /// the pool truth (engine pool for pool-owning backends, the shadow
     /// otherwise).
@@ -253,7 +369,7 @@ impl<B: Backend> Scheduler<B> {
     }
 
     pub fn has_capacity_for(&self, req: &Request) -> bool {
-        if self.active.len() >= self.config.max_active {
+        if self.active.len() + self.prefilling.len() >= self.config.max_active {
             return false;
         }
         // Parked (preempted) sequences outrank the waiting queue: their
@@ -280,6 +396,34 @@ impl<B: Backend> Scheduler<B> {
         // to the admission path beyond one relaxed load.
         let admit_start = obs::enabled().then(Instant::now);
         let seq = self.next_seq;
+        if self.backend.supports_chunked_prefill() {
+            // Chunk-capable backends: reserve blocks (adopting any cached
+            // prefix) now; the prompt rows ride subsequent batched steps
+            // under the per-step budget. The first token is sampled when
+            // the final chunk lands.
+            let Ok(covered) = self.backend.begin_prefill(seq, &req.prompt) else {
+                return Err(req);
+            };
+            self.next_seq += 1;
+            self.seq_of_req.insert(req.id, seq);
+            if let Some(t0) = admit_start {
+                obs::span_at(
+                    Phase::Enqueue,
+                    req.id,
+                    req.arrival,
+                    t0.saturating_duration_since(req.arrival),
+                );
+                obs::span_at(Phase::Admit, req.id, t0, t0.elapsed());
+            }
+            let tokens = req.prompt.clone();
+            self.prefilling.push(PrefillingSeq {
+                seq,
+                tokens,
+                covered,
+                kind: PrefillKind::Admission { req, prefill_begin: Instant::now() },
+            });
+            return Ok(());
+        }
         // The shadow allocator is worst-case bookkeeping (no prefix
         // sharing, no eviction) for pool-less backends only; pool owners
         // retired it (`self.kv` is `None`) — their own allocator is the
@@ -343,7 +487,9 @@ impl<B: Backend> Scheduler<B> {
             return Ok(());
         }
         self.preempted.sort_unstable_by_key(|p| p.seq);
-        while !self.preempted.is_empty() && self.active.len() < self.config.max_active {
+        while !self.preempted.is_empty()
+            && self.active.len() + self.prefilling.len() < self.config.max_active
+        {
             let replay_len = {
                 let s = &self.preempted[0].state;
                 s.req.prompt.len() + s.generated.len().saturating_sub(1)
@@ -359,7 +505,7 @@ impl<B: Backend> Scheduler<B> {
                 );
             }
             if need > self.admission_free_blocks() {
-                if self.active.is_empty() {
+                if self.active.is_empty() && self.prefilling.is_empty() {
                     // Nothing left to complete or preempt, maximum
                     // reclaimable capacity reached, still short: the pool
                     // genuinely cannot serve this sequence.
@@ -380,6 +526,28 @@ impl<B: Backend> Scheduler<B> {
                 .chain(p.state.generated[..p.state.generated.len().saturating_sub(1)].iter())
                 .copied()
                 .collect();
+            if self.backend.supports_chunked_prefill() {
+                // Replay rides the chunked path like any prompt, but at
+                // the front of the chunk queue: resumes outrank queued
+                // admissions (same priority the monolithic path gives
+                // them by resuming before `admit` can run).
+                let covered = self.backend.begin_prefill(p.seq, &replay)?;
+                self.seq_of_req.insert(p.state.req.id, p.seq);
+                self.prefilling.insert(
+                    0,
+                    PrefillingSeq {
+                        seq: p.seq,
+                        tokens: replay,
+                        covered,
+                        kind: PrefillKind::Resume {
+                            state: p.state,
+                            parked_at: p.parked_at,
+                            resume_begin: Instant::now(),
+                        },
+                    },
+                );
+                continue;
+            }
             if let Some(kv) = &mut self.kv {
                 let _ = kv.register(p.seq, replay.len());
             }
@@ -420,18 +588,20 @@ impl<B: Backend> Scheduler<B> {
         }
     }
 
-    /// One decode iteration over all active sequences. Returns completed
+    /// One batched iteration: a decode row for every active sequence plus
+    /// prefill chunks (chunk-capable backends) under the per-step token
+    /// budget, fused into a single backend step. Returns completed
     /// responses.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
         // Parked sequences are re-admitted before anything else runs.
         self.try_resume()?;
-        if self.active.is_empty() {
+        if self.active.is_empty() && self.prefilling.is_empty() {
             return Ok(done);
         }
         // Finish check before decoding (covers max_new_tokens == 0/1).
         self.complete_finished(&mut done);
-        if self.active.is_empty() {
+        if self.active.is_empty() && self.prefilling.is_empty() {
             // No decode step will run, but admissions may have recorded
             // backend counters (e.g. prefix-cache hits for max_new <= 1
             // requests) — surface them rather than dropping the tail.
@@ -439,35 +609,63 @@ impl<B: Backend> Scheduler<B> {
             return Ok(done);
         }
 
-        let batch: Vec<(SeqId, u32)> = self
+        let decode_n = self.active.len();
+        let mut work: Vec<StepWork> = self
             .active
             .iter()
-            .map(|a| (self.seq_of_req[&a.req.id], a.last_token))
+            .map(|a| StepWork::Decode { seq: self.seq_of_req[&a.req.id], token: a.last_token })
             .collect();
-        if let Some(m) = &self.metrics {
-            m.decode_step(batch.len(), self.config.max_active);
+        // Prefill chunks ride the same step, FIFO over the prefilling
+        // queue, at most `prefill_chunk` prompt tokens total per step
+        // (0 = unbounded).
+        let mut budget =
+            if self.config.prefill_chunk == 0 { usize::MAX } else { self.config.prefill_chunk };
+        // (prefilling index, rows contributed this step), aligned with
+        // `work[decode_n..]`.
+        let mut chunk_rows: Vec<(usize, usize)> = Vec::new();
+        for (pi, p) in self.prefilling.iter().enumerate() {
+            if budget == 0 {
+                break;
+            }
+            let n = (p.tokens.len() - p.covered).min(budget);
+            budget -= n;
+            work.push(StepWork::PrefillChunk {
+                seq: p.seq,
+                tokens: p.tokens[p.covered..p.covered + n].to_vec(),
+                start: p.covered,
+            });
+            chunk_rows.push((pi, n));
+        }
+        if decode_n > 0 {
+            if let Some(m) = &self.metrics {
+                m.decode_step(decode_n, self.config.max_active);
+            }
         }
         let step_start = obs::enabled().then(Instant::now);
-        let outcome = self.backend.decode(&batch)?;
-        if let Some(t) = step_start {
-            obs::span_at(Phase::DecodeStep, batch.len() as u64, t, t.elapsed());
+        let outcome = self.backend.step(&work)?;
+        let step_elapsed = step_start.map(|t| t.elapsed());
+        if let (Some(t), Some(d)) = (step_start, step_elapsed) {
+            obs::span_at(Phase::DecodeStep, work.len() as u64, t, d);
         }
         anyhow::ensure!(
-            outcome.logits.len() == batch.len(),
-            "backend returned {} logit rows for a {}-sequence batch",
+            outcome.logits.len() == work.len(),
+            "backend returned {} logit rows for a {}-entry step",
             outcome.logits.len(),
-            batch.len(),
+            work.len(),
         );
         // The scheduler parks on the `None` logit rows; `preempted` is the
         // same information in id form (kept for tests/metrics consumers).
         // A backend that lets the two drift has a bug — catch it early.
         debug_assert!(
             {
-                let mut none_ids: Vec<SeqId> = batch
+                let mut none_ids: Vec<SeqId> = work[..decode_n]
                     .iter()
                     .zip(&outcome.logits)
                     .filter(|(_, l)| l.is_none())
-                    .map(|(&(id, _), _)| id)
+                    .map(|(w, _)| match w {
+                        StepWork::Decode { seq, .. } => *seq,
+                        StepWork::PrefillChunk { seq, .. } => *seq,
+                    })
                     .collect();
                 none_ids.sort_unstable();
                 let mut reported = outcome.preempted.clone();
@@ -476,10 +674,11 @@ impl<B: Backend> Scheduler<B> {
             },
             "backend's preempted list disagrees with its None logit rows"
         );
+        let mut logit_rows = outcome.logits.into_iter();
         let mut sample_secs = 0.0f64;
         let mut tbts: Vec<f64> = Vec::new();
         let stepped = std::mem::take(&mut self.active);
-        for (mut a, l) in stepped.into_iter().zip(outcome.logits) {
+        for (mut a, l) in stepped.into_iter().zip(&mut logit_rows) {
             let seq = self.seq_of_req[&a.req.id];
             let Some(l) = l else {
                 // Preempted by the backend: its engine-side state is gone
@@ -518,6 +717,39 @@ impl<B: Backend> Scheduler<B> {
             }
             self.active.push(a);
         }
+        // Advance the prefilling queue by the chunks that rode this step.
+        // Chunks are never preempted (their blocks were reserved up
+        // front), so every chunk entry has a logits row.
+        let mut finished: Vec<(usize, Vec<f32>)> = Vec::new();
+        for &(pi, rows) in &chunk_rows {
+            let l = logit_rows
+                .next()
+                .flatten()
+                .ok_or_else(|| anyhow::anyhow!("backend dropped a prefill-chunk logits row"))?;
+            let p = &mut self.prefilling[pi];
+            if let (Some(t), Some(d)) = (step_start, step_elapsed) {
+                let id = match &p.kind {
+                    PrefillKind::Admission { req, .. } => req.id,
+                    PrefillKind::Resume { state, .. } => state.req.id,
+                };
+                obs::span_at(Phase::PrefillChunk, id, t, d);
+            }
+            p.covered += rows;
+            if p.covered == p.tokens.len() {
+                // Only the final chunk's logits row is meaningful: it is
+                // the prompt's last position.
+                finished.push((pi, l));
+            }
+        }
+        // Remove back-to-front (indices stay valid), activate in FIFO
+        // order.
+        let mut activated: Vec<(PrefillingSeq, Vec<f32>)> = Vec::new();
+        for (pi, l) in finished.into_iter().rev() {
+            activated.push((self.prefilling.remove(pi), l));
+        }
+        for (p, l) in activated.into_iter().rev() {
+            self.activate_prefilled(p, l);
+        }
         if let Some(m) = &self.metrics {
             m.record_tbts(&tbts);
         }
@@ -527,6 +759,52 @@ impl<B: Backend> Scheduler<B> {
         // load when tracing has never been enabled).
         obs::flush();
         Ok(done)
+    }
+
+    /// A sequence's final prefill chunk landed: sample the first token
+    /// (admissions) or discard the replayed logits (resumes) and move the
+    /// sequence to the active set.
+    fn activate_prefilled(&mut self, p: PrefillingSeq, logits: Vec<f32>) {
+        match p.kind {
+            PrefillKind::Admission { req, prefill_begin } => {
+                if obs::enabled() {
+                    obs::span_at(Phase::Prefill, req.id, prefill_begin, prefill_begin.elapsed());
+                }
+                let first = sample(&logits, &req);
+                let first_at = Instant::now();
+                let mut seq_state = ActiveSeq {
+                    last_token: first,
+                    generated: vec![first],
+                    first_token_at: Some(first_at),
+                    last_token_at: Some(first_at),
+                    req,
+                };
+                // A request asking for 0 tokens completes immediately on
+                // the next step; normalize to at least the first token.
+                if seq_state.req.max_new_tokens == 0 {
+                    seq_state.generated.clear();
+                }
+                if obs::enabled() && !seq_state.generated.is_empty() {
+                    obs::event_at(Phase::Token, seq_state.req.id, first_at);
+                }
+                self.active.push(seq_state);
+            }
+            PrefillKind::Resume { state, parked_at, resume_begin } => {
+                // The replay's last logits row reproduces a token already
+                // in the record — drop it; decode continues from
+                // `state.last_token` exactly where preemption struck.
+                drop(logits);
+                if obs::enabled() {
+                    let id = state.req.id;
+                    let parked = resume_begin.saturating_duration_since(parked_at);
+                    obs::span_at(Phase::Park, id, parked_at, parked);
+                    obs::span_at(Phase::Resume, id, resume_begin, resume_begin.elapsed());
+                }
+                self.pending_resumes += 1;
+                self.pending_recomputed += p.tokens.len() as u64;
+                self.active.push(state);
+            }
+        }
     }
 
     fn complete_finished(&mut self, done: &mut Vec<Response>) {
@@ -562,11 +840,12 @@ impl<B: Backend> Scheduler<B> {
         }
     }
 
-    /// Drain: run steps until every active *and parked* sequence
-    /// completes.
+    /// Drain: run steps until every active, parked, *and prefilling*
+    /// sequence completes.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
-        while !self.active.is_empty() || !self.preempted.is_empty() {
+        while !self.active.is_empty() || !self.preempted.is_empty() || !self.prefilling.is_empty()
+        {
             out.extend(self.step()?);
         }
         Ok(out)
@@ -685,6 +964,7 @@ mod tests {
                 max_active,
                 eos_token: None,
                 kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+                ..SchedulerConfig::default()
             },
         )
     }
@@ -749,7 +1029,7 @@ mod tests {
             SchedulerConfig {
                 max_active: 4,
                 eos_token: Some(3), // seq 1 emits 1, 2, 3 -> stops at 3
-                kv: KvCacheConfig::default(),
+                ..SchedulerConfig::default()
             },
         );
         s.admit(Request::new(1, vec![0], 10)).unwrap();
@@ -865,6 +1145,7 @@ mod tests {
                 max_active: 4,
                 eos_token: None,
                 kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+                ..SchedulerConfig::default()
             },
         )
     }
@@ -925,7 +1206,7 @@ mod tests {
         let kvc = KvCacheConfig { block_size: 4, num_blocks: 32 };
         let s = Scheduler::new(
             PagedNativeBackend::new(model, kvc),
-            SchedulerConfig { max_active: 4, eos_token: None, kv: kvc },
+            SchedulerConfig { max_active: 4, eos_token: None, kv: kvc, ..Default::default() },
         );
         assert!(s.kv.is_none(), "pool-owning backends must not get a shadow allocator");
         let mock = sched(4);

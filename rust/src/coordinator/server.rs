@@ -44,7 +44,7 @@ impl Server {
             let batcher = Batcher::new(config.batcher);
             loop {
                 // Admit a batch (don't block long if sequences are active).
-                let idle = if sched.active_count() > 0 {
+                let idle = if sched.active_count() + sched.prefilling_count() > 0 {
                     Duration::from_micros(100)
                 } else if q.is_closed() && q.is_empty() {
                     break;
@@ -63,7 +63,10 @@ impl Server {
                         match sched.admit(r) {
                             Ok(()) => {}
                             Err(r) => {
-                                if sched.active_count() == 0 && sched.preempted_count() == 0 {
+                                if sched.active_count() == 0
+                                    && sched.preempted_count() == 0
+                                    && sched.prefilling_count() == 0
+                                {
                                     // Can't ever admit: drop with rejection.
                                     m.rejected();
                                     break;
@@ -148,7 +151,11 @@ pub fn replay_trace<B: Backend>(
     sched.set_metrics(metrics.clone());
     let mut out = Vec::new();
     let mut pending: std::collections::VecDeque<Request> = trace.into();
-    while !pending.is_empty() || sched.active_count() > 0 || sched.preempted_count() > 0 {
+    while !pending.is_empty()
+        || sched.active_count() > 0
+        || sched.preempted_count() > 0
+        || sched.prefilling_count() > 0
+    {
         // Admit as many as capacity allows. Count an admission only when
         // it sticks: under overload (parked preempted sequences block the
         // queue) the head request is retried once per step, and counting
@@ -192,6 +199,7 @@ mod tests {
                 max_active: 8,
                 eos_token: None,
                 kv: KvCacheConfig { block_size: 4, num_blocks: 128 },
+                ..Default::default()
             },
         }
     }

@@ -7,11 +7,21 @@
 //! * a single [`crate::engine::PagedKvPool`] holding every sequence's K/V
 //!   in shared block-granular storage, leased through the ref-counted
 //!   [`BlockAllocator`];
-//! * **one batched decode step** for the whole active set: one embedding
+//! * **one batched step** for the whole active set — decode rows *and*
+//!   prompt prefill chunks fused together ([`StepWork`]): one embedding
 //!   gather, per layer one batched RMSNorm + one batched Q/K/V projection
-//!   GEMM + one batched paged-attention call + one batched output/FFN
-//!   pass, and a single logits GEMM against a cached transposed embedding
-//!   — B rows through every weight matrix instead of B separate passes;
+//!   GEMM + one batched multi-row paged-attention call + one batched
+//!   output/FFN pass, and a single logits GEMM against a cached
+//!   transposed embedding — all rows through every weight matrix instead
+//!   of separate passes per sequence or per phase;
+//! * **chunked prefill, zero-copy end to end**: [`Backend::begin_prefill`]
+//!   reserves a prompt's blocks (adopting any cached prefix in place),
+//!   then the prompt rows ride batched steps as
+//!   [`StepWork::PrefillChunk`] entries, each attending directly over the
+//!   block table with causal masking. There is no contiguous staging
+//!   `KvCache`, no O(prefix) gather on a prefix-cache hit, and no
+//!   monolithic prompt pass stalling active decodes — and any chunk
+//!   budget produces bit-identical generations (engine invariant 6);
 //! * ref-counted prefix sharing: [`PagedNativeBackend::fork`] duplicates
 //!   block *tables* only, so forked sequences dedup K/V memory, with
 //!   copy-on-write the first time a fork writes into a shared tail block;
@@ -54,8 +64,8 @@ use crate::coordinator::kv_cache::{
     AppendSlot, BlockAllocator, BlockId, KvCacheConfig, KvError, SeqId,
 };
 use crate::coordinator::metrics::StepTiming;
-use crate::coordinator::scheduler::{Backend, DecodeOutcome};
-use crate::model::transformer::{KvCache, Transformer};
+use crate::coordinator::scheduler::{Backend, DecodeOutcome, StepWork};
+use crate::model::transformer::Transformer;
 use crate::model::weights::FusedQkv;
 use crate::obs::{self, Phase};
 use crate::tensor::matmul::matmul;
@@ -238,66 +248,6 @@ impl PagedNativeBackend {
         self.alloc.used_blocks()
     }
 
-    /// Scatter a contiguous per-layer K/V cache (as produced by
-    /// `Transformer::prefill`) into this sequence's leased blocks,
-    /// starting at token position `start`. A cold prefill scatters from 0;
-    /// a prefix-cache hit scatters only the freshly computed tail —
-    /// positions below `start` live in shared (tree-held) blocks that
-    /// already hold bit-identical rows and must not be written.
-    fn scatter_prefill(&mut self, seq: SeqId, cache: &KvCache, start: usize) -> Result<()> {
-        let bs = self.alloc.config.block_size;
-        let blocks = self
-            .alloc
-            .seq_blocks(seq)
-            .ok_or_else(|| anyhow!("scatter: unknown seq {seq}"))?
-            .to_vec();
-        debug_assert_eq!(start % bs, 0, "tail scatter must start on a block boundary");
-        for (li, layer) in cache.layers.iter().enumerate() {
-            let width = layer.width;
-            debug_assert_eq!(width, self.pool.width(li));
-            for t in start..layer.len {
-                self.pool.write_row(
-                    li,
-                    blocks[t / bs],
-                    t % bs,
-                    &layer.k[t * width..(t + 1) * width],
-                    &layer.v[t * width..(t + 1) * width],
-                );
-            }
-        }
-        Ok(())
-    }
-
-    /// Rebuild a contiguous [`KvCache`] holding the first `tokens` rows of
-    /// every layer, gathered from the pool through `blocks` — the cached
-    /// prefix a hit sequence resumes from. The rows are bit-copies of what
-    /// a cold prefill of the same tokens would produce, so the tail
-    /// prefill continues from state identical to the cold path's.
-    ///
-    /// A hit therefore costs one O(prefix × width × layers) memcpy instead
-    /// of the cold path's O(prefix² × width + prefix × d²) attention +
-    /// GEMM work. The *storage* sharing is still zero-copy; only the tail
-    /// prefill's read path is contiguous. Making the tail prefill attend
-    /// directly over the paged view (multi-row paged attention) would
-    /// remove this copy entirely — a ROADMAP item.
-    fn gather_prefix(&self, blocks: &[BlockId], tokens: usize) -> KvCache {
-        let mut cache = KvCache::new(self.model.config.n_layers);
-        for (li, layer) in cache.layers.iter_mut().enumerate() {
-            let width = self.pool.width(li);
-            let view = self.pool.layer_view(li);
-            layer.width = width;
-            layer.len = tokens;
-            layer.k.reserve(tokens * width);
-            layer.v.reserve(tokens * width);
-            for t in 0..tokens {
-                let base = view.row_offset(blocks, t);
-                layer.k.extend_from_slice(&view.k[base..base + width]);
-                layer.v.extend_from_slice(&view.v[base..base + width]);
-            }
-        }
-        cache
-    }
-
     /// Evict one LRU zero-ref leaf from the prefix cache; false when there
     /// is no cache or nothing evictable.
     fn evict_one(&mut self) -> bool {
@@ -403,11 +353,30 @@ impl Backend for PagedNativeBackend {
         self.model.config.max_seq_len
     }
 
+    /// Monolithic prefill: reserve blocks, then run the whole uncovered
+    /// tail as a single unbounded chunk through the fused step path — the
+    /// same multi-row kernel chunked prefill uses, so "monolithic" is
+    /// literally the one-chunk special case (which is why any chunk budget
+    /// is bitwise-identical: engine invariant 6). No step timing is
+    /// recorded — a direct prefill is an admission, not a scheduler step.
     fn prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
         // GEMMs inside the prefill ride this engine's pool, not the
         // process-wide one (per-engine GEMM pools).
         let threads = Arc::clone(&self.threads);
-        threadpool::with_pool(&threads, || self.prefill_inner(seq, prompt))
+        threadpool::with_pool(&threads, || {
+            let covered = self.begin_prefill_inner(seq, prompt)?;
+            let work = [StepWork::PrefillChunk {
+                seq,
+                tokens: prompt[covered..].to_vec(),
+                start: covered,
+            }];
+            let out = self.step_inner(&work, false)?;
+            out.logits
+                .into_iter()
+                .next()
+                .flatten()
+                .ok_or_else(|| anyhow!("prefill seq {seq}: chunk produced no logits"))
+        })
     }
 
     /// The batched decode step: all sequences advance one token in one
@@ -416,8 +385,33 @@ impl Backend for PagedNativeBackend {
     /// preemptible sequence holds blocks: the youngest batch member is
     /// preempted (recompute-on-resume) and reported in the outcome.
     fn decode(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
+        let work: Vec<StepWork> =
+            seqs.iter().map(|&(seq, token)| StepWork::Decode { seq, token }).collect();
         let threads = Arc::clone(&self.threads);
-        threadpool::with_pool(&threads, || self.decode_inner(seqs))
+        threadpool::with_pool(&threads, || self.step_inner(&work, true))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Block reservation half of admission: prefix-cache lookup + adoption
+    /// + registration, no forward pass. Returns the number of leading
+    /// prompt tokens already resident (always < the prompt length — the
+    /// cache never covers the final token, so at least one chunk row
+    /// remains to produce the last-position logits).
+    fn begin_prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<usize> {
+        self.begin_prefill_inner(seq, prompt)
+    }
+
+    /// One fused batched step over mixed decode + prefill-chunk work —
+    /// the continuous-batching hot path. Decode entries behave exactly as
+    /// in [`Backend::decode`] (including preemption under pool
+    /// exhaustion); chunk entries never allocate (their blocks were
+    /// reserved by [`Backend::begin_prefill`]) and are never preempted.
+    fn step(&mut self, work: &[StepWork]) -> Result<DecodeOutcome> {
+        let threads = Arc::clone(&self.threads);
+        threadpool::with_pool(&threads, || self.step_inner(work, true))
     }
 
     fn release(&mut self, seq: SeqId) {
@@ -470,12 +464,17 @@ impl Backend for PagedNativeBackend {
 }
 
 impl PagedNativeBackend {
-    fn prefill_inner(&mut self, seq: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
+    /// Reserve `seq`'s blocks for `prompt`, adopting the longest cached
+    /// whole-block prefix zero-copy, and seed its history with the
+    /// adopted tokens (their K/V rows are resident; uncovered rows join
+    /// the history as their chunks are written, so preemption/release
+    /// never donates unwritten rows). Returns the covered token count.
+    fn begin_prefill_inner(&mut self, seq: SeqId, prompt: &[u32]) -> Result<usize> {
         if prompt.is_empty() {
             bail!("prefill: empty prompt for seq {seq}");
         }
         // Longest cached whole-block prefix (never the full prompt: at
-        // least one tail token is left so the tail prefill produces the
+        // least one tail token is left so the final chunk produces the
         // last-position logits).
         let hit = match self.prefix.as_mut() {
             Some(cache) => cache.lookup(prompt),
@@ -521,46 +520,37 @@ impl PagedNativeBackend {
             // prompt blocks instead of re-prefilling them.
             obs::instant(Phase::PrefixAdopt, adopted as u64);
         }
-
-        let logits = if adopted == 0 {
-            // Cold path: prompt processing reuses the reference prefill
-            // (identical logits by construction); the engine's batching
-            // win is the decode loop, where steps outnumber prefills
-            // max_new_tokens to one.
-            let mut cache = KvCache::new(self.model.config.n_layers);
-            let logits = self.model.prefill(&mut cache, prompt);
-            self.scatter_prefill(seq, &cache, 0)?;
-            logits
-        } else {
-            // Hit: resume from the cached rows (bit-copies of a cold
-            // prefill's) and run only the uncovered tail; scatter only the
-            // tail rows — the prefix blocks are shared and already hold
-            // identical data.
-            let covered = adopted * self.alloc.config.block_size;
-            let mut cache = self.gather_prefix(&hit, covered);
-            let logits = self.model.prefill(&mut cache, &prompt[covered..]);
-            self.scatter_prefill(seq, &cache, covered)?;
-            logits
-        };
+        let covered = adopted * self.alloc.config.block_size;
         if self.prefix.is_some() {
-            self.histories.insert(seq, prompt.to_vec());
+            // Only the resident prefix; chunk rows join as they are
+            // written (see `step_inner`).
+            self.histories.insert(seq, prompt[..covered].to_vec());
         }
-        Ok(logits.data)
+        Ok(covered)
     }
 
-    fn decode_inner(&mut self, seqs: &[(SeqId, u32)]) -> Result<DecodeOutcome> {
-        if seqs.is_empty() {
+    /// The fused batched step over mixed decode + prefill-chunk work.
+    /// `record_timing` is false only for the monolithic [`Backend::prefill`]
+    /// wrapper, whose single-chunk pass is an admission rather than a
+    /// scheduler step and must not surface as one in the metrics.
+    fn step_inner(&mut self, work: &[StepWork], record_timing: bool) -> Result<DecodeOutcome> {
+        if work.is_empty() {
             return Ok(DecodeOutcome { logits: Vec::new(), preempted: Vec::new() });
         }
-        let b = seqs.len();
+        let b = work.len();
         let d = self.model.config.d_model;
+        let bs = self.alloc.config.block_size;
 
-        // Phase 1 — lease a write slot per sequence (copy-on-write against
-        // forks). Boundary/COW allocations first evict cached prefixes
-        // under pool pressure; if the tree runs dry too, the **youngest**
-        // batch member (largest SeqId — admitted last) is preempted and
-        // its blocks reclaimed, so exhaustion parks low-priority work
-        // instead of erroring out of the whole step.
+        // Phase 1 — lease a write slot per *decode* entry (copy-on-write
+        // against forks). Chunk entries allocate nothing here: every
+        // block of a prefilling prompt was reserved by `begin_prefill`,
+        // which also makes them ineligible as preemption victims — their
+        // rows are mid-write and the scheduler owns their replay record
+        // only once they activate. Boundary/COW allocations first evict
+        // cached prefixes under pool pressure; if the tree runs dry too,
+        // the **youngest** decode entry (largest SeqId — admitted last)
+        // is preempted and its blocks reclaimed, so exhaustion parks
+        // low-priority work instead of erroring out of the whole step.
         let mut slots: Vec<Option<AppendSlot>> = vec![None; b];
         let mut parked = vec![false; b];
         let mut preempted: Vec<SeqId> = Vec::new();
@@ -568,7 +558,9 @@ impl PagedNativeBackend {
             if parked[i] {
                 continue;
             }
-            let (id, tok) = seqs[i];
+            let &StepWork::Decode { seq: id, token: tok } = &work[i] else {
+                continue;
+            };
             loop {
                 match self.append_evicting(id) {
                     Ok(slot) => {
@@ -583,25 +575,31 @@ impl PagedNativeBackend {
                         break;
                     }
                     Err(KvError::OutOfBlocks { .. }) => {
-                        let victim = (0..b)
-                            .filter(|&j| !parked[j])
-                            .max_by_key(|&j| seqs[j].0)
+                        let decode_seq = |j: usize| match work[j] {
+                            StepWork::Decode { seq, .. } => Some(seq),
+                            StepWork::PrefillChunk { .. } => None,
+                        };
+                        let candidates =
+                            || (0..b).filter(|&j| !parked[j] && decode_seq(j).is_some());
+                        let victim = candidates()
+                            .max_by_key(|&j| decode_seq(j))
                             .expect("the requester itself is a candidate");
-                        if seqs[victim].0 == id && (0..b).filter(|&j| !parked[j]).count() == 1 {
-                            // No lower-priority sequence holds blocks and
+                        let victim_seq = decode_seq(victim).unwrap();
+                        if victim_seq == id && candidates().count() == 1 {
+                            // No lower-priority decode holds blocks and
                             // the tree is dry: genuine exhaustion — this
-                            // sequence cannot grow even with the whole
-                            // pool to itself.
+                            // sequence cannot grow with everything
+                            // preemptible already reclaimed.
                             return Err(anyhow!(
                                 "decode seq {id}: out of KV blocks with no \
                                  preemptible sequence left"
                             ));
                         }
-                        self.preempt(seqs[victim].0, slots[victim].is_some());
+                        self.preempt(victim_seq, slots[victim].is_some());
                         parked[victim] = true;
                         slots[victim] = None;
-                        preempted.push(seqs[victim].0);
-                        if seqs[victim].0 == id {
+                        preempted.push(victim_seq);
+                        if victim_seq == id {
                             break; // the requester parked itself
                         }
                     }
@@ -610,30 +608,81 @@ impl PagedNativeBackend {
             }
         }
 
-        // Phase 2 — embed each survivor's last token at its position.
+        // Phase 2 — assemble the batched input: one embedded row per
+        // decode survivor (its last token at its final position), a row
+        // per chunk token at its prompt position. Every row also gets a
+        // K/V write target: the decode entry's freshly leased slot, or
+        // the chunk positions inside the blocks reserved at
+        // `begin_prefill` (adoption is block-aligned and chunking starts
+        // right after it, so chunk writes only touch private tail blocks
+        // — never shared prefix rows).
         let survivors: Vec<usize> = (0..b).filter(|&i| !parked[i]).collect();
         debug_assert!(!survivors.is_empty(), "phase 1 errors before parking everyone");
         let sb = survivors.len();
-        let mut x = Tensor::zeros(&[sb, d]);
-        let mut lens = Vec::with_capacity(sb);
-        for (row, &i) in survivors.iter().enumerate() {
-            let (id, tok) = seqs[i];
-            let len = self.alloc.seq_len(id).expect("survivor appended above");
-            let emb = self.model.embed_tokens(&[tok], len - 1);
-            x.row_mut(row).copy_from_slice(emb.row(0));
-            lens.push(len);
+        let mut prefill_chunks = 0u64;
+        let mut chunked_tokens = 0u64;
+        let mut total_rows = 0usize;
+        for &i in &survivors {
+            total_rows += match &work[i] {
+                StepWork::Decode { .. } => 1,
+                StepWork::PrefillChunk { tokens, .. } => tokens.len(),
+            };
         }
-        let sslots: Vec<AppendSlot> =
-            survivors.iter().map(|&i| slots[i].expect("survivor slot")).collect();
+        let mut x = Tensor::zeros(&[total_rows, d]);
+        // Per-survivor (seq, K/V length visible to its rows, query rows).
+        let mut meta: Vec<(SeqId, usize, usize)> = Vec::with_capacity(sb);
+        let mut write_targets: Vec<(BlockId, usize)> = Vec::with_capacity(total_rows);
+        let mut row = 0usize;
+        for &i in &survivors {
+            match &work[i] {
+                StepWork::Decode { seq, token } => {
+                    let len = self.alloc.seq_len(*seq).expect("survivor appended above");
+                    let emb = self.model.embed_tokens(&[*token], len - 1);
+                    x.row_mut(row).copy_from_slice(emb.row(0));
+                    let slot = slots[i].expect("survivor slot");
+                    write_targets.push((slot.block, slot.slot));
+                    meta.push((*seq, len, 1));
+                    row += 1;
+                }
+                StepWork::PrefillChunk { seq, tokens, start } => {
+                    let registered = self
+                        .alloc
+                        .seq_len(*seq)
+                        .ok_or_else(|| anyhow!("chunk for unregistered seq {seq}"))?;
+                    anyhow::ensure!(
+                        !tokens.is_empty() && start + tokens.len() <= registered,
+                        "chunk rows {}..{} out of bounds for seq {seq} ({registered} registered)",
+                        start,
+                        start + tokens.len(),
+                    );
+                    let emb = self.model.embed_tokens(tokens, *start);
+                    let blocks = self.alloc.seq_blocks(*seq).expect("registered above");
+                    for (k, t) in (*start..start + tokens.len()).enumerate() {
+                        x.row_mut(row + k).copy_from_slice(emb.row(k));
+                        write_targets.push((blocks[t / bs], t % bs));
+                    }
+                    if let Some(h) = self.histories.get_mut(seq) {
+                        debug_assert_eq!(h.len(), *start, "chunks must extend history in order");
+                        h.extend_from_slice(tokens);
+                    }
+                    meta.push((*seq, start + tokens.len(), tokens.len()));
+                    prefill_chunks += 1;
+                    chunked_tokens += tokens.len() as u64;
+                    row += tokens.len();
+                }
+            }
+        }
 
         // Block tables are final once every append above has run, so the
-        // gather views are built once and shared by all layers.
-        let views: Vec<PagedSeq> = survivors
+        // gather views are built once and shared by all layers. A chunk's
+        // visible length stops at its own last row — later prompt
+        // positions are registered but unwritten.
+        let views: Vec<PagedSeq> = meta
             .iter()
-            .zip(lens.iter())
-            .map(|(&i, &len)| PagedSeq {
-                blocks: self.alloc.seq_blocks(seqs[i].0).expect("registered above"),
+            .map(|&(seq, len, q_rows)| PagedSeq {
+                blocks: self.alloc.seq_blocks(seq).expect("registered above"),
                 len,
+                q_rows,
             })
             .collect();
 
@@ -650,13 +699,16 @@ impl PagedNativeBackend {
             let dt = t.elapsed();
             gemm_secs += dt.as_secs_f64();
             obs::span_at(Phase::Gemm, li as u64, t, dt);
-            for (i, slot) in sslots.iter().enumerate() {
+            // Every row's K/V lands before attention runs, so a chunk's
+            // rows see themselves and each other (causally masked by the
+            // kernel's per-row visible limit).
+            for (r, &(blk, slot)) in write_targets.iter().enumerate() {
                 self.pool.write_row(
                     li,
-                    slot.block,
-                    slot.slot,
-                    &k.data[i * width..(i + 1) * width],
-                    &v.data[i * width..(i + 1) * width],
+                    blk,
+                    slot,
+                    &k.data[r * width..(r + 1) * width],
+                    &v.data[r * width..(r + 1) * width],
                 );
             }
             let layer = self.pool.layer_view(li);
@@ -675,25 +727,39 @@ impl PagedNativeBackend {
             obs::span_at(Phase::Gemm, li as u64, t, dt);
         }
 
-        let h = x.rmsnorm(&self.model.norm_f, 1e-5);
+        // One logits row per surviving entry: a decode's single row, a
+        // chunk's last row. Gathering before the final norm + GEMM is
+        // bitwise-identical to computing them on every row and then
+        // selecting (both are row-wise), and skips the vocab-sized GEMM
+        // for chunk rows whose logits nobody reads.
+        let mut sel = Tensor::zeros(&[sb, d]);
+        let mut row = 0usize;
+        for (e, &(_, _, q_rows)) in meta.iter().enumerate() {
+            row += q_rows;
+            sel.row_mut(e).copy_from_slice(x.row(row - 1));
+        }
+        let h = sel.rmsnorm(&self.model.norm_f, 1e-5);
         let t = Instant::now();
         let logits = matmul(&h, &self.embed_t);
         let dt = t.elapsed();
         gemm_secs += dt.as_secs_f64();
         // Logit projection: one past the last layer index on the GEMM track.
         obs::span_at(Phase::Gemm, self.model.blocks.len() as u64, t, dt);
-        // The prefix-cache delta is merged in at take_step_timing time, so
-        // admissions surface even when no further decode step runs.
-        let timing = StepTiming {
-            attn: attn_secs,
-            gemm: gemm_secs,
-            preemptions: preempted.len() as u64,
-            ..Default::default()
-        };
-        self.last_timing = Some(timing);
+        if record_timing {
+            // The prefix-cache delta is merged in at take_step_timing
+            // time, so admissions surface even when no further step runs.
+            self.last_timing = Some(StepTiming {
+                attn: attn_secs,
+                gemm: gemm_secs,
+                preemptions: preempted.len() as u64,
+                prefill_chunks,
+                chunked_tokens,
+                ..Default::default()
+            });
+        }
         let mut out: Vec<Option<Vec<f32>>> = vec![None; b];
-        for (row, &i) in survivors.iter().enumerate() {
-            out[i] = Some(logits.row(row).to_vec());
+        for (e, &i) in survivors.iter().enumerate() {
+            out[i] = Some(logits.row(e).to_vec());
         }
         Ok(DecodeOutcome { logits: out, preempted })
     }
@@ -703,6 +769,7 @@ impl PagedNativeBackend {
 mod tests {
     use super::*;
     use crate::bd::Strategy;
+    use crate::model::transformer::KvCache;
     use crate::model::ModelConfig;
     use crate::tensor::DType;
 
@@ -805,10 +872,13 @@ mod tests {
         let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
         let mut s = Scheduler::new(
             PagedNativeBackend::new(model, kvc),
-            SchedulerConfig { max_active: 8, eos_token: None, kv: kvc },
+            SchedulerConfig { max_active: 8, eos_token: None, kv: kvc, ..Default::default() },
         );
-        // One active sequence holding 1 block (4-token prompt).
+        // One active sequence holding 1 block (4-token prompt). The step
+        // runs its admission's prefill chunk so the rows are resident
+        // before the fork decodes over them.
         s.admit(Request::new(1, vec![1, 2, 3, 4], 8)).unwrap();
+        s.step().unwrap();
         // Fork + decode at the engine level: invisible to the scheduler's
         // shadow allocator, visible to the backend pool.
         s.backend.fork(1, 99).unwrap();
@@ -1122,7 +1192,7 @@ mod tests {
         let engine = PagedNativeBackend::new(model, kv());
         let mut s = Scheduler::new(
             engine,
-            SchedulerConfig { max_active: 8, eos_token: None, kv: kv() },
+            SchedulerConfig { max_active: 8, eos_token: None, kv: kv(), ..Default::default() },
         );
         for i in 0..6u64 {
             s.admit(Request::new(i, vec![5 + i as u32, 6, 7], 4)).unwrap();
@@ -1142,7 +1212,8 @@ mod tests {
     fn scheduler_serving_matches_per_seq_backend() {
         use crate::coordinator::{NativeBackend, Request, Scheduler, SchedulerConfig};
         let model = Transformer::new_mha(ModelConfig::tiny(), 17);
-        let cfg = SchedulerConfig { max_active: 8, eos_token: None, kv: kv() };
+        let cfg =
+            SchedulerConfig { max_active: 8, eos_token: None, kv: kv(), ..Default::default() };
         let mut paged = Scheduler::new(PagedNativeBackend::new(model.clone(), kv()), cfg);
         let mut perseq = Scheduler::new(NativeBackend::new(model), cfg);
         for i in 0..5u64 {
@@ -1157,5 +1228,160 @@ mod tests {
         let ta: Vec<_> = a.iter().map(|r| (r.id, r.tokens.clone())).collect();
         let tb: Vec<_> = b.iter().map(|r| (r.id, r.tokens.clone())).collect();
         assert_eq!(ta, tb, "paged batched serving must reproduce per-seq decode");
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_identical_to_monolithic() {
+        // Invariant 6 at the engine level: begin_prefill + budgeted chunk
+        // steps produce the same last-position logits as one monolithic
+        // prefill at every budget, and decode continues bitwise after.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 71);
+        let prompt: Vec<u32> = (0..13).map(|j| (j * 37 + 5) % 250).collect();
+        let mut mono = PagedNativeBackend::new(model.clone(), kv());
+        mono.set_prefix_cache(false);
+        let want = mono.prefill(1, &prompt).unwrap();
+        for budget in [1usize, 4, 5, 512] {
+            let mut engine = PagedNativeBackend::new(model.clone(), kv());
+            engine.set_prefix_cache(false);
+            let covered = engine.begin_prefill(1, &prompt).unwrap();
+            assert_eq!(covered, 0, "no cache, nothing resident");
+            let mut got: Option<Vec<f32>> = None;
+            let mut start = covered;
+            while start < prompt.len() {
+                let n = budget.min(prompt.len() - start);
+                let work = [StepWork::PrefillChunk {
+                    seq: 1,
+                    tokens: prompt[start..start + n].to_vec(),
+                    start,
+                }];
+                let out = engine.step(&work).unwrap().expect_complete();
+                let t = engine.take_step_timing().expect("chunk steps record timing");
+                assert_eq!((t.prefill_chunks, t.chunked_tokens), (1, n as u64));
+                got = out.into_iter().next();
+                start += n;
+            }
+            assert_eq!(
+                got.as_deref(),
+                Some(&want[..]),
+                "budget {budget} diverged from monolithic prefill"
+            );
+            let g = engine.decode(&[(1, 9)]).unwrap().expect_complete();
+            let mut c = KvCache::new(model.config.n_layers);
+            let _ = model.prefill(&mut c, &prompt);
+            let w = model.decode_step(&mut c, 9);
+            assert_eq!(g[0], w.data, "decode after budget-{budget} chunking diverged");
+        }
+    }
+
+    #[test]
+    fn fused_chunk_and_decode_rows_are_bitwise() {
+        // A long prompt's chunks ride the same steps as an active
+        // sequence's decodes; both must match their per-sequence
+        // references bit for bit, and the chunk counters must surface.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 73);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        engine.set_prefix_cache(false);
+        let p1: Vec<u32> = (0..5).collect();
+        engine.prefill(1, &p1).unwrap();
+        let p2: Vec<u32> = (50..61).collect();
+        assert_eq!(engine.begin_prefill(2, &p2).unwrap(), 0);
+        let mut c1 = KvCache::new(model.config.n_layers);
+        let _ = model.prefill(&mut c1, &p1);
+        let mut start = 0usize;
+        let mut last: Option<Vec<f32>> = None;
+        for (round, tok) in [3u32, 77, 12, 8].into_iter().enumerate() {
+            let mut work = vec![StepWork::Decode { seq: 1, token: tok }];
+            let n = 4.min(p2.len() - start);
+            if n > 0 {
+                work.push(StepWork::PrefillChunk {
+                    seq: 2,
+                    tokens: p2[start..start + n].to_vec(),
+                    start,
+                });
+                start += n;
+            }
+            let out = engine.step(&work).unwrap().expect_complete();
+            let w1 = model.decode_step(&mut c1, tok);
+            assert_eq!(out[0], w1.data, "decode row diverged in round {round}");
+            let t = engine.take_step_timing().unwrap();
+            assert_eq!((t.prefill_chunks, t.chunked_tokens), (u64::from(n > 0), n as u64));
+            if let Some(l) = out.into_iter().nth(1) {
+                last = Some(l);
+            }
+        }
+        let mut c2 = KvCache::new(model.config.n_layers);
+        let want = model.prefill(&mut c2, &p2);
+        assert_eq!(last.unwrap(), want.data, "fused chunks diverged from monolithic prefill");
+        let g = engine.decode(&[(2, 7)]).unwrap().expect_complete();
+        let w = model.decode_step(&mut c2, 7);
+        assert_eq!(g[0], w.data, "seq 2 decode after fused prefill diverged");
+    }
+
+    #[test]
+    fn chunked_prefill_rides_prefix_cache_hits_zero_copy() {
+        // A prefix-cache hit under chunked prefill adopts the cached
+        // blocks and chunks only the uncovered tail — no contiguous
+        // gather, no staging cache — and stays bitwise-equal to a cold
+        // monolithic prefill (invariants 4 + 6 composed).
+        let model = Transformer::new_mha(ModelConfig::tiny(), 79);
+        let mut engine = PagedNativeBackend::new(model.clone(), kv());
+        engine.set_prefix_cache(true);
+        let shared: Vec<u32> = (0..9).collect();
+        engine.prefill(1, &shared).unwrap();
+        engine.release(1);
+        let mut prompt = shared.clone();
+        prompt.extend([101u32, 102, 103]);
+        let covered = engine.begin_prefill(2, &prompt).unwrap();
+        assert_eq!(covered, 8, "two cached blocks must be adopted");
+        let mut last: Option<Vec<f32>> = None;
+        let mut start = covered;
+        while start < prompt.len() {
+            let n = 2.min(prompt.len() - start);
+            let work = [StepWork::PrefillChunk {
+                seq: 2,
+                tokens: prompt[start..start + n].to_vec(),
+                start,
+            }];
+            last = engine.step(&work).unwrap().expect_complete().into_iter().next();
+            start += n;
+        }
+        let mut c = KvCache::new(model.config.n_layers);
+        let want = model.prefill(&mut c, &prompt);
+        assert_eq!(last.unwrap(), want.data, "hit + chunked tail must equal cold monolithic");
+        for tok in [5u32, 9] {
+            let g = engine.decode(&[(2, tok)]).unwrap().expect_complete();
+            let w = model.decode_step(&mut c, tok);
+            assert_eq!(g[0], w.data, "decode after chunked cache hit diverged at {tok}");
+        }
+        engine.release(2);
+        engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn scheduler_chunked_prefill_matches_monolithic_generation() {
+        // Invariant 6 end to end: a long prompt admitted mid-decode
+        // generates the same tokens (for itself and for the sequence it
+        // shares steps with) at any chunk budget, including unbounded.
+        use crate::coordinator::{Request, Scheduler, SchedulerConfig};
+        let run = |prefill_chunk: usize| {
+            let model = Transformer::new_mha(ModelConfig::tiny(), 83);
+            let mut s = Scheduler::new(
+                PagedNativeBackend::new(model, kv()),
+                SchedulerConfig { max_active: 4, eos_token: None, kv: kv(), prefill_chunk },
+            );
+            let short: Vec<u32> = (0u32..9).map(|j| j * 7 % 250).collect();
+            s.admit(Request::new(1, short, 5)).unwrap();
+            s.step().unwrap();
+            let long: Vec<u32> = (0u32..23).map(|j| (j * 11 + 1) % 250).collect();
+            s.admit(Request::new(2, long, 4)).unwrap();
+            let mut done = s.drain().unwrap();
+            done.sort_by_key(|r| r.id);
+            done.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>()
+        };
+        let mono = run(0);
+        assert_eq!(mono.len(), 2);
+        for budget in [1usize, 4, 7] {
+            assert_eq!(run(budget), mono, "budget {budget} changed the token stream");
+        }
     }
 }

@@ -44,7 +44,7 @@
 //!
 //! # Load-bearing invariants
 //!
-//! Every optimization in the serving layer is constrained by five
+//! Every optimization in the serving layer is constrained by six
 //! bit-exactness invariants, stated here once and property-tested in
 //! `tests/prop_paged_parallel.rs`, `tests/prop_coordinator.rs`, and
 //! `tests/prop_preemption.rs`:
@@ -86,6 +86,17 @@
 //!    sequence's remaining generation — greedy or seeded-sampled — is
 //!    exactly what the uninterrupted run would have produced, for MHA and
 //!    BDA alike. Preemption trades recompute for memory, never output.
+//! 6. **Chunked prefill is bit-identical to monolithic prefill.** Splitting
+//!    a prompt into fixed-token-budget chunks (`BDA_PREFILL_CHUNK`) that
+//!    ride batched decode steps changes neither the prompt's K/V nor its
+//!    first-token logits: each chunk's rows attend causally over already-
+//!    resident blocks plus themselves, in the same per-row accumulation
+//!    order as a whole-prompt prefill (a monolithic prefill *is* the
+//!    single-chunk special case of the same step), and every other
+//!    operator on the path is row-wise. Holds at any budget, fused with
+//!    any mix of live decode rows, across prefix-cache hits and
+//!    preempt→resume replays — so the chunk budget is a pure
+//!    TBT-vs-throughput knob, never a numerics knob.
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

@@ -22,8 +22,9 @@
 //!
 //! Phases split into two track families (see [`Phase::is_lifecycle`]):
 //!
-//! * **Lifecycle** phases (`Enqueue`, `Admit`, `Prefill`, `Token`,
-//!   `Preempt`, `Park`, `Resume`, `Complete`) describe one request; their
+//! * **Lifecycle** phases (`Enqueue`, `Admit`, `Prefill`, `PrefillChunk`,
+//!   `Token`, `Preempt`, `Park`, `Resume`, `Complete`) describe one
+//!   request; their
 //!   `id` is the request id and the exporter places them on a per-sequence
 //!   track. The per-sequence `Token` instants form the token timeline from
 //!   which time-between-tokens (TBT) is derived ([`timeline`]).
@@ -62,7 +63,12 @@ pub enum Phase {
     /// Admission: sequence registration + prefill + first-token sample.
     Admit,
     /// The backend prefill call within admission (or within resume replay).
+    /// Under chunked prefill this is the aggregate span from reservation to
+    /// the final chunk; the individual fused chunks are `PrefillChunk`.
     Prefill,
+    /// One prompt chunk fused into a batched decode step (chunked
+    /// prefill); Perfetto timelines show these interleaving with tokens.
+    PrefillChunk,
     /// One generated token (instant); gaps between these are the TBT.
     Token,
     /// The scheduler evicted this sequence mid-decode (instant).
@@ -96,10 +102,11 @@ pub enum Phase {
 
 impl Phase {
     /// Every phase, in declaration order.
-    pub const ALL: [Phase; 16] = [
+    pub const ALL: [Phase; 17] = [
         Phase::Enqueue,
         Phase::Admit,
         Phase::Prefill,
+        Phase::PrefillChunk,
         Phase::Token,
         Phase::Preempt,
         Phase::Park,
@@ -121,6 +128,7 @@ impl Phase {
             Phase::Enqueue => "enqueue",
             Phase::Admit => "admit",
             Phase::Prefill => "prefill",
+            Phase::PrefillChunk => "prefill_chunk",
             Phase::Token => "token",
             Phase::Preempt => "preempt",
             Phase::Park => "park",
@@ -145,6 +153,7 @@ impl Phase {
             Phase::Enqueue
                 | Phase::Admit
                 | Phase::Prefill
+                | Phase::PrefillChunk
                 | Phase::Token
                 | Phase::Preempt
                 | Phase::Park
@@ -260,7 +269,7 @@ mod tests {
     #[test]
     fn lifecycle_split_is_exhaustive() {
         let lifecycle = Phase::ALL.iter().filter(|p| p.is_lifecycle()).count();
-        assert_eq!(lifecycle, 8);
+        assert_eq!(lifecycle, 9);
         assert_eq!(Phase::ALL.len() - lifecycle, 8);
     }
 

@@ -76,6 +76,7 @@ fn make_sched(
             max_active,
             eos_token: None,
             kv: KvCacheConfig { block_size: 4, num_blocks },
+            ..Default::default()
         },
     )
 }

@@ -2,12 +2,13 @@
 //! fused Q/K/V weight packing, and the radix-tree prefix cache — the
 //! bit-exactness contracts of the serving engine:
 //!
-//! 1. `paged_attention_decode` (blocked, parallel over (seq, head) work
+//! 1. `paged_attention_decode` (blocked, parallel over (row, head) work
 //!    items) is **bit-identical** to the retained serial reference at any
 //!    worker count, across random batch sizes, block sizes, head counts,
-//!    and history lengths. CI additionally runs the whole suite under
-//!    `BDA_NUM_THREADS=1` and `=8` so the env-driven default path is
-//!    covered end to end.
+//!    history lengths, and per-sequence query row counts (decode rows and
+//!    causally masked prefill chunks alike). CI additionally runs the
+//!    whole suite under `BDA_NUM_THREADS=1` and `=8` so the env-driven
+//!    default path is covered end to end.
 //! 2. The packed Q/K/V projection (`FusedQkv`) equals the three separate
 //!    projections bitwise for every packable attention variant, and the
 //!    paged engine built on both stays bit-identical to per-sequence
@@ -34,6 +35,7 @@ use bda::bd::Strategy;
 use bda::bench_support::scatter_paged_kv;
 use bda::coordinator::kv_cache::{KvCacheConfig, SeqId};
 use bda::coordinator::scheduler::Backend;
+use bda::coordinator::{Request, Scheduler, SchedulerConfig};
 use bda::engine::PagedNativeBackend;
 use bda::model::transformer::KvCache;
 use bda::model::weights::FusedQkv;
@@ -89,8 +91,11 @@ fn prop_parallel_paged_attention_is_bit_identical_to_serial() {
 
         let q = Tensor::randn(&[b, width], 1.0, case * 1000 + 999);
         let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
-        let seqs: Vec<PagedSeq> =
-            tables.iter().zip(&lens).map(|(t, &len)| PagedSeq { blocks: t, len }).collect();
+        let seqs: Vec<PagedSeq> = tables
+            .iter()
+            .zip(&lens)
+            .map(|(t, &len)| PagedSeq { blocks: t, len, q_rows: 1 })
+            .collect();
 
         let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
         for workers in [1usize, 2, 8] {
@@ -98,6 +103,64 @@ fn prop_parallel_paged_attention_is_bit_identical_to_serial() {
             assert_eq!(
                 par, serial,
                 "case {case} (b={b}, bs={block_size}, heads={n_heads}, d_h={d_h}): \
+                 workers {workers} diverged from the serial reference"
+            );
+        }
+    }
+}
+
+/// The multi-row generalization of the same contract: each sequence
+/// contributes `q_rows` query rows (a causally masked prefill chunk; 1 is
+/// a plain decode row), and the blocked parallel kernel must stay
+/// bit-identical to the serial reference across random mixes of chunk
+/// and decode rows at any worker count.
+#[test]
+fn prop_multi_row_paged_attention_is_bit_identical_to_serial() {
+    for case in 0..15u64 {
+        let mut rng = Rng::new(case * 7919 + 23);
+        let d_h = [2usize, 4, 8][rng.below(3) as usize];
+        let n_heads = rng.range(1, 4);
+        let s = AttnShape::new(d_h * rng.range(2, 5), n_heads, d_h);
+        let width = s.proj_width();
+        let block_size = rng.range(1, 8);
+        let b = rng.range(1, 6);
+        let lens: Vec<usize> = (0..b).map(|_| rng.range(1, 40)).collect();
+        // Per-sequence query row counts: 1 (decode) up to a whole chunk.
+        let q_rows: Vec<usize> = lens.iter().map(|&l| rng.range(1, l.min(6))).collect();
+
+        let blocks_needed: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum();
+        let num_blocks = blocks_needed + rng.range(0, 8);
+        let perm = permutation(num_blocks, &mut rng);
+        let mut tables: Vec<Vec<usize>> = Vec::new();
+        let mut next = 0usize;
+        for &len in &lens {
+            let n = len.div_ceil(block_size);
+            tables.push(perm[next..next + n].to_vec());
+            next += n;
+        }
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        for (si, (&len, table)) in lens.iter().zip(&tables).enumerate() {
+            let k = Tensor::randn(&[len, width], 1.0, case * 2000 + si as u64 * 2 + 1);
+            let v = Tensor::randn(&[len, width], 1.0, case * 2000 + si as u64 * 2 + 2);
+            scatter_paged_kv(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        }
+
+        let total_rows: usize = q_rows.iter().sum();
+        let q = Tensor::randn(&[total_rows, width], 1.0, case * 2000 + 999);
+        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let seqs: Vec<PagedSeq> = tables
+            .iter()
+            .zip(lens.iter().zip(&q_rows))
+            .map(|(t, (&len, &q_rows))| PagedSeq { blocks: t, len, q_rows })
+            .collect();
+
+        let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
+        for workers in [1usize, 2, 8] {
+            let par = paged_attention_decode_with_workers(&q, &layer, &seqs, s, workers);
+            assert_eq!(
+                par, serial,
+                "case {case} (b={b}, bs={block_size}, rows={q_rows:?}): \
                  workers {workers} diverged from the serial reference"
             );
         }
@@ -127,7 +190,7 @@ fn prop_paged_parallel_bitwise_on_dedicated_pools() {
     let seqs: Vec<PagedSeq> = lens
         .iter()
         .zip(tables.iter())
-        .map(|(&len, &blocks)| PagedSeq { blocks, len })
+        .map(|(&len, &blocks)| PagedSeq { blocks, len, q_rows: 1 })
         .collect();
     let serial = paged_attention_decode_serial(&q, &layer, &seqs, s);
     for workers in [1usize, 2, 8] {
@@ -276,6 +339,66 @@ fn prop_engine_decode_bit_identical_to_per_seq() {
                         got[i], want.data,
                         "{label} case {case} round {round} seq {i}: \
                          paged batched decode diverged from per-sequence decode"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Engine invariant 6 end to end: chunked prefill at any budget produces
+/// generations **bitwise identical** to an unbounded (single-chunk) run,
+/// for MHA and BDA, at worker counts {1, 8}, prefix cache on and off.
+/// The workload fuses chunks with live decodes (a long prompt lands while
+/// a short one is mid-generation) and, with the cache on, replays a
+/// released prompt so the tail chunk rides adopted blocks.
+#[test]
+fn prop_chunked_prefill_generations_bitwise_identical_to_monolithic() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 500);
+    let models = vec![
+        ("mha", mha.clone()),
+        ("bda", mha.to_bda(Strategy::ResidualMin, DType::F32).unwrap()),
+    ];
+    for (label, model) in &models {
+        for workers in [1usize, 8] {
+            for cache in [false, true] {
+                let run = |chunk: usize| {
+                    let kv = KvCacheConfig { block_size: 4, num_blocks: 256 };
+                    let pool = Arc::new(ThreadPool::new(workers));
+                    let mut backend =
+                        PagedNativeBackend::with_thread_pool(model.clone(), kv, pool);
+                    backend.set_prefix_cache(cache);
+                    let mut s = Scheduler::new(
+                        backend,
+                        SchedulerConfig {
+                            max_active: 4,
+                            eos_token: None,
+                            kv,
+                            prefill_chunk: chunk,
+                        },
+                    );
+                    let short: Vec<u32> = (0u32..6).map(|j| (j * 17 + 3) % 250).collect();
+                    s.admit(Request::new(1, short, 8)).unwrap();
+                    s.step().unwrap();
+                    let long: Vec<u32> = (0u32..29).map(|j| (j * 13 + 1) % 250).collect();
+                    s.admit(Request::new(2, long.clone(), 6)).unwrap();
+                    let mut done = s.drain().unwrap();
+                    // Re-serve the long prompt: with the cache on, its
+                    // released blocks make this admission a prefix hit
+                    // whose uncovered tail still prefills in chunks.
+                    s.admit(Request::new(3, long, 5)).unwrap();
+                    done.extend(s.drain().unwrap());
+                    done.sort_by_key(|r| r.id);
+                    done.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>()
+                };
+                let monolithic = run(0);
+                assert_eq!(monolithic.len(), 3, "{label}: lost responses");
+                for chunk in [4usize, 512] {
+                    let tag = format!("{label}/workers={workers}/cache={cache}/chunk={chunk}");
+                    assert_eq!(
+                        run(chunk),
+                        monolithic,
+                        "{tag}: chunked generations diverged from monolithic (invariant 6)"
                     );
                 }
             }

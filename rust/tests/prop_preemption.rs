@@ -37,6 +37,7 @@ fn server_config(num_blocks: usize) -> ServerConfig {
             max_active: 3,
             eos_token: None,
             kv: KvCacheConfig { block_size: 4, num_blocks },
+            ..Default::default()
         },
     }
 }
@@ -106,11 +107,70 @@ fn prop_preempt_resume_bitwise_identical_to_uninterrupted() {
     }
 }
 
+/// Engine invariant 6 under overload: chunked prefill at any budget —
+/// fused with active decodes and interrupted by preempt→resume on a tiny
+/// pool — generates bitwise identically to an uninterrupted monolithic
+/// run on an ample pool, for MHA and BDA, cache on and off. Budget 4 is
+/// one 4-token block per step, 512 covers the 8-token prompts whole, 0 is
+/// unbounded.
+#[test]
+fn prop_chunked_prefill_bitwise_under_preempting_pool() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 773);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    let small = overload_pool_blocks();
+    let run = |model: &Transformer, cache: bool, num_blocks: usize, chunk: usize| {
+        let mut cfg = server_config(num_blocks);
+        cfg.scheduler.prefill_chunk = chunk;
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut backend =
+            PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+        backend.set_prefix_cache(cache);
+        let trace = overload_trace(model.config.vocab_size as u32);
+        let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("chunked serve");
+        responses.sort_by_key(|r| r.id);
+        let gens: Generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (gens, metrics.snapshot())
+    };
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for cache in [false, true] {
+            let (ample_gen, ample_snap) = run(model, cache, 512, 0);
+            assert_eq!(ample_snap.preemptions, 0, "{label}: ample pool must not preempt");
+            assert_eq!(ample_gen.len(), 6, "{label}: lost responses on the ample pool");
+            for chunk in [4usize, 512, 0] {
+                let tag = format!("{label}/cache={cache}/chunk={chunk}");
+                let (tight_gen, tight_snap) = run(model, cache, small, chunk);
+                if small < 15 {
+                    assert!(
+                        tight_snap.preemptions > 0,
+                        "{tag}: a {small}-block pool must force preemption"
+                    );
+                }
+                if chunk == 4 {
+                    // 6 admissions × ≥ 2 chunks each (8-token prompts at a
+                    // 4-token budget), plus chunked resume replays.
+                    assert!(
+                        tight_snap.prefill_chunks >= 12,
+                        "{tag}: expected >= 12 prefill chunks, saw {}",
+                        tight_snap.prefill_chunks
+                    );
+                    assert!(tight_snap.chunked_tokens >= 48, "{tag}: chunked tokens undercount");
+                }
+                assert_eq!(
+                    tight_gen, ample_gen,
+                    "{tag}: chunked prefill under preemption changed generations \
+                     (invariant 6 violated)"
+                );
+            }
+        }
+    }
+}
+
 /// The same invariant through an engine built entirely from environment
 /// defaults (`BDA_NUM_THREADS` worker count on the global pool,
-/// `BDA_PREFIX_CACHE` cache setting) — the configuration each CI
-/// determinism-matrix cell actually pins, so the preempt/resume path is
-/// exercised under every (threads, prefix-cache) combination.
+/// `BDA_PREFIX_CACHE` cache setting, `BDA_PREFILL_CHUNK` budget) — the
+/// configuration each CI determinism-matrix cell actually pins, so the
+/// preempt/resume path is exercised under every
+/// (threads, prefix-cache, chunk) combination.
 #[test]
 fn preempt_resume_bitwise_under_env_default_engine() {
     let model = Transformer::new_mha(ModelConfig::tiny(), 772);

@@ -55,6 +55,7 @@ fn overload_config() -> ServerConfig {
             max_active: 3,
             eos_token: None,
             kv: KvCacheConfig { block_size: 4, num_blocks: 10 },
+            ..Default::default()
         },
     }
 }
@@ -131,6 +132,7 @@ fn traced_overload_run_covers_full_request_lifecycle() {
         Phase::Enqueue,
         Phase::Admit,
         Phase::Prefill,
+        Phase::PrefillChunk,
         Phase::Token,
         Phase::Preempt,
         Phase::Park,
