@@ -130,6 +130,11 @@ fn main() -> Result<()> {
              tokens for active sequences; a pure scheduling knob, generations \
              are bit-identical at any budget"
         );
+        println!(
+            "  BDA_KV_DTYPE=T      K/V block storage dtype: fp32 (default), fp16, \
+             or bf16 — 16-bit pools halve K/V memory and generate bitwise what \
+             an fp32 pool with quantize-at-write would (engine invariant 7)"
+        );
         println!("  BDA_QUIET=1         suppress one-shot informational stderr lines");
         return Ok(());
     }
@@ -271,7 +276,7 @@ fn main() -> Result<()> {
             max_active: 4,
             eos_token: None,
             // 4 sequences × 5-block peak demand vs a 12-block pool.
-            kv: KvCacheConfig { block_size: 4, num_blocks: 12 },
+            kv: KvCacheConfig { block_size: 4, num_blocks: 12, ..Default::default() },
             // Default chunk budget (BDA_PREFILL_CHUNK) — prompts here are
             // short, but keeping the knob live means the trace export
             // records prefill_chunk spans alongside preempt/park/resume.

@@ -115,7 +115,11 @@ fn main() {
         // Pool sized for the worst case: 1000 seqs × ceil(19/bs) blocks.
         let pool = 1000 * 19usize.div_ceil(bs) + 64;
         let m = bench(&format!("bs{bs}"), cfg, 3000.0, || {
-            let mut a = BlockAllocator::new(KvCacheConfig { block_size: bs, num_blocks: pool });
+            let mut a = BlockAllocator::new(KvCacheConfig {
+                block_size: bs,
+                num_blocks: pool,
+                ..Default::default()
+            });
             for i in 0..1000u64 {
                 a.register(i, 17).unwrap();
                 a.append_token(i).unwrap();

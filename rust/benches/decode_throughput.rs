@@ -34,7 +34,8 @@ use bda::coordinator::{
 use bda::engine::PagedNativeBackend;
 use bda::eval::trace::{self, TraceConfig};
 use bda::model::{ModelConfig, Transformer};
-use bda::tensor::Tensor;
+use bda::coordinator::kv_cache::test_pool_blocks;
+use bda::tensor::{DType, Tensor};
 use bda::util::json::Json;
 use bda::util::stats::Quantiles;
 use bda::util::threadpool;
@@ -59,7 +60,10 @@ fn config(concurrency: usize) -> ServerConfig {
         scheduler: SchedulerConfig {
             max_active: concurrency,
             eos_token: None,
-            kv: KvCacheConfig { block_size: 16, num_blocks: 1024 },
+            // f32 pinned: these runs assert paged == per-seq generations,
+            // and the per-sequence backend always stores f32 (16-bit
+            // storage has its own bench fragment, kv_dtype_row).
+            kv: KvCacheConfig { block_size: 16, num_blocks: 1024, dtype: DType::F32 },
             ..Default::default()
         },
     }
@@ -148,12 +152,7 @@ impl MicroFixture {
     }
 
     fn layer(&self) -> PagedLayerView<'_> {
-        PagedLayerView {
-            k: &self.pk,
-            v: &self.pv,
-            block_size: self.block_size,
-            width: self.s.proj_width(),
-        }
+        PagedLayerView::f32(&self.pk, &self.pv, self.block_size, self.s.proj_width())
     }
 
     fn seqs(&self) -> Vec<PagedSeq<'_>> {
@@ -258,7 +257,7 @@ fn prefix_cache_row(fast: bool) -> Json {
         scheduler: SchedulerConfig {
             max_active: concurrency,
             eos_token: None,
-            kv: KvCacheConfig { block_size, num_blocks: 1024 },
+            kv: KvCacheConfig { block_size, num_blocks: 1024, ..Default::default() },
             ..Default::default()
         },
     };
@@ -338,7 +337,7 @@ fn preemption_row(fast: bool) -> Json {
             scheduler: SchedulerConfig {
                 max_active: concurrency,
                 eos_token: None,
-                kv: KvCacheConfig { block_size: 4, num_blocks },
+                kv: KvCacheConfig { block_size: 4, num_blocks, ..Default::default() },
                 ..Default::default()
             },
         };
@@ -382,6 +381,104 @@ fn preemption_row(fast: bool) -> Json {
     ])
 }
 
+/// K/V storage dtype workload: the overload trace replayed on (a) an
+/// f32 pool, (b) an f16 pool with the **same block count** — half the
+/// bytes, identical scheduling — and (c) an f16 pool with the **same
+/// byte budget** — twice the blocks, so more sequences stay resident and
+/// fewer decode steps hit pool exhaustion. The f32 block count honors
+/// the `BDA_TEST_POOL_BLOCKS` overload knob. The JSON row records
+/// truthful pool bytes, resident-sequence capacity, preemption counts,
+/// and decode throughput for each configuration; the acceptance keys pin
+/// "16-bit halves pool bytes" and "equal-budget f16 preempts strictly
+/// less than f32".
+fn kv_dtype_row(fast: bool) -> Json {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 63);
+    let vocab = model.config.vocab_size as u32;
+    let n = if fast { 8 } else { 16 };
+    let concurrency = 4usize;
+    let block_size = 4usize;
+    // 8-token prompts + 12 generated = 5 blocks peak per sequence.
+    let blocks_per_seq = (8usize + 12).div_ceil(block_size);
+    let f32_blocks = test_pool_blocks().map(|b| b.clamp(6, 64)).unwrap_or(12);
+    let make_requests = || -> Vec<Request> {
+        (0..n as u64)
+            .map(|i| {
+                let prompt: Vec<u32> =
+                    (0..8u64).map(|j| ((i * 31 + j * 7 + 3) % vocab as u64) as u32).collect();
+                Request::new(i, prompt, 12)
+            })
+            .collect()
+    };
+    let run = |dtype: DType, num_blocks: usize| {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: concurrency, max_wait: Duration::from_millis(0) },
+            scheduler: SchedulerConfig {
+                max_active: concurrency,
+                eos_token: None,
+                kv: KvCacheConfig { block_size, num_blocks, dtype },
+                ..Default::default()
+            },
+        };
+        let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+        let pool_bytes = backend.kv_pool_bytes();
+        let timer = Timer::start();
+        let (responses, metrics) = replay_trace(backend, cfg, make_requests()).unwrap();
+        let wall = timer.elapsed_secs();
+        assert_eq!(responses.len(), n, "kv dtype sweep lost responses");
+        (metrics.snapshot(), wall, pool_bytes)
+    };
+    let (s32, wall32, bytes32) = run(DType::F32, f32_blocks);
+    // (a) equal blocks: half the bytes, and scheduling is block-count
+    // driven, so the narrower pool preempts exactly as often.
+    let (s16eq, _, bytes16eq) = run(DType::F16, f32_blocks);
+    assert_eq!(bytes16eq * 2, bytes32, "16-bit storage must halve pool bytes");
+    assert_eq!(
+        s16eq.preemptions, s32.preemptions,
+        "storage width must not change scheduling at a fixed block count"
+    );
+    // (b) equal bytes: twice the blocks buy resident capacity, so the
+    // f16 pool preempts strictly less whenever the f32 pool preempts.
+    let (s16, wall16, bytes16) = run(DType::F16, f32_blocks * 2);
+    assert_eq!(bytes16, bytes32, "equal-budget f16 pool must cost the same bytes");
+    if s32.preemptions > 0 {
+        assert!(
+            s16.preemptions < s32.preemptions,
+            "equal bytes must buy strictly fewer preemptions in 16-bit storage \
+             ({} vs {})",
+            s16.preemptions,
+            s32.preemptions
+        );
+    }
+    let tok_s_32 = s32.tokens_out as f64 / wall32;
+    let tok_s_16 = s16.tokens_out as f64 / wall16;
+    println!(
+        "kv dtype ({n} requests, {bytes32} byte budget): fp32 {f32_blocks} blocks \
+         ({} preemptions, {tok_s_32:.1} tok/s) vs fp16 {} blocks \
+         ({} preemptions, {tok_s_16:.1} tok/s); equal-block fp16 pool is \
+         {bytes16eq} bytes (half)",
+        s32.preemptions,
+        f32_blocks * 2,
+        s16.preemptions,
+    );
+    Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("block_size", Json::num(block_size as f64)),
+        ("pool_blocks_f32", Json::num(f32_blocks as f64)),
+        ("pool_bytes_f32", Json::num(bytes32 as f64)),
+        ("pool_bytes_f16_equal_blocks", Json::num(bytes16eq as f64)),
+        ("pool_blocks_f16_equal_budget", Json::num((f32_blocks * 2) as f64)),
+        ("pool_bytes_f16_equal_budget", Json::num(bytes16 as f64)),
+        ("capacity_seqs_f32", Json::num((f32_blocks / blocks_per_seq) as f64)),
+        ("capacity_seqs_f16_equal_budget", Json::num((f32_blocks * 2 / blocks_per_seq) as f64)),
+        ("preemptions_f32", Json::num(s32.preemptions as f64)),
+        ("preemptions_f16_equal_budget", Json::num(s16.preemptions as f64)),
+        ("recomputed_tokens_f32", Json::num(s32.recomputed_tokens as f64)),
+        ("recomputed_tokens_f16_equal_budget", Json::num(s16.recomputed_tokens as f64)),
+        ("decode_tok_s_f32", Json::num(tok_s_32)),
+        ("decode_tok_s_f16_equal_budget", Json::num(tok_s_16)),
+    ])
+}
+
 /// Mixed-traffic workload: short requests decode steadily until a long
 /// prompt lands mid-stream. Run monolithically (unbounded chunk budget —
 /// the whole prompt fuses into one step, stalling every decode row riding
@@ -400,7 +497,7 @@ fn chunked_prefill_row(fast: bool) -> Json {
         let cfg = SchedulerConfig {
             max_active: n_short as usize + 1,
             eos_token: None,
-            kv: KvCacheConfig { block_size: 4, num_blocks: 1024 },
+            kv: KvCacheConfig { block_size: 4, num_blocks: 1024, ..Default::default() },
             prefill_chunk,
         };
         let backend = PagedNativeBackend::new(model.clone(), cfg.kv);
@@ -585,6 +682,9 @@ fn run_child(out_path: &str) {
         Json::Null
     };
 
+    // --- kv storage dtype: f32 vs f16 pools at fixed memory ----------------
+    let kv_dtype = if threads == 1 || threads == np { kv_dtype_row(fast) } else { Json::Null };
+
     let fragment = Json::obj(vec![
         ("num_threads", Json::num(threads as f64)),
         ("dispatch", dispatch),
@@ -593,6 +693,7 @@ fn run_child(out_path: &str) {
         ("prefix_cache", prefix_cache),
         ("preemption", preemption),
         ("chunked_prefill", chunked_prefill),
+        ("kv_dtype", kv_dtype),
     ]);
     std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
 }
@@ -692,6 +793,25 @@ fn run_parent() {
     // TBT tail of the chunked run relative to monolithic, and the prefill
     // tokens a fused step carried (bounded by the chunk budget, not the
     // prompt length).
+    // K/V storage dtype acceptance from the max-thread fragment: pool-byte
+    // halving at equal blocks, and the preemption win equal bytes buy.
+    let (kv_bytes_ratio, kv_f16_fewer, kv_tok_s_f32, kv_tok_s_f16) = fragments
+        .last()
+        .map(|frag| {
+            let k = frag.get("kv_dtype");
+            let b32 = k.get("pool_bytes_f32").as_f64().unwrap_or(0.0);
+            let b16 = k.get("pool_bytes_f16_equal_blocks").as_f64().unwrap_or(0.0);
+            let p32 = k.get("preemptions_f32").as_f64().unwrap_or(0.0);
+            let p16 = k.get("preemptions_f16_equal_budget").as_f64().unwrap_or(0.0);
+            (
+                if b16 > 0.0 { b32 / b16 } else { 0.0 },
+                p32 > 0.0 && p16 < p32,
+                k.get("decode_tok_s_f32").as_f64().unwrap_or(0.0),
+                k.get("decode_tok_s_f16_equal_budget").as_f64().unwrap_or(0.0),
+            )
+        })
+        .unwrap_or((0.0, false, 0.0, 0.0));
+
     let (chunked_tbt_p99_ratio, chunked_tok_per_step, mono_tok_per_step) = fragments
         .last()
         .map(|frag| {
@@ -723,6 +843,10 @@ fn run_parent() {
                 ("chunked_prefill_tbt_p99_ratio_max_threads", Json::num(chunked_tbt_p99_ratio)),
                 ("chunked_prefill_tokens_per_step_max_threads", Json::num(chunked_tok_per_step)),
                 ("monolithic_prefill_tokens_per_step_max_threads", Json::num(mono_tok_per_step)),
+                ("kv_f16_pool_bytes_ratio_vs_f32", Json::num(kv_bytes_ratio)),
+                ("kv_f16_fewer_preemptions_equal_budget", Json::Bool(kv_f16_fewer)),
+                ("kv_decode_tok_s_f32", Json::num(kv_tok_s_f32)),
+                ("kv_decode_tok_s_f16_equal_budget", Json::num(kv_tok_s_f16)),
                 ("target", Json::num(2.0)),
             ]),
         ),
@@ -754,6 +878,12 @@ fn run_parent() {
          prefill tok/step {mono_tok_per_step:.1} -> {chunked_tok_per_step:.1} \
          (identical generations — invariant 6)",
         chunked_tbt_p99_ratio
+    );
+    println!(
+        "kv dtype at {np} threads: fp16 pool bytes {kv_bytes_ratio:.2}x smaller at equal \
+         blocks; equal-budget fp16 preempts {} than fp32 \
+         ({kv_tok_s_f32:.1} -> {kv_tok_s_f16:.1} tok/s under overload)",
+        if kv_f16_fewer { "strictly less" } else { "no less (pool was ample)" }
     );
 }
 

@@ -34,7 +34,11 @@
 //!   long-lived, across every layer and decode step of the process —
 //!   replacing the per-(head, row) heap allocation of the naive loop;
 //! * work items write disjoint `d_h`-wide output slices, so no
-//!   synchronization is needed on the output.
+//!   synchronization is needed on the output;
+//! * 16-bit K/V storage ([`KvSlice::U16`]) is widened to f32 per block run
+//!   into a second per-worker scratch; the f32 inner loops are shared with
+//!   the zero-copy f32 path, so storage width never changes accumulation
+//!   order (engine invariant 7 composes with all of the above).
 //!
 //! **Invariant (the contract every change here must keep):** within one
 //! `(query row, head)` work item, visible tokens are visited in ascending
@@ -52,16 +56,64 @@
 //! prefill) is stated in one place in [`crate::engine`].
 
 use super::AttnShape;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::util::threadpool::{self, SendPtr, ThreadPool};
 use std::cell::RefCell;
+
+/// One layer's K or V pool storage in its resident representation. `F32`
+/// rows are read in place (zero-copy, the historical path); `U16` rows —
+/// real 16-bit f16/bf16 words from a 16-bit
+/// [`PagedKvPool`](crate::engine::PagedKvPool) — are widened to f32 at the
+/// kernel boundary through a per-worker scratch. Widening is exact, so the
+/// f32 values the kernel sees are bit-identical to an f32 pool holding
+/// quantize-at-write data (engine invariant 7), and the f32 accumulation
+/// order downstream is byte-for-byte unchanged.
+#[derive(Clone, Copy, Debug)]
+pub enum KvSlice<'a> {
+    F32(&'a [f32]),
+    U16 { bits: &'a [u16], dtype: DType },
+}
+
+impl<'a> KvSlice<'a> {
+    /// Stored element count (rows × width), dtype-independent.
+    pub fn len(&self) -> usize {
+        match self {
+            KvSlice::F32(d) => d.len(),
+            KvSlice::U16 { bits, .. } => bits.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widening row accessor: the `d_h` f32 values starting at flat element
+    /// offset `base`. F32 storage returns the slice in place; 16-bit
+    /// storage widens into `buf` (contiguous `u16 → f32` conversion — the
+    /// natural on-ramp for an explicit SIMD widening load).
+    #[inline]
+    pub fn row<'b>(&self, base: usize, d_h: usize, buf: &'b mut Vec<f32>) -> &'b [f32]
+    where
+        'a: 'b,
+    {
+        match self {
+            KvSlice::F32(d) => &d[base..base + d_h],
+            KvSlice::U16 { bits, dtype } => {
+                let widen = dtype.widen_u16();
+                buf.clear();
+                buf.extend(bits[base..base + d_h].iter().map(|&b| widen(b)));
+                &buf[..]
+            }
+        }
+    }
+}
 
 /// One layer of paged K/V storage: `num_blocks * block_size` rows of
 /// `width = n_heads * d_h` values each, for K and V respectively.
 #[derive(Clone, Copy, Debug)]
 pub struct PagedLayerView<'a> {
-    pub k: &'a [f32],
-    pub v: &'a [f32],
+    pub k: KvSlice<'a>,
+    pub v: KvSlice<'a>,
     /// Tokens per block.
     pub block_size: usize,
     /// Row width (n_heads * d_h).
@@ -69,6 +121,13 @@ pub struct PagedLayerView<'a> {
 }
 
 impl<'a> PagedLayerView<'a> {
+    /// View over plain f32 storage (the kernel-level tests' and
+    /// microbenches' fixture path; engine pools build views via
+    /// `PagedKvPool::layer_view`, which picks the storage representation).
+    pub fn f32(k: &'a [f32], v: &'a [f32], block_size: usize, width: usize) -> PagedLayerView<'a> {
+        PagedLayerView { k: KvSlice::F32(k), v: KvSlice::F32(v), block_size, width }
+    }
+
     /// Flat storage offset of token `t` of a sequence with block table
     /// `blocks`.
     #[inline]
@@ -102,6 +161,35 @@ thread_local! {
     /// layers and decode steps: it grows to the longest history a worker
     /// has seen and is never reallocated on the hot path afterwards.
     static SCORE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+
+    /// Per-worker widening scratch for 16-bit K/V storage: each block run
+    /// of u16 rows is widened to f32 here before the (unchanged) f32 inner
+    /// loops read it. Same persistence story as `SCORE_SCRATCH`; unused —
+    /// never touched, never grown — on f32 pools.
+    static WIDEN_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Widen one block run of 16-bit rows into `scratch`: `rows` segments of
+/// `d_h` words each, `width` elements apart starting at `base0`, packed
+/// contiguously at stride `d_h`. One contiguous `u16 → f32` conversion per
+/// row segment — the shape an explicit SIMD widening load would take.
+#[inline]
+fn widen_run(
+    bits: &[u16],
+    dtype: DType,
+    base0: usize,
+    rows: usize,
+    width: usize,
+    d_h: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let widen = dtype.widen_u16();
+    scratch.clear();
+    scratch.reserve(rows * d_h);
+    for r in 0..rows {
+        let seg = &bits[base0 + r * width..base0 + r * width + d_h];
+        scratch.extend(seg.iter().map(|&b| widen(b)));
+    }
 }
 
 /// Validate batch geometry before touching raw storage. These used to be
@@ -225,7 +313,12 @@ pub fn paged_attention_decode_on(
             unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * width + off), d_h) };
         SCORE_SCRATCH.with(|cell| {
             let mut scores = cell.borrow_mut();
-            attend_head_blocked(qrow, layer, &seqs[i], visible, off, d_h, scale, &mut scores, orow);
+            WIDEN_SCRATCH.with(|wcell| {
+                let mut widen = wcell.borrow_mut();
+                attend_head_blocked(
+                    qrow, layer, &seqs[i], visible, off, d_h, scale, &mut scores, &mut widen, orow,
+                );
+            });
         });
     });
     out
@@ -236,6 +329,13 @@ pub fn paged_attention_decode_on(
 /// within a block), scoring into the per-worker scratch, then softmax +
 /// weighted-V accumulate in the same ascending-token order as the serial
 /// reference. `orow` must be zeroed.
+///
+/// Each block run is resolved to a `(buf, base, stride)` triple once:
+/// f32 storage yields the pool slice in place (`stride = width`, the
+/// historical zero-copy path); 16-bit storage widens the run's `d_h`-wide
+/// row segments into `widen` (`stride = d_h`). The f32 inner loops below
+/// the match are shared verbatim, so accumulation order — and therefore
+/// parallel == serial bit-exactness — is identical at every storage width.
 #[allow(clippy::too_many_arguments)]
 fn attend_head_blocked(
     qrow: &[f32],
@@ -246,6 +346,7 @@ fn attend_head_blocked(
     d_h: usize,
     scale: f32,
     scores: &mut Vec<f32>,
+    widen: &mut Vec<f32>,
     orow: &mut [f32],
 ) {
     let bs = layer.block_size;
@@ -261,8 +362,15 @@ fn attend_head_blocked(
         }
         let rows = bs.min(visible - done);
         let base0 = blk * bs * width + off;
+        let (buf, base, stride): (&[f32], usize, usize) = match layer.k {
+            KvSlice::F32(data) => (data, base0, width),
+            KvSlice::U16 { bits, dtype } => {
+                widen_run(bits, dtype, base0, rows, width, d_h, widen);
+                (&widen[..], 0, d_h)
+            }
+        };
         for r in 0..rows {
-            let krow = &layer.k[base0 + r * width..base0 + r * width + d_h];
+            let krow = &buf[base + r * stride..base + r * stride + d_h];
             scores.push(qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale);
         }
         done += rows;
@@ -285,9 +393,16 @@ fn attend_head_blocked(
         }
         let rows = bs.min(visible - done);
         let base0 = blk * bs * width + off;
+        let (buf, base, stride): (&[f32], usize, usize) = match layer.v {
+            KvSlice::F32(data) => (data, base0, width),
+            KvSlice::U16 { bits, dtype } => {
+                widen_run(bits, dtype, base0, rows, width, d_h, widen);
+                (&widen[..], 0, d_h)
+            }
+        };
         for r in 0..rows {
             let w = scores[done + r] * inv;
-            let vrow = &layer.v[base0 + r * width..base0 + r * width + d_h];
+            let vrow = &buf[base + r * stride..base + r * stride + d_h];
             for (o, vv) in orow.iter_mut().zip(vrow) {
                 *o += w * vv;
             }
@@ -316,6 +431,9 @@ pub fn paged_attention_decode_serial(
     validate(layer, seqs);
     let scale = 1.0 / (s.d_h as f32).sqrt();
     let mut out = Tensor::zeros(&[total_rows, width]);
+    // Per-token widening buffer for 16-bit storage (no-op for f32: the
+    // accessor returns pool rows in place).
+    let mut wbuf: Vec<f32> = Vec::new();
     for h in 0..s.n_heads {
         let off = h * s.d_h;
         let mut r = 0usize;
@@ -326,7 +444,7 @@ pub fn paged_attention_decode_serial(
                 let mut scores = vec![0.0f32; visible];
                 for (t, sc) in scores.iter_mut().enumerate() {
                     let base = layer.row_offset(seq.blocks, t) + off;
-                    let krow = &layer.k[base..base + s.d_h];
+                    let krow = layer.k.row(base, s.d_h, &mut wbuf);
                     *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                 }
                 let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -340,7 +458,7 @@ pub fn paged_attention_decode_serial(
                 for (t, sc) in scores.iter().enumerate() {
                     let w = sc * inv;
                     let base = layer.row_offset(seq.blocks, t) + off;
-                    let vrow = &layer.v[base..base + s.d_h];
+                    let vrow = layer.v.row(base, s.d_h, &mut wbuf);
                     for (o, vv) in orow.iter_mut().zip(vrow) {
                         *o += w * vv;
                     }
@@ -409,7 +527,7 @@ mod tests {
         scatter(&mut pk, &mut pv, &k1.data, &v1.data, lens[0], width, block_size, tables[0]);
         scatter(&mut pk, &mut pv, &k2.data, &v2.data, lens[1], width, block_size, tables[1]);
 
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
         let seqs = [
             PagedSeq { blocks: tables[0], len: lens[0], q_rows: 1 },
             PagedSeq { blocks: tables[1], len: lens[1], q_rows: 1 },
@@ -436,7 +554,7 @@ mod tests {
         let mut pk = vec![0.0f32; 4 * 2 * width];
         let mut pv = vec![0.0f32; 4 * 2 * width];
         scatter(&mut pk, &mut pv, &k.data, &v.data, 1, width, 2, &[3]);
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let seqs = [PagedSeq { blocks: &[3], len: 1, q_rows: 1 }];
         let out = paged_attention_decode(&q, &layer, &seqs, s);
         assert_eq!(out.data, v.data);
@@ -457,7 +575,7 @@ mod tests {
             let mut pk = vec![0.0f32; 8 * 4 * width];
             let mut pv = vec![0.0f32; 8 * 4 * width];
             scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, 4, table);
-            let layer = PagedLayerView { k: &pk, v: &pv, block_size: 4, width };
+            let layer = PagedLayerView::f32(&pk, &pv, 4, width);
             outs.push(paged_attention_decode(
                 &q,
                 &layer,
@@ -487,7 +605,7 @@ mod tests {
             let v = Tensor::randn(&[len, width], 1.0, 50 + i as u64);
             scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
         }
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
         let seqs: Vec<PagedSeq> = lens
             .iter()
             .zip(tables.iter())
@@ -517,7 +635,7 @@ mod tests {
         let mut pk = vec![0.0f32; 4 * block_size * width];
         let mut pv = vec![0.0f32; 4 * block_size * width];
         scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
 
         let chunk =
             paged_attention_decode(&q, &layer, &[PagedSeq { blocks: table, len, q_rows: len }], s);
@@ -555,7 +673,7 @@ mod tests {
             let v = Tensor::randn(&[len, width], 1.0, 90 + i as u64);
             scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
         }
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
         let seqs: Vec<PagedSeq> = lens
             .iter()
             .zip(q_rows.iter())
@@ -570,13 +688,66 @@ mod tests {
     }
 
     #[test]
+    fn u16_storage_matches_quantized_f32_storage_bitwise() {
+        // Invariant 7 at kernel level: a u16 view over narrowed bits must
+        // produce the same output — parallel at every worker count AND
+        // serial — as an f32 view holding the quantized values, bit for
+        // bit, because widening a 16-bit word is exact and the f32
+        // accumulation order is shared between both storage paths.
+        let s = AttnShape::new(24, 3, 8);
+        let width = s.proj_width();
+        let (block_size, num_blocks) = (4usize, 16usize);
+        let lens = [1usize, 7, 12, 4];
+        let q_rows = [1usize, 3, 1, 4];
+        let tables: [&[usize]; 4] = [&[9], &[3, 11], &[0, 5, 14], &[7]];
+        let total: usize = q_rows.iter().sum();
+        let q = Tensor::randn(&[total, width], 1.0, 131);
+        let mut pk = vec![0.0f32; num_blocks * block_size * width];
+        let mut pv = vec![0.0f32; num_blocks * block_size * width];
+        for (i, (&len, table)) in lens.iter().zip(tables.iter()).enumerate() {
+            let k = Tensor::randn(&[len, width], 1.0, 140 + i as u64);
+            let v = Tensor::randn(&[len, width], 1.0, 150 + i as u64);
+            scatter(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
+        }
+        let seqs: Vec<PagedSeq> = lens
+            .iter()
+            .zip(q_rows.iter())
+            .zip(tables.iter())
+            .map(|((&len, &q_rows), &blocks)| PagedSeq { blocks, len, q_rows })
+            .collect();
+        for dtype in [DType::F16, DType::BF16] {
+            let narrow = dtype.narrow_f32();
+            let bk: Vec<u16> = pk.iter().map(|&x| narrow(x)).collect();
+            let bv: Vec<u16> = pv.iter().map(|&x| narrow(x)).collect();
+            let mut qk = pk.clone();
+            let mut qv = pv.clone();
+            dtype.quantize_slice(&mut qk);
+            dtype.quantize_slice(&mut qv);
+            let f32_layer = PagedLayerView::f32(&qk, &qv, block_size, width);
+            let u16_layer = PagedLayerView {
+                k: KvSlice::U16 { bits: &bk, dtype },
+                v: KvSlice::U16 { bits: &bv, dtype },
+                block_size,
+                width,
+            };
+            let want = paged_attention_decode_serial(&q, &f32_layer, &seqs, s);
+            let serial = paged_attention_decode_serial(&q, &u16_layer, &seqs, s);
+            assert_eq!(serial, want, "{dtype} serial must match quantized-f32 storage");
+            for workers in [1, 2, 8] {
+                let par = paged_attention_decode_with_workers(&q, &u16_layer, &seqs, s, workers);
+                assert_eq!(par, want, "{dtype} workers {workers} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "zero query rows")]
     fn zero_query_rows_rejected() {
         let s = AttnShape::new(8, 1, 4);
         let width = s.proj_width();
         let pk = vec![0.0f32; 4 * 2 * width];
         let pv = pk.clone();
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let q = Tensor::zeros(&[0, width]);
         let seqs = [PagedSeq { blocks: &[0], len: 1, q_rows: 0 }];
         let _ = paged_attention_decode(&q, &layer, &seqs, s);
@@ -589,7 +760,7 @@ mod tests {
         let width = s.proj_width();
         let pk = vec![0.0f32; 4 * 2 * width];
         let pv = pk.clone();
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let q = Tensor::zeros(&[2, width]);
         let seqs = [PagedSeq { blocks: &[0], len: 1, q_rows: 2 }];
         let _ = paged_attention_decode(&q, &layer, &seqs, s);
@@ -602,7 +773,7 @@ mod tests {
         let width = s.proj_width();
         let pk = vec![0.0f32; 4 * 2 * width];
         let pv = pk.clone();
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let q = Tensor::zeros(&[1, width]);
         let seqs = [PagedSeq { blocks: &[0], len: 0, q_rows: 1 }];
         let _ = paged_attention_decode(&q, &layer, &seqs, s);
@@ -615,7 +786,7 @@ mod tests {
         let width = s.proj_width();
         let pk = vec![0.0f32; 4 * 2 * width];
         let pv = pk.clone();
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let q = Tensor::zeros(&[1, width]);
         let seqs = [PagedSeq { blocks: &[0], len: 3, q_rows: 1 }];
         let _ = paged_attention_decode(&q, &layer, &seqs, s);
@@ -628,7 +799,7 @@ mod tests {
         let width = s.proj_width();
         let pk = vec![0.0f32; 4 * 2 * width]; // pool holds blocks 0..4
         let pv = pk.clone();
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size: 2, width };
+        let layer = PagedLayerView::f32(&pk, &pv, 2, width);
         let q = Tensor::zeros(&[1, width]);
         let seqs = [PagedSeq { blocks: &[9], len: 1, q_rows: 1 }];
         let _ = paged_attention_decode(&q, &layer, &seqs, s);

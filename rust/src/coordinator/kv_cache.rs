@@ -8,17 +8,39 @@
 
 use std::collections::HashMap;
 
+/// Storage dtype of the paged K/V pool. An alias of the tensor-level
+/// [`DType`](crate::tensor::DType): `F32` stores rows as raw `f32`;
+/// `F16`/`BF16` store real 16-bit words (half the resident bytes) that are
+/// widened back to f32 at the kernel boundary. Unlike the pure
+/// perf/observability knobs, a 16-bit setting *changes numerics* — its
+/// contract is engine invariant 7: generations are bitwise identical to an
+/// f32 pool whose writes pass through
+/// [`DType::quantize_slice`](crate::tensor::DType::quantize_slice).
+pub type KvDtype = crate::tensor::DType;
+
+/// `BDA_KV_DTYPE` ∈ {f32, f16, bf16}: storage dtype for new K/V pools.
+/// Read at config-construction time (each `KvCacheConfig::default()`), not
+/// latched; unset or unparsable falls back to `F32`.
+pub fn kv_dtype_from_env() -> KvDtype {
+    std::env::var("BDA_KV_DTYPE")
+        .ok()
+        .and_then(|s| KvDtype::parse(s.trim()))
+        .unwrap_or(KvDtype::F32)
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct KvCacheConfig {
     /// Tokens per block.
     pub block_size: usize,
     /// Total number of blocks in the pool.
     pub num_blocks: usize,
+    /// Storage dtype of pool block data (see [`KvDtype`]).
+    pub dtype: KvDtype,
 }
 
 impl Default for KvCacheConfig {
     fn default() -> Self {
-        KvCacheConfig { block_size: 16, num_blocks: 1024 }
+        KvCacheConfig { block_size: 16, num_blocks: 1024, dtype: kv_dtype_from_env() }
     }
 }
 
@@ -359,7 +381,8 @@ mod tests {
     use super::*;
 
     fn alloc(blocks: usize) -> BlockAllocator {
-        BlockAllocator::new(KvCacheConfig { block_size: 4, num_blocks: blocks })
+        // Dtype inherited from env: allocator bookkeeping is storage-agnostic.
+        BlockAllocator::new(KvCacheConfig { block_size: 4, num_blocks: blocks, ..Default::default() })
     }
 
     #[test]

@@ -71,6 +71,13 @@ pub struct Metrics {
 
 #[derive(Debug)]
 struct Inner {
+    /// Actual allocated K/V pool bytes as reported by the backend (0 for
+    /// backends without a paged pool). Honest about storage width: a
+    /// 16-bit pool reports half the bytes of an f32 pool with the same
+    /// block count.
+    kv_pool_bytes: u64,
+    /// Storage dtype of the K/V pool (`None` for pool-less backends).
+    kv_dtype: Option<&'static str>,
     requests_admitted: u64,
     requests_completed: u64,
     requests_rejected: u64,
@@ -128,6 +135,11 @@ fn atomic_f64_add(cell: &AtomicU64, v: f64) {
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub elapsed: f64,
+    /// Actual allocated K/V pool bytes (0 when the backend has no paged
+    /// pool); halves when the pool stores 16-bit words.
+    pub kv_pool_bytes: u64,
+    /// K/V pool storage dtype name, `None` for pool-less backends.
+    pub kv_dtype: Option<&'static str>,
     pub requests_admitted: u64,
     pub requests_completed: u64,
     pub requests_rejected: u64,
@@ -194,6 +206,8 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             inner: Mutex::new(Inner {
+                kv_pool_bytes: 0,
+                kv_dtype: None,
                 requests_admitted: 0,
                 requests_completed: 0,
                 requests_rejected: 0,
@@ -224,6 +238,15 @@ impl Metrics {
             decode_tokens: AtomicU64::new(0),
             occupancy_sum_bits: AtomicU64::new(0.0f64.to_bits()),
         }
+    }
+
+    /// Record the backend's K/V pool footprint: actual allocated bytes
+    /// and the storage dtype. Called once when the scheduler attaches
+    /// metrics to a pooled backend; pool-less backends never call it.
+    pub fn set_kv_pool(&self, bytes: usize, dtype: &'static str) {
+        let mut g = self.inner.lock().unwrap();
+        g.kv_pool_bytes = bytes as u64;
+        g.kv_dtype = Some(dtype);
     }
 
     pub fn admitted(&self, prompt_tokens: usize) {
@@ -309,6 +332,8 @@ impl Metrics {
         let occupancy_sum = f64::from_bits(self.occupancy_sum_bits.load(Ordering::Relaxed));
         Snapshot {
             elapsed,
+            kv_pool_bytes: g.kv_pool_bytes,
+            kv_dtype: g.kv_dtype,
             requests_admitted: g.requests_admitted,
             requests_completed: g.requests_completed,
             requests_rejected: g.requests_rejected,
@@ -365,6 +390,14 @@ impl Snapshot {
             100.0 * self.prefix_hit_rate(),
             self.prefix_blocks_saved,
         ))
+    }
+
+    /// Human-readable K/V pool footprint line, or `None` for backends
+    /// without a paged pool. Bytes are the actual allocation, so the line
+    /// halves when 16-bit storage is selected.
+    pub fn kv_pool_line(&self) -> Option<String> {
+        let dtype = self.kv_dtype?;
+        Some(format!("{dtype}, {:.1} MiB", self.kv_pool_bytes as f64 / (1024.0 * 1024.0)))
     }
 
     /// Human-readable preemption line, or `None` when the run never hit
@@ -449,6 +482,9 @@ impl Snapshot {
             Some(line) => format!(" | prefix cache: {line}"),
             None => String::new(),
         };
+        if let Some(line) = self.kv_pool_line() {
+            extra.push_str(&format!(" | kv pool: {line}"));
+        }
         if let Some(line) = self.preemption_line() {
             extra.push_str(&format!(" | preemption: {line}"));
         }
@@ -633,6 +669,21 @@ mod tests {
         assert!(line.contains("3 chunks"));
         assert!(line.contains("1032 prompt tokens"));
         assert!(s.report().contains("chunked prefill"));
+    }
+
+    #[test]
+    fn kv_pool_footprint_reports() {
+        let m = Metrics::new();
+        assert!(m.snapshot().kv_pool_line().is_none(), "no pool recorded yet");
+        assert!(!m.snapshot().report().contains("kv pool"));
+        m.set_kv_pool(8 * 1024 * 1024, "fp16");
+        let s = m.snapshot();
+        assert_eq!(s.kv_pool_bytes, 8 * 1024 * 1024);
+        assert_eq!(s.kv_dtype, Some("fp16"));
+        let line = s.kv_pool_line().expect("line present");
+        assert!(line.contains("fp16"));
+        assert!(line.contains("8.0 MiB"));
+        assert!(s.report().contains("kv pool: fp16"));
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use kv_cache::{BlockAllocator, KvCacheConfig};
+pub use kv_cache::{kv_dtype_from_env, BlockAllocator, KvCacheConfig, KvDtype};
 pub use metrics::{Metrics, Snapshot, StepTiming};
 #[cfg(feature = "pjrt")]
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};

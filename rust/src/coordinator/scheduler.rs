@@ -118,6 +118,14 @@ pub trait Backend {
     fn take_step_timing(&mut self) -> Option<StepTiming> {
         None
     }
+    /// `(actual allocated bytes, storage dtype name)` of the backend's own
+    /// K/V pool, when it owns real block storage — surfaced through
+    /// [`super::metrics::Snapshot`] so the memory the report claims is the
+    /// memory the process holds (a 16-bit pool reports half an f32 pool's
+    /// bytes). `None` for backends without a pool.
+    fn kv_pool(&self) -> Option<(usize, &'static str)> {
+        None
+    }
     /// Whether this backend can run prompt prefill as [`StepWork::PrefillChunk`]
     /// entries fused into batched steps. When `false` the scheduler uses
     /// the monolithic [`Backend::prefill`] path unchanged.
@@ -335,8 +343,13 @@ impl<B: Backend> Scheduler<B> {
     }
 
     /// Attach a metrics sink; each decode iteration then emits its batch
-    /// size and occupancy (tokens-per-step / decode-batch counters).
+    /// size and occupancy (tokens-per-step / decode-batch counters). A
+    /// pool-owning backend's actual allocated pool bytes and storage dtype
+    /// are recorded once here (capacity is fixed at construction).
     pub fn set_metrics(&mut self, metrics: Arc<Metrics>) {
+        if let Some((bytes, dtype)) = self.backend.kv_pool() {
+            metrics.set_kv_pool(bytes, dtype);
+        }
         self.metrics = Some(metrics);
     }
 
@@ -963,7 +976,7 @@ mod tests {
             SchedulerConfig {
                 max_active,
                 eos_token: None,
-                kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+                kv: KvCacheConfig { block_size: 4, num_blocks: 64, ..Default::default() },
                 ..SchedulerConfig::default()
             },
         )
@@ -1144,7 +1157,7 @@ mod tests {
             SchedulerConfig {
                 max_active: 4,
                 eos_token: None,
-                kv: KvCacheConfig { block_size: 4, num_blocks: 64 },
+                kv: KvCacheConfig { block_size: 4, num_blocks: 64, ..Default::default() },
                 ..SchedulerConfig::default()
             },
         )
@@ -1203,7 +1216,7 @@ mod tests {
         use crate::engine::PagedNativeBackend;
         use crate::model::{ModelConfig, Transformer};
         let model = Transformer::new_mha(ModelConfig::tiny(), 19);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 32 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 32, ..Default::default() };
         let s = Scheduler::new(
             PagedNativeBackend::new(model, kvc),
             SchedulerConfig { max_active: 4, eos_token: None, kv: kvc, ..Default::default() },

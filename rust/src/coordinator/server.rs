@@ -198,7 +198,7 @@ mod tests {
             scheduler: SchedulerConfig {
                 max_active: 8,
                 eos_token: None,
-                kv: KvCacheConfig { block_size: 4, num_blocks: 128 },
+                kv: KvCacheConfig { block_size: 4, num_blocks: 128, ..Default::default() },
                 ..Default::default()
             },
         }

@@ -237,9 +237,26 @@ impl PagedNativeBackend {
         Ok(())
     }
 
-    /// Total pool capacity in bytes at the model's logical dtype.
+    /// Actual allocated bytes of the K/V pool (capacity at the pool's
+    /// *storage* dtype, not occupancy): a 16-bit pool reports half an f32
+    /// pool's bytes for the same shape. Historically this multiplied the
+    /// logical element count by the model's logical dtype — fiction when
+    /// storage was always f32; it is pool truth now.
     pub fn kv_pool_bytes(&self) -> usize {
-        self.pool.bytes(self.model.dtype)
+        self.pool.bytes()
+    }
+
+    /// Storage dtype of the K/V pool.
+    pub fn kv_dtype(&self) -> crate::tensor::DType {
+        self.pool.dtype()
+    }
+
+    /// Quantize-at-write reference mode on an f32 pool — the invariant-7
+    /// test harness (`tests/prop_kv_dtype.rs`): a 16-bit pool at dtype `d`
+    /// must generate bitwise identically to an f32 pool with writes passed
+    /// through `quantize_slice(d)`. See `PagedKvPool::set_write_quantize`.
+    pub fn set_kv_write_quantize(&mut self, dtype: crate::tensor::DType) {
+        self.pool.set_write_quantize(dtype);
     }
 
     /// Blocks currently leased (dedup makes this less than the sum of
@@ -438,6 +455,12 @@ impl Backend for PagedNativeBackend {
         let cache = self.prefix.as_ref();
         let evictable = cache.map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
         Some(self.alloc.free_blocks() + evictable)
+    }
+
+    /// Pool truth for the metrics surface: actual allocated bytes plus the
+    /// storage dtype name (see [`PagedNativeBackend::kv_pool_bytes`]).
+    fn kv_pool(&self) -> Option<(usize, &'static str)> {
+        Some((self.pool.bytes(), self.pool.dtype().name()))
     }
 
     /// The last decode step's attention/GEMM split, with the prefix-cache
@@ -773,8 +796,14 @@ mod tests {
     use crate::model::ModelConfig;
     use crate::tensor::DType;
 
+    // Dtype pinned to F32: these tests compare paged output bitwise
+    // against the f32 per-sequence references (`model.prefill` /
+    // `model.decode_step` / `KvCache`), which invariant 1 only promises at
+    // matching storage precision. The `BDA_KV_DTYPE` CI axis exercises
+    // 16-bit storage through the paged-vs-paged suites
+    // (`tests/prop_kv_dtype.rs`, `tests/prop_preemption.rs`).
     fn kv() -> KvCacheConfig {
-        KvCacheConfig { block_size: 4, num_blocks: 64 }
+        KvCacheConfig { block_size: 4, num_blocks: 64, dtype: DType::F32 }
     }
 
     #[test]
@@ -869,7 +898,7 @@ mod tests {
     fn admission_sees_engine_level_forks() {
         use crate::coordinator::{Request, Scheduler, SchedulerConfig};
         let model = Transformer::new_mha(ModelConfig::tiny(), 23);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4, ..Default::default() };
         let mut s = Scheduler::new(
             PagedNativeBackend::new(model, kvc),
             SchedulerConfig { max_active: 8, eos_token: None, kv: kvc, ..Default::default() },
@@ -956,7 +985,7 @@ mod tests {
         // by evicting LRU leaves, and free_blocks must report the cached
         // blocks as reclaimable beforehand.
         let model = Transformer::new_mha(ModelConfig::tiny(), 41);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4, ..Default::default() };
         let mut engine = PagedNativeBackend::new(model, kvc);
         engine.set_prefix_cache(true);
         engine.prefill(1, &(0u32..12).collect::<Vec<_>>()).unwrap(); // 3 blocks
@@ -985,7 +1014,7 @@ mod tests {
         // must drop the hit and register cold (evicting the leaf) rather
         // than reject a prompt the pool can serve.
         let model = Transformer::new_mha(ModelConfig::tiny(), 53);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4, dtype: DType::F32 };
         let mut engine = PagedNativeBackend::new(model.clone(), kvc);
         engine.set_prefix_cache(true);
         let warm: Vec<u32> = (0..12).collect();
@@ -1017,7 +1046,7 @@ mod tests {
         // bit-identical to the uninterrupted reference, and the victim
         // resumes bitwise after a replay prefill.
         let model = Transformer::new_mha(ModelConfig::tiny(), 61);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 4, dtype: DType::F32 };
         let mut engine = PagedNativeBackend::new(model.clone(), kvc);
         engine.set_prefix_cache(false);
         let p1: Vec<u32> = (0..8).collect();
@@ -1056,7 +1085,7 @@ mod tests {
         // (a warm start when pressure allows; reclaimable when it
         // doesn't), and a replay-resume continues bit-identically.
         let model = Transformer::new_mha(ModelConfig::tiny(), 59);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 6 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 6, dtype: DType::F32 };
         let mut engine = PagedNativeBackend::new(model.clone(), kvc);
         engine.set_prefix_cache(true);
         let p1: Vec<u32> = (0..8).collect();
@@ -1114,7 +1143,7 @@ mod tests {
         // single sequence that cannot grow even with the whole pool — no
         // lower-priority victim holds blocks, so preemption cannot help.
         let model = Transformer::new_mha(ModelConfig::tiny(), 67);
-        let kvc = KvCacheConfig { block_size: 4, num_blocks: 2 };
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 2, ..Default::default() };
         let mut engine = PagedNativeBackend::new(model, kvc);
         engine.set_prefix_cache(false);
         engine.prefill(1, &(0u32..8).collect::<Vec<_>>()).unwrap(); // fills the pool
@@ -1382,6 +1411,48 @@ mod tests {
         assert_eq!(mono.len(), 2);
         for budget in [1usize, 4, 7] {
             assert_eq!(run(budget), mono, "budget {budget} changed the token stream");
+        }
+    }
+
+    #[test]
+    fn pool_bytes_report_actual_storage() {
+        // Satellite fix for `PagedKvPool::bytes()`: reported bytes are
+        // what the pool actually allocates, so f32 -> f16 halves them and
+        // the `Backend::kv_pool` metrics surface carries the same truth.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 89);
+        let shape = |dtype| KvCacheConfig { block_size: 4, num_blocks: 8, dtype };
+        let e32 = PagedNativeBackend::new(model.clone(), shape(DType::F32));
+        let e16 = PagedNativeBackend::new(model, shape(DType::F16));
+        assert!(e32.kv_pool_bytes() > 0);
+        assert_eq!(e32.kv_pool_bytes(), 2 * e16.kv_pool_bytes(), "f16 must halve pool bytes");
+        assert_eq!(e16.kv_pool(), Some((e16.kv_pool_bytes(), "fp16")));
+        assert_eq!(e32.kv_pool(), Some((e32.kv_pool_bytes(), "fp32")));
+        assert_eq!(e16.kv_dtype(), DType::F16);
+    }
+
+    #[test]
+    fn sixteen_bit_pool_matches_quantize_at_write_reference() {
+        // Invariant 7 at the engine level (the full matrix lives in
+        // `tests/prop_kv_dtype.rs`): a 16-bit pool generates bitwise
+        // identically to an f32 pool whose writes pass through
+        // `quantize_slice` — across prefill, COW fork, and decode.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 97);
+        for dt in [DType::F16, DType::BF16] {
+            let shape = |dtype| KvCacheConfig { block_size: 4, num_blocks: 64, dtype };
+            let mut real = PagedNativeBackend::new(model.clone(), shape(dt));
+            let mut reference = PagedNativeBackend::new(model.clone(), shape(DType::F32));
+            reference.set_kv_write_quantize(dt);
+            let prompt = [7u32, 23, 5, 91, 14, 3, 249];
+            let a = real.prefill(1, &prompt).unwrap();
+            let b = reference.prefill(1, &prompt).unwrap();
+            assert_eq!(a, b, "{dt} prefill logits diverged");
+            real.fork(1, 2).unwrap();
+            reference.fork(1, 2).unwrap();
+            for tok in [3u32, 77, 12, 8] {
+                let x = real.decode(&[(1, tok), (2, tok + 1)]).unwrap().expect_complete();
+                let y = reference.decode(&[(1, tok), (2, tok + 1)]).unwrap().expect_complete();
+                assert_eq!(x, y, "{dt} decode diverged at token {tok}");
+            }
         }
     }
 }

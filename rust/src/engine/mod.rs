@@ -44,10 +44,10 @@
 //!
 //! # Load-bearing invariants
 //!
-//! Every optimization in the serving layer is constrained by six
+//! Every optimization in the serving layer is constrained by seven
 //! bit-exactness invariants, stated here once and property-tested in
-//! `tests/prop_paged_parallel.rs`, `tests/prop_coordinator.rs`, and
-//! `tests/prop_preemption.rs`:
+//! `tests/prop_paged_parallel.rs`, `tests/prop_coordinator.rs`,
+//! `tests/prop_preemption.rs`, and `tests/prop_kv_dtype.rs`:
 //!
 //! 1. **Paged batched decode is bit-identical to per-sequence decode.**
 //!    Every row-level operation of the batched step (embedding, RMSNorm,
@@ -97,6 +97,22 @@
 //!    any mix of live decode rows, across prefix-cache hits and
 //!    preempt→resume replays — so the chunk budget is a pure
 //!    TBT-vs-throughput knob, never a numerics knob.
+//! 7. **A 16-bit pool equals quantize-at-write f32 storage, bitwise.**
+//!    With `BDA_KV_DTYPE=f16|bf16` the pool stores K/V blocks as real
+//!    `u16` words ([`paged_kv::PagedKvPool`]): rows are narrowed once at
+//!    write (round-to-nearest-even) and widened exactly at the kernel
+//!    boundary — widening a 16-bit value to f32 is lossless, so
+//!    `widen(narrow(x)) == quantize(x)` bit for bit, and block copies
+//!    (COW, prefix-cache donation/readoption) move stored words verbatim
+//!    without re-rounding. A 16-bit pool therefore generates exactly what
+//!    an f32 pool whose writes pass through `DType::quantize_slice`
+//!    would — quantize-at-write is the reference semantics — and because
+//!    the widened rows feed the same f32 accumulation order as native
+//!    f32 storage, invariants 2–6 extend to 16-bit storage by
+//!    composition. Storage width halves pool bytes and changes rounded
+//!    K/V values; it never introduces nondeterminism. (Invariant 1 is
+//!    the deliberate exception: the per-sequence reference stores f32,
+//!    so paged == per-seq is pinned to f32 pools.)
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

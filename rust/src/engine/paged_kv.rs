@@ -9,15 +9,91 @@
 //! copy-on-write *decisions* live in
 //! [`crate::coordinator::kv_cache::BlockAllocator`] — this pool only
 //! executes the resulting writes and block copies.
+//!
+//! Storage dtype ([`KvCacheConfig::dtype`]): `F32` keeps rows as raw
+//! `f32`; `F16`/`BF16` store real 16-bit words — half the resident bytes,
+//! double the batch capacity at fixed memory — narrowed at write time and
+//! widened back to f32 at the kernel boundary. Because widening a 16-bit
+//! word is exact, quantize-at-write is the complete semantics: a 16-bit
+//! pool behaves bit-for-bit like an f32 pool whose `write_row` inputs pass
+//! through [`DType::quantize_slice`] (engine invariant 7). Block copies
+//! move stored words verbatim in either representation, so COW forks and
+//! prefix-cache donation/readoption never re-round.
 
-use crate::attention::paged::PagedLayerView;
+use crate::attention::paged::{KvSlice, PagedLayerView};
 use crate::coordinator::kv_cache::{BlockId, KvCacheConfig};
 use crate::tensor::DType;
 
+/// One layer's K or V storage in its resident representation.
+#[derive(Debug)]
+enum KvStore {
+    F32(Vec<f32>),
+    U16(Vec<u16>),
+}
+
+impl KvStore {
+    fn alloc(dtype: DType, len: usize) -> KvStore {
+        match dtype {
+            DType::F32 => KvStore::F32(vec![0.0; len]),
+            DType::F16 | DType::BF16 => KvStore::U16(vec![0; len]),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            KvStore::F32(d) => d.len(),
+            KvStore::U16(d) => d.len(),
+        }
+    }
+
+    /// Actual allocated bytes of the backing buffer's elements.
+    fn bytes(&self) -> usize {
+        match self {
+            KvStore::F32(d) => d.len() * std::mem::size_of::<f32>(),
+            KvStore::U16(d) => d.len() * std::mem::size_of::<u16>(),
+        }
+    }
+
+    fn write(&mut self, dtype: DType, quantize: Option<DType>, base: usize, row: &[f32]) {
+        match self {
+            KvStore::F32(d) => {
+                let dst = &mut d[base..base + row.len()];
+                dst.copy_from_slice(row);
+                if let Some(q) = quantize {
+                    q.quantize_slice(dst);
+                }
+            }
+            KvStore::U16(d) => {
+                let narrow = dtype.narrow_f32();
+                for (dst, &x) in d[base..base + row.len()].iter_mut().zip(row) {
+                    *dst = narrow(x);
+                }
+            }
+        }
+    }
+
+    /// Copy `n` stored words from `src..src+n` to `dst..` verbatim — no
+    /// widening/re-narrowing round trip, so copies are bit-stable at any
+    /// dtype (COW invariant 3 extends to 16-bit storage by construction).
+    fn copy_within(&mut self, src: usize, dst: usize, n: usize) {
+        match self {
+            KvStore::F32(d) => d.copy_within(src..src + n, dst),
+            KvStore::U16(d) => d.copy_within(src..src + n, dst),
+        }
+    }
+
+    fn slice(&self, dtype: DType) -> KvSlice<'_> {
+        match self {
+            KvStore::F32(d) => KvSlice::F32(d),
+            KvStore::U16(d) => KvSlice::U16 { bits: d, dtype },
+        }
+    }
+}
+
 #[derive(Debug)]
 struct LayerPool {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: KvStore,
+    v: KvStore,
     width: usize,
 }
 
@@ -26,18 +102,30 @@ struct LayerPool {
 pub struct PagedKvPool {
     pub config: KvCacheConfig,
     layers: Vec<LayerPool>,
+    /// Test-facing reference mode for engine invariant 7: when set on an
+    /// `F32`-storage pool, every `write_row` is passed through
+    /// [`DType::quantize_slice`] at this dtype before landing. A 16-bit
+    /// pool at dtype `d` must generate bitwise identically to an f32 pool
+    /// with `write_quantize = Some(d)` — that equivalence is what
+    /// `tests/prop_kv_dtype.rs` pins. Ignored on 16-bit storage (the
+    /// narrowing write already *is* the quantization).
+    write_quantize: Option<DType>,
 }
 
 impl PagedKvPool {
     /// Allocate a pool with one (K, V) buffer pair per layer, `widths[i]`
-    /// values per token row in layer `i`.
+    /// values per token row in layer `i`, stored at `config.dtype`.
     pub fn new(config: KvCacheConfig, widths: &[usize]) -> PagedKvPool {
         let rows = config.num_blocks * config.block_size;
         let layers = widths
             .iter()
-            .map(|&w| LayerPool { k: vec![0.0; rows * w], v: vec![0.0; rows * w], width: w })
+            .map(|&w| LayerPool {
+                k: KvStore::alloc(config.dtype, rows * w),
+                v: KvStore::alloc(config.dtype, rows * w),
+                width: w,
+            })
             .collect();
-        PagedKvPool { config, layers }
+        PagedKvPool { config, layers, write_quantize: None }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -48,12 +136,28 @@ impl PagedKvPool {
         self.layers[layer].width
     }
 
-    /// Total pool bytes at a logical dtype (capacity, not occupancy).
-    pub fn bytes(&self, dtype: DType) -> usize {
-        self.layers.iter().map(|l| (l.k.len() + l.v.len()) * dtype.size_bytes()).sum()
+    /// Storage dtype of block data.
+    pub fn dtype(&self) -> DType {
+        self.config.dtype
     }
 
-    /// Write one token's K/V row into `(block, slot)` of a layer.
+    /// Total *actually allocated* pool bytes (capacity, not occupancy):
+    /// element count × resident element size. A 16-bit pool reports half
+    /// an f32 pool's bytes for the same shape.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+
+    /// Enable quantize-at-write reference mode (invariant-7 test harness;
+    /// see the `write_quantize` field). Only meaningful on `F32` storage.
+    pub fn set_write_quantize(&mut self, dtype: DType) {
+        debug_assert_eq!(self.config.dtype, DType::F32, "reference mode needs f32 storage");
+        self.write_quantize = Some(dtype);
+    }
+
+    /// Write one token's K/V row into `(block, slot)` of a layer,
+    /// narrowing to the storage dtype (16-bit pools) or applying the
+    /// optional quantize-at-write reference (f32 pools).
     pub fn write_row(
         &mut self,
         layer: usize,
@@ -63,22 +167,25 @@ impl PagedKvPool {
         v_row: &[f32],
     ) {
         debug_assert!(slot < self.config.block_size);
+        let dtype = self.config.dtype;
+        let quantize = self.write_quantize;
         let l = &mut self.layers[layer];
         debug_assert_eq!(k_row.len(), l.width);
         debug_assert_eq!(v_row.len(), l.width);
         let base = (block * self.config.block_size + slot) * l.width;
-        l.k[base..base + l.width].copy_from_slice(k_row);
-        l.v[base..base + l.width].copy_from_slice(v_row);
+        l.k.write(dtype, quantize, base, k_row);
+        l.v.write(dtype, quantize, base, v_row);
     }
 
     /// Copy a whole block's K/V across every layer (the data half of
-    /// copy-on-write; the allocator decides *when*).
+    /// copy-on-write; the allocator decides *when*). Stored words move
+    /// verbatim, so the copy is exact at any storage dtype.
     pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
         let bs = self.config.block_size;
         for l in &mut self.layers {
             let n = bs * l.width;
-            l.k.copy_within(src * n..src * n + n, dst * n);
-            l.v.copy_within(src * n..src * n + n, dst * n);
+            l.k.copy_within(src * n, dst * n, n);
+            l.v.copy_within(src * n, dst * n, n);
         }
     }
 
@@ -86,8 +193,8 @@ impl PagedKvPool {
     pub fn layer_view(&self, layer: usize) -> PagedLayerView<'_> {
         let l = &self.layers[layer];
         PagedLayerView {
-            k: &l.k,
-            v: &l.v,
+            k: l.k.slice(self.config.dtype),
+            v: l.v.slice(self.config.dtype),
             block_size: self.config.block_size,
             width: l.width,
         }
@@ -97,9 +204,25 @@ impl PagedKvPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::kv_cache::KvDtype;
+
+    fn pool_with(dtype: KvDtype) -> PagedKvPool {
+        PagedKvPool::new(
+            KvCacheConfig { block_size: 4, num_blocks: 8, dtype },
+            &[6, 6],
+        )
+    }
 
     fn pool() -> PagedKvPool {
-        PagedKvPool::new(KvCacheConfig { block_size: 4, num_blocks: 8 }, &[6, 6])
+        pool_with(KvDtype::F32)
+    }
+
+    fn read_row(view: &PagedLayerView<'_>, base: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut kb = Vec::new();
+        let mut vb = Vec::new();
+        let k = view.k.row(base, n, &mut kb).to_vec();
+        let v = view.v.row(base, n, &mut vb).to_vec();
+        (k, v)
     }
 
     #[test]
@@ -110,40 +233,103 @@ mod tests {
         p.write_row(1, 3, 2, &k, &v);
         let view = p.layer_view(1);
         let base = view.row_offset(&[0, 3], 6); // token 6 -> block 3, slot 2
-        assert_eq!(&view.k[base..base + 6], &k[..]);
-        assert_eq!(&view.v[base..base + 6], &v[..]);
+        let (rk, rv) = read_row(&view, base, 6);
+        assert_eq!(rk, k);
+        assert_eq!(rv, v);
         // Other layer untouched.
-        assert!(p.layer_view(0).k.iter().all(|&x| x == 0.0));
+        let v0 = p.layer_view(0);
+        let (zk, _) = read_row(&v0, 0, 6);
+        assert!(zk.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sixteen_bit_write_reads_back_quantized_exactly() {
+        // Invariant 7 at pool granularity: a 16-bit pool's read-back equals
+        // quantize() of the written values, bit for bit — for values that
+        // do round (0.1) and values that don't (exact halves).
+        for dt in [KvDtype::F16, KvDtype::BF16] {
+            let mut p = pool_with(dt);
+            let k: Vec<f32> = (0..6).map(|i| 0.1 + i as f32 * 0.3).collect();
+            let v: Vec<f32> = (0..6).map(|i| -1.5 * i as f32).collect();
+            p.write_row(0, 2, 1, &k, &v);
+            let view = p.layer_view(0);
+            let base = view.row_offset(&[0, 0, 2], 4 + 1);
+            let (rk, rv) = read_row(&view, base, 6);
+            for i in 0..6 {
+                assert_eq!(rk[i].to_bits(), dt.quantize(k[i]).to_bits(), "{dt} k[{i}]");
+                assert_eq!(rv[i].to_bits(), dt.quantize(v[i]).to_bits(), "{dt} v[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_at_write_reference_matches_16bit_storage() {
+        // The f32 pool in reference mode and the real 16-bit pool must read
+        // back identical f32 rows — the pool-level form of invariant 7.
+        for dt in [KvDtype::F16, KvDtype::BF16] {
+            let mut refp = pool_with(KvDtype::F32);
+            refp.set_write_quantize(dt);
+            let mut real = pool_with(dt);
+            let k: Vec<f32> = (0..6).map(|i| (i as f32 - 2.7) * 0.013).collect();
+            let v: Vec<f32> = (0..6).map(|i| 1.0 / (i as f32 + 3.0)).collect();
+            refp.write_row(1, 5, 3, &k, &v);
+            real.write_row(1, 5, 3, &k, &v);
+            let (rv, xv) = (refp.layer_view(1), real.layer_view(1));
+            let base = rv.row_offset(&[0, 0, 0, 0, 0, 5], 20 + 3);
+            let (rk, rvv) = read_row(&rv, base, 6);
+            let (xk, xvv) = read_row(&xv, base, 6);
+            assert_eq!(
+                rk.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                xk.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "{dt} K"
+            );
+            assert_eq!(
+                rvv.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                xvv.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "{dt} V"
+            );
+        }
     }
 
     #[test]
     fn copy_block_copies_all_layers() {
-        let mut p = pool();
-        for layer in 0..2 {
-            for slot in 0..4 {
-                let row = vec![(layer * 10 + slot) as f32; 6];
-                p.write_row(layer, 2, slot, &row, &row);
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::BF16] {
+            let mut p = pool_with(dt);
+            for layer in 0..2 {
+                for slot in 0..4 {
+                    let row = vec![(layer * 10 + slot) as f32 + 0.1; 6];
+                    p.write_row(layer, 2, slot, &row, &row);
+                }
             }
-        }
-        p.copy_block(2, 5);
-        for layer in 0..2 {
-            let view = p.layer_view(layer);
-            for slot in 0..4 {
-                let src = view.row_offset(&[0, 0, 2], 8 + slot);
-                let dst = view.row_offset(&[0, 5], 4 + slot);
-                assert_eq!(view.k[src..src + 6], view.k[dst..dst + 6]);
-                assert_eq!(view.v[src..src + 6], view.v[dst..dst + 6]);
+            p.copy_block(2, 5);
+            for layer in 0..2 {
+                let view = p.layer_view(layer);
+                for slot in 0..4 {
+                    let src = view.row_offset(&[0, 0, 2], 8 + slot);
+                    let dst = view.row_offset(&[0, 5], 4 + slot);
+                    let (sk, sv) = read_row(&view, src, 6);
+                    let (dk, dv) = read_row(&view, dst, 6);
+                    assert_eq!(sk, dk, "{dt} layer {layer} slot {slot}");
+                    assert_eq!(sv, dv, "{dt} layer {layer} slot {slot}");
+                }
             }
         }
     }
 
     #[test]
-    fn capacity_accounting() {
-        let p = pool();
-        // 2 layers * 2 tensors * 8 blocks * 4 slots * 6 wide * 4 bytes.
-        assert_eq!(p.bytes(DType::F32), 2 * 2 * 8 * 4 * 6 * 4);
-        assert_eq!(p.bytes(DType::F16), 2 * 2 * 8 * 4 * 6 * 2);
-        assert_eq!(p.n_layers(), 2);
-        assert_eq!(p.width(0), 6);
+    fn capacity_accounting_reports_actual_bytes() {
+        // 2 layers * 2 tensors * 8 blocks * 4 slots * 6 wide elements.
+        let elems = 2 * 2 * 8 * 4 * 6;
+        let p32 = pool_with(KvDtype::F32);
+        assert_eq!(p32.bytes(), elems * 4);
+        assert_eq!(p32.n_layers(), 2);
+        assert_eq!(p32.width(0), 6);
+        // A 16-bit pool of the same shape allocates exactly half the bytes.
+        for dt in [KvDtype::F16, KvDtype::BF16] {
+            let p16 = pool_with(dt);
+            assert_eq!(p16.bytes(), elems * 2, "{dt}");
+            assert_eq!(p16.bytes() * 2, p32.bytes(), "{dt} must halve f32 bytes");
+            assert_eq!(p16.dtype(), dt);
+        }
     }
 }

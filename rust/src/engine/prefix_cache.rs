@@ -449,7 +449,7 @@ mod tests {
     const BS: usize = 4;
 
     fn alloc(blocks: usize) -> BlockAllocator {
-        BlockAllocator::new(KvCacheConfig { block_size: BS, num_blocks: blocks })
+        BlockAllocator::new(KvCacheConfig { block_size: BS, num_blocks: blocks, ..Default::default() })
     }
 
     /// Register `seq` for `tokens`, then release it into the tree the way

@@ -11,6 +11,11 @@
 //!                                 --prefix-cache on|off overrides the
 //!                                 BDA_PREFIX_CACHE default for the paged
 //!                                 engine's radix-tree prompt cache;
+//!                                 --kv-dtype fp32|fp16|bf16 overrides the
+//!                                 BDA_KV_DTYPE default for the paged
+//!                                 engine's K/V block storage width
+//!                                 (16-bit pools generate bitwise what an
+//!                                 f32 pool with quantize-at-write would);
 //!                                 --trace-out FILE enables structured
 //!                                 tracing and writes a Perfetto-loadable
 //!                                 Chrome trace; --prom-out FILE writes the
@@ -160,7 +165,16 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("unknown --backend {backend}; expected paged | per-seq");
         return 2;
     }
-    let cfg = ServerConfig::default();
+    let mut cfg = ServerConfig::default();
+    if let Some(v) = args.get("kv-dtype") {
+        match DType::parse(v) {
+            Some(dt) => cfg.scheduler.kv.dtype = dt,
+            None => {
+                eprintln!("unknown --kv-dtype {v}; expected fp32 | fp16 | bf16");
+                return 2;
+            }
+        }
+    }
     let t = trace::generate(trace::TraceConfig {
         n_requests: n,
         vocab_size: model.config.vocab_size,
@@ -188,6 +202,11 @@ fn cmd_serve(args: &Args) -> i32 {
             "prefix cache: {}",
             if engine.prefix_cache_enabled() { "enabled" } else { "disabled" }
         );
+        println!(
+            "kv pool: {} storage, {:.1} MiB allocated",
+            engine.kv_dtype().name(),
+            engine.kv_pool_bytes() as f64 / (1024.0 * 1024.0)
+        );
         coordinator::server::replay_trace(engine, cfg, t)
     };
     let (responses, metrics) = result.expect("serve");
@@ -199,6 +218,9 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     if let Some(line) = snap.prefix_cache_line() {
         println!("prefix cache: {line}");
+    }
+    if let Some(line) = snap.kv_pool_line() {
+        println!("kv pool: {line}");
     }
     if let Some(line) = snap.preemption_line() {
         println!("preemption: {line}");

@@ -139,6 +139,14 @@ pub fn prometheus_text(s: &Snapshot) -> String {
     prom_gauge(&mut out, "bda_tokens_per_sec", "Generation throughput", s.tokens_per_sec);
     prom_gauge(&mut out, "bda_decode_occupancy", "Mean decode-batch occupancy", s.decode_occupancy);
     prom_gauge(&mut out, "bda_mean_batch_size", "Mean formed batch size", s.mean_batch_size);
+    if let Some(dtype) = s.kv_dtype {
+        out.push_str(&format!(
+            "# HELP bda_kv_pool_bytes Allocated K/V pool bytes\n\
+             # TYPE bda_kv_pool_bytes gauge\n\
+             bda_kv_pool_bytes{{dtype=\"{dtype}\"}} {}\n",
+            s.kv_pool_bytes
+        ));
+    }
     let latency = Quantiles {
         p50: s.latency_p50,
         p95: s.latency_p95,

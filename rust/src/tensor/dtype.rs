@@ -43,6 +43,31 @@ impl DType {
         }
     }
 
+    /// Narrowing store for this dtype's 16-bit word — the write half of
+    /// quantize-at-write K/V storage ([`crate::engine::PagedKvPool`]).
+    /// `widen_u16(narrow_f32(x)) == quantize(x)` bit for bit, which is
+    /// what makes 16-bit pool storage equivalent to an f32 pool whose
+    /// writes pass through [`DType::quantize_slice`] (engine invariant 7).
+    pub fn narrow_f32(self) -> fn(f32) -> u16 {
+        match self {
+            DType::F32 => |_| panic!("F32 has no 16-bit storage word"),
+            DType::F16 => f32_to_f16,
+            DType::BF16 => f32_to_bf16,
+        }
+    }
+
+    /// Widening load for this dtype's 16-bit word — the read half of
+    /// 16-bit K/V storage. Widening is exact for both F16 and BF16 (every
+    /// 16-bit value is representable in f32), so reading back a stored
+    /// row reproduces the quantized f32 values bit for bit.
+    pub fn widen_u16(self) -> fn(u16) -> f32 {
+        match self {
+            DType::F32 => |_| panic!("F32 has no 16-bit storage word"),
+            DType::F16 => f16_to_f32,
+            DType::BF16 => bf16_to_f32,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "fp32",
@@ -261,6 +286,178 @@ mod tests {
             }
             let f = f16_to_f32(bits);
             assert_eq!(f32_to_f16(f), bits, "bits {bits:#06x} -> {f}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_f16_bits_all_classes() {
+        // All 65,536 patterns, including inf/NaN: the round trip preserves
+        // the value class (finite values exactly — subnormals included —
+        // infinities exactly, NaNs stay NaN with the sign preserved), and
+        // widening never changes a finite value (f16 ⊂ f32 exactly).
+        for bits in 0u16..=0xFFFF {
+            let f = f16_to_f32(bits);
+            let exp = (bits >> 10) & 0x1F;
+            let mant = bits & 0x03FF;
+            let sign_neg = bits & 0x8000 != 0;
+            if exp == 0x1F && mant != 0 {
+                assert!(f.is_nan(), "NaN bits {bits:#06x} widened to {f}");
+                let rt = f32_to_f16(f);
+                assert_eq!(rt >> 10 & 0x1F, 0x1F, "{bits:#06x}");
+                assert_ne!(rt & 0x03FF, 0, "NaN class lost for {bits:#06x}");
+                assert_eq!(rt & 0x8000 != 0, sign_neg, "NaN sign lost for {bits:#06x}");
+            } else if exp == 0x1F {
+                assert!(f.is_infinite());
+                assert_eq!(f32_to_f16(f), bits);
+            } else {
+                assert!(f.is_finite());
+                assert_eq!(f.is_sign_negative(), sign_neg, "{bits:#06x}");
+                // Quantizing an exactly-representable value is the identity.
+                assert_eq!(DType::F16.quantize(f).to_bits(), f.to_bits());
+                assert_eq!(f32_to_f16(f), bits);
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_bf16_bits_roundtrip() {
+        // All 65,536 bf16 patterns. Finite values (subnormals included)
+        // widen exactly — the low 16 f32 mantissa bits are zero — so the
+        // narrowing round trip is the identity. NaNs keep their payload
+        // and sign, with only the quiet bit (0x0040) forced on.
+        for bits in 0u16..=0xFFFF {
+            let f = bf16_to_f32(bits);
+            let exp = (bits >> 7) & 0xFF;
+            let mant = bits & 0x007F;
+            if exp == 0xFF && mant != 0 {
+                assert!(f.is_nan(), "NaN bits {bits:#06x} widened to {f}");
+                assert_eq!(f32_to_bf16(f), bits | 0x0040, "payload lost for {bits:#06x}");
+            } else {
+                assert_eq!(f.to_bits(), (bits as u32) << 16, "widening must be exact");
+                assert_eq!(f32_to_bf16(f), bits, "bits {bits:#06x} -> {f}");
+                if f.is_finite() {
+                    assert_eq!(DType::BF16.quantize(f).to_bits(), f.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widen_narrow_compose_to_quantize() {
+        // The storage pair (narrow_f32, widen_u16) must reproduce quantize()
+        // bit for bit — this is what lets a u16 pool stand in for an f32
+        // pool with quantize-at-write (engine invariant 7).
+        for dt in [DType::F16, DType::BF16] {
+            let (narrow, widen) = (dt.narrow_f32(), dt.widen_u16());
+            for i in 0..50_000u32 {
+                // Deterministic pseudo-random f32 sweep (finite values only).
+                let bits = i.wrapping_mul(2_654_435_761).rotate_left(7) ^ 0x5A5A_1234;
+                let x = f32::from_bits(bits);
+                if !x.is_finite() {
+                    continue;
+                }
+                assert_eq!(
+                    widen(narrow(x)).to_bits(),
+                    dt.quantize(x).to_bits(),
+                    "{dt} x={x:e}"
+                );
+            }
+        }
+    }
+
+    /// Correctly rounded f32 -> f16 reference: widen all candidate f16
+    /// values to f64 and pick the nearest, breaking ties toward the even
+    /// (low-mantissa-bit-zero) candidate. Exhaustive over the f16 lattice,
+    /// so it is a ground-truth oracle rather than a reimplementation.
+    fn f16_reference_rne(x: f32) -> u16 {
+        if x.is_nan() {
+            return 0x7E00 | ((x.to_bits() >> 16) as u16 & 0x8000);
+        }
+        let xd = x as f64;
+        let sign = if x.is_sign_negative() { 0x8000u16 } else { 0 };
+        let mag = xd.abs();
+        // Overflow: 65520 is the midpoint between max-finite (65504) and
+        // the next lattice step; at or above it RNE rounds to infinity
+        // (the tie goes to the even candidate, which is inf).
+        if mag >= 65520.0 {
+            return sign | 0x7C00;
+        }
+        // Magnitudes 0x0000..=0x7C00 (zero..inf) are monotone in bit order.
+        let mut best: u16 = 0;
+        let mut best_err = f64::INFINITY;
+        let mut lo = 0u16;
+        let mut hi = 0x7C00u16;
+        // Binary search the monotone lattice to a small window, then scan.
+        while hi - lo > 8 {
+            let mid = lo + (hi - lo) / 2;
+            if (f16_to_f32(mid) as f64) <= mag {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        for cand in lo.saturating_sub(1)..=hi {
+            let err = ((f16_to_f32(cand) as f64) - mag).abs();
+            if err < best_err || (err == best_err && cand & 1 == 0) {
+                best_err = err;
+                best = cand;
+            }
+        }
+        sign | best
+    }
+
+    #[test]
+    fn f16_narrowing_matches_big_float_reference() {
+        // Deterministic pseudo-random f32s plus every f16 lattice midpoint:
+        // f32_to_f16 must agree with the exhaustive f64 oracle everywhere.
+        let mut check = |x: f32| {
+            let got = f32_to_f16(x);
+            let want = f16_reference_rne(x);
+            assert_eq!(got, want, "x={x:e} bits={:#010x}", x.to_bits());
+        };
+        for h in 0u16..0x7C00 {
+            // Exact lattice point and the midpoint to its successor — the
+            // hardest rounding cases, covering normals and subnormals.
+            let a = f16_to_f32(h) as f64;
+            let b = f16_to_f32(h + 1) as f64;
+            check(a as f32);
+            check(((a + b) / 2.0) as f32);
+            check(-(((a + b) / 2.0) as f32));
+        }
+        for i in 0..200_000u32 {
+            let bits = i.wrapping_mul(0x9E37_79B9).rotate_left(11) ^ 0x0BAD_F00D;
+            let x = f32::from_bits(bits);
+            if x.is_finite() {
+                check(x);
+            }
+        }
+    }
+
+    #[test]
+    fn f16_narrowing_is_monotone() {
+        // For finite a <= b, quantize(a) <= quantize(b). Sweep ordered
+        // pairs across the whole finite f16 range, including the
+        // subnormal band and the overflow edge.
+        let mut xs: Vec<f32> = Vec::new();
+        for h in 0u16..=0x7BFF {
+            let v = f16_to_f32(h) as f64;
+            let n = f16_to_f32(h + 1) as f64;
+            xs.push(v as f32);
+            xs.push((v + (n - v) * 0.25) as f32);
+            xs.push(((v + n) / 2.0) as f32);
+        }
+        xs.push(65520.0); // rounds to inf
+        xs.push(1e9);
+        xs.sort_by(f32::total_cmp);
+        let mut prev = f32::NEG_INFINITY;
+        for &x in &xs {
+            let q = f16_to_f32(f32_to_f16(x));
+            assert!(q >= prev, "monotonicity broken at x={x:e}: {q} < {prev}");
+            prev = q;
+        }
+        // Mirror for negatives: narrowing commutes with negation.
+        for &x in &xs {
+            assert_eq!(f32_to_f16(-x), f32_to_f16(x) ^ 0x8000, "x={x:e}");
         }
     }
 }

@@ -10,6 +10,7 @@ use bda::coordinator::{
 use bda::engine::PagedNativeBackend;
 use bda::model::transformer::KvCache;
 use bda::model::{ModelConfig, Transformer};
+use bda::tensor::DType;
 use bda::util::rng::Rng;
 use std::time::Duration;
 
@@ -75,7 +76,7 @@ fn make_sched(
         SchedulerConfig {
             max_active,
             eos_token: None,
-            kv: KvCacheConfig { block_size: 4, num_blocks },
+            kv: KvCacheConfig { block_size: 4, num_blocks, ..Default::default() },
             ..Default::default()
         },
     )
@@ -90,6 +91,7 @@ fn prop_allocator_fuzz() {
         let mut alloc = BlockAllocator::new(KvCacheConfig {
             block_size: rng.range(1, 8),
             num_blocks: rng.range(4, 64),
+            ..Default::default()
         });
         let mut live: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
@@ -155,7 +157,11 @@ fn prop_paged_engine_decode_bit_identical_to_per_seq() {
         } else {
             model
         };
-        let kv = KvCacheConfig { block_size: rng.range(1, 8), num_blocks: 512 };
+        // f32 pinned: this test compares paged output against the f32
+        // per-sequence KvCache reference (16-bit pools are covered by the
+        // quantize-at-write suite in prop_kv_dtype.rs).
+        let kv =
+            KvCacheConfig { block_size: rng.range(1, 8), num_blocks: 512, dtype: DType::F32 };
         let mut engine = PagedNativeBackend::new(model.clone(), kv);
 
         let batch = rng.range(1, 8);

@@ -1,0 +1,201 @@
+//! Property tests for engine invariant 7: a pool storing K/V blocks as
+//! real 16-bit words (`KvDtype::F16` / `BF16`) produces generations
+//! **bitwise identical** to an f32 pool whose writes pass through
+//! `DType::quantize_slice` — quantize-at-write is the reference
+//! semantics, so every existing bitwise invariant (parallel == serial,
+//! cache hit == cold prefill, preempt→resume == uninterrupted, chunked ==
+//! monolithic) extends to 16-bit storage by composition.
+//!
+//! The matrix: MHA and BDA × {fp16, bf16} × worker counts {1, 8} ×
+//! prefix cache {off, on} × prefill chunk budgets {4, 0}, on an ample
+//! pool; then a deliberately tiny pool that forces preempt→resume with
+//! the radix tree live, so donated-then-readopted blocks are proven
+//! bit-stable in 16-bit storage too.
+//!
+//! The "small" pool size honors `BDA_TEST_POOL_BLOCKS` (the same knob the
+//! CI overload matrix pins for `prop_preemption`), clamped so one
+//! sequence always fits alone.
+
+use bda::bd::Strategy;
+use bda::coordinator::kv_cache::test_pool_blocks;
+use bda::coordinator::server::replay_trace;
+use bda::coordinator::{BatcherConfig, KvCacheConfig, Request, SchedulerConfig, ServerConfig};
+use bda::engine::PagedNativeBackend;
+use bda::model::{ModelConfig, Transformer};
+use bda::tensor::DType;
+use bda::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Overload pool size (see `prop_preemption`): env knob clamped so a
+/// single sequence fits alone, 10 blocks otherwise — anything below 15
+/// exhausts mid-decode at concurrency 3.
+fn overload_pool_blocks() -> usize {
+    test_pool_blocks().map(|n| n.clamp(6, 64)).unwrap_or(10)
+}
+
+fn server_config(num_blocks: usize, dtype: DType) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 3,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks, dtype },
+            ..Default::default()
+        },
+    }
+}
+
+/// 6 requests with distinct 8-token prompts sharing no prefix, 10 new
+/// tokens each: peak demand 3 × 5 blocks at concurrency 3.
+fn trace(vocab: u32) -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..8u64).map(|j| ((i * 37 + j * 13 + 5) % vocab as u64) as u32).collect();
+            Request::new(i, prompt, 10)
+        })
+        .collect()
+}
+
+type Generations = Vec<(u64, Vec<u32>)>;
+
+/// One serving run. With `quantize_ref` set, the pool stores f32 but
+/// every K/V write is passed through `quantize_slice(dtype)` — the
+/// reference semantics a real 16-bit pool must reproduce bitwise.
+fn run(
+    model: &Transformer,
+    dtype: DType,
+    quantize_ref: bool,
+    workers: usize,
+    cache: bool,
+    chunk: usize,
+    num_blocks: usize,
+) -> (Generations, bda::coordinator::metrics::Snapshot) {
+    let storage = if quantize_ref { DType::F32 } else { dtype };
+    let mut cfg = server_config(num_blocks, storage);
+    cfg.scheduler.prefill_chunk = chunk;
+    let pool = Arc::new(ThreadPool::new(workers));
+    let mut backend = PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+    if quantize_ref {
+        backend.set_kv_write_quantize(dtype);
+    }
+    backend.set_prefix_cache(cache);
+    let t = trace(model.config.vocab_size as u32);
+    let (mut responses, metrics) = replay_trace(backend, cfg, t).expect("kv dtype serve");
+    responses.sort_by_key(|r| r.id);
+    let generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    (generations, metrics.snapshot())
+}
+
+/// Invariant 7 across the full serving matrix on an ample pool: real
+/// 16-bit storage == quantize-at-write f32 storage, bitwise, for every
+/// (model, dtype, workers, prefix cache, chunk budget) combination.
+#[test]
+fn prop_16bit_pool_bitwise_equals_quantize_at_write_f32_pool() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 881);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for dtype in [DType::F16, DType::BF16] {
+            for workers in [1usize, 8] {
+                for cache in [false, true] {
+                    for chunk in [4usize, 0] {
+                        let tag = format!(
+                            "{label}/{}/workers={workers}/cache={cache}/chunk={chunk}",
+                            dtype.name()
+                        );
+                        let (narrow_gen, narrow_snap) =
+                            run(model, dtype, false, workers, cache, chunk, 512);
+                        let (ref_gen, ref_snap) =
+                            run(model, dtype, true, workers, cache, chunk, 512);
+                        assert_eq!(narrow_gen.len(), 6, "{tag}: lost responses");
+                        assert_eq!(
+                            narrow_gen, ref_gen,
+                            "{tag}: 16-bit pool diverged from quantize-at-write f32 \
+                             reference (invariant 7 violated)"
+                        );
+                        // The metrics surface must be honest about storage:
+                        // the 16-bit pool reports half the reference's bytes.
+                        assert_eq!(narrow_snap.kv_dtype, Some(dtype.name()), "{tag}");
+                        assert_eq!(ref_snap.kv_dtype, Some(DType::F32.name()), "{tag}");
+                        assert_eq!(
+                            narrow_snap.kv_pool_bytes * 2,
+                            ref_snap.kv_pool_bytes,
+                            "{tag}: 16-bit pool bytes must be half of f32"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 7 under pool exhaustion with the radix tree live: preempted
+/// sequences donate blocks to the prefix cache, later admissions readopt
+/// them, and resumes recompute through chunked prefill — all on 16-bit
+/// words moved verbatim (block copies never re-round), so the tiny-pool
+/// run must still match the quantize-at-write reference bitwise, and
+/// both runs must make identical scheduling decisions (same preemption
+/// and resume counts — storage width changes bytes, never behavior at a
+/// fixed block count).
+#[test]
+fn prop_16bit_pool_bitwise_through_preempt_and_readoption() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 883);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    let small = overload_pool_blocks();
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for dtype in [DType::F16, DType::BF16] {
+            let tag = format!("{label}/{}/blocks={small}", dtype.name());
+            let (narrow_gen, narrow_snap) = run(model, dtype, false, 2, true, 4, small);
+            let (ref_gen, ref_snap) = run(model, dtype, true, 2, true, 4, small);
+            if small < 15 {
+                assert!(
+                    narrow_snap.preemptions > 0,
+                    "{tag}: a {small}-block pool must force preemption"
+                );
+            }
+            assert_eq!(
+                (narrow_snap.preemptions, narrow_snap.resumes, narrow_snap.recomputed_tokens),
+                (ref_snap.preemptions, ref_snap.resumes, ref_snap.recomputed_tokens),
+                "{tag}: storage width changed scheduling behavior"
+            );
+            assert_eq!(
+                narrow_gen, ref_gen,
+                "{tag}: preempt→donate→readopt→resume on 16-bit storage diverged \
+                 from the quantize-at-write reference (invariant 7 violated)"
+            );
+        }
+    }
+}
+
+/// The env-default construction path (`BDA_KV_DTYPE` → `KvCacheConfig::
+/// default()` → engine): what each CI determinism-matrix cell actually
+/// pins. Whatever dtype the env selects, the engine must honor it and
+/// reproduce the quantize-at-write reference for that dtype bitwise
+/// (trivially so for f32, where the reference is the identity).
+#[test]
+fn env_default_engine_matches_quantize_at_write_reference() {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 887);
+    let env_dtype = KvCacheConfig::default().dtype;
+    let cfg = server_config(512, env_dtype);
+    let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+    let t = trace(model.config.vocab_size as u32);
+    let (mut responses, _) = replay_trace(backend, cfg, t).expect("env serve");
+    responses.sort_by_key(|r| r.id);
+    let env_gen: Generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    // The reference run pins its own workers/cache/chunk knobs: invariants
+    // 2, 4, and 6 make all of those bitwise-neutral, so any difference
+    // here is attributable to storage width alone.
+    let (ref_gen, _) = if env_dtype == DType::F32 {
+        (env_gen.clone(), None)
+    } else {
+        let (g, s) = run(&model, env_dtype, true, 2, true, 0, 512);
+        (g, Some(s))
+    };
+    assert_eq!(
+        env_gen,
+        ref_gen,
+        "env-default engine ({}) violated invariant 7",
+        env_dtype.name()
+    );
+}

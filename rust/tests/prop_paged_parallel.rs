@@ -90,7 +90,7 @@ fn prop_parallel_paged_attention_is_bit_identical_to_serial() {
         }
 
         let q = Tensor::randn(&[b, width], 1.0, case * 1000 + 999);
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
         let seqs: Vec<PagedSeq> = tables
             .iter()
             .zip(&lens)
@@ -148,7 +148,7 @@ fn prop_multi_row_paged_attention_is_bit_identical_to_serial() {
 
         let total_rows: usize = q_rows.iter().sum();
         let q = Tensor::randn(&[total_rows, width], 1.0, case * 2000 + 999);
-        let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+        let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
         let seqs: Vec<PagedSeq> = tables
             .iter()
             .zip(lens.iter().zip(&q_rows))
@@ -186,7 +186,7 @@ fn prop_paged_parallel_bitwise_on_dedicated_pools() {
         let v = Tensor::randn(&[len, width], 1.0, 80 + i as u64);
         scatter_paged_kv(&mut pk, &mut pv, &k.data, &v.data, len, width, block_size, table);
     }
-    let layer = PagedLayerView { k: &pk, v: &pv, block_size, width };
+    let layer = PagedLayerView::f32(&pk, &pv, block_size, width);
     let seqs: Vec<PagedSeq> = lens
         .iter()
         .zip(tables.iter())
@@ -255,7 +255,11 @@ fn prop_prefix_cache_hit_decode_bitwise_identical_to_cold() {
     ];
     for (label, model) in models {
         for workers in [1usize, 2, 8] {
-            let kv = KvCacheConfig { block_size: 4, num_blocks: 128 };
+            // Pinned f32 storage: this test compares paged output against
+            // the f32 per-sequence KvCache reference, which only matches
+            // bitwise at full width (16-bit pools have their own
+            // quantize-at-write equivalence suite in prop_kv_dtype.rs).
+            let kv = KvCacheConfig { block_size: 4, num_blocks: 128, dtype: DType::F32 };
             let pool = Arc::new(ThreadPool::new(workers));
             let mut engine = PagedNativeBackend::with_thread_pool(model.clone(), kv, pool);
             engine.set_prefix_cache(true); // force on regardless of env
@@ -315,7 +319,9 @@ fn prop_engine_decode_bit_identical_to_per_seq() {
         ];
         let mut rng = Rng::new(case * 31 + 7);
         for (label, model) in models {
-            let kv = KvCacheConfig { block_size: rng.range(2, 8), num_blocks: 256 };
+            // f32 pinned: compared against the f32 per-sequence reference.
+            let kv =
+                KvCacheConfig { block_size: rng.range(2, 8), num_blocks: 256, dtype: DType::F32 };
             let mut engine = PagedNativeBackend::new(model.clone(), kv);
             let b = rng.range(1, 5);
             let mut caches = Vec::new();
@@ -363,7 +369,10 @@ fn prop_chunked_prefill_generations_bitwise_identical_to_monolithic() {
         for workers in [1usize, 8] {
             for cache in [false, true] {
                 let run = |chunk: usize| {
-                    let kv = KvCacheConfig { block_size: 4, num_blocks: 256 };
+                    // Paged-vs-paged comparison: storage dtype inherits the
+                    // env (BDA_KV_DTYPE) so the CI axis exercises chunked
+                    // prefill on 16-bit pools too.
+                    let kv = KvCacheConfig { block_size: 4, num_blocks: 256, ..Default::default() };
                     let pool = Arc::new(ThreadPool::new(workers));
                     let mut backend =
                         PagedNativeBackend::with_thread_pool(model.clone(), kv, pool);

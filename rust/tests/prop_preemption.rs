@@ -36,7 +36,7 @@ fn server_config(num_blocks: usize) -> ServerConfig {
         scheduler: SchedulerConfig {
             max_active: 3,
             eos_token: None,
-            kv: KvCacheConfig { block_size: 4, num_blocks },
+            kv: KvCacheConfig { block_size: 4, num_blocks, ..Default::default() },
             ..Default::default()
         },
     }

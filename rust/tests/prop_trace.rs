@@ -54,7 +54,7 @@ fn overload_config() -> ServerConfig {
         scheduler: SchedulerConfig {
             max_active: 3,
             eos_token: None,
-            kv: KvCacheConfig { block_size: 4, num_blocks: 10 },
+            kv: KvCacheConfig { block_size: 4, num_blocks: 10, ..Default::default() },
             ..Default::default()
         },
     }
