@@ -135,6 +135,18 @@ fn main() -> Result<()> {
              or bf16 — 16-bit pools halve K/V memory and generate bitwise what \
              an fp32 pool with quantize-at-write would (engine invariant 7)"
         );
+        println!(
+            "  BDA_CLASS_PREEMPT=1 class-aware preemption victim policy: evict the \
+             lowest-priority active sequence first (youngest within a class) \
+             when the block pool is exhausted; off by default — the victim \
+             is then simply the youngest sequence"
+        );
+        println!(
+            "  BDA_SLO_PRIORITY=N  default request class priority (default 1); \
+             BDA_SLO_TTFT / BDA_SLO_TBT set the default TTFT deadline and \
+             per-token budget in seconds (defaults 1.0 / 0.25) — responses \
+             are scored against their class for SLO attainment and goodput"
+        );
         println!("  BDA_QUIET=1         suppress one-shot informational stderr lines");
         return Ok(());
     }
@@ -301,6 +313,9 @@ fn main() -> Result<()> {
     if let Some(line) = snap.tbt_line() {
         println!("[overload] tbt: {line}");
     }
+    if let Some(line) = snap.slo_line() {
+        println!("[overload] slo: {line}");
+    }
     if let Some(line) = snap.step_phase_line() {
         println!("[overload] step: {line}");
     }
@@ -323,8 +338,10 @@ fn main() -> Result<()> {
         }
         let (seqs, gaps) = bda::obs::export::timeline_summary(&events);
         println!("  per-sequence timelines: {seqs} sequences, {gaps} TBT gaps");
+        let samples = bda::obs::sampler::take_samples();
+        println!("  resource samples: {} (pool/queue counter tracks)", samples.len());
         if let Some(path) = args.get("trace-out") {
-            let doc = bda::obs::export::chrome_trace(&events, &labels);
+            let doc = bda::obs::export::chrome_trace_full(&events, &labels, &samples);
             std::fs::write(path, doc.to_string())?;
             println!("chrome trace written to {path} (load in Perfetto / chrome://tracing)");
         }

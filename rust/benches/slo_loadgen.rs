@@ -1,0 +1,362 @@
+//! Open-loop SLO load harness: seeded Poisson arrivals replayed against
+//! the full threaded server (queue → batcher → scheduler → paged engine)
+//! at a sweep of offered loads, scoring every response against its
+//! deadline/priority class and recording **goodput under SLO** — tokens
+//! from SLO-met responses per wall second — at each point. Unlike the
+//! closed-loop `decode_throughput` sweep (which always saturates the
+//! engine), the open-loop driver submits on the trace's own clock, so
+//! offered load past capacity builds a real queue and the goodput-vs-load
+//! curve shows its knee: the third sweep point is deliberately past
+//! saturation.
+//!
+//! Flow: (1) a closed-loop calibration replay measures capacity in
+//! requests/s; (2) a low-load open-loop point under an effectively
+//! unbounded class measures what TTFT/TBT the engine achieves when not
+//! queuing, and the deadline classes are derived from those tails (2× for
+//! interactive, 4× for batch) — so "SLO met" is anchored to observed
+//! capability, not magic constants; (3) the remaining points replay
+//! class-tagged traces at 0.6× and 1.5× of capacity. The final (overload)
+//! point runs with structured tracing enabled and exports a Chrome trace
+//! with resource **counter tracks** (pool blocks, queue depth) to
+//! `BENCH_slo_trace.json`; tracing observes, never steers, so enabling it
+//! does not change the token streams (pinned by `tests/prop_slo.rs`).
+//!
+//! The results fragment merges into `BENCH_decode.json` under the
+//! `slo_loadgen` key (alongside `decode_throughput`'s own top-level
+//! fields) with acceptance keys `goodput_tok_s_at_knee` and
+//! `slo_attainment_at_knee`.
+//!
+//! Run: cargo bench --bench slo_loadgen
+//! Fast smoke: BDA_BENCH_FAST=1 cargo bench --bench slo_loadgen
+
+use bda::coordinator::server::replay_trace;
+use bda::coordinator::{
+    BatcherConfig, KvCacheConfig, PagedNativeBackend, Request, RequestClass, SchedulerConfig,
+    Server, ServerConfig,
+};
+use bda::eval::trace::{self, OpenLoopTrace, TraceConfig};
+use bda::model::{ModelConfig, Transformer};
+use bda::util::json::Json;
+use bda::util::timer::Timer;
+use std::time::Duration;
+
+const CONCURRENCY: usize = 4;
+
+fn server_config() -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: CONCURRENCY, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: CONCURRENCY,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 16, num_blocks: 1024, ..Default::default() },
+            ..Default::default()
+        },
+    }
+}
+
+fn shape_config(n: usize, vocab: usize, seed: u64) -> TraceConfig {
+    TraceConfig {
+        n_requests: n,
+        vocab_size: vocab,
+        min_prompt: 4,
+        max_prompt: 12,
+        min_new: 4,
+        max_new: 8,
+        seed,
+    }
+}
+
+/// p-th percentile of an unsorted sample (nearest-rank; 0.0 when empty).
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Everything one open-loop point produced, plus the per-response raw
+/// latencies so a point can be (re-)scored against any class set.
+struct Point {
+    offered_rps: f64,
+    offered_x: f64,
+    wall: f64,
+    /// (request index, ttft, max_tbt, tokens generated) per response.
+    responses: Vec<(usize, f64, f64, usize)>,
+    /// Per-class SLO attainment the server's own metrics reported
+    /// (`None` for the calibration point, which self-scores).
+    metrics_attainment: Option<f64>,
+}
+
+/// Replay `trace` open-loop against a fresh server: each entry is
+/// submitted after sleeping its Poisson gap (capped so a tail gap cannot
+/// stall the sweep), with `arrival` stamped at the submit instant so TTFT
+/// includes true queue wait.
+fn run_point(model: &Transformer, t: &OpenLoopTrace, offered_x: f64) -> Point {
+    let cfg = server_config();
+    let backend = PagedNativeBackend::new(model.clone(), cfg.scheduler.kv);
+    let server = Server::start(backend, cfg);
+    let metrics = server.metrics.clone();
+    let timer = Timer::start();
+    for i in 0..t.entries.len() {
+        let gap = t.entries[i].gap_s.min(0.5);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+        assert!(server.submit(t.request(i)), "queue closed mid-sweep");
+    }
+    let responses = server.shutdown().expect("open-loop point drains");
+    let wall = timer.elapsed_secs();
+    assert_eq!(responses.len(), t.entries.len(), "open-loop point lost responses");
+    let snap = metrics.snapshot();
+    Point {
+        offered_rps: t.rate,
+        offered_x,
+        wall,
+        responses: responses
+            .iter()
+            .map(|r| (r.id as usize, r.ttft, r.max_tbt, r.tokens.len()))
+            .collect(),
+        metrics_attainment: (snap.slo_by_class.len() > 1).then(|| snap.slo_attainment()),
+    }
+}
+
+/// Score a point against a class set (round-robin by request index, the
+/// same assignment `OpenLoopTrace::generate` uses) and render its JSON
+/// row. Returns (row, goodput_tok_s, attainment).
+fn score(point: &Point, classes: &[RequestClass]) -> (Json, f64, f64) {
+    let mut met = 0u64;
+    let mut met_tokens = 0u64;
+    let mut tokens = 0u64;
+    // priority -> (completed, met)
+    let mut by_class: std::collections::BTreeMap<u8, (u64, u64)> = Default::default();
+    for &(i, ttft, max_tbt, n_tok) in &point.responses {
+        let c = classes[i % classes.len()];
+        let ok = ttft <= c.ttft_deadline && max_tbt <= c.tbt_budget;
+        let e = by_class.entry(c.priority).or_default();
+        e.0 += 1;
+        tokens += n_tok as u64;
+        if ok {
+            met += 1;
+            met_tokens += n_tok as u64;
+            e.1 += 1;
+        }
+    }
+    let completed = point.responses.len() as u64;
+    let attainment = if completed > 0 { met as f64 / completed as f64 } else { 0.0 };
+    let goodput = met_tokens as f64 / point.wall;
+    let class_rows: Vec<Json> = by_class
+        .iter()
+        .map(|(&prio, &(done, ok))| {
+            Json::obj(vec![
+                ("priority", Json::num(prio as f64)),
+                ("completed", Json::num(done as f64)),
+                ("met", Json::num(ok as f64)),
+                ("attainment", Json::num(if done > 0 { ok as f64 / done as f64 } else { 0.0 })),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("offered_rps", Json::num(point.offered_rps)),
+        ("offered_x_capacity", Json::num(point.offered_x)),
+        ("requests", Json::num(completed as f64)),
+        ("wall_s", Json::num(point.wall)),
+        ("tokens_out", Json::num(tokens as f64)),
+        ("slo_met", Json::num(met as f64)),
+        ("slo_attainment", Json::num(attainment)),
+        ("goodput_tok_s", Json::num(goodput)),
+        ("by_class", Json::Arr(class_rows)),
+    ];
+    if let Some(a) = point.metrics_attainment {
+        // Cross-check: the server's own per-class SLO accounting
+        // (Metrics::slo_scored) saw the same requests.
+        fields.push(("metrics_slo_attainment", Json::num(a)));
+    }
+    (Json::obj(fields), goodput, attainment)
+}
+
+/// Merge the fragment + acceptance keys into `BENCH_decode.json`,
+/// preserving whatever `decode_throughput` already wrote there.
+fn merge_into_bench_json(fragment: Json, acceptance: Vec<(&str, Json)>) {
+    let path = "BENCH_decode.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .filter(|d| d.as_obj().is_some())
+        .unwrap_or_else(|| Json::obj(vec![("bench", Json::str("decode_throughput"))]));
+    if let Json::Obj(map) = &mut doc {
+        map.insert("slo_loadgen".to_string(), fragment);
+        let acc = map.entry("acceptance".to_string()).or_insert(Json::Null);
+        if acc.as_obj().is_none() {
+            *acc = Json::Obj(Default::default());
+        }
+        if let Json::Obj(a) = acc {
+            for (k, v) in acceptance {
+                a.insert(k.to_string(), v);
+            }
+        }
+    }
+    std::fs::write(path, doc.to_string()).expect("write BENCH_decode.json");
+}
+
+fn main() {
+    let fast = std::env::var("BDA_BENCH_FAST").is_ok();
+    let model = Transformer::new_mha(ModelConfig::tiny(), 42);
+    let vocab = model.config.vocab_size;
+    let point_secs = if fast { 1.5 } else { 3.0 };
+
+    // --- capacity calibration: closed-loop replay at full saturation -------
+    let cal_n = if fast { 16 } else { 32 };
+    let cal_trace: Vec<Request> = trace::generate(shape_config(cal_n, vocab, 21));
+    let timer = Timer::start();
+    let (cal_responses, _) =
+        replay_trace(PagedNativeBackend::new(model.clone(), server_config().scheduler.kv),
+            server_config(), cal_trace)
+        .expect("calibration replay");
+    let cal_wall = timer.elapsed_secs();
+    assert_eq!(cal_responses.len(), cal_n);
+    let capacity_rps = (cal_n as f64 / cal_wall).clamp(2.0, 500.0);
+    println!(
+        "calibration: {cal_n} requests closed-loop in {cal_wall:.2}s -> capacity ~{capacity_rps:.1} req/s"
+    );
+
+    // --- low-load point under an unbounded class: measure achievable tails -
+    let sweep_x = [0.25f64, 0.6, 1.5];
+    let unbounded = RequestClass { priority: 1, ttft_deadline: f64::MAX, tbt_budget: f64::MAX };
+    let n_for = |rate: f64| ((rate * point_secs).ceil() as usize).clamp(12, 60);
+    let rate0 = sweep_x[0] * capacity_rps;
+    let t0 = OpenLoopTrace::generate(shape_config(n_for(rate0), vocab, 31), rate0, &[unbounded]);
+    let p0 = run_point(&model, &t0, sweep_x[0]);
+    let ttfts: Vec<f64> = p0.responses.iter().map(|r| r.1).collect();
+    let tbts: Vec<f64> = p0.responses.iter().map(|r| r.2).collect();
+
+    // Deadline classes anchored to the low-load tails: interactive gets 2×
+    // the p95 the unloaded engine achieved (floored against clock jitter),
+    // batch gets 4× at a lower priority. Past saturation, queue wait blows
+    // through these and attainment falls — that is the knee.
+    let classes = [
+        RequestClass {
+            priority: 2,
+            ttft_deadline: (2.0 * percentile(&ttfts, 0.95)).max(0.02),
+            tbt_budget: (2.0 * percentile(&tbts, 0.95)).max(0.01),
+        },
+        RequestClass {
+            priority: 0,
+            ttft_deadline: (4.0 * percentile(&ttfts, 0.95)).max(0.04),
+            tbt_budget: (4.0 * percentile(&tbts, 0.95)).max(0.02),
+        },
+    ];
+    println!(
+        "classes: interactive ttft<={:.0}ms tbt<={:.0}ms | batch ttft<={:.0}ms tbt<={:.0}ms",
+        classes[0].ttft_deadline * 1e3,
+        classes[0].tbt_budget * 1e3,
+        classes[1].ttft_deadline * 1e3,
+        classes[1].tbt_budget * 1e3,
+    );
+
+    // The replayable trace format round-trips through JSON bit-for-bit on
+    // shapes and classes — the contract an external driver relies on.
+    let classed0 =
+        OpenLoopTrace::generate(shape_config(n_for(rate0), vocab, 31), rate0, &classes);
+    let reparsed = OpenLoopTrace::from_json(
+        &Json::parse(&classed0.to_json().to_string()).expect("trace serializes"),
+    )
+    .expect("trace deserializes");
+    assert_eq!(reparsed.entries.len(), classed0.entries.len());
+    for (a, b) in reparsed.entries.iter().zip(&classed0.entries) {
+        assert_eq!((&a.prompt, a.max_new_tokens, a.class), (&b.prompt, b.max_new_tokens, b.class));
+    }
+
+    // --- the sweep: score point 0 against the derived classes (its token
+    // streams and latencies are class-independent), run the higher points
+    // with class-tagged traces so the server's own SLO accounting engages.
+    // The overload point runs with tracing on: counter tracks + spans.
+    let mut rows = Vec::new();
+    let mut best: (f64, f64) = (0.0, 0.0); // (goodput, attainment) at the knee
+    for (pi, &x) in sweep_x.iter().enumerate() {
+        let (row, goodput, attainment) = if pi == 0 {
+            score(&p0, &classes)
+        } else {
+            let rate = x * capacity_rps;
+            let traced = pi == sweep_x.len() - 1;
+            if traced {
+                bda::obs::set_enabled(true);
+            }
+            let t = OpenLoopTrace::generate(
+                shape_config(n_for(rate), vocab, 31 + pi as u64),
+                rate,
+                &classes,
+            );
+            let p = run_point(&model, &t, x);
+            score(&p, &classes)
+        };
+        println!(
+            "offered {:.2}x capacity: goodput {goodput:.1} tok/s under SLO, attainment {:.0}%",
+            x,
+            attainment * 100.0
+        );
+        if goodput > best.0 {
+            best = (goodput, attainment);
+        }
+        rows.push(row);
+    }
+
+    // --- trace export from the overload point: spans + counter tracks -----
+    bda::obs::flush();
+    bda::obs::set_enabled(false);
+    let events = bda::obs::take_collected();
+    let labels = bda::obs::thread_labels();
+    let samples = bda::obs::sampler::take_samples();
+    let doc = bda::obs::export::chrome_trace_full(&events, &labels, &samples);
+    let counter_events = doc
+        .get("traceEvents")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("C"))
+        .count();
+    assert!(
+        counter_events >= 1,
+        "the traced overload point must export at least one counter track sample"
+    );
+    std::fs::write("BENCH_slo_trace.json", doc.to_string()).expect("write BENCH_slo_trace.json");
+    println!(
+        "overload trace: {} spans, {} resource samples, {counter_events} counter events \
+         -> BENCH_slo_trace.json",
+        events.len(),
+        samples.len(),
+    );
+
+    let class_json: Vec<Json> = classes
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("priority", Json::num(c.priority as f64)),
+                ("ttft_deadline_s", Json::num(c.ttft_deadline)),
+                ("tbt_budget_s", Json::num(c.tbt_budget)),
+            ])
+        })
+        .collect();
+    let fragment = Json::obj(vec![
+        ("fast", Json::Bool(fast)),
+        ("capacity_rps", Json::num(capacity_rps)),
+        ("classes", Json::Arr(class_json)),
+        ("points", Json::Arr(rows)),
+        ("trace_counter_events", Json::num(counter_events as f64)),
+        ("trace_out", Json::str("BENCH_slo_trace.json")),
+    ]);
+    merge_into_bench_json(
+        fragment,
+        vec![
+            ("goodput_tok_s_at_knee", Json::num(best.0)),
+            ("slo_attainment_at_knee", Json::num(best.1)),
+        ],
+    );
+    println!(
+        "knee: goodput {:.1} tok/s at {:.0}% attainment — merged into BENCH_decode.json \
+         under \"slo_loadgen\"",
+        best.0,
+        best.1 * 100.0
+    );
+}

@@ -9,7 +9,9 @@
 //! `f64` carried in an `AtomicU64` via a `to_bits` CAS loop (exact
 //! mean-of-ratios semantics preserved, no lock).
 
-use crate::util::stats::{Histogram, Quantiles};
+use crate::coordinator::request::Response;
+use crate::util::stats::{HistSnapshot, Histogram, Quantiles};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -95,6 +97,18 @@ struct Inner {
     recomputed_tokens: u64,
     prefill_chunks: u64,
     chunked_tokens: u64,
+    /// Per-priority-class SLO tally: `priority -> (completed, met)`.
+    /// Scored at completion from the response's deadline class
+    /// ([`Metrics::slo_scored`]); observation only — classes never steer
+    /// the token stream.
+    slo: BTreeMap<u8, (u64, u64)>,
+    /// Generated tokens from responses that met their class SLO — the
+    /// numerator of goodput (tokens/s *under* SLO).
+    goodput_tokens: u64,
+    /// Completed requests whose TTFT exceeded their class deadline.
+    ttft_violations: u64,
+    /// Completed requests with at least one token gap over budget.
+    tbt_violations: u64,
     latency: Histogram,
     ttft: Histogram,
     /// Time-between-tokens: per-step gaps between consecutive tokens of
@@ -128,6 +142,23 @@ fn atomic_f64_add(cell: &AtomicU64, v: f64) {
             Ok(_) => return,
             Err(actual) => cur = actual,
         }
+    }
+}
+
+/// Per-priority-class SLO attainment, one row of [`Snapshot::slo_by_class`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassSlo {
+    pub priority: u8,
+    /// Requests of this class completed and scored.
+    pub completed: u64,
+    /// Of those, how many met both their TTFT deadline and TBT budget.
+    pub met: u64,
+}
+
+impl ClassSlo {
+    /// Fraction of this class's completions that met the SLO.
+    pub fn attainment(&self) -> f64 {
+        ratio(self.met as f64, self.completed as f64)
     }
 }
 
@@ -194,6 +225,39 @@ pub struct Snapshot {
     pub step_gemm: Quantiles,
     /// Per-decode-step sampling latency distribution (seconds).
     pub step_sample: Quantiles,
+    /// Per-class SLO attainment, ascending priority (empty until the
+    /// first completion is scored).
+    pub slo_by_class: Vec<ClassSlo>,
+    /// Generated tokens from SLO-met responses.
+    pub goodput_tokens: u64,
+    /// Goodput: tokens/s counting only responses that met their SLO.
+    pub goodput_tok_s: f64,
+    /// Scored completions whose TTFT blew the class deadline.
+    pub ttft_violations: u64,
+    /// Scored completions with a token gap over the class budget.
+    pub tbt_violations: u64,
+    /// Cumulative-bucket histograms for native Prometheus export
+    /// (`_bucket`/`_sum`/`_count` series; empty when nothing recorded).
+    pub ttft_hist: HistSnapshot,
+    pub tbt_hist: HistSnapshot,
+    pub step_attn_hist: HistSnapshot,
+    pub step_gemm_hist: HistSnapshot,
+    pub step_sample_hist: HistSnapshot,
+    /// Span events dropped by the obs recorder's full rings + collection
+    /// overflow, as of this snapshot (global; 0 when tracing never ran).
+    pub trace_dropped_events: u64,
+}
+
+impl Snapshot {
+    /// Overall SLO attainment across every scored class (0.0 before any
+    /// completion is scored).
+    pub fn slo_attainment(&self) -> f64 {
+        let (met, completed) = self
+            .slo_by_class
+            .iter()
+            .fold((0u64, 0u64), |(m, c), s| (m + s.met, c + s.completed));
+        ratio(met as f64, completed as f64)
+    }
 }
 
 impl Default for Metrics {
@@ -225,6 +289,10 @@ impl Metrics {
                 recomputed_tokens: 0,
                 prefill_chunks: 0,
                 chunked_tokens: 0,
+                slo: BTreeMap::new(),
+                goodput_tokens: 0,
+                ttft_violations: 0,
+                tbt_violations: 0,
                 latency: Histogram::latency(),
                 ttft: Histogram::latency(),
                 tbt: Histogram::latency(),
@@ -323,6 +391,27 @@ impl Metrics {
         g.ttft.record(ttft);
     }
 
+    /// Score one completed response against its deadline class: per-class
+    /// attainment tallies, goodput tokens (SLO-met responses only), and
+    /// the TTFT/TBT violation counters. Called at the same completion
+    /// sites as [`Metrics::completed`]; pure observation — it reads the
+    /// response, never steers scheduling.
+    pub fn slo_scored(&self, resp: &Response) {
+        let mut g = self.inner.lock().unwrap();
+        let entry = g.slo.entry(resp.class.priority).or_insert((0, 0));
+        entry.0 += 1;
+        if resp.slo_met() {
+            entry.1 += 1;
+            g.goodput_tokens += resp.tokens.len() as u64;
+        }
+        if resp.ttft > resp.class.ttft_deadline {
+            g.ttft_violations += 1;
+        }
+        if resp.max_tbt > resp.class.tbt_budget {
+            g.tbt_violations += 1;
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = self.start.elapsed().as_secs_f64();
@@ -366,6 +455,21 @@ impl Metrics {
             step_attn: g.step_attn.quantiles(),
             step_gemm: g.step_gemm.quantiles(),
             step_sample: g.step_sample.quantiles(),
+            slo_by_class: g
+                .slo
+                .iter()
+                .map(|(&priority, &(completed, met))| ClassSlo { priority, completed, met })
+                .collect(),
+            goodput_tokens: g.goodput_tokens,
+            goodput_tok_s: ratio(g.goodput_tokens as f64, elapsed),
+            ttft_violations: g.ttft_violations,
+            tbt_violations: g.tbt_violations,
+            ttft_hist: g.ttft.hist_snapshot(),
+            tbt_hist: g.tbt.hist_snapshot(),
+            step_attn_hist: g.step_attn.hist_snapshot(),
+            step_gemm_hist: g.step_gemm.hist_snapshot(),
+            step_sample_hist: g.step_sample.hist_snapshot(),
+            trace_dropped_events: crate::obs::dropped_total(),
         }
     }
 }
@@ -477,6 +581,28 @@ impl Snapshot {
         ))
     }
 
+    /// Per-class SLO attainment + goodput line, or `None` before any
+    /// completion is scored against its class.
+    pub fn slo_line(&self) -> Option<String> {
+        if self.slo_by_class.iter().all(|c| c.completed == 0) {
+            return None;
+        }
+        let per_class = self
+            .slo_by_class
+            .iter()
+            .map(|c| format!("p{}: {}/{}", c.priority, c.met, c.completed))
+            .collect::<Vec<_>>()
+            .join(", ");
+        Some(format!(
+            "{:.0}% attained ({per_class}) | goodput {:.1} tok/s | \
+             violations {} ttft / {} tbt",
+            100.0 * self.slo_attainment(),
+            self.goodput_tok_s,
+            self.ttft_violations,
+            self.tbt_violations,
+        ))
+    }
+
     pub fn report(&self) -> String {
         let mut extra = match self.prefix_cache_line() {
             Some(line) => format!(" | prefix cache: {line}"),
@@ -496,6 +622,12 @@ impl Snapshot {
         }
         if let Some(line) = self.step_phase_line() {
             extra.push_str(&format!(" | step {line}"));
+        }
+        if let Some(line) = self.slo_line() {
+            extra.push_str(&format!(" | slo: {line}"));
+        }
+        if self.trace_dropped_events > 0 {
+            extra.push_str(&format!(" | trace drops: {} events", self.trace_dropped_events));
         }
         format!(
             "reqs: {} admitted / {} done / {} rejected | tokens: {} in, {} out \
@@ -709,6 +841,55 @@ mod tests {
             assert_eq!(v, 0.0);
             assert!(v.is_finite());
         }
+    }
+
+    #[test]
+    fn slo_scoring_tallies_per_class_and_goodput() {
+        use crate::coordinator::request::RequestClass;
+        let m = Metrics::new();
+        assert!(m.snapshot().slo_line().is_none(), "nothing scored yet");
+        assert_eq!(m.snapshot().slo_attainment(), 0.0);
+        let resp = |priority, ttft, max_tbt, n_tokens: usize| Response {
+            id: 0,
+            tokens: vec![1; n_tokens],
+            ttft,
+            latency: ttft + 0.1,
+            prompt_len: 4,
+            class: RequestClass { priority, ttft_deadline: 0.5, tbt_budget: 0.1 },
+            max_tbt,
+        };
+        m.slo_scored(&resp(2, 0.1, 0.05, 10)); // met
+        m.slo_scored(&resp(2, 0.9, 0.05, 10)); // ttft violation
+        m.slo_scored(&resp(0, 0.1, 0.05, 7)); // met
+        m.slo_scored(&resp(0, 0.1, 0.3, 7)); // tbt violation
+        let s = m.snapshot();
+        assert_eq!(s.slo_by_class.len(), 2);
+        assert_eq!(s.slo_by_class[0], ClassSlo { priority: 0, completed: 2, met: 1 });
+        assert_eq!(s.slo_by_class[1], ClassSlo { priority: 2, completed: 2, met: 1 });
+        assert!((s.slo_attainment() - 0.5).abs() < 1e-12);
+        assert!((s.slo_by_class[0].attainment() - 0.5).abs() < 1e-12);
+        assert_eq!(s.goodput_tokens, 17, "only SLO-met responses count toward goodput");
+        assert!(s.goodput_tok_s > 0.0);
+        assert_eq!((s.ttft_violations, s.tbt_violations), (1, 1));
+        let line = s.slo_line().expect("line present");
+        assert!(line.contains("50% attained"));
+        assert!(line.contains("p0: 1/2"));
+        assert!(line.contains("p2: 1/2"));
+        assert!(s.report().contains("slo:"));
+    }
+
+    #[test]
+    fn histogram_snapshots_exported_cumulative() {
+        let m = Metrics::new();
+        m.completed(0.5, 0.1);
+        m.completed(0.6, 0.2);
+        m.record_tbts(&[0.01, 0.02, 0.03]);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_hist.count, 2);
+        assert_eq!(s.tbt_hist.count, 3);
+        assert!(s.tbt_hist.buckets.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert!((s.tbt_hist.sum - 0.06).abs() < 1e-12);
+        assert_eq!(s.step_attn_hist.count, 0, "no instrumented steps ran");
     }
 
     #[test]

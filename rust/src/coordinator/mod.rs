@@ -18,11 +18,11 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kv_cache::{kv_dtype_from_env, BlockAllocator, KvCacheConfig, KvDtype};
-pub use metrics::{Metrics, Snapshot, StepTiming};
+pub use metrics::{ClassSlo, Metrics, Snapshot, StepTiming};
 #[cfg(feature = "pjrt")]
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
 pub use queue::RequestQueue;
-pub use request::{Request, RequestId, Response};
+pub use request::{Request, RequestClass, RequestId, Response};
 pub use scheduler::{Backend, DecodeOutcome, NativeBackend, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig};
 

@@ -4,6 +4,58 @@ use std::time::Instant;
 
 pub type RequestId = u64;
 
+/// Deadline/priority class of a request: the SLO it is scored against and
+/// the weight the config-gated preemption victim policy gives it.
+///
+/// `priority` orders classes (higher = more important; the class-aware
+/// victim policy evicts the *lowest* priority first, youngest within a
+/// class). `ttft_deadline` and `tbt_budget` are the latency SLOs, in
+/// seconds: a completed request **meets its SLO** iff its time-to-first-
+/// token is within `ttft_deadline` AND its worst per-token gap is within
+/// `tbt_budget`. Classes are pure observability + victim-ordering inputs —
+/// they never change what tokens a request generates (the bitwise
+/// invariants are class-agnostic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestClass {
+    /// Scheduling weight; higher survives pool exhaustion longer under
+    /// the class-aware victim policy (`BDA_CLASS_PREEMPT=1`).
+    pub priority: u8,
+    /// Time-to-first-token deadline, seconds from arrival.
+    pub ttft_deadline: f64,
+    /// Per-token budget: the maximum acceptable gap between consecutive
+    /// generated tokens, seconds.
+    pub tbt_budget: f64,
+}
+
+impl Default for RequestClass {
+    /// The ambient default class, overridable per process via
+    /// `BDA_SLO_PRIORITY` / `BDA_SLO_TTFT` / `BDA_SLO_TBT` (read at each
+    /// construction, not latched — like `BDA_KV_DTYPE`). Unset or
+    /// unparsable values fall back to priority 1, a 1 s TTFT deadline,
+    /// and a 250 ms per-token budget.
+    fn default() -> Self {
+        fn env_f64(key: &str, fallback: f64) -> f64 {
+            std::env::var(key).ok().and_then(|s| s.trim().parse().ok()).unwrap_or(fallback)
+        }
+        let priority = std::env::var("BDA_SLO_PRIORITY")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(1u8);
+        RequestClass {
+            priority,
+            ttft_deadline: env_f64("BDA_SLO_TTFT", 1.0),
+            tbt_budget: env_f64("BDA_SLO_TBT", 0.25),
+        }
+    }
+}
+
+impl RequestClass {
+    /// A class with the given priority and the ambient deadline defaults.
+    pub fn with_priority(priority: u8) -> RequestClass {
+        RequestClass { priority, ..Default::default() }
+    }
+}
+
 /// An inference request: a prompt and a generation budget.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -14,11 +66,26 @@ pub struct Request {
     /// temperature and the request id as seed.
     pub temperature: Option<f32>,
     pub arrival: Instant,
+    /// Deadline/priority class (SLO scoring + victim-policy input).
+    pub class: RequestClass,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, temperature: None, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: None,
+            arrival: Instant::now(),
+            class: RequestClass::default(),
+        }
+    }
+
+    /// Builder: the same request in an explicit deadline/priority class.
+    pub fn with_class(mut self, class: RequestClass) -> Request {
+        self.class = class;
+        self
     }
 }
 
@@ -32,11 +99,24 @@ pub struct Response {
     /// Seconds from arrival to completion.
     pub latency: f64,
     pub prompt_len: usize,
+    /// The class the request was scored against.
+    pub class: RequestClass,
+    /// Worst observed gap between consecutive generated tokens, seconds
+    /// (0.0 for single-token responses). A preemption's recompute gap
+    /// lands here, so an evicted victim that blows its budget is scored
+    /// truthfully.
+    pub max_tbt: f64,
 }
 
 impl Response {
     pub fn tokens_generated(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Did this response meet its class SLO (TTFT within deadline AND
+    /// every token gap within budget)?
+    pub fn slo_met(&self) -> bool {
+        self.ttft <= self.class.ttft_deadline && self.max_tbt <= self.class.tbt_budget
     }
 }
 
@@ -51,11 +131,45 @@ mod tests {
         assert_eq!(r.prompt.len(), 3);
         assert_eq!(r.max_new_tokens, 16);
         assert!(r.temperature.is_none());
+        assert_eq!(r.class, RequestClass::default());
+    }
+
+    #[test]
+    fn with_class_overrides_default() {
+        let class = RequestClass { priority: 3, ttft_deadline: 0.5, tbt_budget: 0.05 };
+        let r = Request::new(7, vec![1], 4).with_class(class);
+        assert_eq!(r.class, class);
+        assert_eq!(RequestClass::with_priority(9).priority, 9);
     }
 
     #[test]
     fn response_count() {
-        let resp = Response { id: 1, tokens: vec![5, 6], ttft: 0.1, latency: 0.2, prompt_len: 3 };
+        let resp = Response {
+            id: 1,
+            tokens: vec![5, 6],
+            ttft: 0.1,
+            latency: 0.2,
+            prompt_len: 3,
+            class: RequestClass::default(),
+            max_tbt: 0.0,
+        };
         assert_eq!(resp.tokens_generated(), 2);
+    }
+
+    #[test]
+    fn slo_met_checks_both_deadlines() {
+        let class = RequestClass { priority: 1, ttft_deadline: 0.2, tbt_budget: 0.1 };
+        let base = Response {
+            id: 1,
+            tokens: vec![5, 6],
+            ttft: 0.1,
+            latency: 0.3,
+            prompt_len: 3,
+            class,
+            max_tbt: 0.05,
+        };
+        assert!(base.slo_met());
+        assert!(!Response { ttft: 0.3, ..base.clone() }.slo_met(), "ttft violation");
+        assert!(!Response { max_tbt: 0.2, ..base.clone() }.slo_met(), "tbt violation");
     }
 }

@@ -126,6 +126,21 @@ pub trait Backend {
     fn kv_pool(&self) -> Option<(usize, &'static str)> {
         None
     }
+    /// Record `seq`'s scheduling priority (its request's
+    /// [`super::request::RequestClass`]) so a pool-owning backend's
+    /// config-gated victim policy (`BDA_CLASS_PREEMPT=1`) can evict the
+    /// lowest class first. Called at admission and resume; backends
+    /// without class-aware preemption ignore it.
+    fn note_seq_priority(&mut self, seq: SeqId, priority: u8) {
+        let _ = (seq, priority);
+    }
+    /// Pool occupancy counters for the continuous resource sampler
+    /// ([`crate::obs::sampler`]), when the backend owns real block
+    /// storage. `None` (the default) omits the pool gauges from the
+    /// sampled series; queue depths are still recorded.
+    fn pool_counters(&self) -> Option<crate::obs::sampler::PoolCounters> {
+        None
+    }
     /// Whether this backend can run prompt prefill as [`StepWork::PrefillChunk`]
     /// entries fused into batched steps. When `false` the scheduler uses
     /// the monolithic [`Backend::prefill`] path unchanged.
@@ -250,6 +265,12 @@ struct ActiveSeq {
     /// timer's clock read, so TBT tracking adds none of its own.
     last_token_at: Option<Instant>,
     last_token: u32,
+    /// Worst observed gap between consecutive sampled tokens, seconds —
+    /// the response's `max_tbt`, scored against the class TBT budget. A
+    /// park/resume cycle's recompute gap lands here naturally (the field
+    /// rides the parked state), so an evicted victim that blows its
+    /// budget is scored truthfully.
+    max_tbt: f64,
 }
 
 /// A preempted sequence parked for resume: the backend released its
@@ -417,6 +438,7 @@ impl<B: Backend> Scheduler<B> {
             let Ok(covered) = self.backend.begin_prefill(seq, &req.prompt) else {
                 return Err(req);
             };
+            self.backend.note_seq_priority(seq, req.class.priority);
             self.next_seq += 1;
             self.seq_of_req.insert(req.id, seq);
             if let Some(t0) = admit_start {
@@ -460,6 +482,7 @@ impl<B: Backend> Scheduler<B> {
             obs::span_at(Phase::Prefill, req.id, t, t.elapsed());
         }
         self.next_seq += 1;
+        self.backend.note_seq_priority(seq, req.class.priority);
         let first = sample(&logits, &req);
         self.seq_of_req.insert(req.id, seq);
         let first_at = Instant::now();
@@ -468,6 +491,7 @@ impl<B: Backend> Scheduler<B> {
             generated: vec![first],
             first_token_at: Some(first_at),
             last_token_at: Some(first_at),
+            max_tbt: 0.0,
             req,
         };
         // A request asking for 0 tokens completes immediately on next step;
@@ -545,6 +569,7 @@ impl<B: Backend> Scheduler<B> {
                 // admissions (same priority the monolithic path gives
                 // them by resuming before `admit` can run).
                 let covered = self.backend.begin_prefill(p.seq, &replay)?;
+                self.backend.note_seq_priority(p.seq, p.state.req.class.priority);
                 self.seq_of_req.insert(p.state.req.id, p.seq);
                 self.prefilling.insert(
                     0,
@@ -566,6 +591,7 @@ impl<B: Backend> Scheduler<B> {
             }
             let resume_start = obs::enabled().then(Instant::now);
             self.backend.prefill(p.seq, &replay)?;
+            self.backend.note_seq_priority(p.seq, p.state.req.class.priority);
             if let Some(t) = resume_start {
                 let id = p.state.req.id;
                 let parked = t.saturating_duration_since(p.parked_at);
@@ -721,7 +747,9 @@ impl<B: Backend> Scheduler<B> {
                 a.first_token_at = Some(now);
             }
             if let Some(prev) = a.last_token_at {
-                tbts.push(now.saturating_duration_since(prev).as_secs_f64());
+                let gap = now.saturating_duration_since(prev).as_secs_f64();
+                a.max_tbt = a.max_tbt.max(gap);
+                tbts.push(gap);
             }
             a.last_token_at = Some(now);
             // Shadow-allocator growth tracking, pool-less backends only.
@@ -768,8 +796,18 @@ impl<B: Backend> Scheduler<B> {
         }
         self.flush_step_timing(sample_secs);
         self.complete_finished(&mut done);
-        // Step boundary: drain every thread's trace ring (a single relaxed
-        // load when tracing has never been enabled).
+        // Step boundary: one resource sample for the Perfetto counter
+        // tracks / Prometheus gauges, then drain every thread's trace
+        // ring (both a single relaxed load when tracing is disabled —
+        // sampling observes, never steers, the token stream).
+        if obs::enabled() {
+            obs::sampler::record(
+                self.backend.pool_counters(),
+                self.active.len(),
+                self.prefilling.len(),
+                self.preempted.len(),
+            );
+        }
         obs::flush();
         Ok(done)
     }
@@ -790,6 +828,7 @@ impl<B: Backend> Scheduler<B> {
                     generated: vec![first],
                     first_token_at: Some(first_at),
                     last_token_at: Some(first_at),
+                    max_tbt: 0.0,
                     req,
                 };
                 // A request asking for 0 tokens completes immediately on
@@ -845,6 +884,8 @@ impl<B: Backend> Scheduler<B> {
                         .map(|t| (t - a.req.arrival).as_secs_f64())
                         .unwrap_or(0.0),
                     latency: (now - a.req.arrival).as_secs_f64(),
+                    class: a.req.class,
+                    max_tbt: a.max_tbt,
                     tokens: a.generated,
                 });
             } else {
@@ -1033,6 +1074,17 @@ mod tests {
         assert_eq!(s.kv.as_ref().unwrap().free_blocks(), free0);
         s.kv.as_ref().unwrap().check_invariants().unwrap();
         assert_eq!(s.backend.released, vec![1]);
+    }
+
+    #[test]
+    fn response_carries_class_and_worst_token_gap() {
+        use crate::coordinator::request::RequestClass;
+        let mut s = sched(8);
+        let class = RequestClass { priority: 3, ttft_deadline: 0.5, tbt_budget: 0.05 };
+        s.admit(Request::new(1, vec![1, 2], 4).with_class(class)).unwrap();
+        let done = s.drain().unwrap();
+        assert_eq!(done[0].class, class);
+        assert!(done[0].max_tbt >= 0.0 && done[0].max_tbt <= done[0].latency);
     }
 
     #[test]

@@ -52,6 +52,11 @@ impl Server {
                     Duration::from_millis(10)
                 };
                 let batch = batcher.next_batch(&q, idle);
+                if crate::obs::enabled() {
+                    // Feed the resource sampler the post-batch queue depth;
+                    // the scheduler stamps it into its step-boundary sample.
+                    crate::obs::sampler::note_queue_depth(q.len());
+                }
                 if !batch.is_empty() {
                     m.batch_formed(batch.len());
                 }
@@ -75,6 +80,7 @@ impl Server {
                                 for resp in sched.step()? {
                                     m.tokens_generated(resp.tokens.len());
                                     m.completed(resp.latency, resp.ttft);
+                                    m.slo_scored(&resp);
                                     let _ = tx.send(resp);
                                 }
                                 pending = Some(r);
@@ -86,6 +92,7 @@ impl Server {
                 for resp in sched.step()? {
                     m.tokens_generated(resp.tokens.len());
                     m.completed(resp.latency, resp.ttft);
+                    m.slo_scored(&resp);
                     let _ = tx.send(resp);
                 }
             }
@@ -93,6 +100,7 @@ impl Server {
             for resp in sched.drain()? {
                 m.tokens_generated(resp.tokens.len());
                 m.completed(resp.latency, resp.ttft);
+                m.slo_scored(&resp);
                 let _ = tx.send(resp);
             }
             // Final trace drain: spans recorded after the last step's
@@ -134,6 +142,10 @@ impl Server {
                 }
             }
         }
+        // The engine thread flushed its own rings before exiting; flush
+        // once more from the caller's side so spans recorded on *this*
+        // thread (submit-side instrumentation) aren't stranded either.
+        crate::obs::flush();
         Ok(rest)
     }
 }
@@ -178,6 +190,7 @@ pub fn replay_trace<B: Backend>(
         for resp in sched.step()? {
             metrics.tokens_generated(resp.tokens.len());
             metrics.completed(resp.latency, resp.ttft);
+            metrics.slo_scored(&resp);
             out.push(resp);
         }
     }

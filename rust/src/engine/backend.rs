@@ -33,7 +33,9 @@
 //!   uncovered tail, and evicts LRU zero-ref leaves under pool pressure;
 //! * **victim preemption with recompute-on-resume**: when a decode step
 //!   exhausts the pool *and* the tree has nothing left to evict, the
-//!   youngest batch member is preempted — its committed full-block prefix
+//!   youngest batch member is preempted (or, under `BDA_CLASS_PREEMPT`,
+//!   the lowest `RequestClass` priority first, youngest within a class)
+//!   — its committed full-block prefix
 //!   donated to the prefix cache, its blocks released, the sequence
 //!   reported in the step's
 //!   [`crate::coordinator::scheduler::DecodeOutcome`] — instead of the
@@ -95,6 +97,21 @@ pub fn prefix_cache_enabled_from_env() -> bool {
     }
 }
 
+/// Resolve the `BDA_CLASS_PREEMPT` environment knob: the class-aware
+/// preemption victim policy (evict the lowest [`RequestClass`] priority
+/// first, youngest within a class) is **off** unless the variable is
+/// `1` / `true` / `on` / `yes`. Read at engine construction;
+/// [`PagedNativeBackend::set_class_preempt`] overrides it per engine.
+/// Off (the default) keeps victim selection bit-identical to the
+/// youngest-only policy.
+///
+/// [`RequestClass`]: crate::coordinator::request::RequestClass
+pub fn class_preempt_from_env() -> bool {
+    std::env::var("BDA_CLASS_PREEMPT")
+        .map(|v| matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "on" | "yes"))
+        .unwrap_or(false)
+}
+
 /// Paged batched serving backend over the native Rust transformer.
 pub struct PagedNativeBackend {
     pub model: Transformer,
@@ -126,6 +143,14 @@ pub struct PagedNativeBackend {
     /// while the prefix cache is enabled; release inserts each history's
     /// full-block prefix into the tree.
     histories: HashMap<SeqId, Vec<u32>>,
+    /// Per-sequence scheduling priority, noted by the scheduler at
+    /// admission/resume ([`Backend::note_seq_priority`]). Consulted by
+    /// victim selection only when `class_preempt` is on; absent entries
+    /// rank as priority 0 (lowest — evicted first).
+    priorities: HashMap<SeqId, u8>,
+    /// Class-aware victim policy gate (`BDA_CLASS_PREEMPT`): off keeps
+    /// the youngest-only policy bit-for-bit.
+    class_preempt: bool,
     /// Prefix-cache counters already surfaced through [`StepTiming`]
     /// (deltas are reported, cumulative stats stay queryable).
     reported_prefix: PrefixStats,
@@ -159,9 +184,26 @@ impl PagedNativeBackend {
             threads,
             prefix,
             histories: HashMap::new(),
+            priorities: HashMap::new(),
+            class_preempt: class_preempt_from_env(),
             reported_prefix: PrefixStats::default(),
             model,
         }
+    }
+
+    /// Enable or disable the class-aware preemption victim policy,
+    /// overriding the `BDA_CLASS_PREEMPT` default. On: pool exhaustion
+    /// evicts the lowest-priority decode entry first (youngest within a
+    /// class). Off (default): youngest only — bit-identical victim
+    /// choices to an engine without classes. Either way each victim
+    /// resumes bitwise (engine invariant 5): the policy picks *who*
+    /// recomputes, never *what* they generate.
+    pub fn set_class_preempt(&mut self, on: bool) {
+        self.class_preempt = on;
+    }
+
+    pub fn class_preempt_enabled(&self) -> bool {
+        self.class_preempt
     }
 
     /// Enable or disable the radix-tree prefix cache, overriding the
@@ -326,6 +368,7 @@ impl PagedNativeBackend {
     /// append), so that token is excluded from the donation — the tree
     /// must only ever hold fully written rows.
     fn preempt(&mut self, seq: SeqId, pending_append: bool) {
+        self.priorities.remove(&seq);
         let mut history = self.histories.remove(&seq);
         if pending_append {
             if let Some(h) = history.as_mut() {
@@ -439,7 +482,30 @@ impl Backend for PagedNativeBackend {
         // zero; forks and the prefix cache still holding shared blocks
         // keep them alive.
         let history = self.histories.remove(&seq);
+        self.priorities.remove(&seq);
         self.cache_history_then_release(seq, history, false);
+    }
+
+    /// Note the sequence's class priority for victim selection. Always
+    /// recorded (one map insert) so flipping the policy on mid-run still
+    /// sees every live sequence's class.
+    fn note_seq_priority(&mut self, seq: SeqId, priority: u8) {
+        self.priorities.insert(seq, priority);
+    }
+
+    /// Pool occupancy for the continuous resource sampler: free blocks as
+    /// admission sees them ([`Backend::free_blocks`] — unused plus
+    /// evictable), pinned blocks, the evictable subset, and radix-tree
+    /// residency.
+    fn pool_counters(&self) -> Option<crate::obs::sampler::PoolCounters> {
+        let evictable =
+            self.prefix.as_ref().map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
+        Some(crate::obs::sampler::PoolCounters {
+            free_blocks: self.alloc.free_blocks() + evictable,
+            used_blocks: self.alloc.used_blocks(),
+            evictable_blocks: evictable,
+            prefix_cached_blocks: self.cached_blocks(),
+        })
     }
 
     /// Engine pool truth for admission: free blocks plus everything the
@@ -604,9 +670,23 @@ impl PagedNativeBackend {
                         };
                         let candidates =
                             || (0..b).filter(|&j| !parked[j] && decode_seq(j).is_some());
-                        let victim = candidates()
-                            .max_by_key(|&j| decode_seq(j))
-                            .expect("the requester itself is a candidate");
+                        // Victim policy: youngest (largest SeqId) by
+                        // default; under `BDA_CLASS_PREEMPT` the lowest
+                        // class priority yields first, youngest within a
+                        // class. The gate only picks *who* recomputes —
+                        // every victim still resumes bitwise (invariant 5).
+                        let prio = |j: usize| {
+                            self.priorities.get(&decode_seq(j).unwrap()).copied().unwrap_or(0)
+                        };
+                        let victim = if self.class_preempt {
+                            candidates()
+                                .max_by_key(|&j| (std::cmp::Reverse(prio(j)), decode_seq(j)))
+                                .expect("the requester itself is a candidate")
+                        } else {
+                            candidates()
+                                .max_by_key(|&j| decode_seq(j))
+                                .expect("the requester itself is a candidate")
+                        };
                         let victim_seq = decode_seq(victim).unwrap();
                         if victim_seq == id && candidates().count() == 1 {
                             // No lower-priority decode holds blocks and
@@ -1153,6 +1233,75 @@ mod tests {
             "unexpected error: {err}"
         );
         engine.alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn class_preempt_evicts_lowest_class_then_youngest() {
+        // Three 8-token sequences fill a 6-block pool exactly; every
+        // decode needs a boundary block. Priorities: seq 1 lowest, seq 2
+        // highest, seq 3 middle. Gate ON: the *lowest class* (seq 1)
+        // yields even though seq 3 is youngest; freeing its 2 blocks lets
+        // both survivors grow.
+        let model = Transformer::new_mha(ModelConfig::tiny(), 61);
+        let kvc = KvCacheConfig { block_size: 4, num_blocks: 6, dtype: DType::F32 };
+        let setup = |engine: &mut PagedNativeBackend| {
+            engine.set_prefix_cache(false);
+            for seq in 1..=3u64 {
+                let p: Vec<u32> = (0..8).map(|j| (seq as u32 * 50 + j) % 250).collect();
+                engine.prefill(seq, &p).unwrap();
+            }
+            engine.note_seq_priority(1, 0);
+            engine.note_seq_priority(2, 2);
+            engine.note_seq_priority(3, 1);
+            assert_eq!(engine.alloc.free_blocks(), 0);
+        };
+        let batch = [(1u64, 7u32), (2, 9), (3, 11)];
+
+        let mut engine = PagedNativeBackend::new(model.clone(), kvc);
+        setup(&mut engine);
+        engine.set_class_preempt(true);
+        let out = engine.decode(&batch).unwrap();
+        assert_eq!(out.preempted, vec![1], "lowest class must yield first");
+        assert!(out.logits[0].is_none() && out.logits[1].is_some() && out.logits[2].is_some());
+        engine.alloc.check_invariants().unwrap();
+
+        // Tie within the lowest class: youngest (largest SeqId) yields.
+        let mut engine = PagedNativeBackend::new(model.clone(), kvc);
+        setup(&mut engine);
+        engine.set_class_preempt(true);
+        engine.note_seq_priority(1, 0);
+        engine.note_seq_priority(2, 2);
+        engine.note_seq_priority(3, 0);
+        let out = engine.decode(&batch).unwrap();
+        assert_eq!(out.preempted, vec![3], "youngest within the lowest class yields");
+
+        // Gate OFF (default): priorities are ignored — youngest only,
+        // bit-identical to the pre-class policy.
+        let mut engine = PagedNativeBackend::new(model, kvc);
+        setup(&mut engine);
+        assert!(!engine.class_preempt_enabled());
+        let out = engine.decode(&batch).unwrap();
+        assert_eq!(out.preempted, vec![3], "default policy must stay youngest-only");
+    }
+
+    #[test]
+    fn pool_counters_track_residency() {
+        let model = Transformer::new_mha(ModelConfig::tiny(), 43);
+        let mut engine = PagedNativeBackend::new(model, kv());
+        engine.set_prefix_cache(true);
+        let c0 = engine.pool_counters().unwrap();
+        assert_eq!(c0.used_blocks, 0);
+        assert_eq!(c0.free_blocks, 64);
+        engine.prefill(1, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap(); // 2 blocks
+        let c1 = engine.pool_counters().unwrap();
+        assert_eq!(c1.used_blocks, 2);
+        assert_eq!(c1.free_blocks, 62);
+        assert_eq!(c1.evictable_blocks, 0, "live tables pin their blocks");
+        engine.release(1);
+        let c2 = engine.pool_counters().unwrap();
+        assert_eq!(c2.prefix_cached_blocks, 2, "release seeds the radix tree");
+        assert_eq!(c2.evictable_blocks, 2);
+        assert_eq!(c2.free_blocks, 64, "evictable blocks count as reclaimable");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Serving workload traces: Poisson arrivals with Zipf-ish prompt lengths,
-//! used by the serving example and ablation benches.
+//! used by the serving example, ablation benches, and the open-loop SLO
+//! load generator (`benches/slo_loadgen.rs`).
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Request, RequestClass};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -48,6 +50,7 @@ pub fn generate(config: TraceConfig) -> Vec<Request> {
                 max_new_tokens: new,
                 temperature: None,
                 arrival: now,
+                class: RequestClass::default(),
             }
         })
         .collect()
@@ -57,6 +60,125 @@ pub fn generate(config: TraceConfig) -> Vec<Request> {
 pub fn poisson_gaps(n: usize, rate: f64, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| -(1.0 - rng.next_f64()).ln() / rate).collect()
+}
+
+/// One entry of a replayable open-loop trace: the Poisson gap since the
+/// previous arrival plus everything needed to rebuild the request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpenLoopEntry {
+    /// Seconds to wait after the previous arrival before submitting.
+    pub gap_s: f64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub class: RequestClass,
+}
+
+/// A replayable open-loop workload: seeded Poisson arrivals at a fixed
+/// offered rate over mixed prompt/output-length distributions, assigned
+/// round-robin over a set of deadline/priority classes. Serializes to
+/// JSON (via `util::json`) so a swept load point can be saved and
+/// replayed bit-for-bit by `benches/slo_loadgen.rs` or an external
+/// driver.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpenLoopTrace {
+    pub seed: u64,
+    /// Offered load, requests per second (the Poisson rate).
+    pub rate: f64,
+    pub entries: Vec<OpenLoopEntry>,
+}
+
+impl OpenLoopTrace {
+    /// Generate a trace: request shapes from `config` (same RNG stream as
+    /// [`generate`]), arrival gaps from an independent Poisson stream at
+    /// `rate` req/s (seeded `config.seed ^ 0x9e3779b9`), classes assigned
+    /// round-robin from `classes` (empty = ambient default class).
+    pub fn generate(config: TraceConfig, rate: f64, classes: &[RequestClass]) -> OpenLoopTrace {
+        let gaps = poisson_gaps(config.n_requests, rate, config.seed ^ 0x9e37_79b9);
+        let mut rng = Rng::new(config.seed);
+        let entries = (0..config.n_requests)
+            .map(|i| {
+                let plen = rng.range(config.min_prompt, config.max_prompt);
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.below(config.vocab_size as u64) as u32).collect();
+                let max_new_tokens = rng.range(config.min_new, config.max_new);
+                let class = if classes.is_empty() {
+                    RequestClass::default()
+                } else {
+                    classes[i % classes.len()]
+                };
+                OpenLoopEntry { gap_s: gaps[i], prompt, max_new_tokens, class }
+            })
+            .collect();
+        OpenLoopTrace { seed: config.seed, rate, entries }
+    }
+
+    /// Materialize entry `i` as a `Request` arriving now (the replay
+    /// driver constructs each request at its submit instant so `arrival`
+    /// reflects true open-loop arrival time).
+    pub fn request(&self, i: usize) -> Request {
+        let e = &self.entries[i];
+        Request::new(i as u64, e.prompt.clone(), e.max_new_tokens).with_class(e.class)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("rate", Json::num(self.rate)),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("gap_s", Json::num(e.gap_s)),
+                                (
+                                    "prompt",
+                                    Json::Arr(
+                                        e.prompt.iter().map(|&t| Json::num(t as f64)).collect(),
+                                    ),
+                                ),
+                                ("max_new_tokens", Json::num(e.max_new_tokens as f64)),
+                                ("priority", Json::num(e.class.priority as f64)),
+                                ("ttft_deadline", Json::num(e.class.ttft_deadline)),
+                                ("tbt_budget", Json::num(e.class.tbt_budget)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Option<OpenLoopTrace> {
+        let entries = doc
+            .get("entries")
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Some(OpenLoopEntry {
+                    gap_s: e.get("gap_s").as_f64()?,
+                    prompt: e
+                        .get("prompt")
+                        .as_arr()?
+                        .iter()
+                        .map(|t| t.as_f64().map(|v| v as u32))
+                        .collect::<Option<Vec<u32>>>()?,
+                    max_new_tokens: e.get("max_new_tokens").as_usize()?,
+                    class: RequestClass {
+                        priority: e.get("priority").as_f64()? as u8,
+                        ttft_deadline: e.get("ttft_deadline").as_f64()?,
+                        tbt_budget: e.get("tbt_budget").as_f64()?,
+                    },
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(OpenLoopTrace {
+            seed: doc.get("seed").as_f64()? as u64,
+            rate: doc.get("rate").as_f64()?,
+            entries,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +212,44 @@ mod tests {
         let mean: f64 = gaps.iter().sum::<f64>() / gaps.len() as f64;
         assert!((mean - 0.01).abs() < 0.001, "mean {mean}");
         assert!(gaps.iter().all(|&g| g >= 0.0));
+    }
+
+    #[test]
+    fn open_loop_trace_round_trips_through_json() {
+        let classes = [
+            RequestClass { priority: 2, ttft_deadline: 0.5, tbt_budget: 0.05 },
+            RequestClass { priority: 0, ttft_deadline: 2.0, tbt_budget: 0.5 },
+        ];
+        let cfg = TraceConfig { n_requests: 9, seed: 11, ..Default::default() };
+        let t = OpenLoopTrace::generate(cfg, 40.0, &classes);
+        assert_eq!(t.entries.len(), 9);
+        assert!(t.entries.iter().all(|e| e.gap_s >= 0.0));
+        // Round-robin class assignment.
+        assert_eq!(t.entries[0].class, classes[0]);
+        assert_eq!(t.entries[1].class, classes[1]);
+        assert_eq!(t.entries[2].class, classes[0]);
+        let doc = Json::parse(&t.to_json().to_string()).expect("trace json parses");
+        let back = OpenLoopTrace::from_json(&doc).expect("trace json round-trips");
+        // f64 gaps survive the compact printer at full precision only
+        // approximately; shapes and classes must be exact.
+        assert_eq!(back.entries.len(), t.entries.len());
+        for (a, b) in back.entries.iter().zip(&t.entries) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.class, b.class);
+            assert!((a.gap_s - b.gap_s).abs() < 1e-9);
+        }
+        assert_eq!(back.seed, 11);
+    }
+
+    #[test]
+    fn open_loop_trace_same_seed_same_trace() {
+        let cfg = TraceConfig { n_requests: 6, seed: 5, ..Default::default() };
+        let a = OpenLoopTrace::generate(cfg, 25.0, &[]);
+        let b = OpenLoopTrace::generate(cfg, 25.0, &[]);
+        assert_eq!(a, b);
+        let r = a.request(3);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, a.entries[3].prompt);
     }
 }

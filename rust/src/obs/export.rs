@@ -14,18 +14,31 @@
 //! All events are emitted as `"X"` (complete) events with microsecond
 //! `ts`/`dur`; instants get `dur: 0`. Track names arrive as `"M"`
 //! metadata events, per the trace-event format.
+//!
+//! [`chrome_trace_full`] additionally lays the continuous resource
+//! samples ([`super::sampler`]) out as **counter tracks** (`"ph":"C"`)
+//! on a third process row:
+//!
+//! * **pid 3 — `bda counters`**: `kv_pool_blocks`
+//!   (free/used/evictable), `queue_depth`
+//!   (waiting/active/prefilling/parked), and `prefix_cache_blocks` —
+//!   Perfetto renders each as a stacked area chart aligned with the span
+//!   tracks (they share the trace epoch).
 
 use super::recorder::SpanEvent;
+use super::sampler::ResourceSample;
 use super::timeline;
 use crate::coordinator::metrics::Snapshot;
 use crate::util::json::Json;
-use crate::util::stats::Quantiles;
+use crate::util::stats::{HistSnapshot, Quantiles};
 use std::collections::BTreeSet;
 
 /// Process id for per-thread (worker/engine) tracks.
 const PID_WORKERS: u64 = 1;
 /// Process id for per-sequence (request lifecycle) tracks.
 const PID_SEQS: u64 = 2;
+/// Process id for resource counter tracks.
+const PID_COUNTERS: u64 = 3;
 
 fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
     Json::obj(vec![
@@ -43,6 +56,33 @@ fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
 /// [`super::thread_labels`]); unlabeled threads fall back to
 /// `thread-{tid}`.
 pub fn chrome_trace(events: &[SpanEvent], labels: &[(u32, String)]) -> Json {
+    chrome_trace_full(events, labels, &[])
+}
+
+/// One `"ph":"C"` counter event; `series` keys become the stacked values
+/// Perfetto plots for the track named `name`.
+fn counter_event(name: &str, t_ns: u64, series: Vec<(&str, f64)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(PID_COUNTERS as f64)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(t_ns as f64 / 1e3)),
+        ("args", Json::obj(series.into_iter().map(|(k, v)| (k, Json::num(v))).collect())),
+    ])
+}
+
+/// [`chrome_trace`] plus resource counter tracks: every
+/// [`ResourceSample`] becomes `"ph":"C"` events on pid 3 (`kv_pool_blocks`,
+/// `queue_depth`, and — when a pool reports prefix residency —
+/// `prefix_cache_blocks`). With no samples the output is byte-identical
+/// to [`chrome_trace`]: counter process metadata is only emitted when at
+/// least one sample exists.
+pub fn chrome_trace_full(
+    events: &[SpanEvent],
+    labels: &[(u32, String)],
+    samples: &[ResourceSample],
+) -> Json {
     let mut sorted: Vec<SpanEvent> = events.to_vec();
     sorted.sort_by_key(|e| e.seqno);
 
@@ -96,6 +136,38 @@ pub fn chrome_trace(events: &[SpanEvent], labels: &[(u32, String)]) -> Json {
         ]));
     }
 
+    if !samples.is_empty() {
+        out.push(meta_event("process_name", PID_COUNTERS, 0, "bda counters"));
+        for s in samples {
+            if let Some(p) = s.pool {
+                out.push(counter_event(
+                    "kv_pool_blocks",
+                    s.t_ns,
+                    vec![
+                        ("free", p.free_blocks as f64),
+                        ("used", p.used_blocks as f64),
+                        ("evictable", p.evictable_blocks as f64),
+                    ],
+                ));
+                out.push(counter_event(
+                    "prefix_cache_blocks",
+                    s.t_ns,
+                    vec![("blocks", p.prefix_cached_blocks as f64)],
+                ));
+            }
+            out.push(counter_event(
+                "queue_depth",
+                s.t_ns,
+                vec![
+                    ("waiting", s.waiting as f64),
+                    ("active", s.active as f64),
+                    ("prefilling", s.prefilling as f64),
+                    ("parked", s.parked as f64),
+                ],
+            ));
+        }
+    }
+
     Json::obj(vec![("traceEvents", Json::Arr(out)), ("displayTimeUnit", Json::str("ms"))])
 }
 
@@ -115,11 +187,24 @@ fn prom_summary(out: &mut String, name: &str, help: &str, q: &Quantiles) {
     out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", q.sum, q.count));
 }
 
+/// Native Prometheus histogram exposition: cumulative `_bucket{le=...}`
+/// series per finite bound, the implicit `+Inf` bucket (= `_count`), and
+/// `_sum`/`_count` — the type external scrapers can aggregate across
+/// workers, unlike pre-computed quantile summaries.
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &HistSnapshot) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for &(le, n) in &h.buckets {
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {n}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", h.sum, h.count));
+}
+
 /// Render a metrics [`Snapshot`] in Prometheus text exposition format
 /// (scrape-style consumption; write to a file or serve as-is).
 pub fn prometheus_text(s: &Snapshot) -> String {
     let mut out = String::new();
-    let counters: [(&str, &str, f64); 12] = [
+    let counters: [(&str, &str, f64); 16] = [
         ("bda_requests_admitted_total", "Requests admitted", s.requests_admitted as f64),
         ("bda_requests_completed_total", "Requests completed", s.requests_completed as f64),
         ("bda_requests_rejected_total", "Requests rejected", s.requests_rejected as f64),
@@ -132,6 +217,14 @@ pub fn prometheus_text(s: &Snapshot) -> String {
         ("bda_prefix_hits_total", "Prefix-cache lookup hits", s.prefix_hits as f64),
         ("bda_prefix_misses_total", "Prefix-cache lookup misses", s.prefix_misses as f64),
         ("bda_prefix_blocks_saved_total", "K/V blocks deduplicated", s.prefix_blocks_saved as f64),
+        ("bda_goodput_tokens_total", "Tokens from SLO-met requests", s.goodput_tokens as f64),
+        ("bda_slo_ttft_violations_total", "TTFT deadline violations", s.ttft_violations as f64),
+        ("bda_slo_tbt_violations_total", "TBT budget violations", s.tbt_violations as f64),
+        (
+            "bda_trace_dropped_events_total",
+            "Trace events lost to full span rings",
+            s.trace_dropped_events as f64,
+        ),
     ];
     for (name, help, v) in counters {
         prom_counter(&mut out, name, help, v);
@@ -139,6 +232,26 @@ pub fn prometheus_text(s: &Snapshot) -> String {
     prom_gauge(&mut out, "bda_tokens_per_sec", "Generation throughput", s.tokens_per_sec);
     prom_gauge(&mut out, "bda_decode_occupancy", "Mean decode-batch occupancy", s.decode_occupancy);
     prom_gauge(&mut out, "bda_mean_batch_size", "Mean formed batch size", s.mean_batch_size);
+    prom_gauge(&mut out, "bda_goodput_tok_s", "Throughput from SLO-met requests", s.goodput_tok_s);
+    prom_gauge(
+        &mut out,
+        "bda_slo_attainment",
+        "Fraction of completed requests meeting their class SLO",
+        s.slo_attainment(),
+    );
+    if !s.slo_by_class.is_empty() {
+        out.push_str(
+            "# HELP bda_slo_attainment_by_class Per-class SLO attainment\n\
+             # TYPE bda_slo_attainment_by_class gauge\n",
+        );
+        for c in &s.slo_by_class {
+            out.push_str(&format!(
+                "bda_slo_attainment_by_class{{priority=\"{}\"}} {}\n",
+                c.priority,
+                c.attainment()
+            ));
+        }
+    }
     if let Some(dtype) = s.kv_dtype {
         out.push_str(&format!(
             "# HELP bda_kv_pool_bytes Allocated K/V pool bytes\n\
@@ -169,6 +282,23 @@ pub fn prometheus_text(s: &Snapshot) -> String {
     prom_summary(&mut out, "bda_step_attn_seconds", "Per-step attention time", &s.step_attn);
     prom_summary(&mut out, "bda_step_gemm_seconds", "Per-step GEMM time", &s.step_gemm);
     prom_summary(&mut out, "bda_step_sample_seconds", "Per-step sampling time", &s.step_sample);
+    // Native histogram exposition of the same distributions (cumulative
+    // buckets aggregate across workers; the summaries above cannot).
+    prom_histogram(&mut out, "bda_ttft_seconds_hist", "Time to first token", &s.ttft_hist);
+    prom_histogram(&mut out, "bda_tbt_seconds_hist", "Time between tokens", &s.tbt_hist);
+    prom_histogram(
+        &mut out,
+        "bda_step_attn_seconds_hist",
+        "Per-step attention time",
+        &s.step_attn_hist,
+    );
+    prom_histogram(&mut out, "bda_step_gemm_seconds_hist", "Per-step GEMM time", &s.step_gemm_hist);
+    prom_histogram(
+        &mut out,
+        "bda_step_sample_seconds_hist",
+        "Per-step sampling time",
+        &s.step_sample_hist,
+    );
     out
 }
 
@@ -260,6 +390,86 @@ mod tests {
         assert!(text.contains("bda_tbt_seconds{quantile=\"0.99\"}"));
         assert!(text.contains("bda_tbt_seconds_count 2"));
         // Every line is a comment or `name{labels} value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2 || line.is_empty(),
+                "malformed line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn chrome_trace_full_emits_counter_tracks() {
+        use crate::obs::sampler::PoolCounters;
+        let events = vec![ev(Phase::Token, 1, 1, 0)];
+        let samples = vec![
+            ResourceSample {
+                t_ns: 1000,
+                pool: Some(PoolCounters {
+                    free_blocks: 5,
+                    used_blocks: 3,
+                    evictable_blocks: 1,
+                    prefix_cached_blocks: 1,
+                }),
+                waiting: 2,
+                active: 3,
+                prefilling: 1,
+                parked: 0,
+            },
+            ResourceSample { t_ns: 2000, pool: None, waiting: 0, active: 4, ..Default::default() },
+        ];
+        let doc = chrome_trace_full(&events, &[], &samples);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        let cs: Vec<&Json> = arr.iter().filter(|e| e.get("ph").as_str() == Some("C")).collect();
+        // Pooled sample: kv_pool_blocks + prefix_cache_blocks + queue_depth;
+        // pool-less sample: queue_depth only.
+        assert_eq!(cs.len(), 4);
+        let pool = cs.iter().find(|e| e.get("name").as_str() == Some("kv_pool_blocks")).unwrap();
+        assert_eq!(pool.get("pid").as_f64(), Some(3.0));
+        assert_eq!(pool.get("args").get("free").as_f64(), Some(5.0));
+        assert_eq!(pool.get("args").get("evictable").as_f64(), Some(1.0));
+        assert_eq!(pool.get("ts").as_f64(), Some(1.0), "1000 ns = 1 µs");
+        let q: Vec<&&Json> =
+            cs.iter().filter(|e| e.get("name").as_str() == Some("queue_depth")).collect();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].get("args").get("waiting").as_f64(), Some(2.0));
+        assert_eq!(q[1].get("args").get("parked").as_f64(), Some(0.0));
+        assert!(arr.iter().any(|e| e.get("ph").as_str() == Some("M")
+            && e.get("args").get("name").as_str() == Some("bda counters")));
+        let reparsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        assert_eq!(reparsed, doc);
+        // With no samples the document is identical to chrome_trace.
+        assert_eq!(chrome_trace_full(&events, &[], &[]), chrome_trace(&events, &[]));
+    }
+
+    #[test]
+    fn prometheus_exports_native_histograms_and_slo_metrics() {
+        use crate::coordinator::request::{RequestClass, Response};
+        let m = crate::coordinator::metrics::Metrics::new();
+        m.record_tbts(&[0.01, 0.02]);
+        m.completed(0.5, 0.1);
+        let class = RequestClass { priority: 1, ttft_deadline: 1.0, tbt_budget: 0.25 };
+        let resp = |ttft: f64, tokens: Vec<u32>| Response {
+            id: 1,
+            tokens,
+            ttft,
+            latency: 0.5,
+            prompt_len: 2,
+            class,
+            max_tbt: 0.01,
+        };
+        m.slo_scored(&resp(0.1, vec![1, 2, 3]));
+        m.slo_scored(&resp(5.0, vec![4]));
+        let text = prometheus_text(&m.snapshot());
+        assert!(text.contains("# TYPE bda_tbt_seconds_hist histogram"));
+        assert!(text.contains("bda_tbt_seconds_hist_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("bda_tbt_seconds_hist_count 2"));
+        assert!(text.contains("bda_ttft_seconds_hist_count 1"));
+        assert!(text.contains("bda_goodput_tokens_total 3"));
+        assert!(text.contains("bda_slo_ttft_violations_total 1"));
+        assert!(text.contains("bda_slo_attainment 0.5"));
+        assert!(text.contains("bda_slo_attainment_by_class{priority=\"1\"} 0.5"));
+        assert!(text.contains("bda_trace_dropped_events_total"));
         for line in text.lines() {
             assert!(
                 line.starts_with('#') || line.split_whitespace().count() == 2 || line.is_empty(),

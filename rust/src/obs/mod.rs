@@ -43,11 +43,13 @@
 
 pub mod export;
 pub mod recorder;
+pub mod sampler;
 pub mod timeline;
 
 pub use recorder::{
     dropped_total, flush, set_thread_label, take_collected, thread_labels, SpanEvent,
 };
+pub use sampler::{PoolCounters, ResourceSample};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{Duration, Instant};

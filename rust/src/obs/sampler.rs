@@ -1,0 +1,132 @@
+//! Continuous resource sampler: pool occupancy, prefix-cache residency,
+//! and queue depths captured once per scheduler step into a bounded
+//! buffer, exported as Perfetto **counter tracks** (`"ph":"C"`) alongside
+//! the span tracks and as Prometheus gauges.
+//!
+//! Sampling is pull-at-step-boundary, not a thread: the scheduler calls
+//! [`record`] just before its step-boundary `obs::flush()`, **only when
+//! tracing is enabled**, so a disabled trace pays nothing and an enabled
+//! one observes — never steers — the token stream (the bitwise pin of
+//! `tests/prop_slo.rs`). The buffer drops new samples past its cap and
+//! counts the drops rather than growing without bound.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// KV-pool occupancy of a pool-owning backend, in blocks. Reported by
+/// [`crate::coordinator::scheduler::Backend::pool_counters`]; `free` and
+/// `evictable` overlap deliberately — evictable prefix-cache blocks are
+/// counted free for admission but still hold reusable K/V.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Blocks admission can claim right now (unused + evictable).
+    pub free_blocks: usize,
+    /// Blocks pinned by live sequences.
+    pub used_blocks: usize,
+    /// Blocks held only by the prefix cache (reclaimable via eviction).
+    pub evictable_blocks: usize,
+    /// Blocks resident in the radix-tree prefix cache.
+    pub prefix_cached_blocks: usize,
+}
+
+/// One step-boundary resource sample. Times share the span epoch so
+/// counter tracks line up with span tracks in the same trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceSample {
+    /// Sample time, nanoseconds since the trace epoch.
+    pub t_ns: u64,
+    /// Pool occupancy, when the backend owns real block storage.
+    pub pool: Option<PoolCounters>,
+    /// Requests waiting in the server's admission queue (the most recent
+    /// depth the server noted via [`note_queue_depth`]).
+    pub waiting: usize,
+    /// Sequences decoding this step.
+    pub active: usize,
+    /// Sequences mid-chunked-prefill.
+    pub prefilling: usize,
+    /// Preempted sequences parked for resume.
+    pub parked: usize,
+}
+
+/// Cap on buffered samples; one sample per scheduler step means this
+/// absorbs tens of thousands of steps between exports.
+const SAMPLE_CAP: usize = 1 << 16;
+
+static SAMPLES: Mutex<Vec<ResourceSample>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Last waiting-queue depth the server reported (relaxed: a gauge, not a
+/// synchronization point).
+static QUEUE_DEPTH: AtomicUsize = AtomicUsize::new(0);
+
+/// Note the server's current admission-queue depth; the next [`record`]
+/// stamps it into the sample. One relaxed store — callers gate on
+/// `obs::enabled()` to keep the disabled path at zero stores.
+pub fn note_queue_depth(n: usize) {
+    QUEUE_DEPTH.store(n, Ordering::Relaxed);
+}
+
+/// Capture one resource sample at a step boundary. Callers gate on
+/// [`crate::obs::enabled`] (the scheduler does); the sample clock shares
+/// the span epoch so exported counter tracks align with span tracks.
+pub fn record(pool: Option<PoolCounters>, active: usize, prefilling: usize, parked: usize) {
+    let epoch = super::recorder::ensure_epoch();
+    let sample = ResourceSample {
+        t_ns: Instant::now().saturating_duration_since(epoch).as_nanos() as u64,
+        pool,
+        waiting: QUEUE_DEPTH.load(Ordering::Relaxed),
+        active,
+        prefilling,
+        parked,
+    };
+    let mut buf = SAMPLES.lock().unwrap();
+    if buf.len() < SAMPLE_CAP {
+        buf.push(sample);
+    } else {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Take ownership of every buffered sample (the buffer is left empty),
+/// in record order.
+pub fn take_samples() -> Vec<ResourceSample> {
+    std::mem::take(&mut *SAMPLES.lock().unwrap())
+}
+
+/// Samples lost to the buffer cap since process start.
+pub fn dropped_total() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test owns the whole global-buffer lifecycle — the buffer is
+    // process-wide and lib tests run concurrently. (The gate itself is
+    // never flipped here; `record` is below the gate by design.)
+    #[test]
+    fn record_take_roundtrip_with_queue_depth() {
+        note_queue_depth(7);
+        let pool = PoolCounters {
+            free_blocks: 10,
+            used_blocks: 6,
+            evictable_blocks: 2,
+            prefix_cached_blocks: 2,
+        };
+        record(Some(pool), 3, 1, 2);
+        record(None, 4, 0, 0);
+        let samples = take_samples();
+        assert!(samples.len() >= 2, "both samples buffered");
+        let ours: Vec<&ResourceSample> =
+            samples.iter().filter(|s| s.waiting == 7 && s.active >= 3).collect();
+        assert!(ours.len() >= 2);
+        let with_pool = ours.iter().find(|s| s.pool.is_some()).expect("pooled sample");
+        assert_eq!(with_pool.pool.unwrap(), pool);
+        assert_eq!(with_pool.prefilling, 1);
+        assert_eq!(with_pool.parked, 2);
+        assert!(samples.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "monotone sample times");
+        assert!(take_samples().is_empty(), "take drains the buffer");
+        assert_eq!(dropped_total(), 0);
+    }
+}

@@ -139,6 +139,36 @@ impl Histogram {
         self.sum += other.sum;
         self.max = self.max.max(other.max);
     }
+
+    /// Cumulative-bucket snapshot in Prometheus histogram convention:
+    /// `buckets[i] = (upper_bound, samples <= upper_bound)`, with the
+    /// implicit `+Inf` bucket equal to `count` (the overflow bucket is
+    /// folded there, not listed). The exporter turns this into native
+    /// `_bucket`/`_sum`/`_count` series.
+    pub fn hist_snapshot(&self) -> HistSnapshot {
+        let mut acc = 0u64;
+        let buckets = self
+            .bounds
+            .iter()
+            .zip(&self.counts)
+            .map(|(&b, &c)| {
+                acc += c;
+                (b, acc)
+            })
+            .collect();
+        HistSnapshot { buckets, sum: self.sum, count: self.total }
+    }
+}
+
+/// Snapshot of one [`Histogram`] as cumulative Prometheus-style buckets
+/// (see [`Histogram::hist_snapshot`]). Plain data, all-empty by default,
+/// so `Snapshot` can embed one per exported distribution.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    /// `(le_bound, cumulative_count)` per finite bucket, ascending.
+    pub buckets: Vec<(f64, u64)>,
+    pub sum: f64,
+    pub count: u64,
 }
 
 /// p50/p95/p99 + mean/count/sum summary of one [`Histogram`], in the
@@ -268,6 +298,23 @@ mod tests {
         let mut h = Histogram::new(1e-3, 1.0, 4);
         h.record(50.0); // beyond the last bound → overflow bucket
         assert_eq!(h.quantile(0.99), 50.0);
+    }
+
+    #[test]
+    fn hist_snapshot_is_cumulative() {
+        let mut h = Histogram::new(1e-3, 1.0, 4);
+        h.record(0.002); // bucket 1
+        h.record(0.002);
+        h.record(0.5); // bucket 3
+        h.record(50.0); // overflow: folded into +Inf (count), not a bucket
+        let s = h.hist_snapshot();
+        assert_eq!(s.buckets.len(), 4);
+        assert!(s.buckets.windows(2).all(|w| w[0].0 < w[1].0), "bounds ascend");
+        assert!(s.buckets.windows(2).all(|w| w[0].1 <= w[1].1), "counts cumulative");
+        assert_eq!(s.buckets.last().unwrap().1, 3, "finite buckets exclude overflow");
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 50.504).abs() < 1e-9);
+        assert_eq!(Histogram::latency().hist_snapshot().count, 0);
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Property tests for SLO scoring, the resource sampler, and class-aware
+//! preemption:
+//!
+//! 1. **Zero perturbation**: decode output is bitwise identical with the
+//!    sampler + tracing on vs off — for MHA and BDA, at worker counts
+//!    {1, 8}, prefix cache off and on, under an overload pool that forces
+//!    preempt→resume — while SLO scoring (which always runs) tallies every
+//!    response. Observability observes; it must never steer.
+//! 2. **Counter tracks**: a traced overload run buffers step-boundary
+//!    resource samples with real pool occupancy, and the Chrome-trace
+//!    export surfaces them as `"ph":"C"` counter events.
+//! 3. **Class-aware preemption**: with the victim-policy gate on, an
+//!    overloaded run preempts the lowest-priority class first and still
+//!    resumes bitwise (engine invariant 5) — generations match the
+//!    ample-pool baseline under both the gated policy and the default
+//!    youngest-victim policy.
+//!
+//! The tracing gate and the sampler buffer are process-global, so every
+//! test serializes on one mutex and resets both around its body (mirrors
+//! `prop_trace.rs`).
+
+use bda::bd::Strategy;
+use bda::coordinator::server::replay_trace;
+use bda::coordinator::{
+    BatcherConfig, KvCacheConfig, Request, RequestClass, SchedulerConfig, ServerConfig,
+};
+use bda::engine::PagedNativeBackend;
+use bda::model::{ModelConfig, Transformer};
+use bda::obs;
+use bda::tensor::DType;
+use bda::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Known state: gate set, span rings and sampler buffer drained.
+fn reset(enabled: bool) {
+    obs::set_enabled(false);
+    let _ = obs::take_collected();
+    let _ = obs::sampler::take_samples();
+    obs::set_enabled(enabled);
+}
+
+/// Overload geometry (mirrors `prop_trace.rs`): 3-way concurrency against
+/// a 10-block pool, 6 requests of 8 prompt + 10 new tokens — peak demand
+/// 3 × 5 blocks, so decode must preempt.
+fn overload_config(num_blocks: usize) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 3,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks, ..Default::default() },
+            ..Default::default()
+        },
+    }
+}
+
+/// The overload trace with a non-default class mix: priorities cycle
+/// 0/1/2 and each class carries its own deadlines, so SLO scoring and the
+/// class-aware victim policy both see real variety.
+fn classed_trace(vocab: u32) -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..8u64).map(|j| ((i * 37 + j * 13 + 5) % vocab as u64) as u32).collect();
+            let class = RequestClass {
+                priority: (i % 3) as u8,
+                ttft_deadline: 0.5 + 0.25 * (i % 3) as f64,
+                tbt_budget: 0.1 + 0.05 * (i % 3) as f64,
+            };
+            Request::new(i, prompt, 10).with_class(class)
+        })
+        .collect()
+}
+
+type Generations = Vec<(u64, Vec<u32>)>;
+
+struct RunOut {
+    generations: Generations,
+    preemptions: u64,
+    scored: u64,
+    class_ok: bool,
+}
+
+fn run_overload(model: &Transformer, workers: usize, cache: bool, num_blocks: usize) -> RunOut {
+    let cfg = overload_config(num_blocks);
+    let pool = Arc::new(ThreadPool::new(workers));
+    let mut backend = PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+    backend.set_prefix_cache(cache);
+    let trace = classed_trace(model.config.vocab_size as u32);
+    let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("overload serve");
+    responses.sort_by_key(|r| r.id);
+    // Responses must carry their class and a sane worst token gap.
+    let class_ok = responses
+        .iter()
+        .all(|r| r.class.priority == (r.id % 3) as u8 && r.max_tbt >= 0.0 && r.max_tbt <= r.latency);
+    let snap = metrics.snapshot();
+    let scored = snap.slo_by_class.iter().map(|c| c.completed).sum();
+    RunOut {
+        generations: responses.into_iter().map(|r| (r.id, r.tokens)).collect(),
+        preemptions: snap.preemptions,
+        scored,
+        class_ok,
+    }
+}
+
+#[test]
+fn prop_decode_bitwise_identical_with_sampler_and_slo_scoring_on_vs_off() {
+    let _g = serialized();
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 881);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for workers in [1usize, 8] {
+            for cache in [false, true] {
+                let tag = format!("{label}/workers={workers}/cache={cache}");
+                reset(false);
+                let off = run_overload(model, workers, cache, 10);
+                assert!(off.preemptions > 0, "{tag}: the overload pool must preempt");
+                assert_eq!(off.scored, 6, "{tag}: every completion is SLO-scored");
+                assert!(off.class_ok, "{tag}: responses must carry class + max_tbt");
+                assert!(
+                    obs::sampler::take_samples().is_empty(),
+                    "{tag}: a disabled trace must not sample resources"
+                );
+
+                reset(true);
+                let on = run_overload(model, workers, cache, 10);
+                let samples = obs::sampler::take_samples();
+                let events = obs::take_collected();
+                obs::set_enabled(false);
+                assert!(!samples.is_empty(), "{tag}: an enabled trace must sample");
+                assert!(!events.is_empty(), "{tag}: an enabled trace must record spans");
+                assert_eq!(on.scored, 6, "{tag}: scoring is gate-independent");
+                assert_eq!(
+                    on.preemptions, off.preemptions,
+                    "{tag}: the sampler changed scheduling"
+                );
+                assert_eq!(
+                    on.generations, off.generations,
+                    "{tag}: sampler + SLO scoring on vs off changed decode output \
+                     (must be bitwise identical)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sampler_samples_surface_as_counter_tracks() {
+    let _g = serialized();
+    reset(true);
+    let model = Transformer::new_mha(ModelConfig::tiny(), 882);
+    let out = run_overload(&model, 2, true, 10);
+    let samples = obs::sampler::take_samples();
+    let events = obs::take_collected();
+    obs::set_enabled(false);
+    assert_eq!(out.generations.len(), 6);
+    assert!(!samples.is_empty(), "one sample per scheduler step");
+    // The paged backend reports real pool occupancy; under overload some
+    // step must have seen a fully-claimed pool.
+    assert!(samples.iter().all(|s| s.pool.is_some()), "pool-owning backend samples counters");
+    assert!(samples.iter().any(|s| s.pool.unwrap().used_blocks > 0));
+    assert!(samples.iter().any(|s| s.active > 0));
+    let doc = bda::obs::export::chrome_trace_full(&events, &obs::thread_labels(), &samples);
+    let arr = doc.get("traceEvents").as_arr().expect("traceEvents");
+    let counters: Vec<_> =
+        arr.iter().filter(|e| e.get("ph").as_str() == Some("C")).collect();
+    assert!(counters.len() >= samples.len(), "every sample emits at least one counter event");
+    assert!(counters.iter().any(|e| e.get("name").as_str() == Some("kv_pool_blocks")));
+    assert!(counters.iter().any(|e| e.get("name").as_str() == Some("queue_depth")));
+}
+
+#[test]
+fn class_aware_preemption_resumes_bitwise_and_matches_default_policy_output() {
+    let _g = serialized();
+    reset(false);
+    let model = Transformer::new_mha(ModelConfig::tiny(), 884);
+    let run = |num_blocks: usize, class_preempt: bool| {
+        let cfg = overload_config(num_blocks);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut backend =
+            PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+        backend.set_class_preempt(class_preempt);
+        assert_eq!(backend.class_preempt_enabled(), class_preempt);
+        let trace = classed_trace(model.config.vocab_size as u32);
+        let (mut responses, metrics) = replay_trace(backend, cfg, trace).expect("serve");
+        responses.sort_by_key(|r| r.id);
+        let generations: Generations =
+            responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (generations, metrics.snapshot().preemptions)
+    };
+    let (ample, ample_preempt) = run(1024, true);
+    assert_eq!(ample_preempt, 0, "the ample pool must not preempt");
+    let (gated, gated_preempt) = run(10, true);
+    assert!(gated_preempt > 0, "the tight pool must preempt under the gated policy");
+    assert_eq!(
+        gated, ample,
+        "class-aware victims must resume bitwise (invariant 5): tight == ample"
+    );
+    let (default_policy, default_preempt) = run(10, false);
+    assert!(default_preempt > 0, "the tight pool must preempt under the default policy");
+    assert_eq!(
+        default_policy, ample,
+        "youngest-victim policy must also resume bitwise: tight == ample"
+    );
+}
