@@ -111,8 +111,8 @@ fn main() -> anyhow::Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn main() {
-    eprintln!(
+    bda::obs::announce(
         "train_lm drives the AOT train_step artifacts through PJRT; \
-         rebuild with --features pjrt (and the local `xla` path dependency)."
+         rebuild with --features pjrt (and the local `xla` path dependency).",
     );
 }

@@ -29,7 +29,7 @@ use bda::bench_support::{bench, f2, scatter_paged_kv, BenchConfig, Table};
 use bda::coordinator::server::replay_trace;
 use bda::coordinator::{
     BatcherConfig, KvCacheConfig, Metrics, NativeBackend, Request, Scheduler, SchedulerConfig,
-    ServerConfig, Snapshot,
+    Server, ServerConfig, Snapshot,
 };
 use bda::engine::PagedNativeBackend;
 use bda::eval::trace::{self, TraceConfig};
@@ -567,6 +567,110 @@ fn chunked_prefill_row(fast: bool) -> Json {
     ])
 }
 
+/// Sharded-scaling workload: the same trace served by the threaded
+/// prefix-aware router over 1 → N pool-shard engine workers, each shard
+/// with its own single-thread compute pool, its own KV pool, and the
+/// same per-shard concurrency — so per-request latency is pinned by the
+/// shard-local batch size while aggregate tokens/s scales with worker
+/// count. Generations must be bit-identical at every worker count
+/// (engine invariant 8); the JSON row records aggregate throughput and
+/// the merged per-request latency tail per worker count, plus the
+/// scaling efficiency (tok/s at N workers over N × tok/s at 1).
+fn sharded_scaling_row(fast: bool) -> Json {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 73);
+    let n = if fast { 16 } else { 32 };
+    let max_new = 8usize;
+    let concurrency = 4usize; // per shard — fixed across worker counts
+    let worker_counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: concurrency, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: concurrency,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 16, num_blocks: 256, dtype: DType::F32 },
+            ..Default::default()
+        },
+    };
+    let run = |workers: usize| {
+        let backends: Vec<PagedNativeBackend> = (0..workers)
+            .map(|_| {
+                let pool = std::sync::Arc::new(threadpool::ThreadPool::new(1));
+                PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool)
+            })
+            .collect();
+        let server = Server::start_sharded(backends, cfg);
+        let trace = make_trace(n, model.config.vocab_size, max_new);
+        let timer = Timer::start();
+        for req in trace {
+            assert!(server.submit(req), "sharded scaling submit rejected");
+        }
+        let mut responses = Vec::new();
+        while responses.len() < n {
+            match server.recv_timeout(Duration::from_secs(10)) {
+                Some(r) => responses.push(r),
+                None => break,
+            }
+        }
+        let wall = timer.elapsed_secs();
+        let snap = server.snapshot();
+        responses.extend(server.shutdown().expect("sharded scaling shutdown"));
+        assert_eq!(responses.len(), n, "sharded scaling lost responses at {workers} workers");
+        responses.sort_by_key(|r| r.id);
+        let generations: Vec<(u64, Vec<u32>)> =
+            responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        (generations, snap, wall)
+    };
+    let mut baseline: Option<Vec<(u64, Vec<u32>)>> = None;
+    let mut tok_s_by_workers = Vec::new();
+    let mut rows = Vec::new();
+    for &workers in worker_counts {
+        let (generations, snap, wall) = run(workers);
+        match &baseline {
+            None => baseline = Some(generations),
+            Some(base) => assert_eq!(
+                &generations, base,
+                "sharded serving changed generations at {workers} workers (invariant 8)"
+            ),
+        }
+        let tok_s = snap.tokens_out as f64 / wall;
+        let latency = Quantiles {
+            p50: snap.latency_p50,
+            p95: snap.latency_p95,
+            p99: snap.latency_p99,
+            mean: snap.latency_mean,
+            count: snap.requests_completed,
+            sum: 0.0,
+        };
+        println!(
+            "sharded scaling ({n} requests, concurrency {concurrency}/shard): \
+             {workers} workers -> {tok_s:.1} tok/s aggregate, latency p50 {:.2}ms \
+             p99 {:.2}ms",
+            snap.latency_p50 * 1e3,
+            snap.latency_p99 * 1e3,
+        );
+        tok_s_by_workers.push((workers, tok_s));
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("aggregate_tok_s", Json::num(tok_s)),
+            ("latency_ms", quantiles_ms_json(&latency)),
+            ("requests_completed", Json::num(snap.requests_completed as f64)),
+            ("tokens_out", Json::num(snap.tokens_out as f64)),
+        ]));
+    }
+    let (w1, t1) = tok_s_by_workers[0];
+    assert_eq!(w1, 1, "the sweep's first point is the single-worker baseline");
+    let &(max_workers, t_max) = tok_s_by_workers.last().unwrap();
+    let efficiency = if t1 > 0.0 { (t_max / t1) / max_workers as f64 } else { 0.0 };
+    Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("max_new_tokens", Json::num(max_new as f64)),
+        ("per_shard_concurrency", Json::num(concurrency as f64)),
+        ("max_workers", Json::num(max_workers as f64)),
+        ("runs", Json::Arr(rows)),
+        ("scaling_efficiency_max_workers", Json::num(efficiency)),
+    ])
+}
+
 /// Child mode: measure at the current (env-latched) thread count and write
 /// a JSON fragment to `$BDA_BENCH_OUT`.
 fn run_child(out_path: &str) {
@@ -685,6 +789,11 @@ fn run_child(out_path: &str) {
     // --- kv storage dtype: f32 vs f16 pools at fixed memory ----------------
     let kv_dtype = if threads == 1 || threads == np { kv_dtype_row(fast) } else { Json::Null };
 
+    // --- sharded scaling: 1 -> N pool-shard workers behind the router ------
+    // (independent of BDA_NUM_THREADS — each shard owns a 1-thread pool —
+    // so one run at the sweep's max-thread cell suffices).
+    let sharded_scaling = if threads == np { sharded_scaling_row(fast) } else { Json::Null };
+
     let fragment = Json::obj(vec![
         ("num_threads", Json::num(threads as f64)),
         ("dispatch", dispatch),
@@ -694,6 +803,7 @@ fn run_child(out_path: &str) {
         ("preemption", preemption),
         ("chunked_prefill", chunked_prefill),
         ("kv_dtype", kv_dtype),
+        ("sharded_scaling", sharded_scaling),
     ]);
     std::fs::write(out_path, fragment.to_string()).expect("write bench fragment");
 }
@@ -812,6 +922,20 @@ fn run_parent() {
         })
         .unwrap_or((0.0, false, 0.0, 0.0));
 
+    // Sharded-scaling acceptance from the max-thread fragment: aggregate
+    // throughput efficiency at the largest worker count (tok/s at N over
+    // N × tok/s at 1), with per-request latency pinned per shard.
+    let (sharded_efficiency, sharded_max_workers) = fragments
+        .last()
+        .map(|frag| {
+            let s = frag.get("sharded_scaling");
+            (
+                s.get("scaling_efficiency_max_workers").as_f64().unwrap_or(0.0),
+                s.get("max_workers").as_f64().unwrap_or(0.0),
+            )
+        })
+        .unwrap_or((0.0, 0.0));
+
     let (chunked_tbt_p99_ratio, chunked_tok_per_step, mono_tok_per_step) = fragments
         .last()
         .map(|frag| {
@@ -847,6 +971,8 @@ fn run_parent() {
                 ("kv_f16_fewer_preemptions_equal_budget", Json::Bool(kv_f16_fewer)),
                 ("kv_decode_tok_s_f32", Json::num(kv_tok_s_f32)),
                 ("kv_decode_tok_s_f16_equal_budget", Json::num(kv_tok_s_f16)),
+                ("sharded_scaling_efficiency_max_workers", Json::num(sharded_efficiency)),
+                ("sharded_scaling_max_workers", Json::num(sharded_max_workers)),
                 ("target", Json::num(2.0)),
             ]),
         ),
@@ -884,6 +1010,10 @@ fn run_parent() {
          blocks; equal-budget fp16 preempts {} than fp32 \
          ({kv_tok_s_f32:.1} -> {kv_tok_s_f16:.1} tok/s under overload)",
         if kv_f16_fewer { "strictly less" } else { "no less (pool was ample)" }
+    );
+    println!(
+        "sharded scaling: {sharded_efficiency:.2} aggregate-throughput efficiency at \
+         {sharded_max_workers:.0} pool-shard workers (identical generations — invariant 8)"
     );
 }
 

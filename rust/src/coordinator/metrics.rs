@@ -163,7 +163,14 @@ impl ClassSlo {
 }
 
 /// A point-in-time snapshot for reporting.
-#[derive(Clone, Debug)]
+///
+/// Carries both derived ratios (for display) and the raw sums they were
+/// computed from (`batches`, `batch_size_sum`, `occupancy_sum`,
+/// `decode_tokens`, the `*_hist` buckets) so per-shard snapshots
+/// [`merge`](Snapshot::merge) into one aggregate whose ratios are
+/// recomputed from summed numerators/denominators — never averaged
+/// across shards.
+#[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     pub elapsed: f64,
     /// Actual allocated K/V pool bytes (0 when the backend has no paged
@@ -178,8 +185,18 @@ pub struct Snapshot {
     pub tokens_out: u64,
     pub tokens_per_sec: f64,
     pub mean_batch_size: f64,
+    /// Batches formed (raw denominator behind `mean_batch_size`).
+    pub batches: u64,
+    /// Sum of formed batch sizes (raw numerator behind `mean_batch_size`).
+    pub batch_size_sum: u64,
     /// Number of batched decode iterations the engine ran.
     pub decode_steps: u64,
+    /// Tokens produced by decode steps (raw numerator behind
+    /// `tokens_per_step`).
+    pub decode_tokens: u64,
+    /// Sum of per-step batch/capacity ratios (raw numerator behind
+    /// `decode_occupancy`).
+    pub occupancy_sum: f64,
     /// Mean sequences decoded per iteration (tokens produced per step).
     pub tokens_per_step: f64,
     /// Mean decode-batch occupancy: batch size / configured max_active.
@@ -236,6 +253,10 @@ pub struct Snapshot {
     pub ttft_violations: u64,
     /// Scored completions with a token gap over the class budget.
     pub tbt_violations: u64,
+    /// Request-latency histogram buckets (raw data behind `latency_p*`;
+    /// merged bucketwise across shards so aggregate quantiles come from
+    /// the combined distribution, not averaged percentiles).
+    pub latency_hist: HistSnapshot,
     /// Cumulative-bucket histograms for native Prometheus export
     /// (`_bucket`/`_sum`/`_count` series; empty when nothing recorded).
     pub ttft_hist: HistSnapshot,
@@ -257,6 +278,97 @@ impl Snapshot {
             .iter()
             .fold((0u64, 0u64), |(m, c), s| (m + s.met, c + s.completed));
         ratio(met as f64, completed as f64)
+    }
+
+    /// Fold another shard's snapshot into this one — THE aggregation path
+    /// for sharded serving (router + N workers). Counters and histogram
+    /// buckets sum; `elapsed` takes the max (shards run concurrently over
+    /// the same wall clock, so aggregate throughput divides summed tokens
+    /// by shared wall time, not by summed elapsed); every derived ratio
+    /// (`tokens_per_sec`, `mean_batch_size`, `tokens_per_step`,
+    /// `decode_occupancy`, `goodput_tok_s`, the latency/TTFT/TBT/step
+    /// quantiles, and anything computed on demand like
+    /// [`Snapshot::slo_attainment`] / [`Snapshot::prefix_hit_rate`]) is
+    /// recomputed from the summed raw numerators and denominators.
+    /// Averaging per-shard ratios would weight an idle shard equally with
+    /// a saturated one; summing first keeps the aggregate exact.
+    ///
+    /// Merging one live snapshot into a default reproduces it: derived
+    /// values recompute to the shard's own (histogram quantile semantics
+    /// are shared with the live [`Histogram`], see [`HistSnapshot`]).
+    pub fn merge(&mut self, other: &Snapshot) {
+        self.elapsed = self.elapsed.max(other.elapsed);
+        self.kv_pool_bytes += other.kv_pool_bytes;
+        self.kv_dtype = self.kv_dtype.or(other.kv_dtype);
+        self.requests_admitted += other.requests_admitted;
+        self.requests_completed += other.requests_completed;
+        self.requests_rejected += other.requests_rejected;
+        self.tokens_in += other.tokens_in;
+        self.tokens_out += other.tokens_out;
+        self.batches += other.batches;
+        self.batch_size_sum += other.batch_size_sum;
+        self.decode_steps += other.decode_steps;
+        self.decode_tokens += other.decode_tokens;
+        self.occupancy_sum += other.occupancy_sum;
+        self.decode_attn_secs += other.decode_attn_secs;
+        self.decode_gemm_secs += other.decode_gemm_secs;
+        self.decode_sample_secs += other.decode_sample_secs;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_blocks_saved += other.prefix_blocks_saved;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.recomputed_tokens += other.recomputed_tokens;
+        self.prefill_chunks += other.prefill_chunks;
+        self.chunked_tokens += other.chunked_tokens;
+        self.goodput_tokens += other.goodput_tokens;
+        self.ttft_violations += other.ttft_violations;
+        self.tbt_violations += other.tbt_violations;
+        // The obs drop counter is process-global: every shard's snapshot
+        // reads the same atomic, so summing would multiply-count it.
+        self.trace_dropped_events = self.trace_dropped_events.max(other.trace_dropped_events);
+        for o in &other.slo_by_class {
+            match self.slo_by_class.iter_mut().find(|c| c.priority == o.priority) {
+                Some(c) => {
+                    c.completed += o.completed;
+                    c.met += o.met;
+                }
+                None => self.slo_by_class.push(*o),
+            }
+        }
+        self.slo_by_class.sort_by_key(|c| c.priority);
+        self.latency_hist.merge(&other.latency_hist);
+        self.ttft_hist.merge(&other.ttft_hist);
+        self.tbt_hist.merge(&other.tbt_hist);
+        self.step_attn_hist.merge(&other.step_attn_hist);
+        self.step_gemm_hist.merge(&other.step_gemm_hist);
+        self.step_sample_hist.merge(&other.step_sample_hist);
+        // Derived values: recompute from summed raws, never averaged.
+        self.tokens_per_sec = ratio(self.tokens_out as f64, self.elapsed);
+        self.mean_batch_size = ratio(self.batch_size_sum as f64, self.batches as f64);
+        self.tokens_per_step = ratio(self.decode_tokens as f64, self.decode_steps as f64);
+        self.decode_occupancy = ratio(self.occupancy_sum, self.decode_steps as f64);
+        self.goodput_tok_s = ratio(self.goodput_tokens as f64, self.elapsed);
+        self.latency_p50 = self.latency_hist.quantile(0.5);
+        self.latency_p95 = self.latency_hist.quantile(0.95);
+        self.latency_p99 = self.latency_hist.quantile(0.99);
+        self.latency_mean = self.latency_hist.mean();
+        self.ttft_p50 = self.ttft_hist.quantile(0.5);
+        self.ttft_p95 = self.ttft_hist.quantile(0.95);
+        self.ttft_p99 = self.ttft_hist.quantile(0.99);
+        self.tbt = self.tbt_hist.quantiles();
+        self.step_attn = self.step_attn_hist.quantiles();
+        self.step_gemm = self.step_gemm_hist.quantiles();
+        self.step_sample = self.step_sample_hist.quantiles();
+    }
+
+    /// Merge an iterator of per-shard snapshots into one aggregate.
+    pub fn aggregate<'a>(shards: impl IntoIterator<Item = &'a Snapshot>) -> Snapshot {
+        let mut out = Snapshot::default();
+        for s in shards {
+            out.merge(s);
+        }
+        out
     }
 }
 
@@ -430,7 +542,11 @@ impl Metrics {
             tokens_out,
             tokens_per_sec: ratio(tokens_out as f64, elapsed),
             mean_batch_size: ratio(g.batch_size_sum as f64, g.batches as f64),
+            batches: g.batches,
+            batch_size_sum: g.batch_size_sum,
             decode_steps,
+            decode_tokens,
+            occupancy_sum,
             tokens_per_step: ratio(decode_tokens as f64, decode_steps as f64),
             decode_occupancy: ratio(occupancy_sum, decode_steps as f64),
             decode_attn_secs: g.decode_attn_secs,
@@ -464,6 +580,7 @@ impl Metrics {
             goodput_tok_s: ratio(g.goodput_tokens as f64, elapsed),
             ttft_violations: g.ttft_violations,
             tbt_violations: g.tbt_violations,
+            latency_hist: g.latency.hist_snapshot(),
             ttft_hist: g.ttft.hist_snapshot(),
             tbt_hist: g.tbt.hist_snapshot(),
             step_attn_hist: g.step_attn.hist_snapshot(),
@@ -890,6 +1007,121 @@ mod tests {
         assert!(s.tbt_hist.buckets.windows(2).all(|w| w[0].1 <= w[1].1));
         assert!((s.tbt_hist.sum - 0.06).abs() < 1e-12);
         assert_eq!(s.step_attn_hist.count, 0, "no instrumented steps ran");
+    }
+
+    #[test]
+    fn merge_into_default_reproduces_the_shard() {
+        use crate::coordinator::request::RequestClass;
+        let m = Metrics::new();
+        m.set_kv_pool(1024, "fp16");
+        m.admitted(10);
+        m.batch_formed(3);
+        m.tokens_generated(12);
+        m.decode_step(3, 4);
+        m.decode_step(1, 4);
+        m.decode_timing(
+            StepTiming { attn: 0.002, gemm: 0.004, prefix_hits: 1, ..Default::default() },
+            0.001,
+        );
+        m.record_tbts(&[0.01, 0.02]);
+        m.completed(0.25, 0.05);
+        m.slo_scored(&Response {
+            id: 0,
+            tokens: vec![1; 12],
+            ttft: 0.05,
+            latency: 0.25,
+            prompt_len: 10,
+            class: RequestClass { priority: 1, ttft_deadline: 0.5, tbt_budget: 0.1 },
+            max_tbt: 0.02,
+        });
+        let s = m.snapshot();
+        let merged = Snapshot::aggregate([&s]);
+        assert_eq!(merged.requests_admitted, s.requests_admitted);
+        assert_eq!(merged.tokens_out, s.tokens_out);
+        assert_eq!(merged.kv_pool_bytes, s.kv_pool_bytes);
+        assert_eq!(merged.kv_dtype, s.kv_dtype);
+        assert_eq!(merged.mean_batch_size, s.mean_batch_size);
+        assert_eq!(merged.tokens_per_step, s.tokens_per_step);
+        assert_eq!(merged.decode_occupancy, s.decode_occupancy);
+        assert_eq!(merged.tokens_per_sec, s.tokens_per_sec);
+        assert_eq!(merged.goodput_tok_s, s.goodput_tok_s);
+        assert_eq!(
+            (merged.latency_p50, merged.latency_p95, merged.latency_p99, merged.latency_mean),
+            (s.latency_p50, s.latency_p95, s.latency_p99, s.latency_mean),
+        );
+        assert_eq!(
+            (merged.ttft_p50, merged.ttft_p95, merged.ttft_p99),
+            (s.ttft_p50, s.ttft_p95, s.ttft_p99),
+        );
+        assert_eq!(merged.tbt, s.tbt);
+        assert_eq!(merged.step_attn, s.step_attn);
+        assert_eq!(merged.slo_by_class, s.slo_by_class);
+        assert_eq!(merged.slo_attainment(), s.slo_attainment());
+        assert_eq!(merged.prefix_hit_rate(), s.prefix_hit_rate());
+    }
+
+    #[test]
+    fn merge_recomputes_ratios_from_sums_not_averages() {
+        // A busy shard and a near-idle shard. Averaging per-shard ratios
+        // would give mean_batch_size (8+1)/2 = 4.5 and 50% SLO attainment;
+        // the exact aggregate recomputes from summed raws.
+        let busy = Metrics::new();
+        for _ in 0..9 {
+            busy.batch_formed(8);
+            busy.decode_step(8, 8);
+        }
+        busy.tokens_generated(72);
+        let idle = Metrics::new();
+        idle.batch_formed(1);
+        idle.decode_step(1, 8);
+        idle.tokens_generated(1);
+        let (sb, si) = (busy.snapshot(), idle.snapshot());
+        let agg = Snapshot::aggregate([&sb, &si]);
+        assert_eq!(agg.batches, 10);
+        assert_eq!(agg.batch_size_sum, 73);
+        assert!((agg.mean_batch_size - 7.3).abs() < 1e-12, "73/10, not (8+1)/2");
+        assert_eq!(agg.decode_steps, 10);
+        assert!((agg.tokens_per_step - 7.3).abs() < 1e-12);
+        let expected_occ = (sb.occupancy_sum + si.occupancy_sum) / 10.0;
+        assert!((agg.decode_occupancy - expected_occ).abs() < 1e-12);
+        assert_eq!(agg.tokens_out, 73);
+        assert_eq!(agg.elapsed, sb.elapsed.max(si.elapsed), "shared wall clock, not summed");
+        assert_eq!(agg.tokens_per_sec, 73.0 / agg.elapsed);
+    }
+
+    #[test]
+    fn merge_sums_slo_classes_and_latency_buckets() {
+        use crate::coordinator::request::RequestClass;
+        let resp = |priority, ttft: f64, n_tokens: usize| Response {
+            id: 0,
+            tokens: vec![1; n_tokens],
+            ttft,
+            latency: ttft + 0.1,
+            prompt_len: 4,
+            class: RequestClass { priority, ttft_deadline: 0.5, tbt_budget: 0.1 },
+            max_tbt: 0.01,
+        };
+        let a = Metrics::new();
+        a.slo_scored(&resp(0, 0.1, 5)); // met
+        a.slo_scored(&resp(2, 0.9, 5)); // ttft violation
+        a.completed(0.2, 0.1);
+        let b = Metrics::new();
+        b.slo_scored(&resp(2, 0.1, 8)); // met
+        b.completed(0.4, 0.1);
+        b.completed(0.4, 0.1);
+        let agg = Snapshot::aggregate([&a.snapshot(), &b.snapshot()]);
+        assert_eq!(agg.slo_by_class.len(), 2);
+        assert_eq!(agg.slo_by_class[0], ClassSlo { priority: 0, completed: 1, met: 1 });
+        assert_eq!(agg.slo_by_class[1], ClassSlo { priority: 2, completed: 2, met: 1 });
+        assert!((agg.slo_attainment() - 2.0 / 3.0).abs() < 1e-12, "2 met of 3 scored");
+        assert_eq!(agg.goodput_tokens, 13);
+        assert_eq!(agg.ttft_violations, 1);
+        // Latency buckets combine: 3 samples total, p99 lands in the
+        // 0.4s bucket of the merged distribution.
+        assert_eq!(agg.latency_hist.count, 3);
+        assert_eq!(agg.requests_completed, 3);
+        assert!(agg.latency_p99 >= 0.4 && agg.latency_p99 < 0.5);
+        assert!(agg.latency_p50 >= 0.2);
     }
 
     #[test]

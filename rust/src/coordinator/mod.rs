@@ -3,8 +3,10 @@
 //! continuous-batching scheduler over a model backend (the paged batched
 //! decode engine by default, the per-sequence native transformer, or the
 //! PJRT artifact backend behind the `pjrt` feature) with a block-based
-//! KV-cache manager and latency/throughput metrics. Python is never on
-//! this path.
+//! KV-cache manager and latency/throughput metrics. The scheduler loop
+//! scales out behind a prefix-aware router over N pool-shard engine
+//! workers ([`router`]/[`worker`]; `BDA_WORKERS`), each owning its own
+//! queue, KV pool, and metrics shard. Python is never on this path.
 
 pub mod batcher;
 pub mod kv_cache;
@@ -13,8 +15,10 @@ pub mod metrics;
 pub mod pjrt_backend;
 pub mod queue;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod worker;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kv_cache::{kv_dtype_from_env, BlockAllocator, KvCacheConfig, KvDtype};
@@ -23,7 +27,10 @@ pub use metrics::{ClassSlo, Metrics, Snapshot, StepTiming};
 pub use pjrt_backend::{PjrtBackend, PjrtIncrementalBackend};
 pub use queue::RequestQueue;
 pub use request::{Request, RequestClass, RequestId, Response};
-pub use scheduler::{Backend, DecodeOutcome, NativeBackend, Scheduler, SchedulerConfig};
+pub use router::{pick_shard, workers_from_env, ShardStatus, ShardView};
+pub use scheduler::{
+    Backend, DecodeOutcome, NativeBackend, PrefixProbeHandle, Scheduler, SchedulerConfig,
+};
 pub use server::{Server, ServerConfig};
 
 // The paged batched decode engine is the default native serving backend;

@@ -1,0 +1,255 @@
+//! Prefix-aware, load-aware request router over N pool-shard engine
+//! workers.
+//!
+//! The router owns **placement only**: it decides which shard a request
+//! lands on, and the chosen shard's scheduler does everything else with
+//! the existing single-engine loop. A request is never split or migrated
+//! across shards, which is what makes engine invariant 8 hold: per-request
+//! token streams are placement-invariant because every invariant-1..6
+//! guarantee is per-scheduler, and the router only chooses *which*
+//! scheduler runs the whole sequence.
+//!
+//! # Placement policy
+//!
+//! For each candidate shard the router builds a [`ShardView`] and picks
+//! the minimum of the composite key
+//!
+//! ```text
+//! (Reverse(cached_blocks), parked > 0, Reverse(free_blocks), queue_depth, shard)
+//! ```
+//!
+//! in order of meaning:
+//!
+//! 1. **Prefix affinity** — the shard whose radix tree already holds the
+//!    longest cached prefix of this prompt wins outright (those blocks are
+//!    adopted instead of recomputed, the dominant cost).
+//! 2. **Pressure balancing** — among equally-cached shards (typically all
+//!    zero for a fresh prompt), shards currently parking preempted
+//!    sequences are in pool churn; new admissions steer away so they can
+//!    drain.
+//! 3. **Capacity** — more free + evictable pool blocks wins.
+//! 4. **Queue depth** — fewer waiting + in-flight requests wins.
+//! 5. **Shard index** — final deterministic tie-break.
+//!
+//! The key is total and every input is a point-in-time snapshot, so
+//! routing is deterministic for a fixed sequence of views — which the
+//! synchronous [`super::server::replay_trace_sharded`] relies on.
+
+use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use super::scheduler::PrefixProbeHandle;
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Point-in-time routing inputs for one shard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardView {
+    /// Shard index (also the last tie-break).
+    pub shard: usize,
+    /// Longest cached prefix of the candidate prompt in this shard's
+    /// radix tree, in blocks (0 when the shard has no prefix cache).
+    pub cached_blocks: usize,
+    /// Free + evictable pool blocks (`usize::MAX` when unknown, e.g. a
+    /// backend without a block pool).
+    pub free_blocks: usize,
+    /// Waiting + in-flight requests on this shard.
+    pub queue_depth: usize,
+    /// Preempted sequences parked for resume (pool-churn signal).
+    pub parked: usize,
+}
+
+/// Pick the shard a request should run on. Pure and deterministic; see
+/// the module docs for the key ordering. Returns 0 for an empty slice.
+pub fn pick_shard(views: &[ShardView]) -> usize {
+    views
+        .iter()
+        .min_by_key(|v| {
+            (Reverse(v.cached_blocks), v.parked > 0, Reverse(v.free_blocks), v.queue_depth, v.shard)
+        })
+        .map(|v| v.shard)
+        .unwrap_or(0)
+}
+
+/// Worker count from `BDA_WORKERS` (default 1; zero and garbage clamp
+/// to 1). Read at each call, not latched — callers decide when to
+/// resolve it (servers at startup, benches per child process).
+pub fn workers_from_env() -> usize {
+    parse_workers(std::env::var("BDA_WORKERS").ok().as_deref())
+}
+
+fn parse_workers(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).map(|n| n.max(1)).unwrap_or(1)
+}
+
+/// Shared load counters one engine worker publishes each loop iteration
+/// and the router reads on every placement. All accesses are relaxed:
+/// the values are advisory load signals, never correctness inputs (a
+/// stale read changes *where* a request runs, which invariant 8 makes
+/// unobservable in the token stream).
+#[derive(Debug)]
+pub struct ShardStatus {
+    /// Free + evictable pool blocks; `usize::MAX` until the worker first
+    /// publishes (so an unstarted shard reads as roomy, not full).
+    free_blocks: AtomicUsize,
+    /// Sequences decoding.
+    active: AtomicUsize,
+    /// Sequences mid-chunked-prefill.
+    prefilling: AtomicUsize,
+    /// Preempted sequences parked for resume.
+    parked: AtomicUsize,
+}
+
+impl Default for ShardStatus {
+    fn default() -> Self {
+        ShardStatus {
+            free_blocks: AtomicUsize::new(usize::MAX),
+            active: AtomicUsize::new(0),
+            prefilling: AtomicUsize::new(0),
+            parked: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl ShardStatus {
+    pub fn new() -> Arc<ShardStatus> {
+        Arc::new(ShardStatus::default())
+    }
+
+    /// Publish this shard's current load (worker side, once per loop).
+    pub fn publish(
+        &self,
+        free_blocks: Option<usize>,
+        active: usize,
+        prefilling: usize,
+        parked: usize,
+    ) {
+        self.free_blocks.store(free_blocks.unwrap_or(usize::MAX), Ordering::Relaxed);
+        self.active.store(active, Ordering::Relaxed);
+        self.prefilling.store(prefilling, Ordering::Relaxed);
+        self.parked.store(parked, Ordering::Relaxed);
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks.load(Ordering::Relaxed)
+    }
+
+    pub fn parked(&self) -> usize {
+        self.parked.load(Ordering::Relaxed)
+    }
+
+    /// Sequences the shard is carrying (decoding + prefilling + parked).
+    pub fn in_flight(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+            + self.prefilling.load(Ordering::Relaxed)
+            + self.parked.load(Ordering::Relaxed)
+    }
+}
+
+/// The router's per-shard handle inside a threaded [`super::Server`]:
+/// the shard's admission queue, its metrics, its published load, and a
+/// thread-safe longest-cached-prefix probe captured from the backend
+/// before it moved onto the worker thread.
+pub struct ShardHandle {
+    pub shard: u32,
+    pub queue: Arc<RequestQueue>,
+    pub metrics: Arc<Metrics>,
+    pub status: Arc<ShardStatus>,
+    pub probe: Option<PrefixProbeHandle>,
+}
+
+impl ShardHandle {
+    /// Snapshot this shard's routing inputs for one candidate prompt.
+    pub fn view(&self, prompt: &[u32]) -> ShardView {
+        ShardView {
+            shard: self.shard as usize,
+            cached_blocks: self.probe.as_ref().map(|p| p(prompt)).unwrap_or(0),
+            free_blocks: self.status.free_blocks(),
+            queue_depth: self.queue.len() + self.status.in_flight(),
+            parked: self.status.parked(),
+        }
+    }
+}
+
+/// Route one prompt across the shard handles (threaded-server path).
+pub fn route(shards: &[ShardHandle], prompt: &[u32]) -> usize {
+    let views: Vec<ShardView> = shards.iter().map(|s| s.view(prompt)).collect();
+    pick_shard(&views)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(shard: usize) -> ShardView {
+        ShardView { shard, cached_blocks: 0, free_blocks: 100, queue_depth: 0, parked: 0 }
+    }
+
+    #[test]
+    fn longest_cached_prefix_wins() {
+        let views = [
+            ShardView { cached_blocks: 1, ..view(0) },
+            ShardView { cached_blocks: 3, ..view(1) },
+            ShardView { cached_blocks: 2, ..view(2) },
+        ];
+        assert_eq!(pick_shard(&views), 1);
+    }
+
+    #[test]
+    fn cache_affinity_beats_pressure_and_load() {
+        // The shard holding the prefix is churning (parked > 0), nearly
+        // full, and deep-queued — it still wins: adopting cached blocks
+        // beats recomputing the prefix elsewhere.
+        let views = [
+            ShardView { cached_blocks: 2, free_blocks: 3, queue_depth: 9, parked: 2, shard: 0 },
+            ShardView { cached_blocks: 0, ..view(1) },
+        ];
+        assert_eq!(pick_shard(&views), 0);
+    }
+
+    #[test]
+    fn pressure_steers_fresh_prompts_off_churning_shards() {
+        // No cache anywhere: the preempting shard loses even though it
+        // has more free blocks right now.
+        let views = [
+            ShardView { parked: 1, free_blocks: 80, ..view(0) },
+            ShardView { free_blocks: 40, ..view(1) },
+        ];
+        assert_eq!(pick_shard(&views), 1);
+    }
+
+    #[test]
+    fn free_blocks_then_queue_depth_then_index() {
+        let more_free =
+            [ShardView { free_blocks: 10, ..view(0) }, ShardView { free_blocks: 20, ..view(1) }];
+        assert_eq!(pick_shard(&more_free), 1);
+        let shallower =
+            [ShardView { queue_depth: 4, ..view(0) }, ShardView { queue_depth: 1, ..view(1) }];
+        assert_eq!(pick_shard(&shallower), 1);
+        let all_equal = [view(0), view(1), view(2)];
+        assert_eq!(pick_shard(&all_equal), 0, "full tie goes to the lowest shard");
+        assert_eq!(pick_shard(&[]), 0, "empty view set defaults to shard 0");
+    }
+
+    #[test]
+    fn parse_workers_clamps_and_defaults() {
+        assert_eq!(parse_workers(None), 1);
+        assert_eq!(parse_workers(Some("4")), 4);
+        assert_eq!(parse_workers(Some(" 2 ")), 2);
+        assert_eq!(parse_workers(Some("0")), 1, "zero clamps to one worker");
+        assert_eq!(parse_workers(Some("lots")), 1, "garbage falls back");
+    }
+
+    #[test]
+    fn status_defaults_roomy_and_publishes() {
+        let status = ShardStatus::new();
+        assert_eq!(status.free_blocks(), usize::MAX, "unpublished shard reads roomy");
+        assert_eq!(status.in_flight(), 0);
+        status.publish(Some(12), 3, 1, 2);
+        assert_eq!(status.free_blocks(), 12);
+        assert_eq!(status.in_flight(), 6);
+        assert_eq!(status.parked(), 2);
+        status.publish(None, 0, 0, 0);
+        assert_eq!(status.free_blocks(), usize::MAX, "poolless backend stays unknown");
+    }
+}

@@ -84,6 +84,12 @@ pub enum StepWork {
     PrefillChunk { seq: SeqId, tokens: Vec<u32>, start: usize },
 }
 
+/// Thread-safe longest-cached-prefix probe: `prompt -> whole blocks
+/// cached`, shared between a worker's backend (which owns the prefix
+/// cache) and the router thread (which compares shards). See
+/// [`Backend::router_probe`].
+pub type PrefixProbeHandle = Arc<dyn Fn(&[u32]) -> usize + Send + Sync>;
+
 /// Model compute interface used by the scheduler.
 ///
 /// Not `Send` by itself (the PJRT wrapper types are thread-pinned); the
@@ -156,6 +162,23 @@ pub trait Backend {
     fn begin_prefill(&mut self, seq: SeqId, prompt: &[u32]) -> Result<usize> {
         let _ = (seq, prompt);
         anyhow::bail!("backend does not support chunked prefill")
+    }
+    /// How many whole K/V blocks of `prompt` this backend's prefix cache
+    /// already holds — a **read-only** probe (no LRU touch, no holds, no
+    /// stat counters) the sharded router compares across shards to place a
+    /// request on the shard with its longest cached prefix. `0` (the
+    /// default) for backends without a prefix cache.
+    fn cached_prefix_blocks(&self, prompt: &[u32]) -> usize {
+        let _ = prompt;
+        0
+    }
+    /// A `Send + Sync` handle performing [`Backend::cached_prefix_blocks`]
+    /// probes without `&self` — the threaded router holds one per worker
+    /// and probes shards whose backends live on other threads. `None` (the
+    /// default) tells the router to treat this shard as having no cached
+    /// prefixes.
+    fn router_probe(&self) -> Option<PrefixProbeHandle> {
+        None
     }
     /// One fused batched step over mixed decode + prefill-chunk work. The
     /// default forwards pure-decode work to [`Backend::decode`]; backends

@@ -1,15 +1,18 @@
-//! Server: wires queue → batcher → scheduler on a dedicated engine thread
-//! (the PJRT client and model state live on that thread; clients talk over
-//! channels). Also provides a synchronous trace-replay mode used by the
-//! benchmarks and examples.
+//! Server: a prefix-aware router over N pool-shard engine workers, each
+//! running the queue → batcher → scheduler loop on a dedicated thread
+//! (see [`super::worker`]); clients talk over channels. The single-engine
+//! server is the N = 1 case of the same machinery. Also provides
+//! synchronous trace-replay modes used by the benchmarks and examples.
 
-use super::batcher::{Batcher, BatcherConfig};
-use super::metrics::Metrics;
+use super::batcher::BatcherConfig;
+use super::metrics::{Metrics, Snapshot};
 use super::queue::RequestQueue;
 use super::request::{Request, Response};
+use super::router::{self, ShardHandle, ShardView};
 use super::scheduler::{Backend, Scheduler, SchedulerConfig};
+use super::worker;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -19,132 +22,107 @@ pub struct ServerConfig {
     pub scheduler: SchedulerConfig,
 }
 
-/// A running server instance.
+/// A running server instance: one router in front of N engine workers.
 pub struct Server {
+    /// Shard 0's admission queue (the only queue when N = 1); kept public
+    /// for compatibility with single-engine callers.
     pub queue: Arc<RequestQueue>,
+    /// Shard 0's metrics; use [`Server::snapshot`] for the aggregate view.
     pub metrics: Arc<Metrics>,
+    shards: Vec<ShardHandle>,
     responses: Receiver<Response>,
-    engine: Option<std::thread::JoinHandle<Result<()>>>,
+    engines: Vec<std::thread::JoinHandle<Result<()>>>,
 }
 
 impl Server {
-    /// Start the engine thread over a backend.
+    /// Start a single engine worker over a backend (the N = 1 special
+    /// case of [`Server::start_sharded`]).
     pub fn start<B: Backend + Send + 'static>(backend: B, config: ServerConfig) -> Server {
-        let queue = Arc::new(RequestQueue::new(256));
-        let metrics = Arc::new(Metrics::new());
-        let (tx, rx): (Sender<Response>, Receiver<Response>) = channel();
-        let q = queue.clone();
-        let m = metrics.clone();
-        let engine = std::thread::spawn(move || -> Result<()> {
-            if crate::obs::enabled() {
-                crate::obs::set_thread_label("bda-engine");
-            }
-            let mut sched = Scheduler::new(backend, config.scheduler);
-            sched.set_metrics(m.clone());
-            let batcher = Batcher::new(config.batcher);
-            loop {
-                // Admit a batch (don't block long if sequences are active).
-                let idle = if sched.active_count() + sched.prefilling_count() > 0 {
-                    Duration::from_micros(100)
-                } else if q.is_closed() && q.is_empty() {
-                    break;
-                } else {
-                    Duration::from_millis(10)
-                };
-                let batch = batcher.next_batch(&q, idle);
-                if crate::obs::enabled() {
-                    // Feed the resource sampler the post-batch queue depth;
-                    // the scheduler stamps it into its step-boundary sample.
-                    crate::obs::sampler::note_queue_depth(q.len());
-                }
-                if !batch.is_empty() {
-                    m.batch_formed(batch.len());
-                }
-                for req in batch {
-                    m.admitted(req.prompt.len());
-                    let mut pending = Some(req);
-                    // Retry admission as capacity frees up.
-                    while let Some(r) = pending.take() {
-                        match sched.admit(r) {
-                            Ok(()) => {}
-                            Err(r) => {
-                                if sched.active_count() == 0
-                                    && sched.preempted_count() == 0
-                                    && sched.prefilling_count() == 0
-                                {
-                                    // Can't ever admit: drop with rejection.
-                                    m.rejected();
-                                    break;
-                                }
-                                // Free capacity by stepping, then retry.
-                                for resp in sched.step()? {
-                                    m.tokens_generated(resp.tokens.len());
-                                    m.completed(resp.latency, resp.ttft);
-                                    m.slo_scored(&resp);
-                                    let _ = tx.send(resp);
-                                }
-                                pending = Some(r);
-                            }
-                        }
-                    }
-                }
-                // Decode progress.
-                for resp in sched.step()? {
-                    m.tokens_generated(resp.tokens.len());
-                    m.completed(resp.latency, resp.ttft);
-                    m.slo_scored(&resp);
-                    let _ = tx.send(resp);
-                }
-            }
-            // Drain remaining work after close.
-            for resp in sched.drain()? {
-                m.tokens_generated(resp.tokens.len());
-                m.completed(resp.latency, resp.ttft);
-                m.slo_scored(&resp);
-                let _ = tx.send(resp);
-            }
-            // Final trace drain: spans recorded after the last step's
-            // flush (completions above) must not be stranded in the rings.
-            crate::obs::flush();
-            Ok(())
-        });
-        Server { queue, metrics, responses: rx, engine: Some(engine) }
+        Server::start_sharded(vec![backend], config)
+    }
+
+    /// Start one engine worker per backend, each owning its pool shard,
+    /// behind the prefix-aware router. Every backend gets the same
+    /// config; requests submitted via [`Server::submit`] are placed by
+    /// [`router::pick_shard`] and never migrate between shards (engine
+    /// invariant 8).
+    pub fn start_sharded<B: Backend + Send + 'static>(
+        backends: Vec<B>,
+        config: ServerConfig,
+    ) -> Server {
+        assert!(!backends.is_empty(), "start_sharded needs at least one backend");
+        let (tx, rx) = channel();
+        let mut shards = Vec::with_capacity(backends.len());
+        let mut engines = Vec::with_capacity(backends.len());
+        for (i, backend) in backends.into_iter().enumerate() {
+            let (handle, join) = worker::spawn(i as u32, backend, config, tx.clone());
+            shards.push(handle);
+            engines.push(join);
+        }
+        // Workers hold the only senders now: the channel disconnects when
+        // the last worker exits, which shutdown uses as its drain signal.
+        drop(tx);
+        let queue = shards[0].queue.clone();
+        let metrics = shards[0].metrics.clone();
+        Server { queue, metrics, shards, responses: rx, engines }
+    }
+
+    /// Number of engine workers behind the router.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
     }
 
     /// Submit a request (blocking on backpressure). False if shut down.
+    ///
+    /// Placement is prefix-cache-aware and load-aware: the request goes
+    /// to the shard whose radix tree holds its longest cached prefix,
+    /// tie-broken away from preemption churn, then by free + evictable
+    /// blocks and queue depth (see [`router::pick_shard`]).
     pub fn submit(&self, req: Request) -> bool {
-        self.queue.push(req)
+        let shard = router::route(&self.shards, &req.prompt);
+        self.shards[shard].queue.push(req)
     }
 
-    /// Receive the next completed response.
+    /// Receive the next completed response (from any shard).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
         self.responses.recv_timeout(timeout).ok()
     }
 
-    /// Close the queue and join the engine, returning remaining responses.
+    /// Aggregate metrics across all shards: counters summed, derived
+    /// ratios recomputed from the sums (never averaged across shards).
+    pub fn snapshot(&self) -> Snapshot {
+        let snaps: Vec<Snapshot> = self.shards.iter().map(|s| s.metrics.snapshot()).collect();
+        Snapshot::aggregate(&snaps)
+    }
+
+    /// Close every shard's queue and join all engine workers, returning
+    /// remaining responses.
     pub fn shutdown(mut self) -> Result<Vec<Response>> {
-        self.queue.close();
+        for s in &self.shards {
+            s.queue.close();
+        }
+        let engines = std::mem::take(&mut self.engines);
         let mut rest = Vec::new();
-        if let Some(h) = self.engine.take() {
-            // Collect everything the engine flushes while finishing.
-            loop {
-                match self.responses.recv_timeout(Duration::from_millis(200)) {
-                    Ok(r) => rest.push(r),
-                    Err(_) => {
-                        if h.is_finished() {
-                            while let Ok(r) = self.responses.try_recv() {
-                                rest.push(r);
-                            }
-                            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
-                            break;
+        // Collect everything the workers flush while finishing.
+        loop {
+            match self.responses.recv_timeout(Duration::from_millis(200)) {
+                Ok(r) => rest.push(r),
+                Err(_) => {
+                    if engines.iter().all(|h| h.is_finished()) {
+                        while let Ok(r) = self.responses.try_recv() {
+                            rest.push(r);
                         }
+                        for h in engines {
+                            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+                        }
+                        break;
                     }
                 }
             }
         }
-        // The engine thread flushed its own rings before exiting; flush
-        // once more from the caller's side so spans recorded on *this*
-        // thread (submit-side instrumentation) aren't stranded either.
+        // Each worker flushed its own rings before exiting; flush once
+        // more from the caller's side so spans recorded on *this* thread
+        // (submit-side instrumentation) aren't stranded either.
         crate::obs::flush();
         Ok(rest)
     }
@@ -199,6 +177,107 @@ pub fn replay_trace<B: Backend>(
     Ok((out, metrics))
 }
 
+/// Synchronous sharded trace replay: one scheduler per backend, requests
+/// placed by the same [`router::pick_shard`] policy the threaded server
+/// uses, each shard stepped round-robin. Returns the responses in
+/// completion order plus the aggregate [`Snapshot`] merged across shards.
+///
+/// This is the deterministic harness behind the invariant-8 property test
+/// and the `sharded_scaling` benchmark: for a fixed request set the
+/// per-request token streams are bitwise identical at any worker count
+/// and any placement, because a request never splits across shards and
+/// invariants 1–6 pin each scheduler's per-request output.
+pub fn replay_trace_sharded<B: Backend>(
+    backends: Vec<B>,
+    config: ServerConfig,
+    trace: Vec<Request>,
+) -> Result<(Vec<Response>, Snapshot)> {
+    assert!(!backends.is_empty(), "replay_trace_sharded needs at least one backend");
+    struct Shard<B: Backend> {
+        sched: Scheduler<B>,
+        metrics: Arc<Metrics>,
+        local: std::collections::VecDeque<Request>,
+    }
+    let mut shards: Vec<Shard<B>> = backends
+        .into_iter()
+        .map(|b| {
+            let metrics = Arc::new(Metrics::new());
+            let mut sched = Scheduler::new(b, config.scheduler);
+            sched.set_metrics(metrics.clone());
+            Shard { sched, metrics, local: std::collections::VecDeque::new() }
+        })
+        .collect();
+    let mut pending: std::collections::VecDeque<Request> = trace.into();
+    let mut out = Vec::new();
+    while !pending.is_empty()
+        || shards.iter().any(|s| {
+            !s.local.is_empty()
+                || s.sched.active_count() > 0
+                || s.sched.preempted_count() > 0
+                || s.sched.prefilling_count() > 0
+        })
+    {
+        // Route arrivals incrementally: move requests onto shard-local
+        // queues only while some shard still has admission headroom, so
+        // later arrivals are placed against the prefix caches earlier
+        // ones populated — mirroring the threaded router, which places
+        // at submit time against live probes.
+        while !pending.is_empty()
+            && shards.iter().any(|s| s.local.len() < config.batcher.max_batch)
+        {
+            let req = pending.pop_front().unwrap();
+            let views: Vec<ShardView> = shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ShardView {
+                    shard: i,
+                    cached_blocks: s.sched.backend.cached_prefix_blocks(&req.prompt),
+                    free_blocks: s.sched.backend.free_blocks().unwrap_or(usize::MAX),
+                    queue_depth: s.local.len()
+                        + s.sched.active_count()
+                        + s.sched.prefilling_count()
+                        + s.sched.preempted_count(),
+                    parked: s.sched.preempted_count(),
+                })
+                .collect();
+            let shard = router::pick_shard(&views);
+            shards[shard].local.push_back(req);
+        }
+        for (i, s) in shards.iter_mut().enumerate() {
+            // Tag this shard's admission/step spans and samples.
+            crate::obs::set_shard(i as u32);
+            // Admit from the shard-local queue exactly as `replay_trace`
+            // admits from its global one (same stick-only counting).
+            while let Some(req) = s.local.pop_front() {
+                let prompt_tokens = req.prompt.len();
+                match s.sched.admit(req) {
+                    Ok(()) => {
+                        s.metrics.admitted(prompt_tokens);
+                        if s.sched.active_count() >= config.batcher.max_batch {
+                            break;
+                        }
+                    }
+                    Err(req) => {
+                        s.local.push_front(req);
+                        break;
+                    }
+                }
+            }
+            for resp in s.sched.step()? {
+                s.metrics.tokens_generated(resp.tokens.len());
+                s.metrics.completed(resp.latency, resp.ttft);
+                s.metrics.slo_scored(&resp);
+                out.push(resp);
+            }
+        }
+    }
+    crate::obs::set_shard(0);
+    let snaps: Vec<Snapshot> = shards.iter().map(|s| s.metrics.snapshot()).collect();
+    // Trailing spans (final completions) drain with the run.
+    crate::obs::flush();
+    Ok((out, Snapshot::aggregate(&snaps)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +330,30 @@ mod tests {
     }
 
     #[test]
+    fn sharded_server_completes_all_and_aggregates() {
+        let backends = vec![MockBackend::new(16, 64), MockBackend::new(16, 64)];
+        let server = Server::start_sharded(backends, config());
+        assert_eq!(server.workers(), 2);
+        for i in 0..20 {
+            assert!(server.submit(Request::new(i, vec![1, 2], 3)));
+        }
+        let mut got = Vec::new();
+        while got.len() < 20 {
+            match server.recv_timeout(Duration::from_secs(5)) {
+                Some(r) => got.push(r),
+                None => break,
+            }
+        }
+        assert_eq!(got.len(), 20);
+        assert!(got.iter().all(|r| r.tokens.len() == 3));
+        let snap = server.snapshot();
+        let rest = server.shutdown().unwrap();
+        assert!(rest.is_empty());
+        assert_eq!(snap.requests_completed, 20, "aggregate sums across both shards");
+        assert_eq!(snap.tokens_out, 60);
+    }
+
+    #[test]
     fn replay_trace_deterministic() {
         let trace: Vec<Request> = (0..10).map(|i| Request::new(i, vec![1, 2, 3], 4)).collect();
         let (r1, m1) = replay_trace(MockBackend::new(16, 64), config(), trace.clone()).unwrap();
@@ -261,6 +364,25 @@ mod tests {
         assert_eq!(t1, t2);
         assert_eq!(m1.snapshot().requests_admitted, 10);
         assert_eq!(m1.snapshot().tokens_out, 40);
+    }
+
+    #[test]
+    fn replay_trace_sharded_matches_single_worker() {
+        let trace: Vec<Request> = (0..10).map(|i| Request::new(i, vec![1, 2, 3], 4)).collect();
+        let (single, _) = replay_trace(MockBackend::new(16, 64), config(), trace.clone()).unwrap();
+        let mut base: Vec<_> = single.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        base.sort();
+        for workers in [1usize, 2, 4] {
+            let backends: Vec<MockBackend> =
+                (0..workers).map(|_| MockBackend::new(16, 64)).collect();
+            let (resps, snap) = replay_trace_sharded(backends, config(), trace.clone()).unwrap();
+            let mut got: Vec<_> = resps.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            got.sort();
+            assert_eq!(got, base, "token streams identical at {workers} workers");
+            assert_eq!(snap.requests_admitted, 10, "aggregate admissions at {workers} workers");
+            assert_eq!(snap.tokens_out, 40);
+            assert!(snap.tokens_per_sec > 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! One engine worker: a dedicated thread running the *existing*
+//! queue → batcher → scheduler loop over its own pool shard.
+//!
+//! The sharded server ([`super::Server::start_sharded`]) spawns N of
+//! these; the single-engine [`super::Server::start`] is the N = 1 case of
+//! the same code. Each worker owns its backend (and thus its KV pool and
+//! prefix-cache shard), its admission queue, and its [`Metrics`]; the only
+//! cross-shard artifacts are the shared response channel, the
+//! [`ShardStatus`] load counters the router reads, and the prefix probe
+//! captured from the backend before it moved onto the worker thread.
+//!
+//! Workers stamp their shard id into the tracing thread-locals
+//! ([`crate::obs::set_shard`]) at spawn, so every lifecycle span and
+//! resource sample the loop records carries its shard.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use super::request::Response;
+use super::router::{ShardHandle, ShardStatus};
+use super::scheduler::{Backend, Scheduler};
+use super::server::ServerConfig;
+use anyhow::Result;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Spawn one engine worker over `backend`. Returns the router-facing
+/// handle and the join handle for shutdown.
+pub(crate) fn spawn<B: Backend + Send + 'static>(
+    shard: u32,
+    backend: B,
+    config: ServerConfig,
+    tx: Sender<Response>,
+) -> (ShardHandle, std::thread::JoinHandle<Result<()>>) {
+    let queue = Arc::new(RequestQueue::new(256));
+    let metrics = Arc::new(Metrics::new());
+    let status = ShardStatus::new();
+    // Capture the prefix probe on the caller's thread; the backend itself
+    // moves onto the worker thread and is never touched from outside again.
+    let probe = backend.router_probe();
+    let q = queue.clone();
+    let m = metrics.clone();
+    let s = status.clone();
+    let join = std::thread::spawn(move || run_engine(shard, backend, config, q, m, s, tx));
+    (ShardHandle { shard, queue, metrics, status, probe }, join)
+}
+
+/// The engine loop, unchanged from the pre-sharding server except for
+/// shard tagging and status publication: admit a batch, retry admissions
+/// against capacity, step for decode progress, publish load, repeat until
+/// the queue closes; then drain.
+fn run_engine<B: Backend>(
+    shard: u32,
+    backend: B,
+    config: ServerConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    status: Arc<ShardStatus>,
+    tx: Sender<Response>,
+) -> Result<()> {
+    // Tag this thread's spans/samples with the shard id unconditionally —
+    // tracing may be enabled later via `set_enabled`, and the tag must
+    // already be in place when the first span records.
+    crate::obs::set_shard(shard);
+    if crate::obs::enabled() {
+        // Shard 0 keeps the historical label so single-worker traces are
+        // unchanged; higher shards get an indexed label.
+        if shard == 0 {
+            crate::obs::set_thread_label("bda-engine");
+        } else {
+            crate::obs::set_thread_label(&format!("bda-engine-{shard}"));
+        }
+    }
+    let mut sched = Scheduler::new(backend, config.scheduler);
+    sched.set_metrics(metrics.clone());
+    let publish = |sched: &Scheduler<B>, status: &ShardStatus| {
+        status.publish(
+            sched.backend.free_blocks(),
+            sched.active_count(),
+            sched.prefilling_count(),
+            sched.preempted_count(),
+        );
+    };
+    publish(&sched, &status);
+    let batcher = Batcher::new(config.batcher);
+    loop {
+        // Admit a batch (don't block long if sequences are active).
+        let idle = if sched.active_count() + sched.prefilling_count() > 0 {
+            Duration::from_micros(100)
+        } else if queue.is_closed() && queue.is_empty() {
+            break;
+        } else {
+            Duration::from_millis(10)
+        };
+        let batch = batcher.next_batch(&queue, idle);
+        if crate::obs::enabled() {
+            // Feed the resource sampler this shard's post-batch queue
+            // depth; the scheduler stamps it into its step-boundary
+            // sample (the depth cell is thread-local, so concurrent
+            // workers don't clobber each other's gauge).
+            crate::obs::sampler::note_queue_depth(queue.len());
+        }
+        if !batch.is_empty() {
+            metrics.batch_formed(batch.len());
+        }
+        for req in batch {
+            metrics.admitted(req.prompt.len());
+            let mut pending = Some(req);
+            // Retry admission as capacity frees up.
+            while let Some(r) = pending.take() {
+                match sched.admit(r) {
+                    Ok(()) => {}
+                    Err(r) => {
+                        if sched.active_count() == 0
+                            && sched.preempted_count() == 0
+                            && sched.prefilling_count() == 0
+                        {
+                            // Can't ever admit: drop with rejection.
+                            metrics.rejected();
+                            break;
+                        }
+                        // Free capacity by stepping, then retry.
+                        for resp in sched.step()? {
+                            metrics.tokens_generated(resp.tokens.len());
+                            metrics.completed(resp.latency, resp.ttft);
+                            metrics.slo_scored(&resp);
+                            let _ = tx.send(resp);
+                        }
+                        pending = Some(r);
+                    }
+                }
+            }
+        }
+        // Decode progress.
+        for resp in sched.step()? {
+            metrics.tokens_generated(resp.tokens.len());
+            metrics.completed(resp.latency, resp.ttft);
+            metrics.slo_scored(&resp);
+            let _ = tx.send(resp);
+        }
+        publish(&sched, &status);
+    }
+    // Drain remaining work after close.
+    for resp in sched.drain()? {
+        metrics.tokens_generated(resp.tokens.len());
+        metrics.completed(resp.latency, resp.ttft);
+        metrics.slo_scored(&resp);
+        let _ = tx.send(resp);
+    }
+    publish(&sched, &status);
+    // Final trace drain: spans recorded after the last step's flush
+    // (completions above) must not be stranded in this worker's rings.
+    crate::obs::flush();
+    Ok(())
+}

@@ -66,7 +66,7 @@ use crate::coordinator::kv_cache::{
     AppendSlot, BlockAllocator, BlockId, KvCacheConfig, KvError, SeqId,
 };
 use crate::coordinator::metrics::StepTiming;
-use crate::coordinator::scheduler::{Backend, DecodeOutcome, StepWork};
+use crate::coordinator::scheduler::{Backend, DecodeOutcome, PrefixProbeHandle, StepWork};
 use crate::model::transformer::Transformer;
 use crate::model::weights::FusedQkv;
 use crate::obs::{self, Phase};
@@ -75,7 +75,7 @@ use crate::tensor::Tensor;
 use crate::util::threadpool::{self, ThreadPool};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Parse a prefix-cache on/off token (shared by `BDA_PREFIX_CACHE` and
@@ -137,8 +137,14 @@ pub struct PagedNativeBackend {
     /// give full per-shard isolation.
     threads: Arc<ThreadPool>,
     /// Radix-tree prefix cache (`None` = disabled): automatic
-    /// cross-request K/V prompt sharing. See [`PrefixCache`].
-    prefix: Option<PrefixCache>,
+    /// cross-request K/V prompt sharing. See [`PrefixCache`]. Behind an
+    /// `Arc<Mutex<_>>` so the sharded router can probe the tree for its
+    /// longest-cached-prefix placement decision from another thread
+    /// ([`Backend::router_probe`]); the engine itself only ever touches it
+    /// from its own worker thread, so the lock is uncontended on the hot
+    /// path (one uncontended lock per admission/release, none per decode
+    /// step).
+    prefix: Option<Arc<Mutex<PrefixCache>>>,
     /// Per-sequence token history (prompt + decoded tokens), tracked only
     /// while the prefix cache is enabled; release inserts each history's
     /// full-block prefix into the tree.
@@ -174,7 +180,8 @@ impl PagedNativeBackend {
             model.blocks.iter().map(|b| b.attn.effective_shape().proj_width()).collect();
         let embed_t = model.embed.transpose();
         let fused_qkv = model.blocks.iter().map(|b| b.attn.pack_qkv()).collect();
-        let prefix = prefix_cache_enabled_from_env().then(|| PrefixCache::new(kv.block_size));
+        let prefix = prefix_cache_enabled_from_env()
+            .then(|| Arc::new(Mutex::new(PrefixCache::new(kv.block_size))));
         PagedNativeBackend {
             alloc: BlockAllocator::new(kv),
             pool: super::paged_kv::PagedKvPool::new(kv, &widths),
@@ -215,14 +222,15 @@ impl PagedNativeBackend {
     pub fn set_prefix_cache(&mut self, enabled: bool) {
         match (enabled, self.prefix.is_some()) {
             (true, false) => {
-                self.prefix = Some(PrefixCache::new(self.alloc.config.block_size));
+                self.prefix =
+                    Some(Arc::new(Mutex::new(PrefixCache::new(self.alloc.config.block_size))));
                 // Fresh tree, fresh counters: the delta baseline must
                 // match or the next step's u64 deltas would underflow.
                 self.reported_prefix = PrefixStats::default();
             }
             (false, true) => {
-                if let Some(mut cache) = self.prefix.take() {
-                    cache.clear(&mut self.alloc);
+                if let Some(cache) = self.prefix.take() {
+                    cache.lock().unwrap().clear(&mut self.alloc);
                 }
                 self.histories.clear();
                 self.reported_prefix = PrefixStats::default();
@@ -237,14 +245,22 @@ impl PagedNativeBackend {
 
     /// Cumulative prefix-cache counters (zeroed stats when disabled).
     pub fn prefix_stats(&self) -> PrefixStats {
-        self.prefix.as_ref().map(|c| c.stats()).unwrap_or_default()
+        self.prefix.as_ref().map(|c| c.lock().unwrap().stats()).unwrap_or_default()
     }
 
     /// Blocks currently resident in the radix tree (they count as used in
     /// [`PagedNativeBackend::used_blocks`]; the evictable subset is
     /// reported as reclaimable through [`Backend::free_blocks`]).
     pub fn cached_blocks(&self) -> usize {
-        self.prefix.as_ref().map(|c| c.held_blocks()).unwrap_or(0)
+        self.prefix.as_ref().map(|c| c.lock().unwrap().held_blocks()).unwrap_or(0)
+    }
+
+    /// A clone of the shared prefix-cache handle (`None` when the cache is
+    /// disabled). The sharded router holds one per worker for read-only
+    /// [`PrefixCache::peek_prefix_blocks`] probes; everything that mutates
+    /// the tree stays inside this backend.
+    pub fn prefix_cache_handle(&self) -> Option<Arc<Mutex<PrefixCache>>> {
+        self.prefix.clone()
     }
 
     /// Pool sized by the default [`KvCacheConfig`].
@@ -310,8 +326,8 @@ impl PagedNativeBackend {
     /// Evict one LRU zero-ref leaf from the prefix cache; false when there
     /// is no cache or nothing evictable.
     fn evict_one(&mut self) -> bool {
-        match self.prefix.as_mut() {
-            Some(cache) => cache.evict_lru(&mut self.alloc) > 0,
+        match &self.prefix {
+            Some(cache) => cache.lock().unwrap().evict_lru(&mut self.alloc) > 0,
             None => false,
         }
     }
@@ -386,12 +402,13 @@ impl PagedNativeBackend {
     /// blocks shared with forks or the tree survive and everything
     /// private returns to the pool.
     fn cache_history_then_release(&mut self, seq: SeqId, history: Option<Vec<u32>>, donated: bool) {
-        if let (Some(cache), Some(h)) = (self.prefix.as_mut(), history) {
+        if let (Some(cache), Some(h)) = (&self.prefix, history) {
             let bs = self.alloc.config.block_size;
             let full = h.len() / bs * bs;
             if full > 0 {
                 if let Some(blocks) = self.alloc.seq_blocks(seq) {
                     let blocks = blocks[..full / bs].to_vec();
+                    let mut cache = cache.lock().unwrap();
                     if donated {
                         cache.donate(&h[..full], &blocks, &mut self.alloc);
                     } else {
@@ -498,8 +515,11 @@ impl Backend for PagedNativeBackend {
     /// evictable), pinned blocks, the evictable subset, and radix-tree
     /// residency.
     fn pool_counters(&self) -> Option<crate::obs::sampler::PoolCounters> {
-        let evictable =
-            self.prefix.as_ref().map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
+        let evictable = self
+            .prefix
+            .as_ref()
+            .map(|c| c.lock().unwrap().evictable_blocks(&self.alloc))
+            .unwrap_or(0);
         Some(crate::obs::sampler::PoolCounters {
             free_blocks: self.alloc.free_blocks() + evictable,
             used_blocks: self.alloc.used_blocks(),
@@ -519,8 +539,21 @@ impl Backend for PagedNativeBackend {
     /// holds.
     fn free_blocks(&self) -> Option<usize> {
         let cache = self.prefix.as_ref();
-        let evictable = cache.map(|c| c.evictable_blocks(&self.alloc)).unwrap_or(0);
+        let evictable = cache.map(|c| c.lock().unwrap().evictable_blocks(&self.alloc)).unwrap_or(0);
         Some(self.alloc.free_blocks() + evictable)
+    }
+
+    /// Read-only longest-cached-prefix probe against this engine's radix
+    /// tree (no LRU touch, no counters): the router's placement signal.
+    fn cached_prefix_blocks(&self, prompt: &[u32]) -> usize {
+        self.prefix.as_ref().map(|c| c.lock().unwrap().peek_prefix_blocks(prompt)).unwrap_or(0)
+    }
+
+    /// Thread-safe probe handle sharing this engine's live tree, for the
+    /// router to consult while the backend itself runs on a worker thread.
+    fn router_probe(&self) -> Option<PrefixProbeHandle> {
+        let cache = Arc::clone(self.prefix.as_ref()?);
+        Some(Arc::new(move |prompt: &[u32]| cache.lock().unwrap().peek_prefix_blocks(prompt)))
     }
 
     /// Pool truth for the metrics surface: actual allocated bytes plus the
@@ -565,8 +598,8 @@ impl PagedNativeBackend {
         // Longest cached whole-block prefix (never the full prompt: at
         // least one tail token is left so the final chunk produces the
         // last-position logits).
-        let hit = match self.prefix.as_mut() {
-            Some(cache) => cache.lookup(prompt),
+        let hit = match &self.prefix {
+            Some(cache) => cache.lock().unwrap().lookup(prompt),
             None => Vec::new(),
         };
         // `adopted` is decided exactly once, at the registration that
@@ -601,8 +634,8 @@ impl PagedNativeBackend {
         // One stats record per admission that stuck — requeued admissions
         // don't inflate lookups, and a dropped hit counts as the miss its
         // cold registration actually was.
-        if let Some(cache) = self.prefix.as_mut() {
-            cache.record_admission(adopted);
+        if let Some(cache) = &self.prefix {
+            cache.lock().unwrap().record_admission(adopted);
         }
         if adopted > 0 {
             // Thread-track marker: this admission rode `adopted` cached

@@ -30,8 +30,11 @@
 //! the scoped implementation is gone and per-worker scratch survives
 //! across layers and steps. Each engine holds a pool handle — the
 //! process-wide pool by default, or a dedicated pool via
-//! [`backend::PagedNativeBackend::with_thread_pool`] (groundwork for
-//! multi-worker sharding).
+//! [`backend::PagedNativeBackend::with_thread_pool`] — which is what lets
+//! the sharded server ([`crate::coordinator::Server::start_sharded`],
+//! `BDA_WORKERS`) run N engines as pool-shard workers, each with its own
+//! KV pool, prefix-cache shard, and thread pool, behind the prefix-aware
+//! router ([`crate::coordinator::router`]).
 //!
 //! When a decode step exhausts the pool *and* the tree has nothing left
 //! to evict, the engine **preempts** the youngest batch member — donating
@@ -44,10 +47,11 @@
 //!
 //! # Load-bearing invariants
 //!
-//! Every optimization in the serving layer is constrained by seven
+//! Every optimization in the serving layer is constrained by eight
 //! bit-exactness invariants, stated here once and property-tested in
 //! `tests/prop_paged_parallel.rs`, `tests/prop_coordinator.rs`,
-//! `tests/prop_preemption.rs`, and `tests/prop_kv_dtype.rs`:
+//! `tests/prop_preemption.rs`, `tests/prop_kv_dtype.rs`, and
+//! `tests/prop_sharded.rs`:
 //!
 //! 1. **Paged batched decode is bit-identical to per-sequence decode.**
 //!    Every row-level operation of the batched step (embedding, RMSNorm,
@@ -113,6 +117,18 @@
 //!    K/V values; it never introduces nondeterminism. (Invariant 1 is
 //!    the deliberate exception: the per-sequence reference stores f32,
 //!    so paged == per-seq is pinned to f32 pools.)
+//! 8. **Placement is unobservable in the token stream.** For a fixed
+//!    request set, every request's token stream is bitwise identical at
+//!    any worker count and any placement: the prefix-aware router
+//!    ([`crate::coordinator::router`], `BDA_WORKERS`) never splits or
+//!    migrates a sequence across pool shards, each shard runs the
+//!    unchanged scheduler loop, and invariants 1–6 pin each scheduler's
+//!    per-request output regardless of what else shares its batch, pool,
+//!    or prefix cache. Routing inputs (cached-prefix length, free
+//!    blocks, queue depth, preemption churn) therefore steer only
+//!    *where* work runs — cost, never content. Property-tested for MHA
+//!    and BDA at worker counts {1, 2, 4}, prefix cache on and off, over
+//!    preempting per-shard pools (`tests/prop_sharded.rs`).
 //!
 //! BDA's losslessness (every QK inner product preserved, §3.4) makes the
 //! engine attention-variant-agnostic: the same pool and batched step serve

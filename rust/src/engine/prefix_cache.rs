@@ -230,6 +230,41 @@ impl PrefixCache {
         matched
     }
 
+    /// Read-only probe: how many whole blocks of `prompt` the tree holds,
+    /// with exactly [`PrefixCache::lookup`]'s matching semantics (walks
+    /// partial edges, capped so ≥ 1 tail token stays uncovered) but **no
+    /// side effects** — no LRU touch, no tick bump, no counters, no holds.
+    /// The router calls this against every shard per admission to place a
+    /// request on the shard with its longest cached prefix; a probe that
+    /// perturbed LRU order would let routing traffic evict-shield stale
+    /// leaves the engine itself never re-used.
+    pub fn peek_prefix_blocks(&self, prompt: &[u32]) -> usize {
+        let bs = self.block_size;
+        let max_blocks = prompt.len().saturating_sub(1) / bs;
+        let mut matched = 0usize;
+        let mut node = ROOT;
+        'walk: while matched < max_blocks {
+            let pos = matched * bs;
+            let Some(child) = self.child_matching(node, &prompt[pos..pos + bs]) else {
+                break;
+            };
+            let edge_blocks = self.node(child).blocks.len();
+            for b in 0..edge_blocks {
+                if matched == max_blocks {
+                    break 'walk;
+                }
+                let lo = matched * bs;
+                if self.node(child).tokens[b * bs..(b + 1) * bs] == prompt[lo..lo + bs] {
+                    matched += 1;
+                } else {
+                    break 'walk;
+                }
+            }
+            node = child;
+        }
+        matched
+    }
+
     /// Record one served admission that adopted `adopted_blocks` cached
     /// blocks (0 = miss). Kept separate from [`PrefixCache::lookup`] so
     /// the engine counts each request once, after its registration
@@ -663,6 +698,80 @@ mod tests {
         assert_eq!(a.used_blocks(), 0);
         assert_eq!(c.node_count(), 0);
         assert_eq!(c.held_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_matches_lookup_without_side_effects() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(32);
+        let t = toks(1, 12); // 3 full blocks in one edge
+        serve_and_release(&mut c, &mut a, 1, &t);
+        let stats_before = c.stats();
+
+        // Empty-tree cold path first, on a fresh cache.
+        let cold = PrefixCache::new(BS);
+        assert_eq!(cold.peek_prefix_blocks(&toks(1, 16)), 0);
+        assert_eq!(cold.peek_prefix_blocks(&[]), 0);
+
+        // Full hit with a tail, and the (len-1)/bs cap on an exact prompt.
+        let mut p = t.clone();
+        p.extend([777, 778]);
+        assert_eq!(c.peek_prefix_blocks(&p), 3);
+        assert_eq!(c.peek_prefix_blocks(&t), 2, "≥1 tail token stays uncovered");
+
+        // Mid-edge partial match: diverging inside block 2 of the 3-block
+        // edge matches exactly the first two blocks of that edge.
+        let mut q = t.clone();
+        q[9] = 999;
+        assert_eq!(c.peek_prefix_blocks(&q), 2);
+        // Diverging inside the first block: clean miss.
+        assert_eq!(c.peek_prefix_blocks(&toks(9, 12)), 0);
+        // Sub-block prompts can never match (no whole block fits under the cap).
+        assert_eq!(c.peek_prefix_blocks(&t[..BS]), 0);
+
+        // No side effects: stats untouched, and the probe agrees with a
+        // subsequent real lookup.
+        assert_eq!(c.stats(), stats_before);
+        assert_eq!(c.lookup(&p).len(), 3);
+    }
+
+    #[test]
+    fn peek_descends_across_split_edges() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(32);
+        let t1 = toks(1, 12);
+        let mut t2 = toks(1, 12);
+        t2[6] = 555; // shared first block, divergent second → edge split
+        serve_and_release(&mut c, &mut a, 1, &t1);
+        serve_and_release(&mut c, &mut a, 2, &t2);
+        assert_eq!(c.node_count(), 3, "front + back + new branch");
+
+        let mut p1 = t1.clone();
+        p1.push(0);
+        let mut p2 = t2.clone();
+        p2.push(0);
+        assert_eq!(c.peek_prefix_blocks(&p1), 3, "walks front edge then back child");
+        assert_eq!(c.peek_prefix_blocks(&p2), 3, "walks front edge then branch child");
+
+        // Shared block only: stops at the split point.
+        let mut q = toks(1, 12);
+        q[4] = 111;
+        assert_eq!(c.peek_prefix_blocks(&q), 1);
+    }
+
+    #[test]
+    fn peek_does_not_perturb_lru_order() {
+        let mut c = PrefixCache::new(BS);
+        let mut a = alloc(16);
+        serve_and_release(&mut c, &mut a, 1, &toks(1, 4));
+        serve_and_release(&mut c, &mut a, 2, &toks(2, 4));
+        // A real lookup touching branch 1 would shield it from eviction;
+        // the probe must not. Branch 1 stays LRU and is evicted first.
+        assert_eq!(c.peek_prefix_blocks(&[&toks(1, 4)[..], &[9]].concat()), 1);
+        c.evict_lru(&mut a);
+        assert!(c.lookup(&[&toks(1, 4)[..], &[9]].concat()).is_empty(), "probed branch evicted");
+        assert_eq!(c.lookup(&[&toks(2, 4)[..], &[9]].concat()).len(), 1, "other branch survives");
         a.check_invariants().unwrap();
     }
 

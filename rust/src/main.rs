@@ -21,7 +21,11 @@
 //!                                 Chrome trace; --prom-out FILE writes the
 //!                                 metrics snapshot in Prometheus text
 //!                                 format; BDA_TRACE=1 records without a
-//!                                 file)
+//!                                 file; --workers N shards the trace
+//!                                 across N pool-shard engine workers
+//!                                 behind the prefix-aware router —
+//!                                 default from BDA_WORKERS, generations
+//!                                 bit-identical at any worker count)
 //!   eval-ppl   [--model M]        Fig. 2a-style PPL table (fp32/16/bf16)
 //!   recon      [--model M]        Table 4-style reconstruction errors
 //!   train      [--steps N]        drive the AOT train_step from Rust
@@ -61,7 +65,7 @@ fn main() {
 fn model_from_args(args: &Args) -> Transformer {
     let name = args.get_or("model", "tiny");
     let config = ModelConfig::preset(name).unwrap_or_else(|| {
-        eprintln!("unknown model preset {name}, using tiny");
+        bda::obs::announce(&format!("unknown model preset {name}, using tiny"));
         ModelConfig::tiny()
     });
     Transformer::new_mha(config, args.get_u64("seed", 42))
@@ -175,6 +179,7 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
+    let workers = args.get_usize("workers", coordinator::workers_from_env()).max(1);
     let t = trace::generate(trace::TraceConfig {
         n_requests: n,
         vocab_size: model.config.vocab_size,
@@ -186,32 +191,67 @@ fn cmd_serve(args: &Args) -> i32 {
          generations are bit-identical at any thread count)",
         bda::util::threadpool::num_threads()
     );
+    if workers > 1 {
+        println!(
+            "pool shards: {workers} engine workers behind the prefix-aware router \
+             (--workers / BDA_WORKERS; generations are bit-identical at any worker count)"
+        );
+    }
     let timer = Timer::start();
-    let result = if backend == "per-seq" {
-        coordinator::server::replay_trace(NativeBackend::new(model), cfg, t)
+    let (responses, snap) = if backend == "per-seq" {
+        if workers > 1 {
+            let backends: Vec<NativeBackend> =
+                (0..workers).map(|_| NativeBackend::new(model.clone())).collect();
+            coordinator::server::replay_trace_sharded(backends, cfg, t).expect("serve")
+        } else {
+            let (responses, metrics) =
+                coordinator::server::replay_trace(NativeBackend::new(model), cfg, t)
+                    .expect("serve");
+            let snap = metrics.snapshot();
+            (responses, snap)
+        }
     } else {
         // Default: the paged batched decode engine, with the radix-tree
         // prefix cache following BDA_PREFIX_CACHE unless --prefix-cache
         // overrides it (a pure perf/memory knob: cache hits are
         // bitwise-identical to cold prefills).
-        let mut engine = PagedNativeBackend::new(model, cfg.scheduler.kv);
-        if let Some(v) = args.get("prefix-cache") {
-            engine.set_prefix_cache(bda::engine::backend::prefix_cache_flag(v));
-        }
+        let make_engine = |model: Transformer| {
+            let mut engine = if workers > 1 {
+                // Per-shard thread pools: split the global worker budget
+                // so shards don't oversubscribe cores.
+                let per_shard = (bda::util::threadpool::num_threads() / workers).max(1);
+                let pool = std::sync::Arc::new(bda::util::threadpool::ThreadPool::new(per_shard));
+                PagedNativeBackend::with_thread_pool(model, cfg.scheduler.kv, pool)
+            } else {
+                PagedNativeBackend::new(model, cfg.scheduler.kv)
+            };
+            if let Some(v) = args.get("prefix-cache") {
+                engine.set_prefix_cache(bda::engine::backend::prefix_cache_flag(v));
+            }
+            engine
+        };
+        let first = make_engine(model.clone());
         println!(
             "prefix cache: {}",
-            if engine.prefix_cache_enabled() { "enabled" } else { "disabled" }
+            if first.prefix_cache_enabled() { "enabled" } else { "disabled" }
         );
         println!(
-            "kv pool: {} storage, {:.1} MiB allocated",
-            engine.kv_dtype().name(),
-            engine.kv_pool_bytes() as f64 / (1024.0 * 1024.0)
+            "kv pool: {} storage, {:.1} MiB allocated per shard",
+            first.kv_dtype().name(),
+            first.kv_pool_bytes() as f64 / (1024.0 * 1024.0)
         );
-        coordinator::server::replay_trace(engine, cfg, t)
+        if workers > 1 {
+            let mut backends = vec![first];
+            backends.extend((1..workers).map(|_| make_engine(model.clone())));
+            coordinator::server::replay_trace_sharded(backends, cfg, t).expect("serve")
+        } else {
+            let (responses, metrics) =
+                coordinator::server::replay_trace(first, cfg, t).expect("serve");
+            let snap = metrics.snapshot();
+            (responses, snap)
+        }
     };
-    let (responses, metrics) = result.expect("serve");
     let secs = timer.elapsed_secs();
-    let snap = metrics.snapshot();
     println!("{}", snap.report());
     if let Some(split) = snap.decode_split() {
         println!("decode split: {split}");

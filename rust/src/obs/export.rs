@@ -24,6 +24,12 @@
 //!   (waiting/active/prefilling/parked), and `prefix_cache_blocks` —
 //!   Perfetto renders each as a stacked area chart aligned with the span
 //!   tracks (they share the trace epoch).
+//!
+//! Sharded serving shows up in both families: every lifecycle event's
+//! `args` carries the `shard` that ran it (shard 0 in single-worker
+//! runs), and when samples from more than one shard are present the
+//! counter tracks split per shard (`kv_pool_blocks/shard0`, …) so each
+//! pool shard plots as its own area chart.
 
 use super::recorder::SpanEvent;
 use super::sampler::ResourceSample;
@@ -118,6 +124,14 @@ pub fn chrome_trace_full(
         } else {
             (PID_WORKERS, e.tid as u64)
         };
+        let mut args =
+            vec![("id", Json::num(e.id as f64)), ("seqno", Json::num(e.seqno as f64))];
+        if e.phase.is_lifecycle() {
+            // Placement tag: which engine shard ran this request phase
+            // (always present — shard 0 in single-worker serving — so
+            // trace consumers can rely on it unconditionally).
+            args.push(("shard", Json::num(e.shard as f64)));
+        }
         out.push(Json::obj(vec![
             ("ph", Json::str("X")),
             ("name", Json::str(e.phase.name())),
@@ -126,22 +140,27 @@ pub fn chrome_trace_full(
             ("tid", Json::num(tid as f64)),
             ("ts", Json::num(e.start_ns as f64 / 1e3)),
             ("dur", Json::num(e.dur_ns as f64 / 1e3)),
-            (
-                "args",
-                Json::obj(vec![
-                    ("id", Json::num(e.id as f64)),
-                    ("seqno", Json::num(e.seqno as f64)),
-                ]),
-            ),
+            ("args", Json::obj(args)),
         ]));
     }
 
     if !samples.is_empty() {
         out.push(meta_event("process_name", PID_COUNTERS, 0, "bda counters"));
+        // Single-shard runs keep the legacy track names; with samples from
+        // more than one shard, each shard gets its own counter tracks so
+        // per-pool occupancy stays readable instead of interleaving.
+        let multi_shard = samples.iter().map(|s| s.shard).collect::<BTreeSet<u32>>().len() > 1;
+        let track = |name: &str, shard: u32| {
+            if multi_shard {
+                format!("{name}/shard{shard}")
+            } else {
+                name.to_string()
+            }
+        };
         for s in samples {
             if let Some(p) = s.pool {
                 out.push(counter_event(
-                    "kv_pool_blocks",
+                    &track("kv_pool_blocks", s.shard),
                     s.t_ns,
                     vec![
                         ("free", p.free_blocks as f64),
@@ -150,13 +169,13 @@ pub fn chrome_trace_full(
                     ],
                 ));
                 out.push(counter_event(
-                    "prefix_cache_blocks",
+                    &track("prefix_cache_blocks", s.shard),
                     s.t_ns,
                     vec![("blocks", p.prefix_cached_blocks as f64)],
                 ));
             }
             out.push(counter_event(
-                "queue_depth",
+                &track("queue_depth", s.shard),
                 s.t_ns,
                 vec![
                     ("waiting", s.waiting as f64),
@@ -325,7 +344,7 @@ mod tests {
     use crate::obs::Phase;
 
     fn ev(phase: Phase, id: u64, tid: u32, seqno: u64) -> SpanEvent {
-        SpanEvent { seqno, phase, id, tid, start_ns: seqno * 1000, dur_ns: 500 }
+        SpanEvent { seqno, phase, id, tid, start_ns: seqno * 1000, dur_ns: 500, shard: 0 }
     }
 
     #[test]
@@ -415,6 +434,7 @@ mod tests {
                 active: 3,
                 prefilling: 1,
                 parked: 0,
+                shard: 0,
             },
             ResourceSample { t_ns: 2000, pool: None, waiting: 0, active: 4, ..Default::default() },
         ];
@@ -476,6 +496,51 @@ mod tests {
                 "malformed line: {line}"
             );
         }
+    }
+
+    #[test]
+    fn lifecycle_events_carry_shard_and_multi_shard_counters_split() {
+        use crate::obs::sampler::PoolCounters;
+        let mut admit = ev(Phase::Admit, 7, 1, 0);
+        admit.shard = 2;
+        let attn = ev(Phase::Attn, 0, 1, 1); // thread-track: no shard arg
+        let doc = chrome_trace(&[admit, attn], &[]);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        let admit_ev =
+            arr.iter().find(|e| e.get("name").as_str() == Some("admit")).expect("admit event");
+        assert_eq!(admit_ev.get("args").get("shard").as_f64(), Some(2.0));
+        let attn_ev = arr.iter().find(|e| e.get("name").as_str() == Some("attn")).unwrap();
+        assert!(attn_ev.get("args").get("shard").as_f64().is_none());
+
+        // Samples from two shards split the counter tracks per shard.
+        let sample = |shard: u32| ResourceSample {
+            t_ns: 1000,
+            pool: Some(PoolCounters { free_blocks: 1, ..Default::default() }),
+            shard,
+            ..Default::default()
+        };
+        let doc = chrome_trace_full(&[], &[], &[sample(0), sample(1)]);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        let names: Vec<&str> = arr
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("C"))
+            .filter_map(|e| e.get("name").as_str())
+            .collect();
+        for n in [
+            "kv_pool_blocks/shard0",
+            "kv_pool_blocks/shard1",
+            "queue_depth/shard0",
+            "queue_depth/shard1",
+        ] {
+            assert!(names.contains(&n), "missing counter track {n}: {names:?}");
+        }
+        // A single-shard run keeps the legacy unsuffixed names.
+        let doc = chrome_trace_full(&[], &[], &[sample(1), sample(1)]);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        assert!(arr
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("C"))
+            .all(|e| !e.get("name").as_str().unwrap().contains("/shard")));
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod sampler;
 pub mod timeline;
 
 pub use recorder::{
-    dropped_total, flush, set_thread_label, take_collected, thread_labels, SpanEvent,
+    dropped_total, flush, set_shard, set_thread_label, take_collected, thread_labels, SpanEvent,
 };
 pub use sampler::{PoolCounters, ResourceSample};
 

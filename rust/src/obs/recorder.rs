@@ -33,6 +33,10 @@ pub struct SpanEvent {
     pub start_ns: u64,
     /// Duration in nanoseconds; 0 for instant events.
     pub dur_ns: u64,
+    /// Engine shard that recorded the event (0 in single-worker serving;
+    /// worker threads stamp theirs via [`set_shard`]). Lets exporters tag
+    /// lifecycle spans with their placement without a side table.
+    pub shard: u32,
 }
 
 /// Ring capacity per thread. 4096 events absorbs well over one scheduler
@@ -134,6 +138,22 @@ static EPOCH: OnceLock<Instant> = OnceLock::new();
 
 thread_local! {
     static LOCAL: OnceCell<(u32, Arc<Ring>)> = const { OnceCell::new() };
+    /// Shard id stamped into this thread's events and samples. Worker
+    /// threads set it once at spawn; everything else records shard 0.
+    static CURRENT_SHARD: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// Declare that the calling thread records on behalf of engine shard
+/// `shard`: every subsequent [`SpanEvent`] and resource sample from this
+/// thread carries the id. Called once by each sharded worker at spawn
+/// (and per routed step by the synchronous replay path).
+pub fn set_shard(shard: u32) {
+    CURRENT_SHARD.with(|c| c.set(shard));
+}
+
+/// The calling thread's shard id (0 unless [`set_shard`] was called).
+pub(crate) fn current_shard() -> u32 {
+    CURRENT_SHARD.with(|c| c.get())
 }
 
 /// Fix the trace epoch (idempotent). Called when tracing is first
@@ -173,6 +193,7 @@ pub(crate) fn record(phase: Phase, id: u64, start: Instant, dur: Duration) {
         tid: 0, // filled in below
         start_ns,
         dur_ns: dur.as_nanos() as u64,
+        shard: current_shard(),
     };
     with_local(|tid, ring| ring.push(SpanEvent { tid, ..ev }));
 }
@@ -233,7 +254,7 @@ mod tests {
     use super::*;
 
     fn ev(seqno: u64) -> SpanEvent {
-        SpanEvent { seqno, phase: Phase::Work, id: 0, tid: 1, start_ns: seqno, dur_ns: 1 }
+        SpanEvent { seqno, phase: Phase::Work, id: 0, tid: 1, start_ns: seqno, dur_ns: 1, shard: 0 }
     }
 
     #[test]

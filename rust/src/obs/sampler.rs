@@ -10,7 +10,7 @@
 //! `tests/prop_slo.rs`). The buffer drops new samples past its cap and
 //! counts the drops rather than growing without bound.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -47,6 +47,11 @@ pub struct ResourceSample {
     pub prefilling: usize,
     /// Preempted sequences parked for resume.
     pub parked: usize,
+    /// Engine shard the sample describes (0 in single-worker serving;
+    /// stamped from the recording thread's [`crate::obs::set_shard`] id).
+    /// Exporters split counter tracks per shard when more than one
+    /// appears.
+    pub shard: u32,
 }
 
 /// Cap on buffered samples; one sample per scheduler step means this
@@ -55,15 +60,21 @@ const SAMPLE_CAP: usize = 1 << 16;
 
 static SAMPLES: Mutex<Vec<ResourceSample>> = Mutex::new(Vec::new());
 static DROPPED: AtomicU64 = AtomicU64::new(0);
-/// Last waiting-queue depth the server reported (relaxed: a gauge, not a
-/// synchronization point).
-static QUEUE_DEPTH: AtomicUsize = AtomicUsize::new(0);
 
-/// Note the server's current admission-queue depth; the next [`record`]
-/// stamps it into the sample. One relaxed store — callers gate on
-/// `obs::enabled()` to keep the disabled path at zero stores.
+thread_local! {
+    /// Last waiting-queue depth noted on this thread. Thread-local, not
+    /// global: each sharded worker notes its *own* queue's depth just
+    /// before stepping, so concurrent workers don't clobber each other's
+    /// gauge between note and sample (note and record run on the same
+    /// worker thread).
+    static QUEUE_DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Note the calling worker's current admission-queue depth; this
+/// thread's next [`record`] stamps it into the sample. Callers gate on
+/// `obs::enabled()` to keep the disabled path at zero work.
 pub fn note_queue_depth(n: usize) {
-    QUEUE_DEPTH.store(n, Ordering::Relaxed);
+    QUEUE_DEPTH.with(|c| c.set(n));
 }
 
 /// Capture one resource sample at a step boundary. Callers gate on
@@ -74,10 +85,11 @@ pub fn record(pool: Option<PoolCounters>, active: usize, prefilling: usize, park
     let sample = ResourceSample {
         t_ns: Instant::now().saturating_duration_since(epoch).as_nanos() as u64,
         pool,
-        waiting: QUEUE_DEPTH.load(Ordering::Relaxed),
+        waiting: QUEUE_DEPTH.with(|c| c.get()),
         active,
         prefilling,
         parked,
+        shard: super::recorder::current_shard(),
     };
     let mut buf = SAMPLES.lock().unwrap();
     if buf.len() < SAMPLE_CAP {

@@ -156,19 +156,89 @@ impl Histogram {
                 (b, acc)
             })
             .collect();
-        HistSnapshot { buckets, sum: self.sum, count: self.total }
+        HistSnapshot { buckets, sum: self.sum, count: self.total, max: self.max }
     }
 }
 
 /// Snapshot of one [`Histogram`] as cumulative Prometheus-style buckets
 /// (see [`Histogram::hist_snapshot`]). Plain data, all-empty by default,
 /// so `Snapshot` can embed one per exported distribution.
+///
+/// Carries enough state (`max` for the overflow bucket) that two shards'
+/// snapshots [`merge`](HistSnapshot::merge) losslessly and
+/// [`quantile`](HistSnapshot::quantile) reproduces the live
+/// [`Histogram::quantile`] exactly — the aggregate serving `Snapshot`
+/// recomputes its latency quantiles from merged buckets instead of
+/// averaging per-shard quantiles.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct HistSnapshot {
     /// `(le_bound, cumulative_count)` per finite bucket, ascending.
     pub buckets: Vec<(f64, u64)>,
     pub sum: f64,
     pub count: u64,
+    /// Largest recorded sample — the quantile value of the implicit
+    /// `+Inf` overflow bucket, mirroring [`Histogram::max`].
+    pub max: f64,
+}
+
+impl HistSnapshot {
+    /// Fold `other`'s samples into `self`. An empty (default) side adopts
+    /// the other wholesale; two live snapshots must come from histograms
+    /// with identical bucket layouts (cumulative counts sum bucketwise).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.buckets.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            self.buckets.len(),
+            other.buckets.len(),
+            "HistSnapshot::merge across different bucket layouts"
+        );
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            a.1 += b.1;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Bucket-bound quantile with the exact semantics of
+    /// [`Histogram::quantile`] (same clamping, same `target.max(1)`
+    /// rounding, overflow resolves to `max`), so merging one shard's
+    /// snapshot into an empty one reproduces the shard's own quantiles.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        for &(bound, cum) in &self.buckets {
+            if cum >= target {
+                return bound;
+            }
+        }
+        self.max
+    }
+
+    /// One-shot p50/p95/p99 summary, mirroring [`Histogram::quantiles`].
+    pub fn quantiles(&self) -> Quantiles {
+        Quantiles {
+            p50: self.quantile(0.5),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            mean: self.mean(),
+            count: self.count,
+            sum: self.sum,
+        }
+    }
 }
 
 /// p50/p95/p99 + mean/count/sum summary of one [`Histogram`], in the

@@ -1,0 +1,157 @@
+//! Property tests for engine invariant 8: for a fixed request set, every
+//! request's token stream is **bitwise identical at any worker count and
+//! any placement** — the prefix-aware router never splits a sequence
+//! across pool shards, and invariants 1–6 pin each shard scheduler's
+//! per-request output. Exercised for MHA and BDA, at worker counts
+//! {1, 2, 4} (plus the `BDA_WORKERS` CI axis), with the prefix cache on
+//! and off, on ample and preempting per-shard pools.
+//!
+//! The "small" per-shard pool honors the `BDA_TEST_POOL_BLOCKS` overload
+//! knob (see `coordinator::kv_cache::test_pool_blocks`) so the CI
+//! determinism matrix can force preempt/resume churn inside shards while
+//! the router steers admissions around it.
+
+use bda::bd::Strategy;
+use bda::coordinator::kv_cache::test_pool_blocks;
+use bda::coordinator::server::{replay_trace_sharded, ServerConfig};
+use bda::coordinator::{
+    workers_from_env, BatcherConfig, KvCacheConfig, Request, SchedulerConfig, Snapshot,
+};
+use bda::engine::PagedNativeBackend;
+use bda::model::{ModelConfig, Transformer};
+use bda::tensor::DType;
+use bda::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The per-shard overload pool size: the env knob when set (clamped so
+/// one sequence always fits alone — 12-token prompts + 8 generated = 5
+/// blocks of 4), a hand-tuned 12 otherwise. At concurrency 3 a single
+/// shard needs 15 blocks peak, so anything below that preempts when one
+/// worker carries the whole trace.
+fn overload_pool_blocks() -> usize {
+    test_pool_blocks().map(|n| n.clamp(8, 64)).unwrap_or(12)
+}
+
+fn server_config(num_blocks: usize) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(0) },
+        scheduler: SchedulerConfig {
+            max_active: 3,
+            eos_token: None,
+            kv: KvCacheConfig { block_size: 4, num_blocks, ..Default::default() },
+            ..Default::default()
+        },
+    }
+}
+
+/// 8 requests in two prefix families: each prompt shares its first 8
+/// tokens (2 blocks) with the other requests of its family and diverges
+/// in the last 4. Overlapping prefixes give the router's cache-affinity
+/// term real signal when the prefix cache is on; distinct tails keep
+/// every token stream request-specific.
+fn sharded_trace(vocab: u32) -> Vec<Request> {
+    (0..8u64)
+        .map(|i| {
+            let family = i % 2;
+            let v = vocab as u64;
+            let mut prompt: Vec<u32> =
+                (0..8u64).map(|j| ((family * 97 + j * 13 + 5) % v) as u32).collect();
+            prompt.extend((0..4u64).map(|j| ((i * 41 + j * 7 + 11) % v) as u32));
+            Request::new(i, prompt, 8)
+        })
+        .collect()
+}
+
+type Generations = Vec<(u64, Vec<u32>)>;
+
+/// Run the trace through `workers` pool-shard engines (each with its own
+/// 2-thread pool and `num_blocks`-block KV pool) behind the router.
+fn run_sharded(
+    model: &Transformer,
+    workers: usize,
+    cache: bool,
+    num_blocks: usize,
+) -> (Generations, Snapshot) {
+    let cfg = server_config(num_blocks);
+    let backends: Vec<PagedNativeBackend> = (0..workers)
+        .map(|_| {
+            let pool = Arc::new(ThreadPool::new(2));
+            let mut backend =
+                PagedNativeBackend::with_thread_pool(model.clone(), cfg.scheduler.kv, pool);
+            backend.set_prefix_cache(cache);
+            backend
+        })
+        .collect();
+    let trace = sharded_trace(model.config.vocab_size as u32);
+    let (mut responses, snap) = replay_trace_sharded(backends, cfg, trace).expect("sharded serve");
+    responses.sort_by_key(|r| r.id);
+    let generations = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    (generations, snap)
+}
+
+#[test]
+fn prop_sharded_placement_invariant_token_streams() {
+    let mha = Transformer::new_mha(ModelConfig::tiny(), 881);
+    let bda = mha.to_bda(Strategy::ResidualMin, DType::F32).expect("bda prep");
+    let small = overload_pool_blocks();
+    for (label, model) in [("mha", &mha), ("bda", &bda)] {
+        for cache in [false, true] {
+            // Single-worker ample pool is the reference stream.
+            let (baseline, base_snap) = run_sharded(model, 1, cache, 256);
+            assert_eq!(baseline.len(), 8, "{label}/cache={cache}: lost responses at baseline");
+            assert_eq!(base_snap.preemptions, 0, "{label}: ample pool must not preempt");
+            for workers in [1usize, 2, 4] {
+                let tag = format!("{label}/workers={workers}/cache={cache}");
+                let (ample_gen, ample_snap) = run_sharded(model, workers, cache, 256);
+                assert_eq!(
+                    ample_gen, baseline,
+                    "{tag}: placement changed token streams (invariant 8 violated)"
+                );
+                assert_eq!(ample_snap.requests_completed, 8, "{tag}: aggregate completions");
+                assert_eq!(ample_snap.tokens_out, 64, "{tag}: aggregate tokens");
+
+                // Tight per-shard pools: shards preempt internally, the
+                // router steers around the churn, and the streams still
+                // must not move.
+                let (tight_gen, tight_snap) = run_sharded(model, workers, cache, small);
+                assert_eq!(
+                    tight_gen, baseline,
+                    "{tag}: preempting shards changed token streams (invariant 8 violated)"
+                );
+                assert_eq!(
+                    tight_snap.resumes, tight_snap.preemptions,
+                    "{tag}: every preempted sequence must resume exactly once per park"
+                );
+                if workers == 1 && small < 15 {
+                    assert!(
+                        tight_snap.preemptions > 0,
+                        "{tag}: a {small}-block shard must force preemption"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The CI determinism-matrix axis: `BDA_WORKERS` picks the shard count
+/// (default 1), and the resulting streams must match the single-worker
+/// baseline bitwise, on both ample and preempting per-shard pools.
+#[test]
+fn sharded_env_worker_count_matches_single_worker_baseline() {
+    let model = Transformer::new_mha(ModelConfig::tiny(), 883);
+    let workers = workers_from_env();
+    let small = overload_pool_blocks();
+    let (baseline, _) = run_sharded(&model, 1, true, 256);
+    for num_blocks in [256usize, small] {
+        let (gens, snap) = run_sharded(&model, workers, true, num_blocks);
+        assert_eq!(
+            gens, baseline,
+            "BDA_WORKERS={workers} over {num_blocks}-block shards changed token streams \
+             (invariant 8 violated)"
+        );
+        assert_eq!(snap.requests_completed, 8);
+        assert_eq!(snap.tokens_out, 64);
+        assert!(snap.tokens_per_sec > 0.0, "aggregate throughput must be derived from sums");
+    }
+}
